@@ -1,0 +1,91 @@
+"""AOT bridge: lower the L2 model to HLO text for the rust runtime.
+
+HLO *text* is the interchange format (NOT `HloModuleProto.serialize()`):
+jax >= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Artifacts (all f32, return_tuple=True):
+  dslash_<L>.hlo.txt — dslash(psi_pad re/im, u re/im) -> (out re/im, norm)
+  axpy_<n>.hlo.txt   — axpy(a, x re/im, y re/im)      -> (out re/im)
+  norm2_<n>.hlo.txt  — norm2(x re/im)                 -> (norm,)
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Local lattice sizes to export; 4 matches the 2x2x2 SHAPES benchmark
+# tile in the rust examples (global 8^3 over 8 tiles).
+LATTICE_SIZES = (4, 6)
+VEC_SIZES = (4 * 4 * 4 * 3,)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_dslash(l: int) -> str:
+    lp = l + 2
+    f = jax.ShapeDtypeStruct((lp, lp, lp, 3), jnp.float32)
+    u = jax.ShapeDtypeStruct((3, lp, lp, lp, 3, 3), jnp.float32)
+
+    def fn(psi_re, psi_im, u_re, u_im):
+        return model.dslash(psi_re, psi_im, u_re, u_im)
+
+    return to_hlo_text(jax.jit(fn).lower(f, f, u, u))
+
+
+def lower_axpy(n: int) -> str:
+    s = jax.ShapeDtypeStruct((), jnp.float32)
+    v = jax.ShapeDtypeStruct((n,), jnp.float32)
+
+    def fn(a, x_re, x_im, y_re, y_im):
+        return model.axpy(a, x_re, x_im, y_re, y_im)
+
+    return to_hlo_text(jax.jit(fn).lower(s, v, v, v, v))
+
+
+def lower_norm2(n: int) -> str:
+    v = jax.ShapeDtypeStruct((n,), jnp.float32)
+
+    def fn(x_re, x_im):
+        return (model.norm2(x_re, x_im),)
+
+    return to_hlo_text(jax.jit(fn).lower(v, v))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    jobs = []
+    for l in LATTICE_SIZES:
+        jobs.append((f"dslash_{l}", lambda l=l: lower_dslash(l)))
+    for n in VEC_SIZES:
+        jobs.append((f"axpy_{n}", lambda n=n: lower_axpy(n)))
+        jobs.append((f"norm2_{n}", lambda n=n: lower_norm2(n)))
+
+    for name, fn in jobs:
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        text = fn()
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {name}: {len(text)} chars -> {path}")
+
+
+if __name__ == "__main__":
+    main()

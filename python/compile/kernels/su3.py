@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: blocked SU(3) x color-vector product.
+
+This is the compute hot-spot of the paper's LQCD benchmark kernel
+(Sec. IV: "the DNP was employed in benchmarking the SHAPES architecture on
+a kernel code for Lattice Quantum Chromo Dynamics"): per lattice site, a
+3x3 complex (SU(3) gauge link) matrix multiplies a 3-component complex
+color vector. The Dslash hop term applies it for every direction.
+
+Hardware adaptation (see DESIGN.md #Hardware-Adaptation): the paper's
+substrate is the mAgicV VLIW FPU; on TPU the natural mapping is the MXU
+via a real 2x2 embedding of complex arithmetic with sites blocked along
+the batch dimension. The BlockSpec below tiles the site dimension so each
+grid step streams one block of vectors HBM->VMEM while the block's links
+ride along; `interpret=True` is mandatory on CPU PJRT (real-TPU lowering
+emits Mosaic custom-calls the CPU plugin cannot run).
+
+Complex data travels as separate real/imag float32 arrays because the
+rust PJRT boundary is f32-typed.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sites per grid step. 128 keeps the VMEM working set tiny
+# (128*(9+3+3)*2*4B = 15 KiB) while filling MXU batch lanes.
+DEFAULT_BLOCK = 128
+
+
+def _su3_kernel(u_re_ref, u_im_ref, v_re_ref, v_im_ref, o_re_ref, o_im_ref):
+    """One block: out = U @ v over complex 3-vectors, real arithmetic.
+
+    (a + ib)(c + id) = (ac - bd) + i(ad + bc), batched over sites with
+    einsum — which XLA/Mosaic lowers to MXU-shaped batched matmuls.
+    """
+    u_re = u_re_ref[...]
+    u_im = u_im_ref[...]
+    v_re = v_re_ref[...]
+    v_im = v_im_ref[...]
+    o_re_ref[...] = jnp.einsum("sij,sj->si", u_re, v_re) - jnp.einsum(
+        "sij,sj->si", u_im, v_im
+    )
+    o_im_ref[...] = jnp.einsum("sij,sj->si", u_re, v_im) + jnp.einsum(
+        "sij,sj->si", u_im, v_re
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def su3_apply(u_re, u_im, v_re, v_im, block=DEFAULT_BLOCK):
+    """Apply per-site SU(3) links to color vectors.
+
+    Args:
+      u_re, u_im: (S, 3, 3) float32 — link matrices.
+      v_re, v_im: (S, 3) float32 — color vectors.
+      block: sites per Pallas grid step (S % block must be 0, or S < block).
+
+    Returns:
+      (out_re, out_im): (S, 3) float32.
+    """
+    s = u_re.shape[0]
+    if s % block != 0:
+        # Fall back to one whole-array block for ragged sizes.
+        block = s
+    grid = (s // block,)
+    spec_mat = pl.BlockSpec((block, 3, 3), lambda i: (i, 0, 0))
+    spec_vec = pl.BlockSpec((block, 3), lambda i: (i, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((s, 3), jnp.float32),
+        jax.ShapeDtypeStruct((s, 3), jnp.float32),
+    ]
+    o_re, o_im = pl.pallas_call(
+        _su3_kernel,
+        grid=grid,
+        in_specs=[spec_mat, spec_mat, spec_vec, spec_vec],
+        out_specs=[spec_vec, spec_vec],
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(u_re, u_im, v_re, v_im)
+    return o_re, o_im
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def su3_apply_dagger(u_re, u_im, v_re, v_im, block=DEFAULT_BLOCK):
+    """Apply the adjoint links: out = U^dagger @ v.
+
+    U^dagger = conj(U)^T, so re -> re^T, im -> -im^T; reuse the kernel.
+    """
+    u_re_t = jnp.swapaxes(u_re, 1, 2)
+    u_im_t = -jnp.swapaxes(u_im, 1, 2)
+    return su3_apply(u_re_t, u_im_t, v_re, v_im, block=block)

@@ -1,0 +1,71 @@
+"""L2 JAX model: the LQCD benchmark kernel of the paper's Sec. IV.
+
+A 3D hop-term Dslash over a halo-padded local lattice, decomposed per
+tile exactly as the SHAPES 2x2x2 benchmark decomposes the global lattice:
+the rust driver owns the global field, exchanges halo faces through the
+simulated DNP-Net (RDMA PUT), assembles the padded local array and calls
+this model through PJRT. The SU(3) x vector hot-spot runs in the L1
+Pallas kernel (`kernels.su3`).
+
+Also exported: `axpy` (the CG-style linear-algebra step) and `norm2`.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import su3
+
+
+def dslash(psi_pad_re, psi_pad_im, u_re, u_im):
+    """Hop-term Dslash on a halo-padded local lattice.
+
+    Args:
+      psi_pad_re/im: (L+2, L+2, L+2, 3) float32.
+      u_re/im: (3, L+2, L+2, L+2, 3, 3) float32, halo-padded.
+
+    Returns:
+      (out_re, out_im, norm): (L,L,L,3), (L,L,L,3), () — norm = sum|out|^2.
+    """
+    lp = psi_pad_re.shape[0]
+    l = lp - 2
+    interior = (slice(1, 1 + l),) * 3
+
+    def flat(a, tail):
+        return a.reshape((l * l * l,) + tail)
+
+    out_re = jnp.zeros((l * l * l, 3), jnp.float32)
+    out_im = jnp.zeros((l * l * l, 3), jnp.float32)
+    for d in range(3):
+        plus = [slice(1, 1 + l)] * 3
+        minus = [slice(1, 1 + l)] * 3
+        plus[d] = slice(2, 2 + l)
+        minus[d] = slice(0, l)
+        psi_p_re = flat(psi_pad_re[tuple(plus)], (3,))
+        psi_p_im = flat(psi_pad_im[tuple(plus)], (3,))
+        psi_m_re = flat(psi_pad_re[tuple(minus)], (3,))
+        psi_m_im = flat(psi_pad_im[tuple(minus)], (3,))
+        uh_re = flat(u_re[d][interior], (3, 3))
+        uh_im = flat(u_im[d][interior], (3, 3))
+        ub_re = flat(u_re[d][tuple(minus)], (3, 3))
+        ub_im = flat(u_im[d][tuple(minus)], (3, 3))
+        # Forward hop: U_d(x) psi(x+e_d) — the Pallas hot-spot.
+        f_re, f_im = su3.su3_apply(uh_re, uh_im, psi_p_re, psi_p_im)
+        # Backward hop: U_d(x-e_d)^dag psi(x-e_d).
+        b_re, b_im = su3.su3_apply_dagger(ub_re, ub_im, psi_m_re, psi_m_im)
+        out_re = out_re + f_re + b_re
+        out_im = out_im + f_im + b_im
+    norm = jnp.sum(out_re * out_re + out_im * out_im)
+    return (
+        out_re.reshape(l, l, l, 3),
+        out_im.reshape(l, l, l, 3),
+        norm,
+    )
+
+
+def axpy(a, x_re, x_im, y_re, y_im):
+    """y + a*x over color fields (CG building block). `a` is a scalar."""
+    return y_re + a * x_re, y_im + a * x_im
+
+
+def norm2(x_re, x_im):
+    """Global squared norm of a color field."""
+    return jnp.sum(x_re * x_re + x_im * x_im)

@@ -1,0 +1,78 @@
+"""L2 correctness: the dslash model (Pallas-backed) against the naive
+complex oracle, plus shape/physics sanity used by the AOT artifacts."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _fields(seed, l):
+    rng = np.random.default_rng(seed)
+    lp = l + 2
+    psi_re = rng.standard_normal((lp, lp, lp, 3)).astype(np.float32)
+    psi_im = rng.standard_normal((lp, lp, lp, 3)).astype(np.float32)
+    u_re = rng.standard_normal((3, lp, lp, lp, 3, 3)).astype(np.float32)
+    u_im = rng.standard_normal((3, lp, lp, lp, 3, 3)).astype(np.float32)
+    return psi_re, psi_im, u_re, u_im
+
+
+@pytest.mark.parametrize("l", [2, 4])
+def test_dslash_matches_ref(l):
+    psi_re, psi_im, u_re, u_im = _fields(5, l)
+    got_re, got_im, got_n = model.dslash(psi_re, psi_im, u_re, u_im)
+    want_re, want_im, want_n = ref.dslash_ref(psi_re, psi_im, u_re, u_im)
+    np.testing.assert_allclose(got_re, want_re, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(got_im, want_im, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(got_n, want_n, rtol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_dslash_hypothesis_l4(seed):
+    psi_re, psi_im, u_re, u_im = _fields(seed, 4)
+    got_re, got_im, _ = model.dslash(psi_re, psi_im, u_re, u_im)
+    want_re, want_im, _ = ref.dslash_ref(psi_re, psi_im, u_re, u_im)
+    np.testing.assert_allclose(got_re, want_re, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(got_im, want_im, rtol=5e-4, atol=5e-4)
+
+
+def test_dslash_output_shapes():
+    psi_re, psi_im, u_re, u_im = _fields(1, 4)
+    out_re, out_im, n = model.dslash(psi_re, psi_im, u_re, u_im)
+    assert out_re.shape == (4, 4, 4, 3)
+    assert out_im.shape == (4, 4, 4, 3)
+    assert n.shape == ()
+    assert float(n) > 0
+
+
+def test_dslash_is_linear_in_psi():
+    psi_re, psi_im, u_re, u_im = _fields(2, 4)
+    a_re, a_im, _ = model.dslash(psi_re, psi_im, u_re, u_im)
+    b_re, b_im, _ = model.dslash(2 * psi_re, 2 * psi_im, u_re, u_im)
+    np.testing.assert_allclose(2 * np.asarray(a_re), b_re, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(2 * np.asarray(a_im), b_im, rtol=1e-4, atol=1e-4)
+
+
+def test_dslash_zero_field_gives_zero():
+    _, _, u_re, u_im = _fields(3, 4)
+    z = np.zeros((6, 6, 6, 3), np.float32)
+    out_re, out_im, n = model.dslash(z, z, u_re, u_im)
+    assert float(n) == 0.0
+    assert not np.any(np.asarray(out_re))
+    assert not np.any(np.asarray(out_im))
+
+
+def test_axpy_and_norm2():
+    rng = np.random.default_rng(0)
+    x_re = rng.standard_normal(16).astype(np.float32)
+    x_im = rng.standard_normal(16).astype(np.float32)
+    y_re = rng.standard_normal(16).astype(np.float32)
+    y_im = rng.standard_normal(16).astype(np.float32)
+    o_re, o_im = model.axpy(np.float32(2.0), x_re, x_im, y_re, y_im)
+    np.testing.assert_allclose(o_re, y_re + 2 * x_re, rtol=1e-6)
+    np.testing.assert_allclose(o_im, y_im + 2 * x_im, rtol=1e-6)
+    n = model.norm2(x_re, x_im)
+    np.testing.assert_allclose(n, np.sum(x_re**2 + x_im**2), rtol=1e-5)

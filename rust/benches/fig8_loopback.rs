@@ -1,0 +1,76 @@
+//! E1 — paper Fig. 8 + Sec. IV text: intra-tile LOOPBACK latency and
+//! intra-tile bandwidth.
+//!
+//! Paper: `L_int = L1 + L2 ≈ 100 cycles` (200 ns @500 MHz) and
+//! `BW_int = L × 32 bit/cycle = 64 bit/cycle` (4+4 GB/s bidirectional).
+
+use dnp::bench::{banner, compare, Table};
+use dnp::config::DnpConfig;
+use dnp::metrics;
+use dnp::rdma::Command;
+use dnp::topology;
+use dnp::util::bits_per_cycle_to_gbs;
+
+fn loopback_latency(cfg: &DnpConfig, len: u32) -> metrics::Breakdown {
+    let mut net = topology::two_tiles_offchip(cfg, 1 << 16);
+    net.dnp_mut(0)
+        .mem
+        .write_slice(0x1000, &vec![0x5A5Au32; len as usize]);
+    net.issue(0, Command::loopback(0x1000, 0x8000, len).with_tag(1));
+    net.run_until_idle(1_000_000).expect("loopback completes");
+    metrics::breakdown(&net, 0, 1).expect("trace")
+}
+
+fn main() {
+    let cfg = DnpConfig::shapes_rdt();
+    banner(
+        "E1 fig8_loopback",
+        "Fig. 8 + Sec. IV",
+        "L_int = L1+L2 ~ 100 cycles (200 ns); BW_int = L*32 = 64 bit/cycle (4+4 GB/s)",
+    );
+
+    // --- Latency vs payload (the paper quotes the small-message point).
+    let mut t = Table::new(&["payload (words)", "L1", "L2(+wr)", "total cyc", "ns @500MHz"]);
+    for len in [1u32, 4, 16, 64, 256] {
+        let b = loopback_latency(&cfg, len);
+        t.row(&[
+            format!("{len}"),
+            format!("{}", b.l1),
+            format!("{}", b.l2 + b.l3 + b.l4),
+            format!("{}", b.total()),
+            format!("{:.0}", b.total_ns(cfg.freq_mhz)),
+        ]);
+    }
+    t.print();
+    let b1 = loopback_latency(&cfg, 1);
+    compare("L_int (1 word)", 100.0, b1.total() as f64, "cycles");
+    compare("L_int (1 word)", 200.0, b1.total_ns(cfg.freq_mhz), "ns");
+
+    // --- Intra-tile bandwidth: saturate with back-to-back LOOPBACKs.
+    let mut net = topology::two_tiles_offchip(&cfg, 1 << 16);
+    net.traces.enabled = false;
+    net.dnp_mut(0).mem.write_slice(0x1000, &vec![1u32; 256]);
+    let n_cmds = 64;
+    for i in 0..n_cmds {
+        net.issue(
+            0,
+            Command::loopback(0x1000, 0x8000 + (i % 4) * 0x100, 256).with_tag(i),
+        );
+    }
+    let t0 = net.cycle;
+    net.run_until_idle(10_000_000).expect("stream drains");
+    let elapsed = net.cycle - t0;
+    // Each LOOPBACK moves 256 words in + 256 words out of tile memory.
+    let bw = metrics::intra_tile_bw_bits_per_cycle(&net, 0, elapsed);
+    compare("BW_int", 64.0, bw, "bit/cycle");
+    compare(
+        "BW_int",
+        4.0,
+        bits_per_cycle_to_gbs(bw, cfg.freq_mhz),
+        "GB/s (paper: 'roughly 4GB/s at 500MHz')",
+    );
+    println!(
+        "    ({} LOOPBACKs x 256 words in {elapsed} cycles)",
+        n_cmds
+    );
+}

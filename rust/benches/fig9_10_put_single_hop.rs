@@ -1,0 +1,95 @@
+//! E2 — paper Figs. 9 & 10: single-hop PUT latency breakdown, on-chip and
+//! off-chip.
+//!
+//! Paper: `L_onchip = L1+L2+L4 ~ 130 cycles` (260 ns),
+//! `L_offchip = L1+L2+L3+L4 ~ 250 cycles` (500 ns @500 MHz, serialization
+//! factor 16).
+
+use dnp::bench::{banner, compare, Table};
+use dnp::config::DnpConfig;
+use dnp::metrics;
+use dnp::packet::AddrFormat;
+use dnp::rdma::Command;
+use dnp::topology;
+
+fn put_offchip(cfg: &DnpConfig, len: u32) -> metrics::Breakdown {
+    let mut net = topology::two_tiles_offchip(cfg, 1 << 16);
+    let fmt = AddrFormat::Torus3D { dims: [2, 1, 1] };
+    net.dnp_mut(1).register_buffer(0x4000, 1024, 0);
+    net.issue(
+        0,
+        Command::put(0x1000, fmt.encode(&[1, 0, 0]), 0x4000, len).with_tag(1),
+    );
+    net.run_until_idle(1_000_000).expect("completes");
+    metrics::breakdown(&net, 0, 1).expect("trace")
+}
+
+fn put_onchip(len: u32) -> metrics::Breakdown {
+    let cfg = DnpConfig::mt2d();
+    let mut net = topology::two_tiles_onchip(&cfg, 1 << 16);
+    let fmt = AddrFormat::Mesh2D { dims: [2, 1] };
+    net.dnp_mut(1).register_buffer(0x4000, 1024, 0);
+    net.issue(
+        0,
+        Command::put(0x1000, fmt.encode(&[1, 0]), 0x4000, len).with_tag(1),
+    );
+    net.run_until_idle(1_000_000).expect("completes");
+    metrics::breakdown(&net, 0, 1).expect("trace")
+}
+
+fn main() {
+    let cfg = DnpConfig::shapes_rdt();
+    banner(
+        "E2 fig9_10_put_single_hop",
+        "Figs. 9-10",
+        "single-hop PUT: on-chip ~130 cycles (260 ns), off-chip ~250 cycles (500 ns)",
+    );
+
+    let mut t = Table::new(&[
+        "path", "payload", "L1", "L2", "L3", "L4", "total", "ns @500MHz",
+    ]);
+    for len in [1u32, 16, 64, 256] {
+        let b = put_onchip(len);
+        t.row(&[
+            "on-chip".into(),
+            format!("{len}"),
+            format!("{}", b.l1),
+            format!("{}", b.l2),
+            format!("{}", b.l3),
+            format!("{}", b.l4),
+            format!("{}", b.total()),
+            format!("{:.0}", b.total_ns(500.0)),
+        ]);
+    }
+    for len in [1u32, 16, 64, 256] {
+        let b = put_offchip(&cfg, len);
+        t.row(&[
+            "off-chip".into(),
+            format!("{len}"),
+            format!("{}", b.l1),
+            format!("{}", b.l2),
+            format!("{}", b.l3),
+            format!("{}", b.l4),
+            format!("{}", b.total()),
+            format!("{:.0}", b.total_ns(500.0)),
+        ]);
+    }
+    t.print();
+
+    let on = put_onchip(1);
+    let off = put_offchip(&cfg, 1);
+    compare("L_onchip (1 word)", 130.0, on.total() as f64, "cycles");
+    compare("L_offchip (1 word)", 250.0, off.total() as f64, "cycles");
+    compare(
+        "off/on ratio",
+        250.0 / 130.0,
+        off.total() as f64 / on.total() as f64,
+        "x",
+    );
+    println!(
+        "    serialization dominates off-chip (paper: 'the relative high value of\n\
+         \u{20}    l_offchip is influenced by the latency introduced by serialization'):\n\
+         \u{20}    L3 off-chip = {} vs on-chip = {}",
+        off.l3, on.l3
+    );
+}

@@ -1,0 +1,140 @@
+//! §Perf — simulator hot-path throughput (wall time, not simulated time).
+//!
+//! This is the L3 optimization harness: it measures how many flit-hops and
+//! simulated cycles per second the simulator itself sustains on a
+//! saturated 4×4×4 torus, a saturated MTNoC chip, and the LQCD halo
+//! pattern. EXPERIMENTS.md §Perf records before/after for every
+//! optimization step.
+
+use dnp::bench::{banner, wall, Table};
+use dnp::config::DnpConfig;
+use dnp::packet::DnpAddr;
+use dnp::rdma::Command;
+use dnp::{topology, traffic, Net};
+
+fn dnp_slots(net: &Net) -> Vec<(usize, DnpAddr)> {
+    net.nodes
+        .iter()
+        .enumerate()
+        .filter_map(|(i, n)| n.as_dnp().map(|d| (i, d.addr)))
+        .collect()
+}
+
+fn saturated_torus() -> (u64, u64, f64) {
+    let cfg = DnpConfig::shapes_rdt();
+    let mut flits = 0u64;
+    let mut cycles = 0u64;
+    let r = wall(1, 3, || {
+        let mut net = topology::torus3d([4, 4, 4], &cfg, 1 << 18);
+        net.traces.enabled = false;
+        let nodes = dnp_slots(&net);
+        let slots: Vec<usize> = nodes.iter().map(|&(i, _)| i).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        let plan = traffic::uniform_random(&nodes, 12, 64, 4, 7);
+        let mut feeder = traffic::Feeder::new(plan);
+        traffic::run_plan(&mut net, &mut feeder, 10_000_000).expect("drains");
+        flits = net
+            .nodes
+            .iter()
+            .filter_map(|n| n.as_dnp().map(|d| d.fabric.flits_switched))
+            .sum();
+        cycles = net.cycle;
+    });
+    (flits, cycles, r.median_s)
+}
+
+fn saturated_noc() -> (u64, u64, f64) {
+    let cfg = DnpConfig::mtnoc();
+    let mut flits = 0u64;
+    let mut cycles = 0u64;
+    let r = wall(1, 3, || {
+        let mut net = topology::spidergon_chip(8, &cfg, 1 << 16);
+        net.traces.enabled = false;
+        let nodes = dnp_slots(&net);
+        let slots: Vec<usize> = nodes.iter().map(|&(i, _)| i).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        let plan = traffic::uniform_random(&nodes, 40, 64, 2, 11);
+        let mut feeder = traffic::Feeder::new(plan);
+        traffic::run_plan(&mut net, &mut feeder, 10_000_000).expect("drains");
+        flits = net
+            .nodes
+            .iter()
+            .map(|n| match n {
+                dnp::sim::Node::Dnp(d) => d.fabric.flits_switched,
+                dnp::sim::Node::Noc(r) => r.fabric.flits_switched,
+            })
+            .sum();
+        cycles = net.cycle;
+    });
+    (flits, cycles, r.median_s)
+}
+
+fn halo_phase() -> (u64, u64, f64) {
+    let cfg = DnpConfig::shapes_rdt();
+    let mut flits = 0u64;
+    let mut cycles = 0u64;
+    let r = wall(1, 3, || {
+        let mut net = topology::torus3d([2, 2, 2], &cfg, 1 << 16);
+        net.traces.enabled = false;
+        let slots: Vec<usize> = (0..8).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        for _ in 0..10 {
+            let plan = traffic::halo_exchange_3d([2, 2, 2], 256);
+            let mut feeder = traffic::Feeder::new(plan);
+            traffic::run_plan(&mut net, &mut feeder, 10_000_000).expect("drains");
+        }
+        flits = net
+            .nodes
+            .iter()
+            .filter_map(|n| n.as_dnp().map(|d| d.fabric.flits_switched))
+            .sum();
+        cycles = net.cycle;
+    });
+    (flits, cycles, r.median_s)
+}
+
+/// Idle-network cost: how fast does the simulator spin when nothing moves?
+fn idle_spin() -> f64 {
+    let cfg = DnpConfig::shapes_rdt();
+    let mut net = topology::torus3d([4, 4, 4], &cfg, 1 << 12);
+    net.traces.enabled = false;
+    let r = wall(1, 3, || {
+        net.run(100_000);
+    });
+    100_000.0 / r.median_s
+}
+
+fn main() {
+    banner(
+        "PERF hotpath_profile",
+        "EXPERIMENTS.md §Perf",
+        "simulator wall throughput: flit-hops/s and simulated cycles/s",
+    );
+    let mut t = Table::new(&[
+        "workload",
+        "flit-hops",
+        "sim cycles",
+        "wall s",
+        "Mflit-hops/s",
+        "Mcycles/s",
+    ]);
+    for (name, (flits, cycles, secs)) in [
+        ("torus 4x4x4 uniform", saturated_torus()),
+        ("MTNoC 8-tile uniform", saturated_noc()),
+        ("LQCD halo x10", halo_phase()),
+    ] {
+        t.row(&[
+            name.into(),
+            format!("{flits}"),
+            format!("{cycles}"),
+            format!("{secs:.3}"),
+            format!("{:.2}", flits as f64 / secs / 1e6),
+            format!("{:.2}", cycles as f64 / secs / 1e6),
+        ]);
+    }
+    t.print();
+    println!(
+        "    idle spin: {:.2} Msim-cycles/s (empty 64-node torus)",
+        idle_spin() / 1e6
+    );
+}

@@ -1,0 +1,107 @@
+//! E6 — paper Sec. V outlook: "there is room for considerable improvements
+//! in bandwidth and latency, either reducing the serialization factor to 8
+//! or increasing the switching frequency of the off-chip physical links...
+//! we expect to double the current switching frequency pushing it up to
+//! 1 GHz."
+//!
+//! Sweeps the serialization factor and the clock and regenerates the
+//! off-chip bandwidth / single-hop-latency trade-off curve.
+
+use dnp::bench::{banner, Table};
+use dnp::config::DnpConfig;
+use dnp::metrics;
+use dnp::packet::AddrFormat;
+use dnp::rdma::Command;
+use dnp::topology;
+use dnp::util::bits_per_cycle_to_gbs;
+
+fn measure(cfg: &DnpConfig) -> (u64, f64) {
+    // Latency: 1-word single-hop PUT.
+    let mut net = topology::two_tiles_offchip(cfg, 1 << 16);
+    let fmt = AddrFormat::Torus3D { dims: [2, 1, 1] };
+    net.dnp_mut(1).register_buffer(0x4000, 0x4000, 0);
+    net.issue(
+        0,
+        Command::put(0x1000, fmt.encode(&[1, 0, 0]), 0x4000, 1).with_tag(1),
+    );
+    net.run_until_idle(1_000_000).unwrap();
+    let lat = metrics::latency(&net, 0, 1).unwrap();
+
+    // Bandwidth: saturating 256-word PUT stream.
+    let mut net = topology::two_tiles_offchip(cfg, 1 << 16);
+    net.traces.enabled = false;
+    net.dnp_mut(1).register_buffer(0x4000, 0x4000, 0);
+    let t0 = net.cycle;
+    for i in 0..24 {
+        net.issue(
+            0,
+            Command::put(0x1000, fmt.encode(&[1, 0, 0]), 0x4000, 256).with_tag(i),
+        );
+    }
+    net.run_until_idle(10_000_000).unwrap();
+    let bw = net.traces.delivered_words as f64 * 32.0 / (net.cycle - t0) as f64;
+    (lat, bw)
+}
+
+fn main() {
+    banner(
+        "E6 serdes_sweep",
+        "Sec. V",
+        "factor 16 -> 8 and/or 500 MHz -> 1 GHz: off-chip BW doubles, latency shrinks",
+    );
+
+    let mut t = Table::new(&[
+        "factor",
+        "freq MHz",
+        "wire bit/cyc",
+        "goodput bit/cyc",
+        "goodput GB/s",
+        "1-hop lat cyc",
+        "1-hop lat ns",
+    ]);
+    let mut base_gbs = 0.0;
+    let mut f8_gbs = 0.0;
+    let mut f16_1g_gbs = 0.0;
+    for factor in [32u32, 16, 8, 4] {
+        for freq in [500.0f64, 1000.0] {
+            let mut cfg = DnpConfig::shapes_rdt();
+            cfg.serdes.factor = factor;
+            cfg.freq_mhz = freq;
+            // Faster links need deeper VC buffers: credits must cover the
+            // bandwidth-delay product or the link runs credit-limited (a
+            // real co-design constraint the sweep would otherwise hide).
+            let cpw = cfg.serdes.cycles_per_word().max(1);
+            let bdp = (cfg.serdes.tx_pipe + cfg.serdes.wire + cfg.serdes.rx_pipe) / cpw + 2;
+            cfg.vc_buf_depth = cfg.vc_buf_depth.max(2 * bdp as usize);
+            let (lat, bw) = measure(&cfg);
+            let gbs = bits_per_cycle_to_gbs(bw, freq);
+            if factor == 16 && freq == 500.0 {
+                base_gbs = gbs;
+            }
+            if factor == 8 && freq == 500.0 {
+                f8_gbs = gbs;
+            }
+            if factor == 16 && freq == 1000.0 {
+                f16_1g_gbs = gbs;
+            }
+            t.row(&[
+                format!("{factor}"),
+                format!("{freq:.0}"),
+                format!("{:.1}", cfg.serdes.bits_per_cycle()),
+                format!("{bw:.2}"),
+                format!("{gbs:.3}"),
+                format!("{lat}"),
+                format!("{:.0}", lat as f64 * 1e3 / freq),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "    factor 16->8 at 500 MHz: {:.2}x goodput (paper expects ~2x)",
+        f8_gbs / base_gbs
+    );
+    println!(
+        "    500 MHz->1 GHz at factor 16: {:.2}x goodput (paper expects ~2x)",
+        f16_1g_gbs / base_gbs
+    );
+}

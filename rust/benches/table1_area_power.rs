@@ -1,0 +1,83 @@
+//! E4 + E9 — paper Table I and the board extrapolation of Sec. IV.
+//!
+//! Paper (45 nm, 500 MHz, register-built buffers):
+//!   MTNoC DNP: N=1 M=1, 1.30 mm², 160 mW
+//!   MT2D  DNP: N=3 M=1, 1.76 mm², 180 mW
+//! plus: SRAM macros should halve the (buffer) area; a 32-chip × 8-RDT
+//! board ≈ 1 TFlops @ ~600 W; the DNP is ~1/4 of tile dissipation.
+
+use dnp::bench::{banner, compare, Table};
+use dnp::config::DnpConfig;
+use dnp::model::{board_extrapolation, estimate, estimate_with_sram, TechModel};
+
+fn main() {
+    let tech = TechModel::default();
+    banner(
+        "E4 table1_area_power",
+        "Table I",
+        "MTNoC 1.30 mm^2 / 160 mW; MT2D 1.76 mm^2 / 180 mW @45 nm, 500 MHz",
+    );
+
+    let mut t = Table::new(&[
+        "design", "N", "M", "area mm2", "paper", "power mW", "paper", "xbar", "ports",
+    ]);
+    for (name, cfg, pa, pp) in [
+        ("MTNoC", DnpConfig::mtnoc(), "1.30", "160"),
+        ("MT2D", DnpConfig::mt2d(), "1.76", "180"),
+        ("RDT (predict)", DnpConfig::shapes_rdt(), "-", "-"),
+    ] {
+        let e = estimate(&cfg, &tech);
+        t.row(&[
+            name.into(),
+            format!("{}", cfg.n_ports),
+            format!("{}", cfg.m_ports),
+            format!("{:.2}", e.area_mm2),
+            pa.into(),
+            format!("{:.0}", e.power_mw),
+            pp.into(),
+            format!("{:.2}", e.area_xbar),
+            format!("{:.2}", e.area_ports),
+        ]);
+    }
+    t.print();
+
+    let mtnoc = estimate(&DnpConfig::mtnoc(), &tech);
+    let mt2d = estimate(&DnpConfig::mt2d(), &tech);
+    compare("MTNoC area", 1.30, mtnoc.area_mm2, "mm^2");
+    compare("MT2D  area", 1.76, mt2d.area_mm2, "mm^2");
+    compare("MTNoC power", 160.0, mtnoc.power_mw, "mW");
+    compare("MT2D  power", 180.0, mt2d.power_mw, "mW");
+
+    println!("\n-- ablation: SRAM macros replace register-built buffers --");
+    let mut t = Table::new(&["design", "register area", "SRAM area", "saving"]);
+    for (name, cfg) in [
+        ("MTNoC", DnpConfig::mtnoc()),
+        ("MT2D", DnpConfig::mt2d()),
+        ("RDT", DnpConfig::shapes_rdt()),
+    ] {
+        let reg = estimate(&cfg, &tech);
+        let sram = estimate_with_sram(&cfg, &tech);
+        t.row(&[
+            name.into(),
+            format!("{:.2}", reg.area_mm2),
+            format!("{:.2}", sram.area_mm2),
+            format!("{:.0}%", 100.0 * (1.0 - sram.area_mm2 / reg.area_mm2)),
+        ]);
+    }
+    t.print();
+    println!("    (paper: 'we expect to halve this area in the final design')");
+
+    println!("\n-- E9: board extrapolation (Sec. IV end) --");
+    let (gflops, watts) = board_extrapolation(32, 8, &DnpConfig::shapes_rdt(), &tech);
+    compare("board compute", 1000.0, gflops, "GFlops");
+    compare("board power", 600.0, watts, "W");
+
+    println!("\n-- frequency scaling (Sec. V: 45 nm should reach 1 GHz) --");
+    let mut cfg = DnpConfig::mtnoc();
+    cfg.freq_mhz = 1000.0;
+    let fast = estimate(&cfg, &tech);
+    println!(
+        "    MTNoC @1 GHz: area {:.2} mm^2 (unchanged), power {:.0} mW (2x dynamic)",
+        fast.area_mm2, fast.power_mw
+    );
+}

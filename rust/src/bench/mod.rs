@@ -1,0 +1,145 @@
+//! Micro-bench harness (the image carries no `criterion`; every bench in
+//! `rust/benches/` is `harness = false` and uses this module).
+//!
+//! Two kinds of measurements coexist here:
+//!
+//! * **simulated time** — cycle counts read off the simulator: the numbers
+//!   the paper reports (latencies in cycles/ns, bandwidths in bit/cycle).
+//! * **wall time** — how fast the simulator itself runs (flit-hops/s),
+//!   used by the §Perf optimization pass.
+
+use crate::util::{mad, median};
+use std::time::Instant;
+
+/// Wall-clock measurement of a closure: warmups, then `reps` timed runs.
+pub struct WallResult {
+    pub reps: usize,
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub min_s: f64,
+}
+
+pub fn wall<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> WallResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    WallResult {
+        reps,
+        median_s: median(&times),
+        mad_s: mad(&times),
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Simple fixed-width table printer for bench reports (mirrors the rows
+/// the paper's tables/figures show).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(
+            &cells
+                .iter()
+                .map(|c| format!("{c}"))
+                .collect::<Vec<_>>(),
+        );
+    }
+
+    pub fn print(&self) {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<width$} | ", c, width = w[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!(
+            "|{}|",
+            w.iter()
+                .map(|n| "-".repeat(n + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+/// Bench banner: name + paper reference, for grep-able bench logs.
+pub fn banner(id: &str, paper_ref: &str, claim: &str) {
+    println!();
+    println!("=== {id} — {paper_ref}");
+    println!("    paper: {claim}");
+}
+
+/// One comparison line: paper value vs measured, with ratio.
+pub fn compare(metric: &str, paper: f64, measured: f64, unit: &str) {
+    let ratio = if paper != 0.0 { measured / paper } else { f64::NAN };
+    println!(
+        "    {metric}: paper {paper:.1} {unit} | measured {measured:.1} {unit} | ratio {ratio:.2}"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_measures_something() {
+        let mut x = 0u64;
+        let r = wall(1, 5, || {
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert_eq!(r.reps, 5);
+        assert!(r.median_s >= 0.0);
+        assert!(r.min_s <= r.median_s);
+        assert!(x > 0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.rowf(&[&3, &"four"]);
+        t.print(); // smoke: no panic
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+}

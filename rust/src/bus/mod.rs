@@ -1,0 +1,234 @@
+//! Intra-tile interconnect model (paper Sec. II-E, III-A).
+//!
+//! In SHAPES the DNP talks AMBA-AHB through a *multilayer* bus matrix
+//! (Fig. 5), so each DNP master port owns an independent path to tile
+//! memory: no inter-port contention, 32-bit data, 1 word/cycle sustained
+//! after a per-burst setup (the paper's "up to 1 word/cycle" figure which
+//! yields BW_int = L × 32 bit/cycle). The slave interface maps the REG
+//! bank, the LUT and the CMD FIFO; it is modelled directly by the DNP
+//! engine (commands arrive with `Timing::cmd_issue` latency).
+//!
+//! This module provides the tile memory, the master-port allocator and the
+//! burst timing helpers the DNP TX/RX sessions use.
+
+use crate::packet::Word;
+
+/// Word-addressed tile memory (DDM/DXM aggregate of the RDT).
+#[derive(Debug, Clone)]
+pub struct TileMemory {
+    words: Vec<Word>,
+}
+
+impl TileMemory {
+    pub fn new(words: usize) -> Self {
+        Self {
+            words: vec![0; words],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    #[inline]
+    pub fn read(&self, addr: u32) -> Word {
+        self.words[addr as usize]
+    }
+
+    #[inline]
+    pub fn write(&mut self, addr: u32, w: Word) {
+        self.words[addr as usize] = w;
+    }
+
+    pub fn read_slice(&self, addr: u32, len: u32) -> &[Word] {
+        &self.words[addr as usize..(addr + len) as usize]
+    }
+
+    pub fn write_slice(&mut self, addr: u32, data: &[Word]) {
+        self.words[addr as usize..addr as usize + data.len()].copy_from_slice(data);
+    }
+}
+
+/// Which DNP-internal client holds a master port.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PortUse {
+    /// TX read stream (ENG executing a command).
+    TxRead,
+    /// RX write stream (RDMA ctrl delivering a packet).
+    RxWrite,
+    /// Completion-queue event write.
+    CqWrite,
+}
+
+/// Allocator for the L intra-tile master ports. Multilayer AHB: ports are
+/// independent; a burst holds its port exclusively until released.
+#[derive(Debug, Clone)]
+pub struct BusMasters {
+    in_use: Vec<Option<PortUse>>,
+    /// Cumulative words moved per port (bandwidth accounting).
+    pub words_moved: Vec<u64>,
+}
+
+impl BusMasters {
+    pub fn new(l_ports: usize) -> Self {
+        assert!(l_ports > 0);
+        Self {
+            in_use: vec![None; l_ports],
+            words_moved: vec![0; l_ports],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.in_use.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.in_use.is_empty()
+    }
+
+    /// Claim a free port; returns its index.
+    pub fn acquire(&mut self, usage: PortUse) -> Option<usize> {
+        let i = self.in_use.iter().position(|p| p.is_none())?;
+        self.in_use[i] = Some(usage);
+        Some(i)
+    }
+
+    pub fn release(&mut self, port: usize) {
+        debug_assert!(self.in_use[port].is_some(), "releasing a free port");
+        self.in_use[port] = None;
+    }
+
+    pub fn usage(&self, port: usize) -> Option<PortUse> {
+        self.in_use[port]
+    }
+
+    pub fn free_ports(&self) -> usize {
+        self.in_use.iter().filter(|p| p.is_none()).count()
+    }
+
+    pub fn account(&mut self, port: usize, words: u64) {
+        self.words_moved[port] += words;
+    }
+
+    /// Aggregate intra-tile bandwidth in bits/cycle over `elapsed` cycles.
+    pub fn bandwidth_bits_per_cycle(&self, elapsed: u64) -> f64 {
+        if elapsed == 0 {
+            return 0.0;
+        }
+        let words: u64 = self.words_moved.iter().sum();
+        words as f64 * 32.0 / elapsed as f64
+    }
+}
+
+/// Timing of a read burst: issued at `issue`, first word valid at
+/// `issue + setup`, word `k` valid at `issue + setup + k`.
+#[derive(Debug, Clone, Copy)]
+pub struct ReadBurst {
+    pub addr: u32,
+    pub len: u32,
+    pub issue: u64,
+    pub setup: u64,
+}
+
+impl ReadBurst {
+    /// Number of words whose data is available by cycle `now`.
+    pub fn words_ready(&self, now: u64) -> u32 {
+        let first = self.issue + self.setup;
+        if now < first {
+            0
+        } else {
+            ((now - first + 1) as u32).min(self.len)
+        }
+    }
+
+    /// Cycle at which the whole burst has streamed.
+    pub fn done_at(&self) -> u64 {
+        if self.len == 0 {
+            self.issue + self.setup
+        } else {
+            self.issue + self.setup + self.len as u64 - 1
+        }
+    }
+}
+
+/// Timing of a write burst: accepts one word per cycle after setup.
+#[derive(Debug, Clone, Copy)]
+pub struct WriteBurst {
+    pub addr: u32,
+    pub issue: u64,
+    pub setup: u64,
+    pub written: u32,
+}
+
+impl WriteBurst {
+    /// Can the bus accept a word this cycle?
+    pub fn can_accept(&self, now: u64) -> bool {
+        now >= self.issue + self.setup
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_rw_roundtrip() {
+        let mut m = TileMemory::new(64);
+        m.write(3, 0xDEAD);
+        assert_eq!(m.read(3), 0xDEAD);
+        m.write_slice(10, &[1, 2, 3]);
+        assert_eq!(m.read_slice(10, 3), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn masters_acquire_release() {
+        let mut b = BusMasters::new(2);
+        let p0 = b.acquire(PortUse::TxRead).unwrap();
+        let p1 = b.acquire(PortUse::RxWrite).unwrap();
+        assert_ne!(p0, p1);
+        assert!(b.acquire(PortUse::CqWrite).is_none(), "only L=2 ports");
+        b.release(p0);
+        assert_eq!(b.free_ports(), 1);
+        assert!(b.acquire(PortUse::CqWrite).is_some());
+    }
+
+    #[test]
+    fn read_burst_streams_one_word_per_cycle() {
+        let rb = ReadBurst { addr: 0, len: 4, issue: 100, setup: 10 };
+        assert_eq!(rb.words_ready(100), 0);
+        assert_eq!(rb.words_ready(109), 0);
+        assert_eq!(rb.words_ready(110), 1);
+        assert_eq!(rb.words_ready(111), 2);
+        assert_eq!(rb.words_ready(113), 4);
+        assert_eq!(rb.words_ready(200), 4);
+        assert_eq!(rb.done_at(), 113);
+    }
+
+    #[test]
+    fn zero_len_burst_completes_at_setup() {
+        let rb = ReadBurst { addr: 0, len: 0, issue: 5, setup: 10 };
+        assert_eq!(rb.done_at(), 15);
+        assert_eq!(rb.words_ready(1000), 0);
+    }
+
+    #[test]
+    fn write_burst_gates_on_setup() {
+        let wb = WriteBurst { addr: 0, issue: 50, setup: 10, written: 0 };
+        assert!(!wb.can_accept(59));
+        assert!(wb.can_accept(60));
+    }
+
+    #[test]
+    fn bandwidth_accounting() {
+        let mut b = BusMasters::new(2);
+        b.account(0, 100);
+        b.account(1, 100);
+        // 200 words * 32 bits over 100 cycles = 64 bit/cycle (the paper's
+        // BW_int for L=2).
+        assert!((b.bandwidth_bits_per_cycle(100) - 64.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,277 @@
+//! Hand-rolled CLI (no `clap` in the image).
+//!
+//! ```text
+//! dnp loopback [--len N] [--config file.cfg]       # Fig. 8 probe
+//! dnp put      [--hops K] [--onchip] [--len N]     # Fig. 9-11 probe
+//! dnp bandwidth [--streams N]                      # Sec. IV BW figures
+//! dnp area     [--sram]                            # Table I model
+//! dnp halo     [--dims XxYxZ] [--len N]            # LQCD halo phase
+//! dnp lqcd     [--steps N] [--local XxYxZ]         # end-to-end LQCD
+//! dnp info                                         # config + model dump
+//! ```
+
+use crate::config::{parse_config, DnpConfig};
+use crate::metrics;
+use crate::model::{board_extrapolation, estimate, estimate_with_sram, TechModel};
+use crate::packet::AddrFormat;
+use crate::rdma::Command;
+use crate::topology;
+use crate::traffic;
+
+/// Tiny flag parser: `--key value` and `--switch` forms.
+pub struct Args {
+    pub cmd: String,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Self {
+        let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+        let mut flags = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = argv.get(i + 1).filter(|v| !v.starts_with("--"));
+                if let Some(v) = val {
+                    flags.push((key.to_string(), Some(v.clone())));
+                    i += 2;
+                } else {
+                    flags.push((key.to_string(), None));
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Self { cmd, flags }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == key)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| die(&format!("bad --{key} value"))))
+            .unwrap_or(default)
+    }
+
+    pub fn get_dims(&self, key: &str, default: [u32; 3]) -> [u32; 3] {
+        match self.get(key) {
+            None => default,
+            Some(s) => {
+                let parts: Vec<u32> = s
+                    .split(['x', 'X'])
+                    .map(|p| p.parse().unwrap_or_else(|_| die(&format!("bad --{key}"))))
+                    .collect();
+                if parts.len() != 3 {
+                    die(&format!("--{key} needs XxYxZ"));
+                }
+                [parts[0], parts[1], parts[2]]
+            }
+        }
+    }
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(2);
+}
+
+fn load_config(args: &Args) -> DnpConfig {
+    let base = DnpConfig::shapes_rdt();
+    match args.get("config") {
+        None => base,
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .unwrap_or_else(|e| die(&format!("read {path}: {e}")));
+            parse_config(&text, base).unwrap_or_else(|e| die(&format!("{path}: {e}")))
+        }
+    }
+}
+
+pub fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    match args.cmd.as_str() {
+        "loopback" => cmd_loopback(&args),
+        "put" => cmd_put(&args),
+        "bandwidth" => cmd_bandwidth(&args),
+        "area" => cmd_area(&args),
+        "halo" => cmd_halo(&args),
+        "lqcd" => cmd_lqcd(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            println!("usage: dnp <loopback|put|bandwidth|area|halo|lqcd|info> [flags]");
+            println!("see module docs of dnp::cli for the full flag list");
+        }
+    }
+}
+
+fn cmd_loopback(args: &Args) {
+    let cfg = load_config(args);
+    let len = args.get_u64("len", 1) as u32;
+    let mut net = topology::two_tiles_offchip(&cfg, 1 << 16);
+    net.dnp_mut(0).mem.write_slice(0x40, &vec![7u32; len as usize]);
+    net.issue(0, Command::loopback(0x40, 0x4000, len).with_tag(1));
+    net.run_until_idle(100_000).expect("loopback completes");
+    let b = metrics::breakdown(&net, 0, 1).expect("trace");
+    println!(
+        "LOOPBACK len={len}: L1={} L2={} total={} cycles ({:.0} ns @{} MHz) [paper: ~100 cycles / 200 ns]",
+        b.l1,
+        b.l2 + b.l3 + b.l4,
+        b.total(),
+        b.total_ns(cfg.freq_mhz),
+        cfg.freq_mhz
+    );
+}
+
+fn cmd_put(args: &Args) {
+    let cfg = load_config(args);
+    let len = args.get_u64("len", 1) as u32;
+    let hops = args.get_u64("hops", 1) as u32;
+    if args.has("onchip") {
+        let mut net = topology::two_tiles_onchip(&DnpConfig::mt2d(), 1 << 16);
+        let fmt = AddrFormat::Mesh2D { dims: [2, 1] };
+        net.dnp_mut(1).register_buffer(0x4000, 1024, 0);
+        net.issue(0, Command::put(0x40, fmt.encode(&[1, 0]), 0x4000, len).with_tag(1));
+        net.run_until_idle(100_000).expect("put completes");
+        let b = metrics::breakdown(&net, 0, 1).expect("trace");
+        println!(
+            "PUT on-chip len={len}: L1={} L2={} L3={} L4={} total={} cycles [paper: ~130]",
+            b.l1, b.l2, b.l3, b.l4, b.total()
+        );
+    } else {
+        // Odd ring of 2*hops+1 nodes: the minimal path to node `hops`
+        // is exactly `hops` forward hops (no shortcut the other way).
+        let ring = (2 * hops + 1).max(2);
+        let mut net = topology::ring_offchip(ring, &cfg, 1 << 16);
+        let fmt = AddrFormat::Torus3D { dims: [ring, 1, 1] };
+        let dst = hops.min(ring - 1);
+        net.dnp_mut(dst as usize).register_buffer(0x4000, 1024, 0);
+        net.issue(0, Command::put(0x40, fmt.encode(&[dst, 0, 0]), 0x4000, len).with_tag(1));
+        net.run_until_idle(200_000).expect("put completes");
+        let b = metrics::breakdown(&net, 0, 1).expect("trace");
+        println!(
+            "PUT off-chip {hops} hop(s) len={len}: L1={} L2={} L3={} L4={} total={} cycles [paper 1 hop: ~250, +100/hop]",
+            b.l1, b.l2, b.l3, b.l4, b.total()
+        );
+    }
+}
+
+fn cmd_bandwidth(args: &Args) {
+    let cfg = load_config(args);
+    let streams = args.get_u64("streams", 8) as usize;
+    let mut net = topology::two_tiles_offchip(&cfg, 1 << 16);
+    let fmt = AddrFormat::Torus3D { dims: [2, 1, 1] };
+    net.dnp_mut(1).register_buffer(0x4000, 0x4000, 0);
+    let t0 = net.cycle;
+    for i in 0..streams {
+        net.issue(
+            0,
+            Command::put(0x40, fmt.encode(&[1, 0, 0]), 0x4000, 256).with_tag(i as u32),
+        );
+    }
+    net.run_until_idle(10_000_000).expect("streams drain");
+    let elapsed = net.cycle - t0;
+    let bw = net.traces.delivered_words as f64 * 32.0 / elapsed as f64;
+    println!(
+        "off-chip stream: {:.2} bit/cycle over {elapsed} cycles [paper: M=1 dir ~4 bit/cycle], delivered {} words",
+        bw, net.traces.delivered_words
+    );
+}
+
+fn cmd_area(args: &Args) {
+    let tech = TechModel::default();
+    let show = |name: &str, cfg: &DnpConfig| {
+        let e = if args.has("sram") {
+            estimate_with_sram(cfg, &tech)
+        } else {
+            estimate(cfg, &tech)
+        };
+        println!(
+            "{name}: N={} M={} area={:.2} mm^2 power={:.0} mW (core {:.2} + xbar {:.2} + ports {:.2})",
+            cfg.n_ports, cfg.m_ports, e.area_mm2, e.power_mw, e.area_core, e.area_xbar, e.area_ports
+        );
+    };
+    show("MTNoC", &DnpConfig::mtnoc());
+    show("MT2D ", &DnpConfig::mt2d());
+    show("RDT  ", &DnpConfig::shapes_rdt());
+    let (gf, w) = board_extrapolation(32, 8, &DnpConfig::shapes_rdt(), &tech);
+    println!("board 32x8: {gf:.0} GFlops @ {w:.0} W [paper: ~1 TFlops @ ~600 W]");
+}
+
+fn cmd_halo(args: &Args) {
+    let cfg = load_config(args);
+    let dims = args.get_dims("dims", [2, 2, 2]);
+    let len = args.get_u64("len", 256) as u32;
+    let mut net = topology::torus3d(dims, &cfg, 1 << 16);
+    let slots: Vec<usize> = (0..net.nodes.len()).collect();
+    traffic::setup_buffers(&mut net, &slots);
+    let plan = traffic::halo_exchange_3d(dims, len);
+    let msgs = plan.len();
+    let mut feeder = traffic::Feeder::new(plan);
+    let cycles = traffic::run_plan(&mut net, &mut feeder, 50_000_000).expect("halo drains");
+    println!(
+        "halo {}x{}x{} len={len}: {msgs} msgs in {cycles} cycles ({:.2} bit/cycle delivered)",
+        dims[0],
+        dims[1],
+        dims[2],
+        net.traces.delivered_words as f64 * 32.0 / cycles as f64
+    );
+}
+
+fn cmd_lqcd(args: &Args) {
+    let steps = args.get_u64("steps", 4);
+    let local = args.get_dims("local", [4, 4, 4]);
+    match crate::lqcd::run_lqcd_2x2x2(steps as usize, local, true) {
+        Ok(r) => println!("{}", r.summary()),
+        Err(e) => die(&format!("lqcd: {e:#}")),
+    }
+}
+
+fn cmd_info(args: &Args) {
+    let cfg = load_config(args);
+    println!("{cfg:#?}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_and_switches() {
+        let a = Args::parse(&argv(&["put", "--hops", "3", "--onchip", "--len", "16"]));
+        assert_eq!(a.cmd, "put");
+        assert_eq!(a.get("hops"), Some("3"));
+        assert!(a.has("onchip"));
+        assert_eq!(a.get_u64("len", 1), 16);
+        assert_eq!(a.get_u64("missing", 9), 9);
+    }
+
+    #[test]
+    fn dims_parse() {
+        let a = Args::parse(&argv(&["halo", "--dims", "4x2x2"]));
+        assert_eq!(a.get_dims("dims", [1, 1, 1]), [4, 2, 2]);
+        assert_eq!(a.get_dims("absent", [2, 2, 2]), [2, 2, 2]);
+    }
+
+    #[test]
+    fn last_flag_wins() {
+        let a = Args::parse(&argv(&["x", "--len", "1", "--len", "2"]));
+        assert_eq!(a.get("len"), Some("2"));
+    }
+}

@@ -1,0 +1,334 @@
+//! Parametric DNP configuration (paper Sec. II).
+//!
+//! The DNP is a *parametric IP library*: the number of intra-tile master
+//! ports `L`, on-chip inter-tile ports `N` and off-chip inter-tile ports `M`
+//! are design-time parameters, together with the routing algorithm,
+//! arbitration policy, virtual-channel provisioning, FIFO depths and the
+//! off-chip serialization factor. This module is the single source of truth
+//! for those knobs; every other module reads its numbers from here.
+
+pub mod parse;
+
+pub use parse::{parse_config, ParseError};
+
+/// Arbitration policy applied by the ARB block when several packets contend
+/// for the same switch output port (paper Sec. II-D: "arbitration logic
+/// choice and the port priority scheme are configurable").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArbPolicy {
+    /// Rotating round-robin among requesters (default).
+    RoundRobin,
+    /// Fixed priority by input-port index (lower index wins).
+    FixedPriority,
+    /// Least-recently-served wins.
+    LeastRecentlyServed,
+}
+
+/// Order in which the deterministic torus routing consumes coordinates
+/// (paper Sec. III-A: "first Z is consumed, then Y and eventually X...
+/// chosen at run-time by writing into a specialized priority register").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouteOrder(pub [usize; 3]);
+
+impl RouteOrder {
+    pub const XYZ: RouteOrder = RouteOrder([0, 1, 2]);
+    pub const ZYX: RouteOrder = RouteOrder([2, 1, 0]);
+    pub const YXZ: RouteOrder = RouteOrder([1, 0, 2]);
+
+    /// All six permutations (used by the routing property tests).
+    pub fn all() -> [RouteOrder; 6] {
+        [
+            RouteOrder([0, 1, 2]),
+            RouteOrder([0, 2, 1]),
+            RouteOrder([1, 0, 2]),
+            RouteOrder([1, 2, 0]),
+            RouteOrder([2, 0, 1]),
+            RouteOrder([2, 1, 0]),
+        ]
+    }
+}
+
+/// Off-chip SerDes parameters (paper Sec. III-A.2 and IV).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SerdesConfig {
+    /// Serialization factor: DNP internal width (32) / number of serial
+    /// lines. SHAPES uses 16 → 2 lines; with DDR signalling the channel
+    /// moves `32 * 2 / factor` bits per cycle = 4 bit/cycle at factor 16.
+    pub factor: u32,
+    /// Double-data-rate signalling (2 bits per line per cycle).
+    pub ddr: bool,
+    /// TX pipeline depth: CRC insertion + DC-balance + sync FIFO.
+    pub tx_pipe: u64,
+    /// RX pipeline depth: word alignment + mesochronous sync + CRC check.
+    pub rx_pipe: u64,
+    /// Wire flight time in cycles (cable of "some meters" at 500 MHz).
+    pub wire: u64,
+    /// Injected bit-error rate per word (0.0 in the nominal model; the
+    /// fault-injection experiments raise it).
+    pub ber_per_word: f64,
+    /// Retransmission buffer depth in words (envelope protection,
+    /// Sec. III-A.2: header/footer are retransmitted on error).
+    pub retx_buf_words: u32,
+}
+
+impl SerdesConfig {
+    /// Cycles needed to serialize one 32-bit word over the link.
+    pub fn cycles_per_word(&self) -> u64 {
+        let bits_per_cycle = self.bits_per_cycle();
+        (32.0 / bits_per_cycle).ceil() as u64
+    }
+
+    /// Effective payload bits per cycle in one direction.
+    pub fn bits_per_cycle(&self) -> f64 {
+        let lines = 32.0 / self.factor as f64;
+        lines * if self.ddr { 2.0 } else { 1.0 }
+    }
+}
+
+impl Default for SerdesConfig {
+    fn default() -> Self {
+        // SHAPES choice: factor 16, DDR → 4 bit/cycle, 8 cycles/word.
+        Self {
+            factor: 16,
+            ddr: true,
+            tx_pipe: 44,
+            rx_pipe: 44,
+            wire: 8,
+            ber_per_word: 0.0,
+            retx_buf_words: 16,
+        }
+    }
+}
+
+/// Pipeline-depth parameters of the DNP blocks, in cycles. Defaults are
+/// calibrated so the *measured* simulator latencies land on the paper's
+/// published numbers (L_int ≈ 100, L_onchip ≈ 130, L_offchip ≈ 250,
+/// extra off-chip hop ≈ 100 — Sec. IV); see EXPERIMENTS.md.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Timing {
+    /// Intra-tile slave write of a 7-word command into the CMD FIFO.
+    pub cmd_issue: u64,
+    /// ENG: command fetch from CMD FIFO + decode + header fill.
+    pub eng_fetch: u64,
+    /// RDMA ctrl programming + master-port read request issue.
+    pub rdma_prog: u64,
+    /// Intra-tile bus read: first-word latency (then 1 word/cycle).
+    pub bus_read_lat: u64,
+    /// Intra-tile bus write: setup latency (then 1 word/cycle).
+    pub bus_write_lat: u64,
+    /// Fragmenter + header formation before first flit injection.
+    pub hdr_form: u64,
+    /// Switch traversal pipeline depth per flit.
+    pub switch_lat: u64,
+    /// LUT scan at the destination DNP (paper: "the LUT is scanned in
+    /// search for an entry matching the packet destination buffer").
+    pub lut_lat: u64,
+    /// CQ event write after a completed transaction.
+    pub cq_write: u64,
+    /// DNI request/grant handshake (on-chip interface).
+    pub dni_lat: u64,
+    /// On-chip point-to-point / NoC per-hop link pipeline.
+    pub onchip_link_lat: u64,
+}
+
+impl Default for Timing {
+    fn default() -> Self {
+        Self {
+            cmd_issue: 10,
+            eng_fetch: 40,
+            rdma_prog: 20,
+            bus_read_lat: 10,
+            bus_write_lat: 15,
+            hdr_form: 20,
+            switch_lat: 10,
+            lut_lat: 8,
+            cq_write: 4,
+            dni_lat: 6,
+            onchip_link_lat: 2,
+        }
+    }
+}
+
+/// Complete configuration of one DNP instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DnpConfig {
+    /// Intra-tile master ports (data movers into/out of tile memory).
+    pub l_ports: usize,
+    /// Inter-tile on-chip ports.
+    pub n_ports: usize,
+    /// Inter-tile off-chip ports.
+    pub m_ports: usize,
+    /// Virtual channels per incoming inter-tile port (deadlock avoidance,
+    /// paper Sec. II: "virtual channels on incoming switch ports").
+    pub vcs: usize,
+    /// Flit buffer depth per VC.
+    pub vc_buf_depth: usize,
+    /// CMD FIFO depth in commands.
+    pub cmd_fifo_depth: usize,
+    /// LUT records available for buffer registration.
+    pub lut_records: usize,
+    /// Completion-queue ring length in events.
+    pub cq_len: usize,
+    pub arb: ArbPolicy,
+    pub route_order: RouteOrder,
+    pub timing: Timing,
+    pub serdes: SerdesConfig,
+    /// Clock frequency in MHz (500 in SHAPES; 1000 is the paper's target).
+    pub freq_mhz: f64,
+}
+
+impl DnpConfig {
+    /// SHAPES RDT render of the DNP: L=2, M=6, N=1 (paper Sec. III-A).
+    pub fn shapes_rdt() -> Self {
+        Self {
+            l_ports: 2,
+            n_ports: 1,
+            m_ports: 6,
+            ..Self::base()
+        }
+    }
+
+    /// MTNoC exploration point (Table I): N=1 on-chip (NoC), M=1 off-chip.
+    pub fn mtnoc() -> Self {
+        Self {
+            l_ports: 2,
+            n_ports: 1,
+            m_ports: 1,
+            ..Self::base()
+        }
+    }
+
+    /// MT2D exploration point (Table I): N=3 on-chip point-to-point (2D
+    /// mesh inside the chip), M=1 off-chip.
+    pub fn mt2d() -> Self {
+        Self {
+            l_ports: 2,
+            n_ports: 3,
+            m_ports: 1,
+            ..Self::base()
+        }
+    }
+
+    fn base() -> Self {
+        Self {
+            l_ports: 2,
+            n_ports: 1,
+            m_ports: 6,
+            vcs: 2,
+            vc_buf_depth: 16,
+            cmd_fifo_depth: 16,
+            lut_records: 64,
+            cq_len: 256,
+            arb: ArbPolicy::RoundRobin,
+            route_order: RouteOrder::ZYX,
+            timing: Timing::default(),
+            serdes: SerdesConfig::default(),
+            freq_mhz: 500.0,
+        }
+    }
+
+    /// Total inter-tile ports.
+    pub fn inter_ports(&self) -> usize {
+        self.n_ports + self.m_ports
+    }
+
+    /// Maximum simultaneous packet transactions the fully-switched
+    /// architecture sustains (paper abstract: "up to L+N+M").
+    pub fn max_transactions(&self) -> usize {
+        self.l_ports + self.n_ports + self.m_ports
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.l_ports == 0 {
+            return Err("at least one intra-tile master port required".into());
+        }
+        if self.inter_ports() == 0 {
+            return Err("at least one inter-tile port required".into());
+        }
+        if self.vcs == 0 || self.vc_buf_depth == 0 {
+            return Err("virtual channels need vcs >= 1 and depth >= 1".into());
+        }
+        if !self.serdes.factor.is_power_of_two() || self.serdes.factor > 32 {
+            return Err("serialization factor must be a power of two <= 32".into());
+        }
+        if self.cmd_fifo_depth == 0 || self.cq_len == 0 || self.lut_records == 0 {
+            return Err("queue depths must be non-zero".into());
+        }
+        Ok(())
+    }
+}
+
+impl Default for DnpConfig {
+    fn default() -> Self {
+        Self::shapes_rdt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_render_matches_paper() {
+        // Paper Sec. III-A: "L=2, M=6 and N=1".
+        let c = DnpConfig::shapes_rdt();
+        assert_eq!((c.l_ports, c.m_ports, c.n_ports), (2, 6, 1));
+        assert_eq!(c.max_transactions(), 9);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn table1_design_points() {
+        let a = DnpConfig::mtnoc();
+        assert_eq!((a.n_ports, a.m_ports), (1, 1));
+        let b = DnpConfig::mt2d();
+        assert_eq!((b.n_ports, b.m_ports), (3, 1));
+    }
+
+    #[test]
+    fn serdes_shapes_is_4_bits_per_cycle() {
+        // Paper Sec. IV: factor 16 → off-chip BW = 4 bit/cycle/direction.
+        let s = SerdesConfig::default();
+        assert_eq!(s.factor, 16);
+        assert!((s.bits_per_cycle() - 4.0).abs() < 1e-12);
+        assert_eq!(s.cycles_per_word(), 8);
+    }
+
+    #[test]
+    fn serdes_factor8_doubles_bandwidth() {
+        // Paper Sec. V: "reducing the serialization factor to 8" doubles BW.
+        let s = SerdesConfig { factor: 8, ..Default::default() };
+        assert!((s.bits_per_cycle() - 8.0).abs() < 1e-12);
+        assert_eq!(s.cycles_per_word(), 4);
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_configs() {
+        let mut c = DnpConfig::default();
+        c.l_ports = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = DnpConfig::default();
+        c.n_ports = 0;
+        c.m_ports = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = DnpConfig::default();
+        c.vcs = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = DnpConfig::default();
+        c.serdes.factor = 12;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn route_orders_are_permutations() {
+        for o in RouteOrder::all() {
+            let mut s = o.0;
+            s.sort_unstable();
+            assert_eq!(s, [0, 1, 2]);
+        }
+    }
+}

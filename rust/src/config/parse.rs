@@ -1,0 +1,195 @@
+//! Minimal `key = value` config-file parser.
+//!
+//! The image carries no `serde`, so experiment configs are flat
+//! `key = value` text with `#` comments — enough to drive every knob in
+//! [`DnpConfig`](super::DnpConfig) from the CLI (`--config file.cfg`).
+//!
+//! ```text
+//! # SHAPES render
+//! l_ports = 2
+//! n_ports = 1
+//! m_ports = 6
+//! serdes.factor = 16
+//! route_order = zyx
+//! arb = round_robin
+//! ```
+
+use super::{ArbPolicy, DnpConfig, RouteOrder};
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ParseError {
+    #[error("line {0}: expected `key = value`, got `{1}`")]
+    Syntax(usize, String),
+    #[error("line {0}: unknown key `{1}`")]
+    UnknownKey(usize, String),
+    #[error("line {0}: bad value `{2}` for `{1}`")]
+    BadValue(usize, String, String),
+}
+
+fn parse_u<T: TryFrom<u64>>(line: usize, key: &str, v: &str) -> Result<T, ParseError> {
+    v.parse::<u64>()
+        .ok()
+        .and_then(|x| T::try_from(x).ok())
+        .ok_or_else(|| ParseError::BadValue(line, key.into(), v.into()))
+}
+
+fn parse_f(line: usize, key: &str, v: &str) -> Result<f64, ParseError> {
+    v.parse::<f64>()
+        .map_err(|_| ParseError::BadValue(line, key.into(), v.into()))
+}
+
+fn parse_bool(line: usize, key: &str, v: &str) -> Result<bool, ParseError> {
+    match v {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        _ => Err(ParseError::BadValue(line, key.into(), v.into())),
+    }
+}
+
+fn parse_route_order(line: usize, v: &str) -> Result<RouteOrder, ParseError> {
+    if v.len() != 3 {
+        return Err(ParseError::BadValue(line, "route_order".into(), v.into()));
+    }
+    let mut order = [0usize; 3];
+    for (i, ch) in v.chars().enumerate() {
+        order[i] = match ch.to_ascii_lowercase() {
+            'x' => 0,
+            'y' => 1,
+            'z' => 2,
+            _ => return Err(ParseError::BadValue(line, "route_order".into(), v.into())),
+        };
+    }
+    let mut sorted = order;
+    sorted.sort_unstable();
+    if sorted != [0, 1, 2] {
+        return Err(ParseError::BadValue(line, "route_order".into(), v.into()));
+    }
+    Ok(RouteOrder(order))
+}
+
+/// Apply `key = value` lines on top of a base config.
+pub fn parse_config(text: &str, base: DnpConfig) -> Result<DnpConfig, ParseError> {
+    let mut c = base;
+    for (ln, raw) in text.lines().enumerate() {
+        let line_no = ln + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| ParseError::Syntax(line_no, raw.into()))?;
+        let (key, value) = (key.trim(), value.trim());
+        match key {
+            "l_ports" => c.l_ports = parse_u(line_no, key, value)?,
+            "n_ports" => c.n_ports = parse_u(line_no, key, value)?,
+            "m_ports" => c.m_ports = parse_u(line_no, key, value)?,
+            "vcs" => c.vcs = parse_u(line_no, key, value)?,
+            "vc_buf_depth" => c.vc_buf_depth = parse_u(line_no, key, value)?,
+            "cmd_fifo_depth" => c.cmd_fifo_depth = parse_u(line_no, key, value)?,
+            "lut_records" => c.lut_records = parse_u(line_no, key, value)?,
+            "cq_len" => c.cq_len = parse_u(line_no, key, value)?,
+            "freq_mhz" => c.freq_mhz = parse_f(line_no, key, value)?,
+            "arb" => {
+                c.arb = match value {
+                    "round_robin" => ArbPolicy::RoundRobin,
+                    "fixed" | "fixed_priority" => ArbPolicy::FixedPriority,
+                    "lrs" | "least_recently_served" => ArbPolicy::LeastRecentlyServed,
+                    _ => return Err(ParseError::BadValue(line_no, key.into(), value.into())),
+                }
+            }
+            "route_order" => c.route_order = parse_route_order(line_no, value)?,
+            "serdes.factor" => c.serdes.factor = parse_u(line_no, key, value)?,
+            "serdes.ddr" => c.serdes.ddr = parse_bool(line_no, key, value)?,
+            "serdes.tx_pipe" => c.serdes.tx_pipe = parse_u(line_no, key, value)?,
+            "serdes.rx_pipe" => c.serdes.rx_pipe = parse_u(line_no, key, value)?,
+            "serdes.wire" => c.serdes.wire = parse_u(line_no, key, value)?,
+            "serdes.ber_per_word" => c.serdes.ber_per_word = parse_f(line_no, key, value)?,
+            "serdes.retx_buf_words" => c.serdes.retx_buf_words = parse_u(line_no, key, value)?,
+            "timing.cmd_issue" => c.timing.cmd_issue = parse_u(line_no, key, value)?,
+            "timing.eng_fetch" => c.timing.eng_fetch = parse_u(line_no, key, value)?,
+            "timing.rdma_prog" => c.timing.rdma_prog = parse_u(line_no, key, value)?,
+            "timing.bus_read_lat" => c.timing.bus_read_lat = parse_u(line_no, key, value)?,
+            "timing.bus_write_lat" => c.timing.bus_write_lat = parse_u(line_no, key, value)?,
+            "timing.hdr_form" => c.timing.hdr_form = parse_u(line_no, key, value)?,
+            "timing.switch_lat" => c.timing.switch_lat = parse_u(line_no, key, value)?,
+            "timing.lut_lat" => c.timing.lut_lat = parse_u(line_no, key, value)?,
+            "timing.cq_write" => c.timing.cq_write = parse_u(line_no, key, value)?,
+            "timing.dni_lat" => c.timing.dni_lat = parse_u(line_no, key, value)?,
+            "timing.onchip_link_lat" => c.timing.onchip_link_lat = parse_u(line_no, key, value)?,
+            _ => return Err(ParseError::UnknownKey(line_no, key.into())),
+        }
+    }
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_example() {
+        let text = "\
+# SHAPES render
+l_ports = 2
+n_ports = 1   # NoC
+m_ports = 6
+serdes.factor = 8
+route_order = xyz
+arb = fixed
+freq_mhz = 1000
+";
+        let c = parse_config(text, DnpConfig::default()).unwrap();
+        assert_eq!(c.m_ports, 6);
+        assert_eq!(c.serdes.factor, 8);
+        assert_eq!(c.route_order, RouteOrder::XYZ);
+        assert_eq!(c.arb, ArbPolicy::FixedPriority);
+        assert_eq!(c.freq_mhz, 1000.0);
+    }
+
+    #[test]
+    fn empty_and_comments_only() {
+        let c = parse_config("\n# nothing\n   \n", DnpConfig::default()).unwrap();
+        assert_eq!(c, DnpConfig::default());
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        let e = parse_config("bogus = 1", DnpConfig::default()).unwrap_err();
+        assert!(matches!(e, ParseError::UnknownKey(1, _)));
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        let e = parse_config("l_ports 2", DnpConfig::default()).unwrap_err();
+        assert!(matches!(e, ParseError::Syntax(1, _)));
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(parse_config("l_ports = two", DnpConfig::default()).is_err());
+        assert!(parse_config("route_order = xxy", DnpConfig::default()).is_err());
+        assert!(parse_config("route_order = ab", DnpConfig::default()).is_err());
+        assert!(parse_config("arb = best", DnpConfig::default()).is_err());
+        assert!(parse_config("serdes.ddr = maybe", DnpConfig::default()).is_err());
+    }
+
+    #[test]
+    fn all_route_orders_parse() {
+        for (s, o) in [
+            ("xyz", [0, 1, 2]),
+            ("zyx", [2, 1, 0]),
+            ("yxz", [1, 0, 2]),
+            ("ZYX", [2, 1, 0]),
+        ] {
+            let c = parse_config(&format!("route_order = {s}"), DnpConfig::default()).unwrap();
+            assert_eq!(c.route_order.0, o);
+        }
+    }
+
+    #[test]
+    fn timing_overrides() {
+        let c = parse_config("timing.eng_fetch = 99", DnpConfig::default()).unwrap();
+        assert_eq!(c.timing.eng_fetch, 99);
+    }
+}

@@ -1,0 +1,388 @@
+//! The ENG block: command execution / TX path (paper Sec. II-D).
+//!
+//! "The Engine (ENG) fetches commands from the CMD FIFO and uses them to
+//! fill out the packet header. The payload data are read by an intra-tile
+//! transaction using information in the RDMA Controller block and the newly
+//! created packets are forwarded through the Switch port."
+//!
+//! A [`TxStream`] is one command in execution: it owns an intra-tile master
+//! port for the duration of its read burst, walks the fragmentation plan,
+//! and emits flits into its switch injection lane as payload words stream
+//! off the bus — so the head flit leaves *before* the read completes
+//! (wormhole overlap, the effect measured in the paper's Fig. 11).
+
+use crate::bus::{ReadBurst, TileMemory};
+use crate::config::Timing;
+use crate::packet::{
+    fragment::build_fragment_packet, DnpAddr, Flit, Fragment, Fragmenter, NetHeader, Packet,
+    PacketId, PacketOp, PacketStore, RdmaHeader,
+};
+use crate::rdma::{CmdOp, Command};
+
+/// What a finished stream reports.
+#[derive(Debug, Clone, Copy)]
+pub struct TxDone {
+    pub cmd: Command,
+    pub bus_port: usize,
+    /// Cycle the read burst released the bus.
+    pub read_done: u64,
+}
+
+/// One command in execution on the TX path.
+#[derive(Debug)]
+pub struct TxStream {
+    pub cmd: Command,
+    pub me: DnpAddr,
+    pub bus_port: usize,
+    pub burst: ReadBurst,
+    frags: Vec<Fragment>,
+    cur_frag: usize,
+    cur_pkt: Option<PacketId>,
+    next_seq: u16,
+    /// Cycle the current fragment's header is formed and may inject.
+    hdr_ready: u64,
+    /// Absolute payload words already injected (across fragments).
+    words_injected: u32,
+    /// Probe: set when the first head flit is handed to the fabric.
+    pub first_head_injected: Option<u64>,
+    /// Wire-op override: the GET service path sends `GetResponse` packets
+    /// through an otherwise PUT-shaped stream.
+    pub wire_op_override: Option<PacketOp>,
+    /// The master port is released as soon as the read burst completes —
+    /// holding it until the last flit injects would couple bus availability
+    /// to network backpressure and deadlock the RX path.
+    pub bus_port_released: bool,
+}
+
+impl TxStream {
+    /// Start executing `cmd`. `read_issue` is the cycle the RDMA ctrl
+    /// issues the master-port read (the paper's L1 edge).
+    pub fn start(
+        cmd: Command,
+        me: DnpAddr,
+        bus_port: usize,
+        read_issue: u64,
+        timing: &Timing,
+    ) -> Self {
+        let frags: Vec<Fragment> = Fragmenter::new(cmd.len, cmd.dst_addr).collect();
+        let read_len = match cmd.op {
+            CmdOp::Get => 0, // GET sends a request packet, reads no data
+            _ => cmd.len,
+        };
+        Self {
+            cmd,
+            me,
+            bus_port,
+            burst: ReadBurst {
+                addr: cmd.src_addr,
+                len: read_len,
+                issue: read_issue,
+                setup: timing.bus_read_lat,
+            },
+            frags: if cmd.op == CmdOp::Get {
+                vec![Fragment { offset: 0, len: 1, dst_mem: cmd.dst_addr }]
+            } else {
+                frags
+            },
+            cur_frag: 0,
+            cur_pkt: None,
+            next_seq: 0,
+            hdr_ready: read_issue + timing.hdr_form,
+            words_injected: 0,
+            first_head_injected: None,
+            wire_op_override: None,
+            bus_port_released: false,
+        }
+    }
+
+    fn wire_op(&self) -> PacketOp {
+        if let Some(op) = self.wire_op_override {
+            return op;
+        }
+        match self.cmd.op {
+            CmdOp::Loopback => PacketOp::Loopback,
+            CmdOp::Put => PacketOp::Put,
+            CmdOp::Send => PacketOp::Send,
+            CmdOp::Get => PacketOp::GetRequest,
+        }
+    }
+
+    fn wire_dst(&self) -> DnpAddr {
+        match self.cmd.op {
+            CmdOp::Loopback => self.me,
+            // GET: the *request* travels to the data holder (SRC DNP).
+            CmdOp::Get => self.cmd.src_dnp,
+            _ => self.cmd.dst_dnp,
+        }
+    }
+
+    /// Build the packet for the current fragment (payload filled from tile
+    /// memory — on real hardware these words stream straight from the bus;
+    /// the cycle accounting below enforces exactly that timing).
+    fn build_packet(&self, mem: &TileMemory) -> Packet {
+        let frag = self.frags[self.cur_frag];
+        if self.cmd.op == CmdOp::Get {
+            // GetRequest: 1 payload word carrying the requested length.
+            return Packet::new(
+                NetHeader {
+                    dst: self.wire_dst(),
+                    src: self.me,
+                    len: 1,
+                    vc: 0,
+                },
+                RdmaHeader {
+                    op: PacketOp::GetRequest,
+                    dst_mem: self.cmd.dst_addr,
+                    src_mem: self.cmd.src_addr,
+                    resp_dst: self.cmd.dst_dnp,
+                },
+                vec![self.cmd.len],
+            );
+        }
+        let data = mem.read_slice(self.cmd.src_addr + frag.offset, frag.len);
+        build_fragment_packet(
+            frag,
+            self.me,
+            self.wire_dst(),
+            self.wire_op(),
+            self.cmd.src_addr,
+            DnpAddr::new(0),
+            data,
+        )
+    }
+
+    /// Highest flit seq of the current fragment's packet injectable by
+    /// `now`, respecting header formation and bus streaming times.
+    fn flits_ready(&self, now: u64, wire_flits: u16, payload_base: u32) -> u16 {
+        if now < self.hdr_ready {
+            return 0;
+        }
+        // Envelope head words are ready with the header. Payload word k
+        // (absolute index payload_base + k) is ready when the read burst
+        // has produced it. The footer needs every payload word.
+        let words_ready = self.burst.words_ready(now);
+        let frag = self.frags[self.cur_frag];
+        let avail_payload = if self.cmd.op == CmdOp::Get {
+            1 // request length word is internal, available with the header
+        } else {
+            words_ready.saturating_sub(payload_base).min(frag.len)
+        };
+        let envelope_head = 5u16; // NET(2) + RDMA(3)
+        let mut ready = envelope_head + avail_payload as u16;
+        if avail_payload == frag.len {
+            ready = wire_flits; // footer ready too
+        }
+        ready.min(wire_flits)
+    }
+
+    /// Advance the stream: inject at most one flit into the fabric lane
+    /// (the ENG feeds the switch at 1 word/cycle). `sink` returns false if
+    /// the lane is full this cycle. Returns flits injected (0 or 1).
+    pub fn pump(
+        &mut self,
+        now: u64,
+        mem: &TileMemory,
+        store: &mut PacketStore,
+        sink: &mut dyn FnMut(Flit) -> bool,
+        timing: &Timing,
+    ) -> u32 {
+        if self.is_done() {
+            return 0;
+        }
+        if self.cur_pkt.is_none() {
+            if now < self.hdr_ready {
+                return 0;
+            }
+            let pkt = self.build_packet(mem);
+            self.cur_pkt = Some(store.insert(pkt));
+            self.next_seq = 0;
+        }
+        let pkt_id = self.cur_pkt.unwrap();
+        let wire = store.wire_flits(pkt_id);
+        let frag = self.frags[self.cur_frag];
+        let ready = self.flits_ready(now, wire, frag.offset);
+        let mut injected = 0;
+        // One flit per cycle into the lane (ENG/switch port width).
+        if self.next_seq < ready {
+            let flit = store.flit(pkt_id, self.next_seq);
+            if !sink(flit) {
+                return 0; // lane backpressure
+            }
+            if self.next_seq == 0 && self.first_head_injected.is_none() {
+                self.first_head_injected = Some(now);
+            }
+            self.next_seq += 1;
+            injected = 1;
+            if self.next_seq == wire {
+                // Fragment fully injected; move on.
+                self.words_injected += frag.len;
+                self.cur_frag += 1;
+                self.cur_pkt = None;
+                self.next_seq = 0;
+                // Next fragment's header forms while this one drains.
+                self.hdr_ready = now + timing.hdr_form.min(4);
+            }
+        }
+        injected
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.cur_frag >= self.frags.len()
+    }
+
+    /// The bus may be released once the read burst has fully streamed.
+    pub fn read_done_at(&self) -> u64 {
+        self.burst.done_at()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Timing;
+
+    fn mem_with(addr: u32, words: &[u32]) -> TileMemory {
+        let mut m = TileMemory::new(4096);
+        m.write_slice(addr, words);
+        m
+    }
+
+    fn drain(stream: &mut TxStream, mem: &TileMemory, store: &mut PacketStore, t0: u64) -> (Vec<Flit>, u64) {
+        let timing = Timing::default();
+        let mut flits = Vec::new();
+        let mut now = t0;
+        while !stream.is_done() {
+            stream.pump(now, mem, store, &mut |f| { flits.push(f); true }, &timing);
+            now += 1;
+            assert!(now < t0 + 100_000, "stream wedged");
+        }
+        (flits, now)
+    }
+
+    #[test]
+    fn put_stream_emits_full_packet() {
+        let timing = Timing::default();
+        let mem = mem_with(0x100, &[10, 20, 30, 40]);
+        let mut store = PacketStore::new();
+        let cmd = Command::put(0x100, DnpAddr::new(7), 0x200, 4);
+        let mut s = TxStream::start(cmd, DnpAddr::new(3), 0, 100, &timing);
+        let (flits, _) = drain(&mut s, &mem, &mut store, 100);
+        assert_eq!(flits.len(), 6 + 4);
+        // Payload flits carry the memory contents.
+        let payload: Vec<u32> = flits[5..9].iter().map(|f| f.data).collect();
+        assert_eq!(payload, vec![10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn header_waits_for_hdr_form() {
+        let timing = Timing::default();
+        let mem = mem_with(0, &[1]);
+        let mut store = PacketStore::new();
+        let cmd = Command::put(0, DnpAddr::new(1), 0, 1);
+        let mut s = TxStream::start(cmd, DnpAddr::new(0), 0, 50, &timing);
+        // Before hdr_form elapses nothing is injectable.
+        assert_eq!(s.pump(50, &mem, &mut store, &mut |_| true, &timing), 0);
+        assert_eq!(
+            s.pump(50 + timing.hdr_form - 1, &mem, &mut store, &mut |_| true, &timing),
+            0
+        );
+        assert_eq!(
+            s.pump(50 + timing.hdr_form, &mem, &mut store, &mut |_| true, &timing),
+            1
+        );
+        assert_eq!(s.first_head_injected, Some(50 + timing.hdr_form));
+    }
+
+    #[test]
+    fn payload_flits_gated_by_bus_streaming() {
+        // Header forms fast, but payload word k needs the burst to reach it.
+        let mut timing = Timing::default();
+        timing.hdr_form = 0;
+        timing.bus_read_lat = 10;
+        let mem = mem_with(0, &[9; 8]);
+        let mut store = PacketStore::new();
+        let cmd = Command::put(0, DnpAddr::new(1), 0, 8);
+        let mut s = TxStream::start(cmd, DnpAddr::new(0), 0, 0, &timing);
+        // Cycle 0..4: envelope head words (5 of them) can inject.
+        let mut injected = 0;
+        for now in 0..5 {
+            injected += s.pump(now, &mem, &mut store, &mut |_| true, &timing);
+        }
+        assert_eq!(injected, 5);
+        // Cycle 5..9: burst hasn't produced words 0..? words_ready(9)=0
+        // (first word at issue+setup=10), so nothing moves.
+        for now in 5..10 {
+            assert_eq!(s.pump(now, &mem, &mut store, &mut |_| true, &timing), 0);
+        }
+        // From cycle 10 the payload streams 1/cycle.
+        for now in 10..18 {
+            assert_eq!(s.pump(now, &mem, &mut store, &mut |_| true, &timing), 1, "at {now}");
+        }
+        // Footer.
+        assert_eq!(s.pump(18, &mem, &mut store, &mut |_| true, &timing), 1);
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn large_put_fragments() {
+        let timing = Timing::default();
+        let data: Vec<u32> = (0..600).collect();
+        let mem = mem_with(0, &data);
+        let mut store = PacketStore::new();
+        let cmd = Command::put(0, DnpAddr::new(1), 0x1000, 600);
+        let mut s = TxStream::start(cmd, DnpAddr::new(0), 0, 0, &timing);
+        let (flits, _) = drain(&mut s, &mem, &mut store, 0);
+        // 3 packets: 256+256+88 payload + 3 envelopes.
+        assert_eq!(flits.len(), 600 + 3 * 6);
+        let heads: Vec<_> = flits
+            .iter()
+            .filter(|f| f.kind == crate::packet::FlitKind::Head)
+            .collect();
+        assert_eq!(heads.len(), 3);
+    }
+
+    #[test]
+    fn get_command_emits_request_packet() {
+        let timing = Timing::default();
+        let mem = TileMemory::new(64);
+        let mut store = PacketStore::new();
+        let me = DnpAddr::new(2);
+        let cmd = Command::get(DnpAddr::new(5), 0x40, me, 0x80, 1000);
+        let mut s = TxStream::start(cmd, me, 0, 0, &timing);
+        let (flits, _) = drain(&mut s, &mem, &mut store, 0);
+        assert_eq!(flits.len(), 7); // envelope + 1 length word
+        // The request is addressed to the SRC DNP.
+        let head_pkt = store.get(flits[0].pkt);
+        assert_eq!(head_pkt.net.dst, DnpAddr::new(5));
+        assert_eq!(head_pkt.rdma.op, PacketOp::GetRequest);
+        assert_eq!(head_pkt.rdma.resp_dst, me);
+        assert_eq!(head_pkt.payload, vec![1000]);
+    }
+
+    #[test]
+    fn loopback_targets_self() {
+        let timing = Timing::default();
+        let mem = mem_with(0, &[5, 6]);
+        let mut store = PacketStore::new();
+        let me = DnpAddr::new(9);
+        let cmd = Command::loopback(0, 0x20, 2);
+        let mut s = TxStream::start(cmd, me, 0, 0, &timing);
+        let (flits, _) = drain(&mut s, &mem, &mut store, 0);
+        let p = store.get(flits[0].pkt);
+        assert_eq!(p.net.dst, me);
+        assert_eq!(p.rdma.op, PacketOp::Loopback);
+    }
+
+    #[test]
+    fn injection_backpressure_stalls_stream() {
+        let timing = Timing::default();
+        let mem = mem_with(0, &[1; 4]);
+        let mut store = PacketStore::new();
+        let cmd = Command::put(0, DnpAddr::new(1), 0, 4);
+        let mut s = TxStream::start(cmd, DnpAddr::new(0), 0, 0, &timing);
+        for now in 0..100 {
+            assert_eq!(s.pump(now, &mem, &mut store, &mut |_| false, &timing), 0);
+        }
+        assert!(!s.is_done());
+    }
+}

@@ -1,0 +1,566 @@
+//! The Distributed Network Processor core (paper Fig. 1).
+//!
+//! One [`DnpNode`] is a complete DNP instance: the ENG (command fetch /
+//! decode / packet creation), the RDMA controller wrapping the LUT, the
+//! CMD FIFO, the REG bank, the crossbar SWITCH with its RTR and ARB, the L
+//! intra-tile master ports and the N+M inter-tile ports. It acts "as an
+//! off-loading network engine to the tile, performing both on-chip and
+//! off-chip transfers as well as intra-tile data moving".
+
+pub mod engine;
+pub mod regs;
+pub mod rx;
+
+pub use engine::TxStream;
+pub use regs::RegFile;
+pub use rx::{GetService, RxDone, RxSession, RxState};
+
+use crate::bus::{BusMasters, PortUse, TileMemory};
+use crate::config::{DnpConfig, RouteOrder, Timing};
+use crate::packet::{DnpAddr, Flit, PacketId, PacketOp, PacketStore};
+use crate::rdma::{CmdFifo, CmdOp, Command, CqWriter, Event, EventKind, Lut, LutMatch};
+use crate::route::Router;
+use crate::switch::{InputSrc, LocalSink, SwitchFabric};
+use crate::sim::channel::{ChannelArena, ChannelId};
+use std::collections::VecDeque;
+
+/// Observable things a DNP did during a tick; the `Net` aggregates these
+/// into per-packet / per-command traces (feeds Figs. 8-11 measurements).
+#[derive(Debug, Clone)]
+pub enum NodeEvent {
+    /// Command entered the CMD FIFO (paper's t0 for latency measures).
+    CmdIssued { tag: u32, cycle: u64 },
+    /// The RDMA ctrl issued the master-port read (end of L1).
+    ReadStart { tag: u32, cycle: u64 },
+    /// First head flit of the command handed to the switch.
+    HeadInjected { pkt: PacketId, tag: u32, cycle: u64 },
+    /// Head flit crossed the switch into inter-tile output `port` (end of
+    /// L2 at the source; transit hops log it too).
+    HeadTx { pkt: PacketId, port: usize, cycle: u64 },
+    /// Head flit reached this DNP's RDMA controller (end of L3).
+    HeadArrived { pkt: PacketId, cycle: u64 },
+    /// Packet fully delivered here (tail processed). Carries the packet's
+    /// stable uid because the store slot is retired inside the tick.
+    Delivered {
+        pkt: PacketId,
+        uid: u64,
+        src: DnpAddr,
+        op: PacketOp,
+        corrupt: bool,
+        lut_miss: bool,
+        /// First payload word write cycle (end of L4), if any was written.
+        first_write: Option<u64>,
+        cycle: u64,
+        payload_words: u32,
+    },
+    /// Command fully executed (source buffer reusable).
+    CmdDone { tag: u32, cycle: u64 },
+    /// A GET request was served (response stream injected).
+    GetServiced { cycle: u64 },
+}
+
+/// Factory for rebuilding the router when software rewrites the route
+/// priority register at run time (paper Sec. III-A).
+pub type RouterFactory = Box<dyn Fn(RouteOrder) -> Box<dyn Router> + Send>;
+
+/// Pending command fetched from the FIFO, being decoded by the ENG.
+#[derive(Debug, Clone, Copy)]
+struct Fetching {
+    cmd: Command,
+    ready: u64,
+}
+
+pub struct DnpNode {
+    pub addr: DnpAddr,
+    pub cfg: DnpConfig,
+    router: Box<dyn Router>,
+    router_factory: Option<RouterFactory>,
+    pub fabric: SwitchFabric,
+    pub mem: TileMemory,
+    pub cmd_fifo: CmdFifo,
+    pub lut: Lut,
+    pub cq: CqWriter,
+    pub regs: RegFile,
+    pub bus: BusMasters,
+
+    /// Commands written by software, due (cmd_issue) at the given cycle.
+    slave_q: VecDeque<(Command, u64)>,
+    /// ENG: command being fetched/decoded.
+    fetching: Option<Fetching>,
+    /// ENG: command stream in flight (injection lane 0).
+    cmd_tx: Option<TxStream>,
+    /// GET-service stream in flight (injection lane 1).
+    svc_tx: Option<TxStream>,
+    svc_fetching: Option<(GetService, u64)>,
+    get_q: VecDeque<GetService>,
+    /// RX delivery sessions (one per local session = L ports).
+    rx: Vec<Option<RxSession>>,
+    /// CQ events waiting for their write latency.
+    cq_defer: Vec<(Event, u64)>,
+
+    pub events: Vec<NodeEvent>,
+    pub pkts_sent: u64,
+    pub pkts_recv: u64,
+
+    /// Lane base: injection lanes follow the N+M channel inputs.
+    lane_base: usize,
+}
+
+impl DnpNode {
+    /// Build a DNP. `in_chs`/`out_chs` are the inter-tile channels in port
+    /// order (0..N on-chip, N..N+M off-chip), as wired by the topology
+    /// builder.
+    pub fn new(
+        addr: DnpAddr,
+        cfg: DnpConfig,
+        router: Box<dyn Router>,
+        in_chs: Vec<ChannelId>,
+        out_chs: Vec<ChannelId>,
+        mem_words: usize,
+        cq_base: u32,
+    ) -> Self {
+        cfg.validate().expect("invalid DNP config");
+        assert_eq!(in_chs.len(), cfg.inter_ports(), "one in-channel per port");
+        assert_eq!(out_chs.len(), cfg.inter_ports(), "one out-channel per port");
+        let lane_base = in_chs.len();
+        let mut inputs: Vec<InputSrc> = in_chs.into_iter().map(InputSrc::Chan).collect();
+        inputs.push(InputSrc::Inject); // lane 0: command TX
+        inputs.push(InputSrc::Inject); // lane 1: GET service TX
+        let fabric = SwitchFabric::new(
+            inputs,
+            out_chs,
+            cfg.l_ports,
+            cfg.vcs,
+            cfg.vc_buf_depth.max(8),
+            cfg.arb,
+        );
+        Self {
+            addr,
+            fabric,
+            mem: TileMemory::new(mem_words),
+            cmd_fifo: CmdFifo::new(cfg.cmd_fifo_depth),
+            lut: Lut::new(cfg.lut_records),
+            cq: CqWriter::new(cq_base, cfg.cq_len),
+            regs: RegFile::new(),
+            bus: BusMasters::new(cfg.l_ports),
+            slave_q: VecDeque::new(),
+            fetching: None,
+            cmd_tx: None,
+            svc_tx: None,
+            svc_fetching: None,
+            get_q: VecDeque::new(),
+            rx: (0..cfg.l_ports).map(|_| None).collect(),
+            cq_defer: Vec::new(),
+            events: Vec::new(),
+            pkts_sent: 0,
+            pkts_recv: 0,
+            lane_base,
+            router,
+            router_factory: None,
+            cfg,
+        }
+    }
+
+    pub fn set_router_factory(&mut self, f: RouterFactory) {
+        self.router_factory = Some(f);
+    }
+
+    /// Swap the RTR logic at run time — the programmable-router hook of
+    /// the paper's Sec. V roadmap (used by the fault-tolerance extension).
+    pub fn replace_router(&mut self, r: Box<dyn Router>) {
+        self.router = r;
+    }
+
+    pub fn router(&self) -> &dyn Router {
+        &*self.router
+    }
+
+    /// Software: write a command through the intra-tile slave interface.
+    /// It reaches the CMD FIFO after `Timing::cmd_issue` cycles.
+    pub fn issue(&mut self, cmd: Command, now: u64) {
+        self.slave_q
+            .push_back((cmd, now + self.cfg.timing.cmd_issue));
+    }
+
+    /// Software: register an RDMA destination buffer.
+    pub fn register_buffer(&mut self, start: u32, len: u32, flags: u32) -> Option<usize> {
+        self.lut.register(start, len, flags)
+    }
+
+    /// Is every engine idle and every queue drained?
+    pub fn is_idle(&self) -> bool {
+        self.slave_q.is_empty()
+            && self.fetching.is_none()
+            && self.cmd_fifo.is_empty()
+            && self.cmd_tx.is_none()
+            && self.svc_tx.is_none()
+            && self.svc_fetching.is_none()
+            && self.get_q.is_empty()
+            && self.rx.iter().all(|s| s.is_none())
+            && self.cq_defer.is_empty()
+    }
+
+    /// One cycle of the whole DNP.
+    pub fn tick(&mut self, now: u64, chans: &mut ChannelArena, store: &mut PacketStore) {
+        let timing = self.cfg.timing;
+
+        // --- REG bank: run-time route-priority rewrite (Sec. III-A).
+        if let Some(order) = self.regs.take_route_update() {
+            if let Some(f) = &self.router_factory {
+                self.router = f(order);
+            }
+        }
+
+        // --- §Perf idle fast path: a fully quiescent DNP skips the whole
+        // tick (common in large nets where traffic is localized).
+        if self.slave_q.is_empty()
+            && self.fetching.is_none()
+            && self.cmd_tx.is_none()
+            && self.svc_tx.is_none()
+            && self.svc_fetching.is_none()
+            && self.get_q.is_empty()
+            && self.cmd_fifo.is_empty()
+            && self.cq_defer.is_empty()
+            && self.rx.iter().all(|s| s.is_none())
+            && self.fabric.is_quiet(chans)
+        {
+            return;
+        }
+
+        // --- Intra-tile slave: commands land in the CMD FIFO.
+        while let Some(&(cmd, ready)) = self.slave_q.front() {
+            if ready <= now && !self.cmd_fifo.is_full() {
+                self.slave_q.pop_front();
+                self.cmd_fifo.push(cmd);
+                self.events.push(NodeEvent::CmdIssued { tag: cmd.tag, cycle: now });
+            } else {
+                break;
+            }
+        }
+
+        // --- Deferred CQ writes.
+        let mut i = 0;
+        while i < self.cq_defer.len() {
+            if self.cq_defer[i].1 <= now {
+                let (ev, _) = self.cq_defer.swap_remove(i);
+                self.cq.post(&mut self.mem, ev);
+            } else {
+                i += 1;
+            }
+        }
+
+        if self.regs.enabled(regs::EN_ENG) {
+            self.tick_eng(now, store, &timing);
+        }
+
+        // --- RX sessions waiting for a master port.
+        for s in self.rx.iter_mut().flatten() {
+            if s.wants_port && s.bus_port.is_none() {
+                if let Some(p) = self.bus.acquire(PortUse::RxWrite) {
+                    s.bus_port = Some(p);
+                    s.wants_port = false;
+                }
+            }
+        }
+
+        // --- Switch fabric + local delivery.
+        let mut dones: Vec<RxDone> = Vec::new();
+        if self.regs.enabled(regs::EN_SWITCH) {
+            let mut ctx = RxCtx {
+                sessions: &mut self.rx,
+                mem: &mut self.mem,
+                lut: &mut self.lut,
+                timing: &timing,
+                dones: &mut dones,
+                events: &mut self.events,
+            };
+            self.fabric
+                .tick(now, &*self.router, chans, store, &mut ctx);
+        }
+        for (pkt, port, cycle) in self.fabric.head_log.drain(..) {
+            self.events.push(NodeEvent::HeadTx { pkt, port, cycle });
+        }
+
+        // --- Completed deliveries.
+        for d in dones {
+            self.finish_delivery(d, now, store, &timing);
+        }
+
+        // --- Status mirror.
+        self.regs.hw_set(regs::REG_CMD_FIFO_LEVEL, self.cmd_fifo.len() as u32);
+        self.regs.hw_set(regs::REG_LUT_MISSES, self.lut.misses as u32);
+        self.regs.hw_set(regs::REG_PKTS_SENT, self.pkts_sent as u32);
+        self.regs.hw_set(regs::REG_PKTS_RECV, self.pkts_recv as u32);
+        self.regs.hw_set(regs::REG_CQ_WRITTEN, self.cq.written as u32);
+    }
+
+    /// ENG: fetch/decode commands, run the two TX streams.
+    fn tick_eng(&mut self, now: u64, store: &mut PacketStore, timing: &Timing) {
+        // Prefetch the next command while the current stream drains — the
+        // ENG pipelines fetch/decode against injection so back-to-back
+        // commands sustain BW_int = L × 32 bit/cycle (Sec. IV).
+        if self.fetching.is_none() {
+            if let Some(cmd) = self.cmd_fifo.pop() {
+                self.fetching = Some(Fetching {
+                    cmd,
+                    ready: now + timing.eng_fetch + timing.rdma_prog,
+                });
+            }
+        }
+        // Decode finished → acquire a read port, issue the burst.
+        if self.cmd_tx.is_none() {
+            if let Some(f) = self.fetching {
+                if f.ready <= now {
+                    if let Some(port) = self.bus.acquire(PortUse::TxRead) {
+                        self.fetching = None;
+                        self.events.push(NodeEvent::ReadStart { tag: f.cmd.tag, cycle: now });
+                        self.cmd_tx =
+                            Some(TxStream::start(f.cmd, self.addr, port, now, timing));
+                    }
+                }
+            }
+        }
+        // GET service engine (lane 1).
+        if self.svc_tx.is_none() && self.svc_fetching.is_none() {
+            if let Some(svc) = self.get_q.pop_front() {
+                self.svc_fetching = Some((svc, now + timing.rdma_prog));
+            }
+        }
+        if let Some((svc, ready)) = self.svc_fetching {
+            if ready <= now {
+                if let Some(port) = self.bus.acquire(PortUse::TxRead) {
+                    self.svc_fetching = None;
+                    // A GetResponse is a PUT whose wire op differs.
+                    let cmd = Command {
+                        op: CmdOp::Put,
+                        src_addr: svc.src_mem,
+                        dst_addr: svc.dst_mem,
+                        len: svc.len,
+                        src_dnp: self.addr,
+                        dst_dnp: svc.resp_dst,
+                        notify: false,
+                        tag: u32::MAX,
+                    };
+                    let mut tx = TxStream::start(cmd, self.addr, port, now, timing);
+                    tx.wire_op_override = Some(PacketOp::GetResponse);
+                    self.svc_tx = Some(tx);
+                }
+            }
+        }
+
+        // Pump both streams (each feeds its own injection lane).
+        for lane_off in 0..2usize {
+            let lane = self.lane_base + lane_off;
+            let (slot, mem, fabric) = if lane_off == 0 {
+                (&mut self.cmd_tx, &self.mem, &mut self.fabric)
+            } else {
+                (&mut self.svc_tx, &self.mem, &mut self.fabric)
+            };
+            let Some(tx) = slot.as_mut() else { continue };
+            let mut injected_heads: Vec<PacketId> = Vec::new();
+            tx.pump(
+                now,
+                mem,
+                store,
+                &mut |flit: Flit| {
+                    if !fabric.can_inject(lane) {
+                        return false;
+                    }
+                    if flit.seq == 0 {
+                        injected_heads.push(flit.pkt);
+                    }
+                    fabric.inject(lane, flit);
+                    true
+                },
+                timing,
+            );
+            let tag = tx.cmd.tag;
+            for pkt in injected_heads {
+                self.pkts_sent += 1;
+                self.events.push(NodeEvent::HeadInjected { pkt, tag, cycle: now });
+            }
+            let tx = slot.as_mut().unwrap();
+            // Free the master port the moment the read burst has streamed:
+            // keeping it across injection backpressure would deadlock the
+            // RX sessions waiting for a port.
+            if !tx.bus_port_released && tx.read_done_at() <= now {
+                self.bus.account(tx.bus_port, tx.burst.len as u64);
+                self.bus.release(tx.bus_port);
+                tx.bus_port_released = true;
+            }
+            if tx.is_done() && tx.read_done_at() <= now {
+                let done = slot.take().unwrap();
+                if !done.bus_port_released {
+                    self.bus.release(done.bus_port);
+                }
+                if lane_off == 1 {
+                    self.events.push(NodeEvent::GetServiced { cycle: now });
+                    // GetServed CQ event at the serving DNP.
+                    self.cq_defer.push((
+                        Event {
+                            kind: EventKind::GetServed,
+                            peer: done.cmd.dst_dnp,
+                            addr: done.cmd.src_addr,
+                            len_or_tag: done.cmd.len,
+                        },
+                        now + self.cfg.timing.cq_write,
+                    ));
+                } else {
+                    self.events.push(NodeEvent::CmdDone { tag: done.cmd.tag, cycle: now });
+                    if done.cmd.notify {
+                        self.cq_defer.push((
+                            Event {
+                                kind: EventKind::CmdDone,
+                                peer: done.cmd.dst_dnp,
+                                addr: done.cmd.src_addr,
+                                len_or_tag: done.cmd.tag,
+                            },
+                            now + self.cfg.timing.cq_write,
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Tail processed: post CQ events, recycle ports, retire the packet.
+    fn finish_delivery(
+        &mut self,
+        d: RxDone,
+        now: u64,
+        store: &mut PacketStore,
+        timing: &Timing,
+    ) {
+        if let Some(p) = d.bus_port {
+            self.bus.release(p);
+            self.bus.account(p, d.payload.len() as u64);
+        }
+        self.pkts_recv += 1;
+        let cq_at = now + timing.cq_write;
+        match d.rdma.op {
+            PacketOp::GetRequest => {
+                self.get_q.push_back(GetService {
+                    initiator: d.net.src,
+                    src_mem: d.rdma.src_mem,
+                    dst_mem: d.rdma.dst_mem,
+                    resp_dst: d.rdma.resp_dst,
+                    len: d.payload.first().copied().unwrap_or(0),
+                });
+            }
+            op => {
+                let kind = if d.lut_miss {
+                    EventKind::LutMiss
+                } else if op == PacketOp::Send {
+                    EventKind::SendLanded
+                } else {
+                    EventKind::PacketWritten
+                };
+                self.cq_defer.push((
+                    Event {
+                        kind,
+                        peer: d.net.src,
+                        addr: d.landed_at.unwrap_or(d.rdma.dst_mem),
+                        len_or_tag: d.net.len as u32,
+                    },
+                    cq_at,
+                ));
+                if d.corrupt {
+                    self.cq_defer.push((
+                        Event {
+                            kind: EventKind::CorruptPayload,
+                            peer: d.net.src,
+                            addr: d.landed_at.unwrap_or(0),
+                            len_or_tag: d.net.len as u32,
+                        },
+                        cq_at + 1,
+                    ));
+                }
+            }
+        }
+        self.events.push(NodeEvent::Delivered {
+            pkt: d.pkt,
+            uid: store.uid(d.pkt),
+            src: d.net.src,
+            op: d.rdma.op,
+            corrupt: d.corrupt,
+            lut_miss: d.lut_miss,
+            first_write: d.first_write_cycle,
+            cycle: now,
+            payload_words: d.net.len as u32,
+        });
+        store.retire(d.pkt);
+    }
+}
+
+/// Disjoint-borrow context implementing the fabric's local sink.
+struct RxCtx<'a> {
+    sessions: &'a mut Vec<Option<RxSession>>,
+    mem: &'a mut TileMemory,
+    lut: &'a mut Lut,
+    timing: &'a Timing,
+    dones: &'a mut Vec<RxDone>,
+    events: &'a mut Vec<NodeEvent>,
+}
+
+impl RxCtx<'_> {
+    /// Run the LUT scan the moment the envelope completes.
+    fn resolve_session(&mut self, s: usize, now: u64) {
+        let (net, rdma) = {
+            let sess = self.sessions[s].as_ref().unwrap();
+            if sess.state != RxState::Setup {
+                return;
+            }
+            (*sess.net(), *sess.rdma())
+        };
+        let t = self.timing;
+        let (addr, miss, ready) = match rdma.op {
+            // Memory move: no LUT involvement (paper Sec. II-A).
+            PacketOp::Loopback => (Some(rdma.dst_mem), false, now + t.bus_write_lat),
+            PacketOp::Put | PacketOp::GetResponse => {
+                match self.lut.lookup_put(rdma.dst_mem, net.len as u32) {
+                    LutMatch::Hit { addr, .. } => {
+                        (Some(addr), false, now + t.lut_lat + t.bus_write_lat)
+                    }
+                    LutMatch::Miss => (None, true, now + t.lut_lat),
+                }
+            }
+            PacketOp::Send => match self.lut.lookup_send(net.len as u32) {
+                LutMatch::Hit { addr, .. } => {
+                    (Some(addr), false, now + t.lut_lat + t.bus_write_lat)
+                }
+                LutMatch::Miss => (None, true, now + t.lut_lat),
+            },
+            PacketOp::GetRequest => (None, false, now),
+        };
+        self.sessions[s].as_mut().unwrap().resolve(addr, miss, ready);
+    }
+}
+
+impl LocalSink for RxCtx<'_> {
+    fn can_accept(&self, s: usize, now: u64) -> bool {
+        match &self.sessions[s] {
+            None => true,
+            Some(sess) => sess.can_accept(now),
+        }
+    }
+
+    fn accept(&mut self, s: usize, flit: Flit, now: u64) {
+        if self.sessions[s].is_none() {
+            self.sessions[s] = Some(RxSession::open(flit, now));
+            self.events.push(NodeEvent::HeadArrived { pkt: flit.pkt, cycle: now });
+            return;
+        }
+        let done = {
+            let sess = self.sessions[s].as_mut().unwrap();
+            sess.accept(flit, now, self.mem)
+        };
+        if let Some(done) = done {
+            self.dones.push(done);
+            self.sessions[s] = None;
+            return;
+        }
+        if self.sessions[s].as_ref().unwrap().state == RxState::Setup {
+            self.resolve_session(s, now);
+        }
+    }
+}

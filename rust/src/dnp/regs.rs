@@ -1,0 +1,216 @@
+//! The DNP register bank (REG, paper Sec. II-D).
+//!
+//! "Besides the CMD FIFO, both a set of registers (REG) and the RDMA
+//! Look-Up Table (LUT) are accessible through the intra-tile slave port.
+//! The registers are used to expose status information and to configure
+//! the DNP functionality; hand-shake protocols among blocks are often
+//! time-out based with exception rising, so that time-out thresholds, as
+//! well as arbitration logic choice and the port priority scheme, are
+//! configurable this way. Moreover, some registers allow for resetting and
+//! dis/enabling of blocks inside the DNP at run time by software."
+
+use crate::config::{ArbPolicy, RouteOrder};
+
+/// Register addresses (word offsets in the slave-port register window).
+pub const REG_STATUS: u32 = 0x00;
+pub const REG_ENABLE: u32 = 0x01;
+pub const REG_ROUTE_PRIORITY: u32 = 0x02;
+pub const REG_ARB_POLICY: u32 = 0x03;
+pub const REG_TIMEOUT: u32 = 0x04;
+pub const REG_CMD_FIFO_LEVEL: u32 = 0x05;
+pub const REG_CQ_WRITTEN: u32 = 0x06;
+pub const REG_LUT_MISSES: u32 = 0x07;
+pub const REG_PKTS_SENT: u32 = 0x08;
+pub const REG_PKTS_RECV: u32 = 0x09;
+
+/// Enable bits.
+pub const EN_ENG: u32 = 1 << 0;
+pub const EN_SWITCH: u32 = 1 << 1;
+pub const EN_OFFCHIP: u32 = 1 << 2;
+pub const EN_ONCHIP: u32 = 1 << 3;
+
+/// Status bits.
+pub const ST_CMD_FIFO_FULL: u32 = 1 << 0;
+pub const ST_ENG_BUSY: u32 = 1 << 1;
+pub const ST_TIMEOUT_RAISED: u32 = 1 << 2;
+
+/// Encoding of the route-priority register: two bits per position, the
+/// dimension consumed at that position (e.g. ZYX = 0b00_01_10).
+pub fn encode_route_order(o: RouteOrder) -> u32 {
+    (o.0[0] as u32) << 4 | (o.0[1] as u32) << 2 | o.0[2] as u32
+}
+
+pub fn decode_route_order(v: u32) -> Option<RouteOrder> {
+    let o = [
+        ((v >> 4) & 0b11) as usize,
+        ((v >> 2) & 0b11) as usize,
+        (v & 0b11) as usize,
+    ];
+    let mut s = o;
+    s.sort_unstable();
+    if s != [0, 1, 2] {
+        return None;
+    }
+    Some(RouteOrder(o))
+}
+
+pub fn encode_arb(a: ArbPolicy) -> u32 {
+    match a {
+        ArbPolicy::RoundRobin => 0,
+        ArbPolicy::FixedPriority => 1,
+        ArbPolicy::LeastRecentlyServed => 2,
+    }
+}
+
+pub fn decode_arb(v: u32) -> Option<ArbPolicy> {
+    Some(match v {
+        0 => ArbPolicy::RoundRobin,
+        1 => ArbPolicy::FixedPriority,
+        2 => ArbPolicy::LeastRecentlyServed,
+        _ => return None,
+    })
+}
+
+/// The register file. Software writes land here; the DNP core samples the
+/// config registers and updates the status/statistics registers.
+#[derive(Debug, Clone)]
+pub struct RegFile {
+    regs: [u32; 16],
+    /// Set when software wrote REG_ROUTE_PRIORITY (core must re-derive its
+    /// router); cleared by `take_route_update`.
+    route_dirty: bool,
+}
+
+impl Default for RegFile {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RegFile {
+    pub fn new() -> Self {
+        let mut regs = [0u32; 16];
+        regs[REG_ENABLE as usize] = EN_ENG | EN_SWITCH | EN_OFFCHIP | EN_ONCHIP;
+        regs[REG_ROUTE_PRIORITY as usize] = encode_route_order(RouteOrder::ZYX);
+        regs[REG_TIMEOUT as usize] = 10_000;
+        Self {
+            regs,
+            route_dirty: false,
+        }
+    }
+
+    pub fn read(&self, addr: u32) -> u32 {
+        self.regs[addr as usize]
+    }
+
+    /// Software write. Status/statistics registers are read-only.
+    pub fn write(&mut self, addr: u32, v: u32) {
+        match addr {
+            REG_STATUS | REG_CMD_FIFO_LEVEL | REG_CQ_WRITTEN | REG_LUT_MISSES
+            | REG_PKTS_SENT | REG_PKTS_RECV => {}
+            REG_ROUTE_PRIORITY => {
+                if decode_route_order(v).is_some() {
+                    self.regs[addr as usize] = v;
+                    self.route_dirty = true;
+                }
+            }
+            REG_ARB_POLICY => {
+                if decode_arb(v).is_some() {
+                    self.regs[addr as usize] = v;
+                }
+            }
+            _ => self.regs[addr as usize] = v,
+        }
+    }
+
+    /// Hardware-side update of a status/statistics register.
+    pub fn hw_set(&mut self, addr: u32, v: u32) {
+        self.regs[addr as usize] = v;
+    }
+
+    pub fn enabled(&self, bit: u32) -> bool {
+        self.regs[REG_ENABLE as usize] & bit != 0
+    }
+
+    pub fn route_order(&self) -> RouteOrder {
+        decode_route_order(self.regs[REG_ROUTE_PRIORITY as usize])
+            .expect("route priority register holds a validated value")
+    }
+
+    /// Returns the new route order if software changed it since last poll.
+    pub fn take_route_update(&mut self) -> Option<RouteOrder> {
+        if self.route_dirty {
+            self.route_dirty = false;
+            Some(self.route_order())
+        } else {
+            None
+        }
+    }
+
+    pub fn timeout(&self) -> u32 {
+        self.regs[REG_TIMEOUT as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_order_roundtrip() {
+        for o in RouteOrder::all() {
+            assert_eq!(decode_route_order(encode_route_order(o)), Some(o));
+        }
+        assert_eq!(decode_route_order(0b00_00_00), None); // xxx invalid
+    }
+
+    #[test]
+    fn arb_roundtrip() {
+        for a in [
+            ArbPolicy::RoundRobin,
+            ArbPolicy::FixedPriority,
+            ArbPolicy::LeastRecentlyServed,
+        ] {
+            assert_eq!(decode_arb(encode_arb(a)), Some(a));
+        }
+        assert_eq!(decode_arb(7), None);
+    }
+
+    #[test]
+    fn defaults_enable_everything() {
+        let r = RegFile::new();
+        assert!(r.enabled(EN_ENG));
+        assert!(r.enabled(EN_SWITCH));
+        assert_eq!(r.route_order(), RouteOrder::ZYX);
+    }
+
+    #[test]
+    fn status_regs_are_read_only_to_software() {
+        let mut r = RegFile::new();
+        r.write(REG_PKTS_SENT, 999);
+        assert_eq!(r.read(REG_PKTS_SENT), 0);
+        r.hw_set(REG_PKTS_SENT, 7);
+        assert_eq!(r.read(REG_PKTS_SENT), 7);
+    }
+
+    #[test]
+    fn route_priority_register_raises_update_flag() {
+        let mut r = RegFile::new();
+        assert_eq!(r.take_route_update(), None);
+        r.write(REG_ROUTE_PRIORITY, encode_route_order(RouteOrder::XYZ));
+        assert_eq!(r.take_route_update(), Some(RouteOrder::XYZ));
+        assert_eq!(r.take_route_update(), None);
+        // Invalid write is ignored entirely.
+        r.write(REG_ROUTE_PRIORITY, 0);
+        assert_eq!(r.take_route_update(), None);
+        assert_eq!(r.route_order(), RouteOrder::XYZ);
+    }
+
+    #[test]
+    fn runtime_disable_of_blocks() {
+        let mut r = RegFile::new();
+        r.write(REG_ENABLE, EN_ENG); // switch off everything but ENG
+        assert!(r.enabled(EN_ENG));
+        assert!(!r.enabled(EN_OFFCHIP));
+    }
+}

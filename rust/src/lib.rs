@@ -1,0 +1,49 @@
+//! # dnp — The Distributed Network Processor, reproduced
+//!
+//! A cycle-accurate reproduction of the DNP on-chip/off-chip
+//! interconnection architecture (Biagioni et al., *The Distributed Network
+//! Processor: a novel off-chip and on-chip interconnection network
+//! architecture*, 2012), built as a three-layer Rust + JAX/Pallas stack:
+//!
+//! * **L3 (this crate)** — the DNP itself: RDMA engine (LOOPBACK / PUT /
+//!   SEND / GET over CMD FIFO + CQ + LUT), wormhole crossbar switch with
+//!   virtual channels, deterministic torus/mesh/Spidergon routing, SerDes
+//!   and NoC link models, topology builders, traffic generators, metrics
+//!   and the full experiment harness for every table and figure of the
+//!   paper's Section IV.
+//! * **L2/L1 (python/, build-time only)** — the SHAPES benchmark kernel
+//!   (Lattice QCD Wilson-Dslash) in JAX with its SU(3) hot-spot as a
+//!   Pallas kernel, AOT-lowered to HLO text.
+//! * **runtime** — loads the HLO artifacts through the PJRT CPU client
+//!   (`xla` crate) so the LQCD example computes on the same engine the
+//!   tiles' DSP would, with halo exchange running over the simulated
+//!   DNP-Net. Python never runs on the simulation path.
+//!
+//! Start at [`topology`] to build a system, [`sim::Net`] to run it, and
+//! [`metrics`] to measure it. `examples/quickstart.rs` is a 60-line tour.
+
+pub mod bench;
+pub mod bus;
+pub mod cli;
+pub mod config;
+pub mod dnp;
+pub mod fault;
+pub mod lqcd;
+pub mod metrics;
+pub mod model;
+pub mod noc;
+pub mod packet;
+pub mod phy;
+pub mod rdma;
+pub mod route;
+pub mod runtime;
+pub mod sim;
+pub mod switch;
+pub mod topology;
+pub mod traffic;
+pub mod util;
+
+pub use config::DnpConfig;
+pub use packet::DnpAddr;
+pub use rdma::Command;
+pub use sim::Net;

@@ -1,0 +1,234 @@
+//! Analytical area / power model (paper Table I and Sec. IV).
+//!
+//! The paper reports Place&Route trials of the two SHAPES on-chip
+//! explorations at 45 nm / 500 MHz:
+//!
+//! | | MTNoC DNP | MT2D DNP |
+//! |---|---|---|
+//! | on-chip ports (N) | 1 | 3 |
+//! | off-chip ports (M) | 1 | 1 |
+//! | estimated area | 1.30 mm² | 1.76 mm² |
+//! | estimated power | 160 mW | 180 mW |
+//!
+//! and notes the buffers were synthesized out of *registers* ("we expect
+//! to halve this area in the final design" with SRAM macros), that the
+//! larger MT2D area comes from the bigger switch matrix + buffers of the
+//! 3 on-chip ports, that a DNP is about 1/4 of the RDT tile dissipation,
+//! and that a 32-chip board (8 RDTs each) delivers 1 TFlops in ~600 W.
+//!
+//! The model decomposes the DNP into per-block costs: a fixed core (ENG +
+//! RDMA ctrl + CMD FIFO + LUT + REG), a crossbar that grows with the
+//! square of the port count, and per-port buffering/interface logic. The
+//! two free scale factors are calibrated on the two published design
+//! points; everything else (SHAPES RDT with M=6, SRAM ablation, board
+//! extrapolation) is *prediction*.
+
+use crate::config::DnpConfig;
+
+/// Technology/implementation constants for the 45 nm, 500 MHz flow.
+#[derive(Debug, Clone, Copy)]
+pub struct TechModel {
+    /// Fixed DNP core area (mm²): ENG, RDMA ctrl, CMD FIFO, LUT, REG.
+    pub core_area: f64,
+    /// Crossbar area coefficient (mm² per port²) — a P-port word-wide
+    /// crossbar plus its arbitration grows ~quadratically.
+    pub xbar_area_per_port2: f64,
+    /// Per-port buffering + interface area (mm² per port per VC).
+    pub port_area_per_vc: f64,
+    /// Register-built buffers vs SRAM macros: multiplier on buffer area
+    /// (the paper's trials used registers; SRAM halves it).
+    pub register_buffer_factor: f64,
+    /// Fixed core power (mW).
+    pub core_power: f64,
+    /// Per-port power (mW per port per VC) at 500 MHz.
+    pub port_power_per_vc: f64,
+    /// Crossbar power coefficient (mW per port²).
+    pub xbar_power_per_port2: f64,
+    /// Reference frequency for the power numbers (MHz); dynamic power
+    /// scales linearly with f.
+    pub ref_freq_mhz: f64,
+}
+
+impl Default for TechModel {
+    fn default() -> Self {
+        // Calibrated below (see tests::calibration_matches_table1) so the
+        // two Table-I points are reproduced to < 1%.
+        Self {
+            core_area: 0.716,
+            xbar_area_per_port2: 0.014,
+            port_area_per_vc: 0.045,
+            register_buffer_factor: 1.0,
+            core_power: 132.0,
+            port_power_per_vc: 2.5,
+            xbar_power_per_port2: 0.5,
+            ref_freq_mhz: 500.0,
+        }
+    }
+}
+
+/// Area/power estimate for one DNP instance.
+#[derive(Debug, Clone, Copy)]
+pub struct Estimate {
+    pub area_mm2: f64,
+    pub power_mw: f64,
+    /// Area by block, for the Table-I discussion: (core, xbar, ports).
+    pub area_core: f64,
+    pub area_xbar: f64,
+    pub area_ports: f64,
+}
+
+/// Ports that physically exist on the die. Table I counts all synthesized
+/// ports "even though not all are used".
+fn synthesized_ports(cfg: &DnpConfig) -> f64 {
+    (cfg.l_ports + cfg.n_ports + cfg.m_ports) as f64
+}
+
+/// Estimate one DNP.
+pub fn estimate(cfg: &DnpConfig, tech: &TechModel) -> Estimate {
+    let p = synthesized_ports(cfg);
+    let vcs = cfg.vcs as f64;
+    let area_core = tech.core_area;
+    let area_xbar = tech.xbar_area_per_port2 * p * p;
+    let area_ports = tech.port_area_per_vc * p * vcs * tech.register_buffer_factor;
+    let area = area_core + area_xbar + area_ports;
+
+    let f_scale = cfg.freq_mhz / tech.ref_freq_mhz;
+    let power = (tech.core_power
+        + tech.xbar_power_per_port2 * p * p
+        + tech.port_power_per_vc * p * vcs)
+        * f_scale;
+    Estimate {
+        area_mm2: area,
+        power_mw: power,
+        area_core,
+        area_xbar,
+        area_ports,
+    }
+}
+
+/// The SRAM-macro ablation: the paper expects the final design to halve
+/// the (buffer) area once memory macros replace registers.
+pub fn estimate_with_sram(cfg: &DnpConfig, tech: &TechModel) -> Estimate {
+    let sram = TechModel {
+        register_buffer_factor: 0.5,
+        ..*tech
+    };
+    estimate(cfg, &sram)
+}
+
+/// Board-level extrapolation (paper Sec. IV end): `chips` multi-tile
+/// processors of `tiles` RDTs each. Returns (GFlops, Watts).
+///
+/// The paper's arithmetic: 32 chips × 8 RDTs = 256 tiles ≈ 1 TFlops →
+/// ~4 GFlops per tile (the mAgicV VLIW FPU at 500 MHz), ~600 W peak →
+/// ~2.3 W per tile, of which the DNP is about a quarter.
+/// Board-level overhead on top of the tiles themselves: external DRAM
+/// (DXM), clocking/board logic, and power-conversion losses. Chosen so the
+/// paper's 32-chip / ~600 W data point is met given its own "DNP ≈ 1/4 of
+/// the tile" figure.
+pub const BOARD_OVERHEAD: f64 = 2.7;
+
+pub fn board_extrapolation(
+    chips: u32,
+    tiles_per_chip: u32,
+    cfg: &DnpConfig,
+    tech: &TechModel,
+) -> (f64, f64) {
+    let tiles = (chips * tiles_per_chip) as f64;
+    let gflops_per_tile = 4.0 * cfg.freq_mhz / 500.0;
+    let dnp = estimate(cfg, tech);
+    // DNP ≈ 1/4 of tile dissipation (paper), so tile ≈ 4 × DNP power.
+    let tile_power_w = 4.0 * dnp.power_mw / 1000.0;
+    (
+        tiles * gflops_per_tile,
+        tiles * tile_power_w * BOARD_OVERHEAD,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The calibration requirement: reproduce both Table-I rows.
+    #[test]
+    fn calibration_matches_table1() {
+        let tech = TechModel::default();
+        let mtnoc = estimate(&DnpConfig::mtnoc(), &tech);
+        let mt2d = estimate(&DnpConfig::mt2d(), &tech);
+        assert!(
+            (mtnoc.area_mm2 - 1.30).abs() < 0.013,
+            "MTNoC area {} vs 1.30",
+            mtnoc.area_mm2
+        );
+        assert!(
+            (mt2d.area_mm2 - 1.76).abs() < 0.018,
+            "MT2D area {} vs 1.76",
+            mt2d.area_mm2
+        );
+        assert!(
+            (mtnoc.power_mw - 160.0).abs() < 1.6,
+            "MTNoC power {} vs 160",
+            mtnoc.power_mw
+        );
+        assert!(
+            (mt2d.power_mw - 180.0).abs() < 1.8,
+            "MT2D power {} vs 180",
+            mt2d.power_mw
+        );
+    }
+
+    #[test]
+    fn mt2d_larger_because_of_onchip_ports() {
+        // Paper: "the larger occupation area for the latter is mainly due
+        // to the higher number of on-chip ports (3 vs 1), implying a more
+        // complex switch matrix and a larger number of data buffers".
+        let tech = TechModel::default();
+        let a = estimate(&DnpConfig::mtnoc(), &tech);
+        let b = estimate(&DnpConfig::mt2d(), &tech);
+        assert!(b.area_xbar > a.area_xbar);
+        assert!(b.area_ports > a.area_ports);
+        assert_eq!(b.area_core, a.area_core);
+    }
+
+    #[test]
+    fn sram_halves_buffer_area() {
+        let tech = TechModel::default();
+        let reg = estimate(&DnpConfig::mt2d(), &tech);
+        let sram = estimate_with_sram(&DnpConfig::mt2d(), &tech);
+        assert!((sram.area_ports - reg.area_ports / 2.0).abs() < 1e-12);
+        assert!(sram.area_mm2 < reg.area_mm2);
+    }
+
+    #[test]
+    fn power_scales_with_frequency() {
+        // Paper Sec. V: the 45 nm process should reach 1 GHz.
+        let tech = TechModel::default();
+        let mut cfg = DnpConfig::mtnoc();
+        cfg.freq_mhz = 1000.0;
+        let fast = estimate(&cfg, &tech);
+        let slow = estimate(&DnpConfig::mtnoc(), &tech);
+        assert!((fast.power_mw - 2.0 * slow.power_mw).abs() < 1e-9);
+        assert_eq!(fast.area_mm2, slow.area_mm2);
+    }
+
+    #[test]
+    fn board_matches_paper_envelope() {
+        // 32 chips × 8 RDTs ≈ 1 TFlops @ ~600 W.
+        let (gflops, watts) =
+            board_extrapolation(32, 8, &DnpConfig::shapes_rdt(), &TechModel::default());
+        assert!((gflops - 1024.0).abs() < 1.0, "{gflops} GFlops");
+        assert!(
+            (450.0..750.0).contains(&watts),
+            "{watts} W out of the paper's ~600 W envelope"
+        );
+    }
+
+    #[test]
+    fn shapes_rdt_prediction_is_larger_than_explorations() {
+        // The full RDT render (M=6) synthesizes more ports than either
+        // Table-I exploration: its predicted area must exceed both.
+        let tech = TechModel::default();
+        let rdt = estimate(&DnpConfig::shapes_rdt(), &tech);
+        assert!(rdt.area_mm2 > 1.76);
+    }
+}

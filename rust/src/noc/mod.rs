@@ -1,0 +1,75 @@
+//! ST-Spidergon Network-on-Chip model (paper Sec. III-A.1, refs [10]-[12]).
+//!
+//! The MTNoC configuration connects the chip's DNPs through the
+//! ST-Spidergon: each tile's DNP talks to its NoC router through the DNI
+//! (DNP Network-on-Chip Interface), a bidirectional request/grant
+//! interface with an embedded CRC block. The NoC implements its own
+//! deadlock avoidance, "therefore no virtual channels are necessary on the
+//! DNP port side".
+//!
+//! A [`NocRouterNode`] reuses the DNP's switch fabric (crossbar + RTR +
+//! ARB) with Spidergon Across-First routing and the DNI as a
+//! local-redirect port — the same blocks, rewired, which is exactly the
+//! modular-IP story of the paper.
+
+use crate::config::DnpConfig;
+use crate::packet::PacketStore;
+use crate::route::{Router, SpidergonRouter};
+use crate::sim::channel::{ChannelArena, ChannelId};
+use crate::switch::{InputSrc, NoSink, SwitchFabric};
+
+/// Spidergon router ports: 0 = clockwise ring, 1 = counter-clockwise ring,
+/// 2 = across, 3 = DNI (to the attached DNP).
+pub const NOC_PORT_CW: usize = 0;
+pub const NOC_PORT_CCW: usize = 1;
+pub const NOC_PORT_ACROSS: usize = 2;
+pub const NOC_PORT_DNI: usize = 3;
+
+pub struct NocRouterNode {
+    pub fabric: SwitchFabric,
+    router: Box<dyn Router>,
+    /// Tile index on the ring (diagnostics).
+    pub index: u32,
+}
+
+impl NocRouterNode {
+    /// `in_chs`/`out_chs` in port order [CW, CCW, ACROSS, DNI].
+    pub fn new(
+        index: u32,
+        ring_size: u32,
+        cfg: &DnpConfig,
+        in_chs: Vec<ChannelId>,
+        out_chs: Vec<ChannelId>,
+    ) -> Self {
+        assert_eq!(in_chs.len(), 4);
+        assert_eq!(out_chs.len(), 4);
+        let me = crate::packet::AddrFormat::Flat { n: ring_size }.encode(&[index]);
+        let router = Box::new(SpidergonRouter::new(me, ring_size, 0));
+        let mut fabric = SwitchFabric::new(
+            in_chs.into_iter().map(InputSrc::Chan).collect(),
+            out_chs,
+            0,
+            // The NoC reserves an escape VC internally for its own
+            // deadlock freedom (ring + across is cycle-free under aFirst
+            // with the across links as chords; the escape VC covers the
+            // ring wrap) — the DNP side stays single-VC.
+            cfg.vcs.max(2),
+            1,
+            cfg.arb,
+        );
+        fabric.local_redirect = Some(NOC_PORT_DNI);
+        Self {
+            fabric,
+            router,
+            index,
+        }
+    }
+
+    pub fn tick(&mut self, now: u64, chans: &mut ChannelArena, store: &PacketStore) {
+        if self.fabric.is_quiet(chans) {
+            return; // §Perf idle fast path
+        }
+        self.fabric
+            .tick(now, &*self.router, chans, store, &mut NoSink);
+    }
+}

@@ -1,0 +1,118 @@
+//! CRC-16 integrity code.
+//!
+//! The paper (Sec. III-A.1/2) uses "the industry-standard, well-known CRC-16"
+//! for both the on-chip DNI and the off-chip SerDes protocol. We implement
+//! CRC-16/CCITT-FALSE (poly 0x1021, init 0xFFFF), table-driven, over the
+//! 32-bit words of a packet.
+
+/// CRC-16/CCITT-FALSE lookup table (generated at compile time).
+const fn make_table() -> [u16; 256] {
+    let mut table = [0u16; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = (i as u16) << 8;
+        let mut b = 0;
+        while b < 8 {
+            crc = if crc & 0x8000 != 0 {
+                (crc << 1) ^ 0x1021
+            } else {
+                crc << 1
+            };
+            b += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u16; 256] = make_table();
+
+/// Streaming CRC-16 engine, as embedded in the DNI and SerDes blocks.
+#[derive(Debug, Clone)]
+pub struct Crc16 {
+    crc: u16,
+}
+
+impl Default for Crc16 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Crc16 {
+    pub fn new() -> Self {
+        Self { crc: 0xFFFF }
+    }
+
+    #[inline]
+    pub fn push_byte(&mut self, b: u8) {
+        self.crc = (self.crc << 8) ^ TABLE[((self.crc >> 8) ^ b as u16) as usize];
+    }
+
+    /// Feed one 32-bit word, big-endian byte order (matches the serializer's
+    /// most-significant-bits-first wire order).
+    #[inline]
+    pub fn push_word(&mut self, w: u32) {
+        for b in w.to_be_bytes() {
+            self.push_byte(b);
+        }
+    }
+
+    pub fn finish(&self) -> u16 {
+        self.crc
+    }
+}
+
+/// One-shot CRC over a word slice.
+pub fn crc16_words(words: &[u32]) -> u16 {
+    let mut c = Crc16::new();
+    for &w in words {
+        c.push_word(w);
+    }
+    c.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vector_123456789() {
+        // CRC-16/CCITT-FALSE("123456789") = 0x29B1 (standard check value).
+        let mut c = Crc16::new();
+        for b in b"123456789" {
+            c.push_byte(*b);
+        }
+        assert_eq!(c.finish(), 0x29B1);
+    }
+
+    #[test]
+    fn word_order_is_big_endian() {
+        let mut a = Crc16::new();
+        a.push_word(0x3132_3334); // "1234"
+        let mut b = Crc16::new();
+        for byte in b"1234" {
+            b.push_byte(*byte);
+        }
+        assert_eq!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn detects_single_bit_flip() {
+        let words = [0xDEAD_BEEF, 0x0123_4567, 0x89AB_CDEF];
+        let good = crc16_words(&words);
+        for i in 0..words.len() {
+            for bit in 0..32 {
+                let mut bad = words;
+                bad[i] ^= 1 << bit;
+                assert_ne!(crc16_words(&bad), good, "flip {i}:{bit} undetected");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_is_init() {
+        assert_eq!(crc16_words(&[]), 0xFFFF);
+    }
+}

@@ -1,0 +1,231 @@
+//! Flit-level representation.
+//!
+//! The DNP implements *wormhole* switching: a packet moves through the
+//! network as a train of flits (here, one 32-bit word each — the DNP
+//! internal width). The head flit carries the routing information, body
+//! flits the remaining envelope + payload words, and the tail flit (the
+//! footer) releases the wormhole path.
+//!
+//! To keep the hot loop allocation-free, a flit is a small `Copy` value;
+//! the full packet metadata lives once in a [`PacketStore`] and is looked
+//! up by `PacketId` when a head flit needs routing or a tail flit delivery.
+
+use super::Packet;
+
+/// Index into the simulation-global [`PacketStore`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PacketId(pub u32);
+
+/// Position of a flit within its packet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlitKind {
+    /// First envelope word; carries routing info; allocates the path.
+    Head,
+    /// Envelope or payload word in the middle of the train.
+    Body,
+    /// Footer word; releases the path and triggers delivery.
+    Tail,
+}
+
+/// One word on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Flit {
+    pub pkt: PacketId,
+    pub kind: FlitKind,
+    /// Sequence number of this flit within the packet (0 = head).
+    pub seq: u16,
+    /// The raw word (used by PHY-level CRC / DC-balance models).
+    pub data: u32,
+}
+
+/// Simulation-global packet arena. Packets are registered at injection and
+/// retired at delivery; slots are recycled through a free list so long runs
+/// do not grow without bound.
+#[derive(Debug, Default)]
+pub struct PacketStore {
+    slots: Vec<Option<Packet>>,
+    /// Unique id of the packet occupying each slot (slots are recycled,
+    /// uids never are — traces key on uid).
+    uids: Vec<u64>,
+    free: Vec<u32>,
+    /// Monotonic count of packets ever inserted (for stats).
+    inserted: u64,
+}
+
+impl PacketStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, p: Packet) -> PacketId {
+        self.inserted += 1;
+        if let Some(idx) = self.free.pop() {
+            self.slots[idx as usize] = Some(p);
+            self.uids[idx as usize] = self.inserted;
+            PacketId(idx)
+        } else {
+            self.slots.push(Some(p));
+            self.uids.push(self.inserted);
+            PacketId(self.slots.len() as u32 - 1)
+        }
+    }
+
+    /// Stable unique id of the packet currently in slot `id` (survives
+    /// nothing — read it before retiring).
+    pub fn uid(&self, id: PacketId) -> u64 {
+        debug_assert!(self.slots[id.0 as usize].is_some());
+        self.uids[id.0 as usize]
+    }
+
+    pub fn get(&self, id: PacketId) -> &Packet {
+        self.slots[id.0 as usize]
+            .as_ref()
+            .expect("packet retired or never inserted")
+    }
+
+    pub fn get_mut(&mut self, id: PacketId) -> &mut Packet {
+        self.slots[id.0 as usize]
+            .as_mut()
+            .expect("packet retired or never inserted")
+    }
+
+    /// Remove and return the packet (called on final delivery).
+    pub fn retire(&mut self, id: PacketId) -> Packet {
+        let p = self.slots[id.0 as usize]
+            .take()
+            .expect("double retire");
+        self.free.push(id.0);
+        p
+    }
+
+    pub fn live(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    pub fn inserted(&self) -> u64 {
+        self.inserted
+    }
+
+    /// Number of flits packet `id` occupies on the wire.
+    pub fn wire_flits(&self, id: PacketId) -> u16 {
+        self.get(id).wire_words() as u16
+    }
+
+    /// Materialize flit `seq` of packet `id` (head=0 .. tail=wire-1).
+    pub fn flit(&self, id: PacketId, seq: u16) -> Flit {
+        let p = self.get(id);
+        let total = p.wire_words() as u16;
+        debug_assert!(seq < total);
+        let kind = if seq == 0 {
+            FlitKind::Head
+        } else if seq == total - 1 {
+            FlitKind::Tail
+        } else {
+            FlitKind::Body
+        };
+        // Word content by position: NET HDR, RDMA HDR, payload…, footer.
+        let data = match seq as usize {
+            0 => p.net.pack()[0],
+            1 => p.net.pack()[1],
+            2 => p.rdma.pack()[0],
+            3 => p.rdma.pack()[1],
+            4 => p.rdma.pack()[2],
+            s if s == p.wire_words() - 1 => p.footer.pack(),
+            s => p.payload[s - 5],
+        };
+        Flit {
+            pkt: id,
+            kind,
+            seq,
+            data,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packet::{DnpAddr, NetHeader, PacketOp, RdmaHeader};
+
+    fn pkt(len: usize) -> Packet {
+        Packet::new(
+            NetHeader {
+                dst: DnpAddr::new(1),
+                src: DnpAddr::new(2),
+                len: len as u16,
+                vc: 0,
+            },
+            RdmaHeader {
+                op: PacketOp::Put,
+                dst_mem: 16,
+                src_mem: 32,
+                resp_dst: DnpAddr::new(0),
+            },
+            (100..100 + len as u32).collect(),
+        )
+    }
+
+    #[test]
+    fn store_insert_get_retire() {
+        let mut s = PacketStore::new();
+        let a = s.insert(pkt(4));
+        let b = s.insert(pkt(8));
+        assert_eq!(s.live(), 2);
+        assert_eq!(s.get(a).payload.len(), 4);
+        let p = s.retire(a);
+        assert_eq!(p.payload.len(), 4);
+        assert_eq!(s.live(), 1);
+        // Slot is recycled.
+        let c = s.insert(pkt(2));
+        assert_eq!(c, a);
+        assert_eq!(s.get(b).payload.len(), 8);
+        assert_eq!(s.inserted(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "double retire")]
+    fn double_retire_panics() {
+        let mut s = PacketStore::new();
+        let a = s.insert(pkt(1));
+        s.retire(a);
+        s.retire(a);
+    }
+
+    #[test]
+    fn flit_train_kinds() {
+        let mut s = PacketStore::new();
+        let id = s.insert(pkt(3)); // wire = 6 envelope + 3 = 9 flits
+        let n = s.wire_flits(id);
+        assert_eq!(n, 9);
+        assert_eq!(s.flit(id, 0).kind, FlitKind::Head);
+        for seq in 1..n - 1 {
+            assert_eq!(s.flit(id, seq).kind, FlitKind::Body);
+        }
+        assert_eq!(s.flit(id, n - 1).kind, FlitKind::Tail);
+    }
+
+    #[test]
+    fn flit_words_match_packet_layout() {
+        let mut s = PacketStore::new();
+        let id = s.insert(pkt(2));
+        let p = s.get(id).clone();
+        assert_eq!(s.flit(id, 0).data, p.net.pack()[0]);
+        assert_eq!(s.flit(id, 1).data, p.net.pack()[1]);
+        assert_eq!(s.flit(id, 2).data, p.rdma.pack()[0]);
+        assert_eq!(s.flit(id, 3).data, p.rdma.pack()[1]);
+        assert_eq!(s.flit(id, 4).data, p.rdma.pack()[2]);
+        assert_eq!(s.flit(id, 5).data, p.payload[0]);
+        assert_eq!(s.flit(id, 6).data, p.payload[1]);
+        assert_eq!(s.flit(id, 7).data, p.footer.pack());
+    }
+
+    #[test]
+    fn zero_payload_packet_has_head_and_tail() {
+        let mut s = PacketStore::new();
+        let id = s.insert(pkt(0));
+        let n = s.wire_flits(id);
+        assert_eq!(n, 6);
+        assert_eq!(s.flit(id, 0).kind, FlitKind::Head);
+        assert_eq!(s.flit(id, 5).kind, FlitKind::Tail);
+    }
+}

@@ -1,0 +1,191 @@
+//! Hardware fragmenter (paper Sec. II-B).
+//!
+//! "The DNP hosts a hardware fragmenter block which automatically cuts a
+//! data words stream into multiple packets stream." A data-sending command
+//! whose length exceeds [`MAX_PAYLOAD_WORDS`](super::MAX_PAYLOAD_WORDS)
+//! generates several packets; each carries its own envelope, and the
+//! destination memory address advances with the stream.
+
+use super::{DnpAddr, NetHeader, Packet, PacketOp, RdmaHeader, MAX_PAYLOAD_WORDS};
+
+/// Describes one fragment of a larger transfer: offset into the source
+/// stream + payload length, plus the per-packet destination memory address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fragment {
+    pub offset: u32,
+    pub len: u32,
+    pub dst_mem: u32,
+}
+
+/// Stateless fragmentation plan: splits `total_len` words into maximal
+/// packets. Kept separate from packet construction so the DNP engine can
+/// walk fragments cycle-by-cycle while the bus read is still streaming.
+#[derive(Debug, Clone)]
+pub struct Fragmenter {
+    total_len: u32,
+    dst_mem: u32,
+    next_off: u32,
+}
+
+impl Fragmenter {
+    pub fn new(total_len: u32, dst_mem: u32) -> Self {
+        Self {
+            total_len,
+            dst_mem,
+            next_off: 0,
+        }
+    }
+
+    /// Number of packets this transfer generates. A zero-length transfer
+    /// still produces one (header-only) packet so completions fire.
+    pub fn packet_count(total_len: u32) -> u32 {
+        if total_len == 0 {
+            1
+        } else {
+            crate::util::ceil_div(total_len as u64, MAX_PAYLOAD_WORDS as u64) as u32
+        }
+    }
+
+    pub fn remaining(&self) -> u32 {
+        self.total_len - self.next_off
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.next_off >= self.total_len && self.next_off > 0 || (self.total_len == 0 && self.next_off > 0)
+    }
+}
+
+impl Iterator for Fragmenter {
+    type Item = Fragment;
+
+    fn next(&mut self) -> Option<Fragment> {
+        if self.total_len == 0 {
+            if self.next_off > 0 {
+                return None;
+            }
+            self.next_off = 1; // mark the single empty fragment emitted
+            return Some(Fragment {
+                offset: 0,
+                len: 0,
+                dst_mem: self.dst_mem,
+            });
+        }
+        if self.next_off >= self.total_len {
+            return None;
+        }
+        let off = self.next_off;
+        let len = (self.total_len - off).min(MAX_PAYLOAD_WORDS as u32);
+        self.next_off += len;
+        Some(Fragment {
+            offset: off,
+            len,
+            dst_mem: self.dst_mem.wrapping_add(off),
+        })
+    }
+}
+
+/// Build the packet for one fragment of a transfer.
+#[allow(clippy::too_many_arguments)]
+pub fn build_fragment_packet(
+    frag: Fragment,
+    src: DnpAddr,
+    dst: DnpAddr,
+    op: PacketOp,
+    src_mem: u32,
+    resp_dst: DnpAddr,
+    data: &[u32],
+) -> Packet {
+    debug_assert_eq!(data.len(), frag.len as usize);
+    Packet::new(
+        NetHeader {
+            dst,
+            src,
+            len: frag.len as u16,
+            vc: 0,
+        },
+        RdmaHeader {
+            op,
+            dst_mem: frag.dst_mem,
+            src_mem: src_mem.wrapping_add(frag.offset),
+            resp_dst,
+        },
+        data.to_vec(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_packet_when_small() {
+        let frags: Vec<_> = Fragmenter::new(100, 0x40).collect();
+        assert_eq!(frags.len(), 1);
+        assert_eq!(frags[0], Fragment { offset: 0, len: 100, dst_mem: 0x40 });
+    }
+
+    #[test]
+    fn exact_boundary() {
+        let frags: Vec<_> = Fragmenter::new(256, 0).collect();
+        assert_eq!(frags.len(), 1);
+        assert_eq!(frags[0].len, 256);
+    }
+
+    #[test]
+    fn splits_and_advances_dst() {
+        let frags: Vec<_> = Fragmenter::new(600, 0x1000).collect();
+        assert_eq!(frags.len(), 3);
+        assert_eq!(frags[0], Fragment { offset: 0, len: 256, dst_mem: 0x1000 });
+        assert_eq!(frags[1], Fragment { offset: 256, len: 256, dst_mem: 0x1100 });
+        assert_eq!(frags[2], Fragment { offset: 512, len: 88, dst_mem: 0x1200 });
+    }
+
+    #[test]
+    fn zero_length_produces_one_empty_fragment() {
+        let frags: Vec<_> = Fragmenter::new(0, 0x10).collect();
+        assert_eq!(frags.len(), 1);
+        assert_eq!(frags[0].len, 0);
+        assert_eq!(Fragmenter::packet_count(0), 1);
+    }
+
+    #[test]
+    fn packet_count_matches_iterator() {
+        for len in [0u32, 1, 255, 256, 257, 512, 513, 10_000] {
+            let n = Fragmenter::new(len, 0).count() as u32;
+            assert_eq!(n, Fragmenter::packet_count(len), "len={len}");
+        }
+    }
+
+    #[test]
+    fn coverage_is_exact_and_disjoint() {
+        for len in [1u32, 256, 257, 777, 4096] {
+            let mut covered = 0u32;
+            let mut expect_off = 0u32;
+            for f in Fragmenter::new(len, 0) {
+                assert_eq!(f.offset, expect_off);
+                expect_off += f.len;
+                covered += f.len;
+                assert!(f.len as usize <= MAX_PAYLOAD_WORDS);
+            }
+            assert_eq!(covered, len);
+        }
+    }
+
+    #[test]
+    fn fragment_packet_has_correct_headers() {
+        let frag = Fragment { offset: 256, len: 4, dst_mem: 0x1100 };
+        let p = build_fragment_packet(
+            frag,
+            DnpAddr::new(1),
+            DnpAddr::new(2),
+            PacketOp::Put,
+            0x2000,
+            DnpAddr::new(0),
+            &[9, 8, 7, 6],
+        );
+        assert_eq!(p.net.len, 4);
+        assert_eq!(p.rdma.dst_mem, 0x1100);
+        assert_eq!(p.rdma.src_mem, 0x2000 + 256);
+        assert!(p.check_crc());
+    }
+}

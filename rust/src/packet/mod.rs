@@ -1,0 +1,412 @@
+//! DNP packet model (paper Fig. 4).
+//!
+//! A packet is a fixed-size *envelope* — a network header (`NET HDR`,
+//! routing information), an RDMA header (`RDMA HDR`, processed only by the
+//! destination DNP) and a footer carrying the integrity code (CRC-16) plus a
+//! single *corrupt* flag bit — around a variable-size payload of up to
+//! [`MAX_PAYLOAD_WORDS`] 32-bit words.
+//!
+//! Every DNP is addressed by an 18-bit string whose interpretation depends
+//! on the topology (Sec. II-B): a `(x, y, z)` triplet on a 3D torus, or a
+//! 4-tuple `(x, y, z, w)` with an on-chip coordinate on NoC-based designs.
+//! Address decoding lives in the router; here we only define the bit layout.
+
+pub mod crc16;
+pub mod flit;
+pub mod fragment;
+
+pub use crc16::{crc16_words, Crc16};
+pub use flit::{Flit, FlitKind, PacketId, PacketStore};
+pub use fragment::{Fragment, Fragmenter};
+
+/// One machine word: the DNP internal data width is 32 bits (1 word).
+pub type Word = u32;
+
+/// Maximum payload words per packet (paper Fig. 4: "up to 256 words").
+pub const MAX_PAYLOAD_WORDS: usize = 256;
+
+/// Envelope size in words: 2 (NET HDR) + 3 (RDMA HDR) + 1 (footer).
+pub const NET_HDR_WORDS: usize = 2;
+pub const RDMA_HDR_WORDS: usize = 3;
+pub const FOOTER_WORDS: usize = 1;
+pub const ENVELOPE_WORDS: usize = NET_HDR_WORDS + RDMA_HDR_WORDS + FOOTER_WORDS;
+
+/// Mask for the 18-bit DNP address space.
+pub const ADDR_BITS: u32 = 18;
+pub const ADDR_MASK: u32 = (1 << ADDR_BITS) - 1;
+
+/// A DNP address: an opaque 18-bit string. Interpretation (coordinates) is
+/// the router's job, via [`AddrFormat`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DnpAddr(pub u32);
+
+impl DnpAddr {
+    pub fn new(raw: u32) -> Self {
+        debug_assert_eq!(raw & !ADDR_MASK, 0, "address exceeds 18 bits");
+        Self(raw & ADDR_MASK)
+    }
+
+    pub fn raw(self) -> u32 {
+        self.0
+    }
+}
+
+impl std::fmt::Display for DnpAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "dnp#{:05x}", self.0)
+    }
+}
+
+/// How the 18 address bits map onto topology coordinates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AddrFormat {
+    /// `(x, y, z)` evenly split: 6+6+6 bits (paper's 3D-torus example).
+    Torus3D { dims: [u32; 3] },
+    /// `(x, y, z, w)`: off-chip torus coordinates plus an on-chip tile
+    /// coordinate `w` (paper's NoC-based 4-tuple example).
+    Torus3DLocal { dims: [u32; 3], local: u32 },
+    /// `(x, y)` for a 2D on-chip mesh (MT2D exploration, Fig. 7b).
+    Mesh2D { dims: [u32; 2] },
+    /// Flat numbering (single ring / Spidergon / tables).
+    Flat { n: u32 },
+}
+
+impl AddrFormat {
+    /// Number of addressable DNPs under this format.
+    pub fn node_count(&self) -> u32 {
+        match *self {
+            AddrFormat::Torus3D { dims } => dims.iter().product(),
+            AddrFormat::Torus3DLocal { dims, local } => dims.iter().product::<u32>() * local,
+            AddrFormat::Mesh2D { dims } => dims.iter().product(),
+            AddrFormat::Flat { n } => n,
+        }
+    }
+
+    /// Encode coordinates into an 18-bit address. Coordinate slots are
+    /// 6-bit fields for 3D formats (paper: "evenly split"), x lowest.
+    pub fn encode(&self, coords: &[u32]) -> DnpAddr {
+        match *self {
+            AddrFormat::Torus3D { dims } => {
+                debug_assert_eq!(coords.len(), 3);
+                debug_assert!(coords.iter().zip(dims.iter()).all(|(c, d)| c < d));
+                DnpAddr::new(coords[0] | (coords[1] << 6) | (coords[2] << 12))
+            }
+            AddrFormat::Torus3DLocal { dims, local } => {
+                debug_assert_eq!(coords.len(), 4);
+                debug_assert!(coords.iter().zip(dims.iter()).all(|(c, d)| c < d));
+                debug_assert!(coords[3] < local);
+                // 4+4+4 bits torus, 6 bits on-chip coordinate.
+                DnpAddr::new(
+                    coords[0] | (coords[1] << 4) | (coords[2] << 8) | (coords[3] << 12),
+                )
+            }
+            AddrFormat::Mesh2D { dims } => {
+                debug_assert_eq!(coords.len(), 2);
+                debug_assert!(coords.iter().zip(dims.iter()).all(|(c, d)| c < d));
+                DnpAddr::new(coords[0] | (coords[1] << 9))
+            }
+            AddrFormat::Flat { n } => {
+                debug_assert_eq!(coords.len(), 1);
+                debug_assert!(coords[0] < n);
+                DnpAddr::new(coords[0])
+            }
+        }
+    }
+
+    /// Decode an address back to coordinates.
+    pub fn decode(&self, addr: DnpAddr) -> Vec<u32> {
+        let a = addr.raw();
+        match *self {
+            AddrFormat::Torus3D { .. } => {
+                vec![a & 0x3F, (a >> 6) & 0x3F, (a >> 12) & 0x3F]
+            }
+            AddrFormat::Torus3DLocal { .. } => {
+                vec![a & 0xF, (a >> 4) & 0xF, (a >> 8) & 0xF, (a >> 12) & 0x3F]
+            }
+            AddrFormat::Mesh2D { .. } => vec![a & 0x1FF, (a >> 9) & 0x1FF],
+            AddrFormat::Flat { .. } => vec![a],
+        }
+    }
+}
+
+/// RDMA operation carried by a packet (paper Sec. II-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PacketOp {
+    /// One-way write to a registered destination buffer.
+    Put,
+    /// Like PUT with null destination address: the first suitable LUT buffer
+    /// is picked — the *eager* protocol bootstrap primitive.
+    Send,
+    /// GET request leg: asks the source DNP to stream data back.
+    GetRequest,
+    /// GET response leg: the data stream produced by the source DNP.
+    GetResponse,
+    /// Local memory move (LOOPBACK command): routed to self, bypasses LUT.
+    Loopback,
+}
+
+impl PacketOp {
+    pub fn code(self) -> u32 {
+        match self {
+            PacketOp::Put => 1,
+            PacketOp::Send => 2,
+            PacketOp::GetRequest => 3,
+            PacketOp::GetResponse => 4,
+            PacketOp::Loopback => 5,
+        }
+    }
+
+    pub fn from_code(c: u32) -> Option<Self> {
+        Some(match c {
+            1 => PacketOp::Put,
+            2 => PacketOp::Send,
+            3 => PacketOp::GetRequest,
+            4 => PacketOp::GetResponse,
+            5 => PacketOp::Loopback,
+            _ => return None,
+        })
+    }
+}
+
+/// Network header: the routing-relevant part of the envelope. This is what
+/// transit DNPs look at; it must survive uncorrupted (Sec. II-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NetHeader {
+    pub dst: DnpAddr,
+    pub src: DnpAddr,
+    /// Payload length in words (0..=256).
+    pub len: u16,
+    /// Virtual-channel class the packet currently travels on.
+    pub vc: u8,
+}
+
+impl NetHeader {
+    pub fn pack(&self) -> [Word; NET_HDR_WORDS] {
+        [
+            self.dst.raw() | ((self.vc as u32) << ADDR_BITS),
+            self.src.raw() | ((self.len as u32) << ADDR_BITS),
+        ]
+    }
+
+    pub fn unpack(w: &[Word; NET_HDR_WORDS]) -> Self {
+        Self {
+            dst: DnpAddr::new(w[0] & ADDR_MASK),
+            vc: ((w[0] >> ADDR_BITS) & 0xFF) as u8,
+            src: DnpAddr::new(w[1] & ADDR_MASK),
+            len: ((w[1] >> ADDR_BITS) & 0x3FFF) as u16,
+        }
+    }
+}
+
+/// RDMA header: processed only by the destination DNP.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RdmaHeader {
+    pub op: PacketOp,
+    /// Destination memory address (word address in the target tile). For
+    /// SEND this is null (0) and the LUT picks the first suitable buffer.
+    pub dst_mem: u32,
+    /// For GetRequest: the *destination* DNP of the response stream (the
+    /// three-actor GET of paper Fig. 3); also carries source memory address.
+    pub src_mem: u32,
+    /// For GetRequest: where the response should be delivered (usually the
+    /// initiator, `INIT == DST` in the common case).
+    pub resp_dst: DnpAddr,
+}
+
+impl RdmaHeader {
+    pub fn pack(&self) -> [Word; RDMA_HDR_WORDS] {
+        // Word 0: op code (4 bits) | resp_dst (18 bits) << 4.
+        // Words 1-2: full 32-bit destination / source memory addresses.
+        [
+            self.op.code() | (self.resp_dst.raw() << 4),
+            self.dst_mem,
+            self.src_mem,
+        ]
+    }
+
+    /// Decode from the wire words; `None` on an illegal op code (the
+    /// envelope is CRC-protected, so this indicates a model bug).
+    pub fn unpack(w: &[Word; RDMA_HDR_WORDS]) -> Option<Self> {
+        Some(Self {
+            op: PacketOp::from_code(w[0] & 0xF)?,
+            resp_dst: DnpAddr::new((w[0] >> 4) & ADDR_MASK),
+            dst_mem: w[1],
+            src_mem: w[2],
+        })
+    }
+}
+
+/// Packet footer: CRC-16 over header+payload plus the corruption flag
+/// (paper: "corrupted packets are flagged by a single bit in the footer").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Footer {
+    pub crc: u16,
+    pub corrupt: bool,
+}
+
+impl Footer {
+    pub fn pack(&self) -> Word {
+        self.crc as u32 | ((self.corrupt as u32) << 16)
+    }
+
+    pub fn unpack(w: Word) -> Self {
+        Self {
+            crc: (w & 0xFFFF) as u16,
+            corrupt: (w >> 16) & 1 == 1,
+        }
+    }
+}
+
+/// A whole packet as the simulator tracks it. On the wire it is always
+/// handled flit-by-flit (see [`flit`]); this struct is the packet *metadata*
+/// stored once and referenced by `PacketId`.
+#[derive(Debug, Clone)]
+pub struct Packet {
+    pub net: NetHeader,
+    pub rdma: RdmaHeader,
+    pub payload: Vec<Word>,
+    pub footer: Footer,
+}
+
+impl Packet {
+    pub fn new(net: NetHeader, rdma: RdmaHeader, payload: Vec<Word>) -> Self {
+        assert!(payload.len() <= MAX_PAYLOAD_WORDS, "payload exceeds 256 words");
+        assert_eq!(net.len as usize, payload.len(), "NET HDR length mismatch");
+        let crc = Self::compute_crc(&net, &rdma, &payload);
+        Self {
+            net,
+            rdma,
+            payload,
+            footer: Footer { crc, corrupt: false },
+        }
+    }
+
+    /// CRC over the packed envelope-so-far plus payload (computed during
+    /// delivery, transmitted together with the footer — Sec. III-A.1).
+    pub fn compute_crc(net: &NetHeader, rdma: &RdmaHeader, payload: &[Word]) -> u16 {
+        let mut c = Crc16::new();
+        for w in net.pack() {
+            c.push_word(w);
+        }
+        for w in rdma.pack() {
+            c.push_word(w);
+        }
+        for &w in payload {
+            c.push_word(w);
+        }
+        c.finish()
+    }
+
+    /// Re-check integrity; returns true if the stored CRC matches.
+    pub fn check_crc(&self) -> bool {
+        Self::compute_crc(&self.net, &self.rdma, &self.payload) == self.footer.crc
+    }
+
+    /// Total size on the wire in words (envelope + payload).
+    pub fn wire_words(&self) -> usize {
+        ENVELOPE_WORDS + self.payload.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_packet(len: usize) -> Packet {
+        let net = NetHeader {
+            dst: DnpAddr::new(0x15),
+            src: DnpAddr::new(0x2A),
+            len: len as u16,
+            vc: 0,
+        };
+        let rdma = RdmaHeader {
+            op: PacketOp::Put,
+            dst_mem: 0x100,
+            src_mem: 0x200,
+            resp_dst: DnpAddr::new(0),
+        };
+        Packet::new(net, rdma, (0..len as u32).collect())
+    }
+
+    #[test]
+    fn addr_roundtrip_torus3d() {
+        let f = AddrFormat::Torus3D { dims: [2, 2, 2] };
+        for x in 0..2 {
+            for y in 0..2 {
+                for z in 0..2 {
+                    let a = f.encode(&[x, y, z]);
+                    assert_eq!(f.decode(a), vec![x, y, z]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn addr_roundtrip_torus3d_local() {
+        let f = AddrFormat::Torus3DLocal { dims: [4, 4, 4], local: 8 };
+        let a = f.encode(&[3, 1, 2, 7]);
+        assert_eq!(f.decode(a), vec![3, 1, 2, 7]);
+        assert_eq!(f.node_count(), 4 * 4 * 4 * 8);
+    }
+
+    #[test]
+    fn addr_fits_18_bits() {
+        let f = AddrFormat::Torus3D { dims: [64, 64, 64] };
+        let a = f.encode(&[63, 63, 63]);
+        assert_eq!(a.raw() & !ADDR_MASK, 0);
+        assert_eq!(f.decode(a), vec![63, 63, 63]);
+    }
+
+    #[test]
+    fn net_header_roundtrip() {
+        let h = NetHeader {
+            dst: DnpAddr::new(0x3FFFF),
+            src: DnpAddr::new(0x00001),
+            len: 256,
+            vc: 1,
+        };
+        assert_eq!(NetHeader::unpack(&h.pack()), h);
+    }
+
+    #[test]
+    fn footer_roundtrip() {
+        let f = Footer { crc: 0xBEEF, corrupt: true };
+        assert_eq!(Footer::unpack(f.pack()), f);
+        let f2 = Footer { crc: 0x1234, corrupt: false };
+        assert_eq!(Footer::unpack(f2.pack()), f2);
+    }
+
+    #[test]
+    fn packet_crc_detects_payload_corruption() {
+        let mut p = sample_packet(8);
+        assert!(p.check_crc());
+        p.payload[3] ^= 0x80;
+        assert!(!p.check_crc());
+    }
+
+    #[test]
+    fn packet_wire_size() {
+        assert_eq!(sample_packet(0).wire_words(), ENVELOPE_WORDS);
+        assert_eq!(sample_packet(256).wire_words(), ENVELOPE_WORDS + 256);
+    }
+
+    #[test]
+    #[should_panic(expected = "payload exceeds")]
+    fn payload_cap_enforced() {
+        sample_packet(257);
+    }
+
+    #[test]
+    fn op_codes_roundtrip() {
+        for op in [
+            PacketOp::Put,
+            PacketOp::Send,
+            PacketOp::GetRequest,
+            PacketOp::GetResponse,
+        ] {
+            assert_eq!(PacketOp::from_code(op.code()), Some(op));
+        }
+        assert_eq!(PacketOp::from_code(0), None);
+        assert_eq!(PacketOp::from_code(9), None);
+    }
+}

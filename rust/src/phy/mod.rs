@@ -1,0 +1,170 @@
+//! Physical-layer link models (paper Sec. II-E, III-A).
+//!
+//! * [`offchip_channel`] — the parallel-clock DDR SerDes with configurable
+//!   serialization factor, CRC-16 + envelope retransmission, DC balance and
+//!   mesochronous skew absorption (Sec. III-A.2).
+//! * [`onchip_channel`] — point-to-point parallel on-chip link, 1
+//!   word/cycle (Sec. IV: "inter-tile on-chip ports are designed to be
+//!   connected by point-to-point parallel links").
+//! * [`intra_channel`] — not a real wire: ENG→switch injection is modelled
+//!   inside the DNP; provided for symmetry in tests.
+//!
+//! The serialization factor is THE off-chip knob (Sec. IV-V): factor 16 on
+//! two DDR lines gives 4 bit/cycle per direction; factor 8 doubles it.
+
+pub mod dc_balance;
+
+pub use dc_balance::DcBalancer;
+
+use crate::config::{DnpConfig, SerdesConfig};
+use crate::sim::channel::{Channel, LinkFx};
+
+/// Build an off-chip SerDes channel from the config. `seed` feeds the
+/// link's error-injection RNG (distinct per link).
+pub fn offchip_channel(cfg: &DnpConfig, seed: u64) -> Channel {
+    let s: &SerdesConfig = &cfg.serdes;
+    // Latency seen by a word after it leaves the serializer: TX pipeline
+    // (CRC, DC-balance, sync FIFO), wire flight, RX pipeline (mesochronous
+    // alignment, CRC check) and the downstream switch input stage.
+    let latency = s.tx_pipe + s.wire + s.rx_pipe + cfg.timing.switch_lat;
+    let mut ch = Channel::new(latency, s.cycles_per_word(), cfg.vcs, cfg.vc_buf_depth);
+    // Credits ride the reverse direction of the full-duplex link.
+    ch.credit_lat = s.wire;
+    if s.ber_per_word > 0.0 {
+        // Envelope retransmission drains the retx buffer and re-serializes
+        // the protected words: one buffer turn-around plus re-serialization.
+        let retx = s.wire + s.retx_buf_words as u64 * s.cycles_per_word() / 4;
+        ch.fx = Some(LinkFx::new(s.ber_per_word, retx, seed));
+    }
+    ch
+}
+
+/// Build an on-chip point-to-point channel (DNP↔DNP direct, MT2D style).
+pub fn onchip_channel(cfg: &DnpConfig) -> Channel {
+    let t = &cfg.timing;
+    let latency = t.dni_lat + t.onchip_link_lat + t.switch_lat;
+    Channel::new(latency, 1, cfg.vcs, cfg.vc_buf_depth)
+}
+
+/// Build a NoC-segment channel (one hop of the ST-Spidergon fabric).
+/// On-chip BER is assumed negligible (Sec. II-C) — no LinkFx.
+pub fn noc_channel(cfg: &DnpConfig) -> Channel {
+    let t = &cfg.timing;
+    Channel::new(t.onchip_link_lat + 1, 1, cfg.vcs.max(2), cfg.vc_buf_depth)
+}
+
+/// Channel from a NoC router to its attached DNP (through the DNI) or
+/// vice versa: carries the request/grant handshake cost.
+pub fn dni_channel(cfg: &DnpConfig) -> Channel {
+    let t = &cfg.timing;
+    Channel::new(t.dni_lat + t.switch_lat, 1, cfg.vcs.max(2), cfg.vc_buf_depth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packet::{Flit, FlitKind, PacketId};
+
+    fn flit(seq: u16, kind: FlitKind) -> Flit {
+        Flit {
+            pkt: PacketId(0),
+            kind,
+            seq,
+            data: 0xFFFF_0000,
+        }
+    }
+
+    #[test]
+    fn offchip_rate_matches_serialization_factor() {
+        let cfg = DnpConfig::default(); // factor 16, DDR
+        let ch = offchip_channel(&cfg, 1);
+        assert_eq!(ch.cycles_per_word, 8);
+        let mut cfg8 = DnpConfig::default();
+        cfg8.serdes.factor = 8;
+        assert_eq!(offchip_channel(&cfg8, 1).cycles_per_word, 4);
+    }
+
+    #[test]
+    fn onchip_is_one_word_per_cycle() {
+        let cfg = DnpConfig::default();
+        assert_eq!(onchip_channel(&cfg).cycles_per_word, 1);
+        assert_eq!(noc_channel(&cfg).cycles_per_word, 1);
+    }
+
+    #[test]
+    fn offchip_slower_than_onchip_in_latency_too() {
+        let cfg = DnpConfig::default();
+        assert!(offchip_channel(&cfg, 1).latency > onchip_channel(&cfg).latency);
+    }
+
+    #[test]
+    fn no_fx_at_zero_ber() {
+        let cfg = DnpConfig::default();
+        assert!(offchip_channel(&cfg, 1).fx.is_none());
+    }
+
+    #[test]
+    fn ber_injection_corrupts_only_payload() {
+        let mut cfg = DnpConfig::default();
+        cfg.serdes.ber_per_word = 1.0; // every word hit
+        let mut ch = offchip_channel(&cfg, 42);
+        // Envelope word (seq 0, Head): must arrive intact, but stall the line.
+        ch.send(flit(0, FlitKind::Head), 0, 0);
+        let t_env = {
+            let mut t = 0;
+            loop {
+                ch.tick(t);
+                if ch.peek(0).is_some() {
+                    break t;
+                }
+                t += 1;
+            }
+        };
+        let f = ch.pop(0, t_env);
+        assert_eq!(f.data, 0xFFFF_0000, "envelope must be retransmitted intact");
+        let fx = ch.fx.as_ref().unwrap();
+        assert_eq!(fx.envelope_retx, 1);
+        assert_eq!(fx.payload_corruptions, 0);
+
+        // Payload word (seq 6, Body): corrupted in place, no stall.
+        let send_at = t_env + 100;
+        ch.send(flit(6, FlitKind::Body), 0, send_at);
+        let mut t = send_at;
+        loop {
+            ch.tick(t);
+            if ch.peek(0).is_some() {
+                break;
+            }
+            t += 1;
+        }
+        let f = ch.pop(0, t);
+        assert_ne!(f.data, 0xFFFF_0000, "payload must carry the bit error");
+        assert_eq!(f.data.count_ones(), 15_u32.max(f.data.count_ones()).min(17));
+        let fx = ch.fx.as_ref().unwrap();
+        assert_eq!(fx.payload_corruptions, 1);
+    }
+
+    #[test]
+    fn envelope_retx_stalls_the_line() {
+        let mut cfg = DnpConfig::default();
+        cfg.serdes.ber_per_word = 1.0;
+        let mut clean = offchip_channel(&DnpConfig::default(), 0);
+        let mut dirty = offchip_channel(&cfg, 42);
+        clean.send(flit(0, FlitKind::Head), 0, 0);
+        dirty.send(flit(0, FlitKind::Head), 0, 0);
+        let arrive = |ch: &mut Channel| {
+            let mut t = 0;
+            loop {
+                ch.tick(t);
+                if ch.peek(0).is_some() {
+                    return t;
+                }
+                t += 1;
+                assert!(t < 10_000);
+            }
+        };
+        let tc = arrive(&mut clean);
+        let td = arrive(&mut dirty);
+        assert!(td > tc, "retransmission must cost time ({td} <= {tc})");
+    }
+}

@@ -1,0 +1,256 @@
+//! RDMA command format (paper Sec. II-A).
+//!
+//! "A DNP command is composed by seven words containing information
+//! necessary to perform the required data transport operation." The
+//! supported command codes are LOOPBACK, PUT, SEND and GET; parameters are
+//! the source memory address and DNP, the destination memory address and
+//! DNP, and the length in words.
+
+use crate::packet::{DnpAddr, Word, ADDR_MASK};
+
+/// Command codes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CmdOp {
+    /// Local memory move: one intra-tile interface fetches, another writes.
+    Loopback,
+    /// One-way RDMA write to a registered remote buffer.
+    Put,
+    /// One-way eager message: remote side picks the first suitable buffer.
+    Send,
+    /// Two-way transaction: request to SRC DNP, data stream to DST DNP
+    /// (three-actor form of Fig. 3; commonly INIT == DST).
+    Get,
+}
+
+impl CmdOp {
+    pub fn code(self) -> u32 {
+        match self {
+            CmdOp::Loopback => 0,
+            CmdOp::Put => 1,
+            CmdOp::Send => 2,
+            CmdOp::Get => 3,
+        }
+    }
+
+    pub fn from_code(c: u32) -> Option<Self> {
+        Some(match c {
+            0 => CmdOp::Loopback,
+            1 => CmdOp::Put,
+            2 => CmdOp::Send,
+            3 => CmdOp::Get,
+            _ => return None,
+        })
+    }
+}
+
+/// Command flags (word 0, upper bits).
+pub const FLAG_NOTIFY: u32 = 1 << 8;
+
+/// A decoded RDMA command.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Command {
+    pub op: CmdOp,
+    /// Source memory address (word address).
+    pub src_addr: u32,
+    /// Destination memory address (word address; ignored by SEND).
+    pub dst_addr: u32,
+    /// Transfer length in words.
+    pub len: u32,
+    /// Source DNP (for GET: who holds the data).
+    pub src_dnp: DnpAddr,
+    /// Destination DNP (where the data lands).
+    pub dst_dnp: DnpAddr,
+    /// Write a CQ event when the command completes.
+    pub notify: bool,
+    /// Software tag echoed in the completion event.
+    pub tag: u32,
+}
+
+impl Command {
+    pub fn loopback(src_addr: u32, dst_addr: u32, len: u32) -> Self {
+        Self {
+            op: CmdOp::Loopback,
+            src_addr,
+            dst_addr,
+            len,
+            src_dnp: DnpAddr::new(0),
+            dst_dnp: DnpAddr::new(0),
+            notify: true,
+            tag: 0,
+        }
+    }
+
+    pub fn put(src_addr: u32, dst_dnp: DnpAddr, dst_addr: u32, len: u32) -> Self {
+        Self {
+            op: CmdOp::Put,
+            src_addr,
+            dst_addr,
+            len,
+            src_dnp: DnpAddr::new(0),
+            dst_dnp,
+            notify: true,
+            tag: 0,
+        }
+    }
+
+    pub fn send(src_addr: u32, dst_dnp: DnpAddr, len: u32) -> Self {
+        Self {
+            op: CmdOp::Send,
+            src_addr,
+            dst_addr: 0,
+            len,
+            src_dnp: DnpAddr::new(0),
+            dst_dnp,
+            notify: true,
+            tag: 0,
+        }
+    }
+
+    /// GET: fetch `len` words at `src_addr` on `src_dnp` into `dst_addr`
+    /// on `dst_dnp` (the initiator sets `dst_dnp` to itself in the common
+    /// INIT == DST case).
+    pub fn get(src_dnp: DnpAddr, src_addr: u32, dst_dnp: DnpAddr, dst_addr: u32, len: u32) -> Self {
+        Self {
+            op: CmdOp::Get,
+            src_addr,
+            dst_addr,
+            len,
+            src_dnp,
+            dst_dnp,
+            notify: true,
+            tag: 0,
+        }
+    }
+
+    pub fn with_tag(mut self, tag: u32) -> Self {
+        self.tag = tag;
+        self
+    }
+
+    pub fn with_notify(mut self, notify: bool) -> Self {
+        self.notify = notify;
+        self
+    }
+
+    /// Encode into the 7-word hardware format pushed through the intra-tile
+    /// slave interface into the CMD FIFO.
+    pub fn encode(&self) -> [Word; 7] {
+        [
+            self.op.code() | if self.notify { FLAG_NOTIFY } else { 0 },
+            self.src_addr,
+            self.dst_addr,
+            self.len,
+            self.src_dnp.raw(),
+            self.dst_dnp.raw(),
+            self.tag,
+        ]
+    }
+
+    /// Decode the 7-word format; `None` on an illegal op code.
+    pub fn decode(w: &[Word; 7]) -> Option<Self> {
+        Some(Self {
+            op: CmdOp::from_code(w[0] & 0xFF)?,
+            notify: w[0] & FLAG_NOTIFY != 0,
+            src_addr: w[1],
+            dst_addr: w[2],
+            len: w[3],
+            src_dnp: DnpAddr::new(w[4] & ADDR_MASK),
+            dst_dnp: DnpAddr::new(w[5] & ADDR_MASK),
+            tag: w[6],
+        })
+    }
+}
+
+/// The hardware CMD FIFO: bounded queue of encoded commands.
+#[derive(Debug, Clone)]
+pub struct CmdFifo {
+    depth: usize,
+    q: std::collections::VecDeque<Command>,
+    /// Commands rejected because the FIFO was full (software must retry;
+    /// exposed through the REG bank status register).
+    pub rejected: u64,
+}
+
+impl CmdFifo {
+    pub fn new(depth: usize) -> Self {
+        assert!(depth > 0);
+        Self {
+            depth,
+            q: std::collections::VecDeque::with_capacity(depth),
+            rejected: 0,
+        }
+    }
+
+    pub fn push(&mut self, c: Command) -> bool {
+        if self.q.len() >= self.depth {
+            self.rejected += 1;
+            false
+        } else {
+            self.q.push_back(c);
+            true
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<Command> {
+        self.q.pop_front()
+    }
+
+    pub fn peek(&self) -> Option<&Command> {
+        self.q.front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.q.len() >= self.depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip_all_ops() {
+        let cmds = [
+            Command::loopback(0x10, 0x20, 64),
+            Command::put(0x100, DnpAddr::new(0x3FFFF), 0x200, 256),
+            Command::send(0x300, DnpAddr::new(7), 12).with_notify(false),
+            Command::get(DnpAddr::new(3), 0x40, DnpAddr::new(5), 0x80, 1000).with_tag(0xCAFE),
+        ];
+        for c in cmds {
+            assert_eq!(Command::decode(&c.encode()), Some(c));
+        }
+    }
+
+    #[test]
+    fn decode_rejects_bad_opcode() {
+        let mut w = Command::loopback(0, 0, 1).encode();
+        w[0] = 0x7F;
+        assert_eq!(Command::decode(&w), None);
+    }
+
+    #[test]
+    fn command_is_seven_words() {
+        // Paper: "A DNP command is composed by seven words".
+        assert_eq!(Command::loopback(0, 0, 0).encode().len(), 7);
+    }
+
+    #[test]
+    fn fifo_bounds_and_order() {
+        let mut f = CmdFifo::new(2);
+        assert!(f.push(Command::loopback(1, 0, 1)));
+        assert!(f.push(Command::loopback(2, 0, 1)));
+        assert!(!f.push(Command::loopback(3, 0, 1)), "FIFO full");
+        assert_eq!(f.rejected, 1);
+        assert_eq!(f.pop().unwrap().src_addr, 1);
+        assert_eq!(f.pop().unwrap().src_addr, 2);
+        assert!(f.pop().is_none());
+    }
+}

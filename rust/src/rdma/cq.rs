@@ -1,0 +1,239 @@
+//! The Completion Queue (paper Sec. II-A).
+//!
+//! "A Completion Queue (CQ), which lives in the tile memory and is treated
+//! as a ring buffer, where the DNP writes events, which are simple data
+//! structures, and software reads them. Events are generated as commands
+//! are executed and incoming packets are processed."
+
+use crate::bus::TileMemory;
+use crate::packet::DnpAddr;
+
+/// Event kinds the DNP posts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A locally-issued command finished (source buffer is free again).
+    CmdDone,
+    /// A PUT/GetResponse landed in a registered buffer.
+    PacketWritten,
+    /// A SEND landed; `addr` tells software which buffer was picked.
+    SendLanded,
+    /// A GET request was served (data streamed out).
+    GetServed,
+    /// LUT miss — the operation was not carried on.
+    LutMiss,
+    /// Payload arrived corrupted (footer flag set); software handles it.
+    CorruptPayload,
+}
+
+impl EventKind {
+    pub fn code(self) -> u32 {
+        match self {
+            EventKind::CmdDone => 1,
+            EventKind::PacketWritten => 2,
+            EventKind::SendLanded => 3,
+            EventKind::GetServed => 4,
+            EventKind::LutMiss => 5,
+            EventKind::CorruptPayload => 6,
+        }
+    }
+
+    pub fn from_code(c: u32) -> Option<Self> {
+        Some(match c {
+            1 => EventKind::CmdDone,
+            2 => EventKind::PacketWritten,
+            3 => EventKind::SendLanded,
+            4 => EventKind::GetServed,
+            5 => EventKind::LutMiss,
+            6 => EventKind::CorruptPayload,
+            _ => return None,
+        })
+    }
+}
+
+/// A completion event: 4 words in tile memory.
+pub const EVENT_WORDS: u32 = 4;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    pub kind: EventKind,
+    /// Peer DNP involved (source of a received packet / target of a cmd).
+    pub peer: DnpAddr,
+    /// Memory address involved (buffer start / landing address).
+    pub addr: u32,
+    /// Length in words, or the software tag for CmdDone.
+    pub len_or_tag: u32,
+}
+
+impl Event {
+    pub fn pack(&self) -> [u32; EVENT_WORDS as usize] {
+        [
+            self.kind.code() | (self.peer.raw() << 8),
+            self.addr,
+            self.len_or_tag,
+            0xC0_0C1E5, // marker word: simplifies software ring validation
+        ]
+    }
+
+    pub fn unpack(w: &[u32]) -> Option<Self> {
+        Some(Self {
+            kind: EventKind::from_code(w[0] & 0xFF)?,
+            peer: DnpAddr::new((w[0] >> 8) & crate::packet::ADDR_MASK),
+            addr: w[1],
+            len_or_tag: w[2],
+        })
+    }
+}
+
+/// The DNP-side CQ writer: a ring of `len` events at `base` in tile memory.
+/// The DNP owns the write pointer; software owns the read pointer and polls
+/// by watching the sequence counter it keeps per slot.
+#[derive(Debug, Clone)]
+pub struct CqWriter {
+    base: u32,
+    len: usize,
+    wr: usize,
+    /// Events dropped because software lagged a full ring behind. The real
+    /// hardware overwrites silently; we count for diagnostics.
+    pub wrapped: u64,
+    pub written: u64,
+}
+
+impl CqWriter {
+    pub fn new(base: u32, len: usize) -> Self {
+        assert!(len > 0);
+        Self {
+            base,
+            len,
+            wr: 0,
+            wrapped: 0,
+            written: 0,
+        }
+    }
+
+    pub fn base(&self) -> u32 {
+        self.base
+    }
+
+    pub fn ring_words(&self) -> u32 {
+        self.len as u32 * EVENT_WORDS
+    }
+
+    /// Post one event into tile memory.
+    pub fn post(&mut self, mem: &mut TileMemory, ev: Event) {
+        let slot = self.base + (self.wr as u32) * EVENT_WORDS;
+        mem.write_slice(slot, &ev.pack());
+        self.wr += 1;
+        self.written += 1;
+        if self.wr == self.len {
+            self.wr = 0;
+            self.wrapped += 1;
+        }
+    }
+}
+
+/// Software-side CQ reader.
+#[derive(Debug, Clone)]
+pub struct CqReader {
+    base: u32,
+    len: usize,
+    rd: usize,
+    consumed: u64,
+}
+
+impl CqReader {
+    pub fn new(base: u32, len: usize) -> Self {
+        Self {
+            base,
+            len,
+            rd: 0,
+            consumed: 0,
+        }
+    }
+
+    /// Pop the next event if the writer is ahead of us.
+    pub fn poll(&mut self, mem: &TileMemory, writer: &CqWriter) -> Option<Event> {
+        if self.consumed >= writer.written {
+            return None;
+        }
+        let slot = self.base + (self.rd as u32) * EVENT_WORDS;
+        let w: Vec<u32> = (0..EVENT_WORDS).map(|i| mem.read(slot + i)).collect();
+        let ev = Event::unpack(&w)?;
+        self.rd = (self.rd + 1) % self.len;
+        self.consumed += 1;
+        Some(ev)
+    }
+
+    pub fn consumed(&self) -> u64 {
+        self.consumed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, tag: u32) -> Event {
+        Event {
+            kind,
+            peer: DnpAddr::new(0x155),
+            addr: 0x40,
+            len_or_tag: tag,
+        }
+    }
+
+    #[test]
+    fn event_pack_roundtrip() {
+        for kind in [
+            EventKind::CmdDone,
+            EventKind::PacketWritten,
+            EventKind::SendLanded,
+            EventKind::GetServed,
+            EventKind::LutMiss,
+            EventKind::CorruptPayload,
+        ] {
+            let e = ev(kind, 77);
+            assert_eq!(Event::unpack(&e.pack()), Some(e));
+        }
+    }
+
+    #[test]
+    fn writer_reader_in_order() {
+        let mut mem = TileMemory::new(256);
+        let mut w = CqWriter::new(0x10, 8);
+        let mut r = CqReader::new(0x10, 8);
+        assert!(r.poll(&mem, &w).is_none());
+        for i in 0..5 {
+            w.post(&mut mem, ev(EventKind::CmdDone, i));
+        }
+        for i in 0..5 {
+            let e = r.poll(&mem, &w).unwrap();
+            assert_eq!(e.len_or_tag, i);
+        }
+        assert!(r.poll(&mem, &w).is_none());
+    }
+
+    #[test]
+    fn ring_wraps() {
+        let mut mem = TileMemory::new(256);
+        let mut w = CqWriter::new(0, 4);
+        let mut r = CqReader::new(0, 4);
+        for i in 0..10 {
+            w.post(&mut mem, ev(EventKind::PacketWritten, i));
+            let e = r.poll(&mem, &w).unwrap();
+            assert_eq!(e.len_or_tag, i);
+        }
+        assert_eq!(w.wrapped, 2);
+        assert_eq!(r.consumed(), 10);
+    }
+
+    #[test]
+    fn events_live_in_tile_memory() {
+        // Paper: the CQ "lives in the tile memory" — verify raw words land.
+        let mut mem = TileMemory::new(64);
+        let mut w = CqWriter::new(0x20, 2);
+        w.post(&mut mem, ev(EventKind::SendLanded, 9));
+        assert_ne!(mem.read(0x20), 0);
+        assert_eq!(mem.read(0x21), 0x40);
+        assert_eq!(mem.read(0x22), 9);
+    }
+}

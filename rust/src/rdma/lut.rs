@@ -1,0 +1,209 @@
+//! The RDMA Look-Up Table (paper Sec. II-A).
+//!
+//! "The buffers which are used as destination have to be pre-registered
+//! into the LUT by the software. The LUT is organized in records, each one
+//! containing the buffer physical start address, length and some flags.
+//! When a packet is received, the LUT is scanned in search for an entry
+//! matching the packet destination buffer; only in this case the operation
+//! is carried on." SEND packets carry a null destination address "so that
+//! the first suitable buffer in the LUT is picked up and used as the
+//! target buffer."
+
+/// Record flags.
+pub const LUT_VALID: u32 = 1 << 0;
+/// Buffer may serve as a SEND landing zone.
+pub const LUT_SENDOK: u32 = 1 << 1;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LutRecord {
+    pub start: u32,
+    pub len: u32,
+    pub flags: u32,
+}
+
+impl LutRecord {
+    pub fn is_valid(&self) -> bool {
+        self.flags & LUT_VALID != 0
+    }
+
+    pub fn covers(&self, addr: u32, len: u32) -> bool {
+        self.is_valid()
+            && addr >= self.start
+            && addr.wrapping_add(len) <= self.start.wrapping_add(self.len)
+    }
+}
+
+/// Outcome of a LUT scan for an incoming packet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LutMatch {
+    /// Matching record found; deliver at this memory address.
+    Hit { record: usize, addr: u32 },
+    /// No record matches: the operation is *not* carried on; an error
+    /// event is posted to the CQ.
+    Miss,
+}
+
+/// Hardware LUT block, software-accessible through the intra-tile slave
+/// port.
+#[derive(Debug, Clone)]
+pub struct Lut {
+    records: Vec<Option<LutRecord>>,
+    /// Rotating scan start for SEND matching, so successive SENDs spread
+    /// over the registered pool (eager-protocol buffer ring).
+    send_scan: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Lut {
+    pub fn new(records: usize) -> Self {
+        assert!(records > 0);
+        Self {
+            records: vec![None; records],
+            send_scan: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn registered(&self) -> usize {
+        self.records.iter().filter(|r| r.is_some()).count()
+    }
+
+    /// Software: register a buffer; returns the record index or `None`
+    /// when the LUT is full.
+    pub fn register(&mut self, start: u32, len: u32, flags: u32) -> Option<usize> {
+        let i = self.records.iter().position(|r| r.is_none())?;
+        self.records[i] = Some(LutRecord {
+            start,
+            len,
+            flags: flags | LUT_VALID,
+        });
+        Some(i)
+    }
+
+    /// Software: deregister a record (e.g. after the CQ signalled use).
+    pub fn deregister(&mut self, record: usize) -> Option<LutRecord> {
+        self.records[record].take()
+    }
+
+    pub fn record(&self, record: usize) -> Option<&LutRecord> {
+        self.records[record].as_ref()
+    }
+
+    /// Hardware scan for a PUT / GetResponse: destination address and
+    /// length must fall inside a registered buffer.
+    pub fn lookup_put(&mut self, addr: u32, len: u32) -> LutMatch {
+        for (i, r) in self.records.iter().enumerate() {
+            if let Some(r) = r {
+                if r.covers(addr, len) {
+                    self.hits += 1;
+                    return LutMatch::Hit { record: i, addr };
+                }
+            }
+        }
+        self.misses += 1;
+        LutMatch::Miss
+    }
+
+    /// Hardware scan for a SEND: pick the first suitable (SENDOK, large
+    /// enough) buffer; consume it (a landed SEND uses the buffer up until
+    /// software re-registers it).
+    pub fn lookup_send(&mut self, len: u32) -> LutMatch {
+        let n = self.records.len();
+        for k in 0..n {
+            let i = (self.send_scan + k) % n;
+            if let Some(r) = self.records[i] {
+                if r.is_valid() && r.flags & LUT_SENDOK != 0 && r.len >= len {
+                    self.send_scan = (i + 1) % n;
+                    self.records[i] = None; // consumed
+                    self.hits += 1;
+                    return LutMatch::Hit { record: i, addr: r.start };
+                }
+            }
+        }
+        self.misses += 1;
+        LutMatch::Miss
+    }
+
+    /// Source-side lookup for a GET request: the paper requires destination
+    /// buffers to be registered; the *source* of a GET is read under the
+    /// same no-translation assumption, so only a range sanity check.
+    pub fn lookup_get_source(&mut self, addr: u32, len: u32) -> LutMatch {
+        self.lookup_put(addr, len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_until_full() {
+        let mut l = Lut::new(2);
+        assert_eq!(l.register(0, 16, 0), Some(0));
+        assert_eq!(l.register(16, 16, 0), Some(1));
+        assert_eq!(l.register(32, 16, 0), None);
+        assert_eq!(l.registered(), 2);
+    }
+
+    #[test]
+    fn put_requires_covering_record() {
+        let mut l = Lut::new(4);
+        l.register(0x100, 64, 0);
+        assert_eq!(
+            l.lookup_put(0x100, 64),
+            LutMatch::Hit { record: 0, addr: 0x100 }
+        );
+        assert_eq!(
+            l.lookup_put(0x120, 16),
+            LutMatch::Hit { record: 0, addr: 0x120 }
+        );
+        // Overrun: starts inside but ends outside.
+        assert_eq!(l.lookup_put(0x130, 64), LutMatch::Miss);
+        // Entirely outside.
+        assert_eq!(l.lookup_put(0x00, 8), LutMatch::Miss);
+        assert_eq!(l.hits, 2);
+        assert_eq!(l.misses, 2);
+    }
+
+    #[test]
+    fn send_picks_first_suitable_and_consumes() {
+        let mut l = Lut::new(4);
+        l.register(0x000, 8, 0); // not SENDOK
+        l.register(0x100, 4, LUT_SENDOK); // too small for len=8
+        l.register(0x200, 32, LUT_SENDOK); // the one
+        match l.lookup_send(8) {
+            LutMatch::Hit { addr, .. } => assert_eq!(addr, 0x200),
+            m => panic!("expected hit, got {m:?}"),
+        }
+        // Consumed: a second SEND of the same size now misses.
+        assert_eq!(l.lookup_send(8), LutMatch::Miss);
+        // But a tiny SEND still fits record 1.
+        match l.lookup_send(4) {
+            LutMatch::Hit { addr, .. } => assert_eq!(addr, 0x100),
+            m => panic!("expected hit, got {m:?}"),
+        }
+    }
+
+    #[test]
+    fn deregister_frees_slot() {
+        let mut l = Lut::new(1);
+        let r = l.register(0, 8, 0).unwrap();
+        assert!(l.register(8, 8, 0).is_none());
+        let rec = l.deregister(r).unwrap();
+        assert_eq!(rec.start, 0);
+        assert!(l.register(8, 8, 0).is_some());
+    }
+
+    #[test]
+    fn zero_len_put_inside_buffer_hits() {
+        let mut l = Lut::new(1);
+        l.register(0x10, 4, 0);
+        assert!(matches!(l.lookup_put(0x10, 0), LutMatch::Hit { .. }));
+    }
+}

@@ -1,0 +1,16 @@
+//! RDMA architecture (paper Sec. II-A): the Command Queue, the Completion
+//! Queue and the Look-up Table, plus the command format.
+//!
+//! The DNP promotes RDMA primitives "from a low-level API … to a
+//! full-fledged system-wide communication API, uniformly targeting both
+//! on-chip and off-chip devices" — the same four commands (LOOPBACK, PUT,
+//! SEND, GET) address any DNP in the hierarchy; nothing in this module
+//! knows whether the peer is on the same die.
+
+pub mod command;
+pub mod cq;
+pub mod lut;
+
+pub use command::{CmdFifo, CmdOp, Command, FLAG_NOTIFY};
+pub use cq::{CqReader, CqWriter, Event, EventKind, EVENT_WORDS};
+pub use lut::{Lut, LutMatch, LutRecord, LUT_SENDOK, LUT_VALID};

@@ -1,0 +1,138 @@
+//! XY dimension-order routing on a 2D mesh — the MT2D on-chip exploration
+//! (paper Sec. III-B, Fig. 7b): tiles connected point-to-point by their DNP
+//! inter-tile on-chip ports, forming an on-chip 2D mesh.
+//!
+//! A mesh (no wrap links) routed in dimension order is deadlock-free with a
+//! single VC, so `min_vcs() == 1`.
+
+use super::{Decision, OutSel, Router};
+use crate::packet::{AddrFormat, DnpAddr};
+
+/// Port layout for mesh nodes: `base + {0: X+, 1: X-, 2: Y+, 3: Y-}`.
+/// Border nodes simply leave absent directions unwired; XY routing never
+/// selects a port that exits the mesh.
+pub fn mesh_port(base: usize, dim: usize, minus: bool) -> usize {
+    base + dim * 2 + usize::from(minus)
+}
+
+#[derive(Debug, Clone)]
+pub struct MeshRouter {
+    me: [u32; 2],
+    dims: [u32; 2],
+    base: usize,
+    format: AddrFormat,
+}
+
+impl MeshRouter {
+    pub fn new(me: DnpAddr, dims: [u32; 2], base: usize) -> Self {
+        let format = AddrFormat::Mesh2D { dims };
+        let c = format.decode(me);
+        Self {
+            me: [c[0], c[1]],
+            dims,
+            base,
+            format,
+        }
+    }
+}
+
+impl Router for MeshRouter {
+    fn decide(&self, _src: DnpAddr, dst: DnpAddr, _cur_vc: u8) -> Decision {
+        let d = self.format.decode(dst);
+        debug_assert!(d[0] < self.dims[0] && d[1] < self.dims[1]);
+        // X first, then Y (classic XY routing).
+        for dim in 0..2 {
+            if d[dim] != self.me[dim] {
+                let minus = d[dim] < self.me[dim];
+                return Decision {
+                    out: OutSel::Port(mesh_port(self.base, dim, minus)),
+                    vc: 0,
+                };
+            }
+        }
+        Decision {
+            out: OutSel::Local,
+            vc: 0,
+        }
+    }
+
+    fn min_vcs(&self) -> usize {
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::route::testutil::walk;
+
+    fn routers_4x2() -> (Vec<Box<dyn Router>>, impl Fn(usize, usize) -> usize) {
+        let dims = [4u32, 2u32];
+        let f = AddrFormat::Mesh2D { dims };
+        let routers: Vec<Box<dyn Router>> = (0..8)
+            .map(|i| {
+                let c = [i as u32 % 4, i as u32 / 4];
+                Box::new(MeshRouter::new(f.encode(&c), dims, 0)) as Box<dyn Router>
+            })
+            .collect();
+        let next = move |node: usize, port: usize| -> usize {
+            let mut c = [node as u32 % 4, node as u32 / 4];
+            let dim = port / 2;
+            if port % 2 == 0 {
+                c[dim] += 1;
+            } else {
+                c[dim] -= 1;
+            }
+            (c[0] + c[1] * 4) as usize
+        };
+        (routers, next)
+    }
+
+    #[test]
+    fn all_pairs_delivered_manhattan_distance() {
+        let f = AddrFormat::Mesh2D { dims: [4, 2] };
+        let (routers, next) = routers_4x2();
+        for s in 0..8usize {
+            for d in 0..8usize {
+                let dc = [d as u32 % 4, d as u32 / 4];
+                let sc0 = [s as u32 % 4, s as u32 / 4];
+                let path = walk(&routers, &next, s, f.encode(&sc0), f.encode(&dc), 16);
+                let sc = [s as u32 % 4, s as u32 / 4];
+                let manhattan = sc[0].abs_diff(dc[0]) + sc[1].abs_diff(dc[1]);
+                assert_eq!(path.len() as u32, manhattan);
+            }
+        }
+    }
+
+    #[test]
+    fn x_consumed_before_y() {
+        let f = AddrFormat::Mesh2D { dims: [4, 2] };
+        let r = MeshRouter::new(f.encode(&[0, 0]), [4, 2], 0);
+        let d = r.decide(f.encode(&[0, 0]), f.encode(&[2, 1]), 0);
+        assert_eq!(d.out, OutSel::Port(mesh_port(0, 0, false)));
+    }
+
+    #[test]
+    fn never_routes_off_mesh() {
+        // Corner node (0,0): a correct XY route never asks for X- or Y-.
+        let f = AddrFormat::Mesh2D { dims: [4, 2] };
+        let r = MeshRouter::new(f.encode(&[0, 0]), [4, 2], 0);
+        for x in 0..4 {
+            for y in 0..2 {
+                match r.decide(f.encode(&[0, 0]), f.encode(&[x, y]), 0).out {
+                    OutSel::Local => assert_eq!((x, y), (0, 0)),
+                    OutSel::Port(p) => {
+                        assert!(p == mesh_port(0, 0, false) || p == mesh_port(0, 1, false));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_vc_suffices() {
+        let f = AddrFormat::Mesh2D { dims: [4, 2] };
+        let r = MeshRouter::new(f.encode(&[1, 1]), [4, 2], 0);
+        assert_eq!(r.min_vcs(), 1);
+    }
+}

@@ -1,0 +1,92 @@
+//! Routing (the RTR block, paper Sec. II-D).
+//!
+//! "The DNP architecture is a crossbar switch with configurable routing
+//! capabilities" — address decoding is done in the router module and must be
+//! customized per topology (Sec. II-B). We provide the deterministic,
+//! static routers the paper's IP library implements:
+//!
+//! * [`torus::TorusRouter`] — dimension-order routing on a k-ary n-cube
+//!   (3D torus), coordinate consumption order configurable at run time via
+//!   the priority register (Sec. III-A), dateline virtual-channel scheme for
+//!   deadlock freedom on the wrap links.
+//! * [`mesh::MeshRouter`] — XY routing for the MT2D on-chip 2D mesh.
+//! * [`spidergon::SpidergonRouter`] — Across-First routing on the
+//!   ST-Spidergon NoC topology.
+//! * [`table::TableRouter`] — fully general table-driven routing (used by
+//!   the fault-tolerance extension to install recomputed routes).
+
+pub mod mesh;
+pub mod spidergon;
+pub mod table;
+pub mod torus;
+
+pub use mesh::MeshRouter;
+pub use spidergon::{spidergon_neighbor, SpidergonRouter};
+pub use table::TableRouter;
+pub use torus::TorusRouter;
+
+use crate::packet::DnpAddr;
+
+/// Where the head flit goes next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutSel {
+    /// The packet has arrived: hand it to the RDMA controller.
+    Local,
+    /// Forward through inter-tile port `0..N+M` (on-chip ports first).
+    Port(usize),
+}
+
+/// A routing decision: output selection plus the VC class the packet
+/// travels on for the next hop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decision {
+    pub out: OutSel,
+    pub vc: u8,
+}
+
+/// Per-node router. One instance is constructed per DNP/NoC node, closed
+/// over that node's own address and port wiring.
+pub trait Router: Send + Sync {
+    /// Decide the next hop for a packet injected at `src` headed to `dst`,
+    /// currently travelling on `cur_vc`. Deterministic (static routing,
+    /// paper Sec. I). `src` lets ring routers compute the packet's wrap
+    /// status *statelessly* (the dateline VC assignment must reset per
+    /// ring; carrying the VC across dimensions would re-close the cycle).
+    fn decide(&self, src: DnpAddr, dst: DnpAddr, cur_vc: u8) -> Decision;
+
+    /// Number of VCs this routing scheme requires for deadlock freedom.
+    fn min_vcs(&self) -> usize {
+        1
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// Walk a packet from `src` to `dst` through `routers`, returning the
+    /// sequence of (node, port) hops. Panics after `limit` hops (livelock).
+    pub fn walk(
+        routers: &[Box<dyn Router>],
+        next_node: impl Fn(usize, usize) -> usize,
+        src: usize,
+        src_addr: DnpAddr,
+        dst: DnpAddr,
+        limit: usize,
+    ) -> Vec<(usize, usize)> {
+        let mut path = Vec::new();
+        let mut cur = src;
+        let mut vc = 0u8;
+        for _ in 0..limit {
+            match routers[cur].decide(src_addr, dst, vc) {
+                Decision { out: OutSel::Local, .. } => return path,
+                Decision { out: OutSel::Port(p), vc: nvc } => {
+                    path.push((cur, p));
+                    cur = next_node(cur, p);
+                    vc = nvc;
+                }
+            }
+        }
+        panic!("no delivery within {limit} hops: path={path:?}");
+    }
+}

@@ -1,0 +1,169 @@
+//! Across-First routing on the ST-Spidergon topology (paper Sec. III-A.1,
+//! refs [10]-[12]).
+//!
+//! Spidergon connects `n` nodes (n even) in a bidirectional ring plus a
+//! diametral "across" link from every node `i` to `i + n/2`. The canonical
+//! deterministic algorithm is *aFirst*: if the ring distance to the
+//! destination exceeds n/4, take the across link once, then walk the ring
+//! the short way. The ST-Spidergon implements its own deadlock avoidance
+//! (paper: "therefore no virtual channels are necessary on the DNP port
+//! side"); in our model the NoC routers reserve an internal escape VC, and
+//! the DNP-side ports run with a single VC, matching the paper.
+
+use super::{Decision, OutSel, Router};
+use crate::packet::{AddrFormat, DnpAddr};
+
+/// Spidergon port layout: `base + {0: clockwise, 1: counter-cw, 2: across}`.
+pub const PORT_CW: usize = 0;
+pub const PORT_CCW: usize = 1;
+pub const PORT_ACROSS: usize = 2;
+
+#[derive(Debug, Clone)]
+pub struct SpidergonRouter {
+    me: u32,
+    n: u32,
+    base: usize,
+}
+
+impl SpidergonRouter {
+    pub fn new(me: DnpAddr, n: u32, base: usize) -> Self {
+        assert!(n >= 2 && n % 2 == 0, "Spidergon needs an even node count");
+        let c = AddrFormat::Flat { n }.decode(me);
+        Self { me: c[0], n, base }
+    }
+
+    /// Signed ring distance in [-n/2, n/2): positive = clockwise.
+    fn ring_delta(&self, dst: u32) -> i64 {
+        let n = self.n as i64;
+        let mut d = (dst as i64 - self.me as i64).rem_euclid(n);
+        if d >= n / 2 {
+            d -= n;
+        }
+        d
+    }
+}
+
+impl Router for SpidergonRouter {
+    fn decide(&self, _src: DnpAddr, dst: DnpAddr, cur_vc: u8) -> Decision {
+        let d = AddrFormat::Flat { n: self.n }.decode(dst)[0];
+        debug_assert!(d < self.n);
+        if d == self.me {
+            return Decision { out: OutSel::Local, vc: 0 };
+        }
+        let delta = self.ring_delta(d);
+        let quarter = (self.n / 4) as i64;
+        let port = if delta.unsigned_abs() as i64 > quarter {
+            // Too far around the ring: cross the diameter first.
+            PORT_ACROSS
+        } else if delta > 0 {
+            PORT_CW
+        } else {
+            PORT_CCW
+        };
+        // The ring segments are wormhole channels and could close a cyclic
+        // dependency; the NoC breaks it with a dateline at node 0 (this is
+        // the ST-Spidergon's *internal* deadlock avoidance — the paper
+        // notes the DNP-side ports need no VCs because of it).
+        let wraps = (port == PORT_CW && self.me == self.n - 1)
+            || (port == PORT_CCW && self.me == 0);
+        Decision {
+            out: OutSel::Port(self.base + port),
+            vc: if wraps { 1 } else { cur_vc },
+        }
+    }
+
+    fn min_vcs(&self) -> usize {
+        2
+    }
+}
+
+/// Neighbor of node `i` through Spidergon port `p` in an `n`-node ring.
+pub fn spidergon_neighbor(i: u32, p: usize, n: u32) -> u32 {
+    match p {
+        PORT_CW => (i + 1) % n,
+        PORT_CCW => (i + n - 1) % n,
+        PORT_ACROSS => (i + n / 2) % n,
+        _ => panic!("spidergon has 3 ports"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::route::testutil::walk;
+
+    fn routers(n: u32) -> (Vec<Box<dyn Router>>, impl Fn(usize, usize) -> usize) {
+        let f = AddrFormat::Flat { n };
+        let routers: Vec<Box<dyn Router>> = (0..n)
+            .map(|i| Box::new(SpidergonRouter::new(f.encode(&[i]), n, 0)) as Box<dyn Router>)
+            .collect();
+        let next = move |node: usize, port: usize| -> usize {
+            spidergon_neighbor(node as u32, port, n) as usize
+        };
+        (routers, next)
+    }
+
+    #[test]
+    fn all_pairs_delivered_n8() {
+        let n = 8;
+        let f = AddrFormat::Flat { n };
+        let (routers, next) = routers(n);
+        for s in 0..n as usize {
+            for d in 0..n {
+                let path = walk(&routers, &next, s, f.encode(&[s as u32]), f.encode(&[d]), 8);
+                // aFirst on Spidergon delivers within n/4 + 1 hops.
+                assert!(path.len() as u32 <= n / 4 + 1, "s={s} d={d} path={path:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_pairs_delivered_various_sizes() {
+        for n in [2u32, 4, 6, 8, 12, 16, 32] {
+            let f = AddrFormat::Flat { n };
+            let (routers, next) = routers(n);
+            for s in 0..n as usize {
+                for d in 0..n {
+                    let path = walk(&routers, &next, s, f.encode(&[s as u32]), f.encode(&[d]), n as usize);
+                    assert!(path.len() as u32 <= n / 4 + 1, "n={n} s={s} d={d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn across_used_for_diametral_traffic() {
+        let n = 8;
+        let f = AddrFormat::Flat { n };
+        let r = SpidergonRouter::new(f.encode(&[0]), n, 0);
+        // 0 -> 4 is the diameter: must go across.
+        assert_eq!(r.decide(f.encode(&[0]), f.encode(&[4]), 0).out, OutSel::Port(PORT_ACROSS));
+        // 0 -> 1 / 0 -> 7: ring.
+        assert_eq!(r.decide(f.encode(&[0]), f.encode(&[1]), 0).out, OutSel::Port(PORT_CW));
+        assert_eq!(r.decide(f.encode(&[0]), f.encode(&[7]), 0).out, OutSel::Port(PORT_CCW));
+        // 0 -> 3: distance 3 > n/4=2 → across first.
+        assert_eq!(r.decide(f.encode(&[0]), f.encode(&[3]), 0).out, OutSel::Port(PORT_ACROSS));
+        // 0 -> 2: distance 2 <= 2 → ring.
+        assert_eq!(r.decide(f.encode(&[0]), f.encode(&[2]), 0).out, OutSel::Port(PORT_CW));
+    }
+
+    #[test]
+    fn across_taken_at_most_once() {
+        let n = 16;
+        let f = AddrFormat::Flat { n };
+        let (routers, next) = routers(n);
+        for s in 0..n as usize {
+            for d in 0..n {
+                let path = walk(&routers, &next, s, f.encode(&[s as u32]), f.encode(&[d]), n as usize);
+                let crossings = path.iter().filter(|(_, p)| *p == PORT_ACROSS).count();
+                assert!(crossings <= 1, "s={s} d={d} crossed {crossings} times");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "even node count")]
+    fn odd_ring_rejected() {
+        SpidergonRouter::new(DnpAddr::new(0), 7, 0);
+    }
+}

@@ -1,0 +1,129 @@
+//! Table-driven routing.
+//!
+//! The paper's RTR is a hard-coded logic block, but its Sec. V roadmap
+//! ("the option to instead have a µP in its place is currently under
+//! study") and the fault-tolerance extension both want *installable*
+//! routes. `TableRouter` is the general mechanism: a per-destination table
+//! of (port, vc) decisions, defaulting to Local for the node's own address.
+
+use super::{Decision, OutSel, Router};
+use crate::packet::DnpAddr;
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct TableRouter {
+    me: DnpAddr,
+    table: HashMap<DnpAddr, Decision>,
+}
+
+impl TableRouter {
+    pub fn new(me: DnpAddr) -> Self {
+        Self {
+            me,
+            table: HashMap::new(),
+        }
+    }
+
+    /// Install (or replace) the route toward `dst`.
+    pub fn install(&mut self, dst: DnpAddr, port: usize, vc: u8) {
+        self.table.insert(
+            dst,
+            Decision {
+                out: OutSel::Port(port),
+                vc,
+            },
+        );
+    }
+
+    /// Remove the route toward `dst` (it will panic on use — mirrors the
+    /// hardware raising an exception on an unroutable address).
+    pub fn remove(&mut self, dst: DnpAddr) {
+        self.table.remove(&dst);
+    }
+
+    pub fn routes(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Snapshot this router from any other router by probing all
+    /// destinations — used to seed the fault-tolerant reconfiguration.
+    pub fn snapshot_from(me: DnpAddr, all: &[DnpAddr], r: &dyn Router) -> Self {
+        let mut t = Self::new(me);
+        for &d in all {
+            if d != me {
+                let dec = r.decide(me, d, 0);
+                if let OutSel::Port(p) = dec.out {
+                    t.install(d, p, dec.vc);
+                }
+            }
+        }
+        t
+    }
+}
+
+impl Router for TableRouter {
+    fn decide(&self, _src: DnpAddr, dst: DnpAddr, _cur_vc: u8) -> Decision {
+        if dst == self.me {
+            return Decision {
+                out: OutSel::Local,
+                vc: 0,
+            };
+        }
+        *self
+            .table
+            .get(&dst)
+            .unwrap_or_else(|| panic!("no route from {} to {}", self.me, dst))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RouteOrder;
+    use crate::packet::AddrFormat;
+    use crate::route::TorusRouter;
+
+    #[test]
+    fn local_and_installed_routes() {
+        let me = DnpAddr::new(5);
+        let mut t = TableRouter::new(me);
+        t.install(DnpAddr::new(9), 3, 1);
+        assert_eq!(t.decide(me, me, 0).out, OutSel::Local);
+        let d = t.decide(me, DnpAddr::new(9), 0);
+        assert_eq!(d.out, OutSel::Port(3));
+        assert_eq!(d.vc, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "no route")]
+    fn missing_route_panics() {
+        let t = TableRouter::new(DnpAddr::new(0));
+        t.decide(DnpAddr::new(0), DnpAddr::new(1), 0);
+    }
+
+    #[test]
+    fn replace_and_remove() {
+        let mut t = TableRouter::new(DnpAddr::new(0));
+        t.install(DnpAddr::new(1), 2, 0);
+        t.install(DnpAddr::new(1), 4, 0);
+        assert_eq!(t.decide(DnpAddr::new(0), DnpAddr::new(1), 0).out, OutSel::Port(4));
+        assert_eq!(t.routes(), 1);
+        t.remove(DnpAddr::new(1));
+        assert_eq!(t.routes(), 0);
+    }
+
+    #[test]
+    fn snapshot_matches_source_router() {
+        let dims = [2, 2, 2];
+        let f = AddrFormat::Torus3D { dims };
+        let all: Vec<DnpAddr> = (0..8u32)
+            .map(|i| f.encode(&[i % 2, (i / 2) % 2, i / 4]))
+            .collect();
+        let me = all[3];
+        let tr = TorusRouter::new(me, dims, RouteOrder::ZYX, 0);
+        let snap = TableRouter::snapshot_from(me, &all, &tr);
+        for &d in &all {
+            assert_eq!(snap.decide(me, d, 0), tr.decide(me, d, 0), "dst={d}");
+        }
+    }
+}

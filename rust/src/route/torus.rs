@@ -1,0 +1,298 @@
+//! Deterministic dimension-order routing on a 3D torus (paper Sec. III-A).
+//!
+//! "The DNP applies a deterministic routing policy to implement
+//! communications on the 3D torus network. The coordinates evaluation order
+//! (e.g. first Z is consumed, then Y and eventually X) can be chosen at
+//! run-time by writing into a specialized priority register."
+//!
+//! Deadlock freedom: dimension-order routing removes inter-dimension cycles;
+//! the wrap-around links of each ring are broken with the classic *dateline*
+//! scheme (Dally-Seitz [9]): packets start on VC0 and switch to VC1 when
+//! they cross the dateline (the wrap link) of the ring they are traversing,
+//! so the channel-dependency graph per ring is acyclic.
+
+use super::{Decision, OutSel, Router};
+use crate::config::RouteOrder;
+use crate::packet::{AddrFormat, DnpAddr};
+
+/// Direction along a ring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    Plus,
+    Minus,
+}
+
+/// Off-chip port index for a (dimension, direction) pair, given the base
+/// index of the off-chip port block: `base + dim*2 + (dir == Minus)`.
+/// This is the canonical 6-port wiring of the SHAPES RDT (M = 6).
+pub fn torus_port(base: usize, dim: usize, dir: Dir) -> usize {
+    base + dim * 2 + usize::from(dir == Dir::Minus)
+}
+
+/// Per-node torus router.
+#[derive(Debug, Clone)]
+pub struct TorusRouter {
+    me: [u32; 3],
+    dims: [u32; 3],
+    order: RouteOrder,
+    /// First inter-tile port index of the off-chip block (= N, the number
+    /// of on-chip ports, under the canonical port layout).
+    offchip_base: usize,
+    format: AddrFormat,
+}
+
+impl TorusRouter {
+    pub fn new(me: DnpAddr, dims: [u32; 3], order: RouteOrder, offchip_base: usize) -> Self {
+        let format = AddrFormat::Torus3D { dims };
+        let c = format.decode(me);
+        Self {
+            me: [c[0], c[1], c[2]],
+            dims,
+            order,
+            offchip_base,
+            format,
+        }
+    }
+
+    /// Minimal-path direction and hop distance along ring `dim` from
+    /// `self.me[dim]` to `to`. Ties (exactly half way) break toward Plus.
+    fn ring_step(&self, dim: usize, to: u32) -> Option<(Dir, u32)> {
+        let k = self.dims[dim];
+        let from = self.me[dim];
+        if from == to {
+            return None;
+        }
+        let fwd = (to + k - from) % k; // hops going +
+        let bwd = (from + k - to) % k; // hops going -
+        if fwd <= bwd {
+            Some((Dir::Plus, fwd))
+        } else {
+            Some((Dir::Minus, bwd))
+        }
+    }
+
+    /// Does the next hop in `dim`/`dir` cross the wrap-around (dateline)?
+    fn crosses_dateline(&self, dim: usize, dir: Dir) -> bool {
+        let k = self.dims[dim];
+        match dir {
+            Dir::Plus => self.me[dim] == k - 1,
+            Dir::Minus => self.me[dim] == 0,
+        }
+    }
+}
+
+impl Router for TorusRouter {
+    fn decide(&self, src: DnpAddr, dst: DnpAddr, _cur_vc: u8) -> Decision {
+        let d = self.format.decode(dst);
+        let s = self.format.decode(src);
+        // Consume coordinates in the configured priority order.
+        for &dim in &self.order.0 {
+            if let Some((dir, _)) = self.ring_step(dim, d[dim]) {
+                // Dateline scheme, computed statelessly: along a DOR path
+                // the coordinate of the *current* ring at ring entry equals
+                // src's (earlier dimensions never touch it), and the travel
+                // direction is stable, so "already wrapped" is a pure
+                // function of (src, me, dir). VC resets to 0 in each new
+                // ring by construction — carrying VC1 across rings would
+                // re-close the escape channel's dependency cycle.
+                let wrapped_already = match dir {
+                    Dir::Plus => self.me[dim] < s[dim],
+                    Dir::Minus => self.me[dim] > s[dim],
+                };
+                let crossing_now = self.crosses_dateline(dim, dir);
+                let vc = u8::from(wrapped_already || crossing_now);
+                return Decision {
+                    out: OutSel::Port(torus_port(self.offchip_base, dim, dir)),
+                    vc,
+                };
+            }
+        }
+        Decision {
+            out: OutSel::Local,
+            vc: 0,
+        }
+    }
+
+    fn min_vcs(&self) -> usize {
+        // Dateline scheme needs 2 VCs on rings with k > 2... strictly any
+        // wrap traversal needs the escape VC, so require 2 whenever any
+        // dimension wraps (k >= 2; k==1 dimensions are degenerate).
+        if self.dims.iter().any(|&k| k > 1) {
+            2
+        } else {
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::route::testutil::walk;
+
+    fn fmt(dims: [u32; 3]) -> AddrFormat {
+        AddrFormat::Torus3D { dims }
+    }
+
+    /// Build routers for every node of a torus and a next-node function
+    /// mirroring the canonical port wiring.
+    fn torus_routers(
+        dims: [u32; 3],
+        order: RouteOrder,
+    ) -> (Vec<Box<dyn Router>>, impl Fn(usize, usize) -> usize) {
+        let f = fmt(dims);
+        let n = dims.iter().product::<u32>() as usize;
+        let idx = move |c: &[u32]| -> usize {
+            (c[0] + c[1] * dims[0] + c[2] * dims[0] * dims[1]) as usize
+        };
+        let coords = move |i: usize| -> [u32; 3] {
+            let i = i as u32;
+            [
+                i % dims[0],
+                (i / dims[0]) % dims[1],
+                i / (dims[0] * dims[1]),
+            ]
+        };
+        let routers: Vec<Box<dyn Router>> = (0..n)
+            .map(|i| {
+                let c = coords(i);
+                Box::new(TorusRouter::new(f.encode(&c), dims, order, 0)) as Box<dyn Router>
+            })
+            .collect();
+        let next = move |node: usize, port: usize| -> usize {
+            let mut c = coords(node);
+            let dim = port / 2;
+            let k = dims[dim];
+            if port % 2 == 0 {
+                c[dim] = (c[dim] + 1) % k;
+            } else {
+                c[dim] = (c[dim] + k - 1) % k;
+            }
+            idx(&c)
+        };
+        (routers, next)
+    }
+
+    #[test]
+    fn local_delivery_at_destination() {
+        let f = fmt([2, 2, 2]);
+        let r = TorusRouter::new(f.encode(&[1, 0, 1]), [2, 2, 2], RouteOrder::ZYX, 0);
+        let d = r.decide(f.encode(&[1, 0, 1]), f.encode(&[1, 0, 1]), 0);
+        assert_eq!(d.out, OutSel::Local);
+    }
+
+    #[test]
+    fn all_pairs_delivered_2x2x2() {
+        let dims = [2, 2, 2];
+        let f = fmt(dims);
+        let (routers, next) = torus_routers(dims, RouteOrder::ZYX);
+        for s in 0..8usize {
+            for d in 0..8u32 {
+                let dc = [d % 2, (d / 2) % 2, d / 4];
+                walk(&routers, &next, s, f.encode(&[s as u32 % 2, (s as u32 / 2) % 2, s as u32 / 4]), f.encode(&dc), 16);
+            }
+        }
+    }
+
+    #[test]
+    fn all_pairs_delivered_4x3x2_all_orders() {
+        let dims = [4, 3, 2];
+        let f = fmt(dims);
+        let n = 24u32;
+        for order in RouteOrder::all() {
+            let (routers, next) = torus_routers(dims, order);
+            for s in 0..n as usize {
+                for d in 0..n {
+                    let dc = [d % 4, (d / 4) % 3, d / 12];
+                    let sc0 = [s as u32 % 4, (s as u32 / 4) % 3, s as u32 / 12];
+                    let path = walk(&routers, &next, s, f.encode(&sc0), f.encode(&dc), 32);
+                    // DOR path length = sum of per-ring minimal distances.
+                    let sc = [s as u32 % 4, (s as u32 / 4) % 3, s as u32 / 12];
+                    let mut expect = 0u32;
+                    for dim in 0..3 {
+                        let k = dims[dim];
+                        let fwd = (dc[dim] + k - sc[dim]) % k;
+                        expect += fwd.min(k - fwd);
+                    }
+                    assert_eq!(path.len() as u32, expect, "s={s} d={d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn route_order_respected() {
+        // From (0,0,0) to (1,1,1): first hop must consume the
+        // highest-priority coordinate.
+        let dims = [4, 4, 4];
+        let f = fmt(dims);
+        let me = f.encode(&[0, 0, 0]);
+        let dst = f.encode(&[1, 1, 1]);
+
+        let r = TorusRouter::new(me, dims, RouteOrder::ZYX, 0);
+        assert_eq!(r.decide(me, dst, 0).out, OutSel::Port(torus_port(0, 2, Dir::Plus)));
+
+        let r = TorusRouter::new(me, dims, RouteOrder::XYZ, 0);
+        assert_eq!(r.decide(me, dst, 0).out, OutSel::Port(torus_port(0, 0, Dir::Plus)));
+    }
+
+    #[test]
+    fn minimal_direction_chosen() {
+        let dims = [8, 1, 1];
+        let f = fmt(dims);
+        let r = TorusRouter::new(f.encode(&[0, 0, 0]), dims, RouteOrder::XYZ, 0);
+        // 0 -> 2: forward (2 hops) beats backward (6 hops).
+        assert_eq!(
+            r.decide(f.encode(&[0, 0, 0]), f.encode(&[2, 0, 0]), 0).out,
+            OutSel::Port(torus_port(0, 0, Dir::Plus))
+        );
+        // 0 -> 6: backward (2 hops) beats forward (6 hops).
+        assert_eq!(
+            r.decide(f.encode(&[0, 0, 0]), f.encode(&[6, 0, 0]), 0).out,
+            OutSel::Port(torus_port(0, 0, Dir::Minus))
+        );
+        // 0 -> 4: tie breaks Plus.
+        assert_eq!(
+            r.decide(f.encode(&[0, 0, 0]), f.encode(&[4, 0, 0]), 0).out,
+            OutSel::Port(torus_port(0, 0, Dir::Plus))
+        );
+    }
+
+    #[test]
+    fn dateline_vc_switch_on_wrap() {
+        let dims = [4, 1, 1];
+        let f = fmt(dims);
+        // Node 3 -> node 0 going Plus crosses the wrap link: VC must be 1.
+        let r = TorusRouter::new(f.encode(&[3, 0, 0]), dims, RouteOrder::XYZ, 0);
+        let d = r.decide(f.encode(&[3, 0, 0]), f.encode(&[0, 0, 0]), 0);
+        assert_eq!(d.vc, 1);
+        // Node 1 -> 2 does not wrap: stays on VC0.
+        let r = TorusRouter::new(f.encode(&[1, 0, 0]), dims, RouteOrder::XYZ, 0);
+        assert_eq!(r.decide(f.encode(&[1, 0, 0]), f.encode(&[2, 0, 0]), 0).vc, 0);
+        // Node 0 -> 3 going Minus crosses the wrap at 0: VC 1.
+        let r = TorusRouter::new(f.encode(&[0, 0, 0]), dims, RouteOrder::XYZ, 0);
+        let d = r.decide(f.encode(&[0, 0, 0]), f.encode(&[3, 0, 0]), 0);
+        assert_eq!(d.vc, 1);
+        // Past the wrap (src 3 going + now at 0): stays on the escape VC.
+        let r = TorusRouter::new(f.encode(&[0, 0, 0]), dims, RouteOrder::XYZ, 0);
+        let d = r.decide(f.encode(&[3, 0, 0]), f.encode(&[1, 0, 0]), 0);
+        assert_eq!(d.vc, 1);
+    }
+
+    #[test]
+    fn offchip_base_offsets_ports() {
+        // SHAPES: N=1 on-chip port at index 0, torus ports at 1..=6.
+        let dims = [2, 2, 2];
+        let f = fmt(dims);
+        let r = TorusRouter::new(f.encode(&[0, 0, 0]), dims, RouteOrder::ZYX, 1);
+        let d = r.decide(f.encode(&[0, 0, 0]), f.encode(&[0, 0, 1]), 0);
+        assert_eq!(d.out, OutSel::Port(1 + 2 * 2)); // dim 2, Plus, base 1
+    }
+
+    #[test]
+    fn min_vcs_two_for_real_tori() {
+        let f = fmt([2, 2, 2]);
+        let r = TorusRouter::new(f.encode(&[0, 0, 0]), [2, 2, 2], RouteOrder::ZYX, 0);
+        assert_eq!(r.min_vcs(), 2);
+    }
+}

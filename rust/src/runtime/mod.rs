@@ -1,0 +1,129 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! This is the bridge to the L2/L1 layers: `python/compile/aot.py` lowers
+//! the JAX Wilson-Dslash (whose SU(3) hot-spot is a Pallas kernel,
+//! `interpret=True`) to **HLO text** in `artifacts/*.hlo.txt`; this module
+//! compiles each artifact once on the PJRT CPU client and exposes a typed
+//! `execute` for the simulator's tile-DSP hook. Python never runs here.
+//!
+//! HLO *text* — not `HloModuleProto.serialize()` — is the interchange
+//! format: jax ≥ 0.5 emits protos with 64-bit instruction ids which the
+//! image's xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact, ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Run with f32 buffers; every input is (data, shape). Returns the
+    /// flattened f32 outputs in declaration order.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .with_context(|| format!("reshape input to {dims:?}"))?;
+            lits.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .context("PJRT execute")?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        // aot.py lowers with return_tuple=True: unpack the tuple elements.
+        let elems = tuple.to_tuple().context("untuple result")?;
+        let mut out = Vec::with_capacity(elems.len());
+        for e in elems {
+            out.push(e.to_vec::<f32>().context("read f32 output")?);
+        }
+        Ok(out)
+    }
+}
+
+/// The PJRT client plus a cache of compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, Executable>,
+    artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// CPU PJRT client; `artifacts_dir` is where `make artifacts` puts the
+    /// HLO text files.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self {
+            client,
+            cache: HashMap::new(),
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<name>.hlo.txt` (cached after the first call).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not UTF-8")?,
+            )
+            .with_context(|| {
+                format!(
+                    "load HLO text {path:?} — run `make artifacts` first"
+                )
+            })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).context("XLA compile")?;
+            self.cache.insert(
+                name.to_string(),
+                Executable {
+                    exe,
+                    name: name.to_string(),
+                },
+            );
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Convenience: load and run in one call.
+    pub fn run_f32(&mut self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        self.load(name)?;
+        self.cache[name].run_f32(inputs)
+    }
+}
+
+/// Default artifacts directory relative to the repo root.
+pub fn default_artifacts_dir() -> PathBuf {
+    // Honour an override for tests / installed layouts.
+    if let Ok(d) = std::env::var("DNP_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-dependent tests live in rust/tests/runtime_it.rs (they need
+    // `make artifacts`). Here: pure-path logic only.
+    #[test]
+    fn artifacts_dir_env_override() {
+        std::env::set_var("DNP_ARTIFACTS", "/tmp/xyz");
+        assert_eq!(default_artifacts_dir(), PathBuf::from("/tmp/xyz"));
+        std::env::remove_var("DNP_ARTIFACTS");
+        assert!(default_artifacts_dir().ends_with("artifacts"));
+    }
+}

@@ -1,0 +1,396 @@
+//! Point-to-point flit channels with credit-based flow control.
+//!
+//! A [`Channel`] is one *unidirectional* physical link between two switch
+//! ports: it models (a) a pipeline latency, (b) a serialization rate
+//! (cycles per 32-bit word — 1 for intra-tile/on-chip parallel links,
+//! `serialization_factor / 2` for the DDR off-chip SerDes), and (c) the
+//! receiver-side virtual-channel buffers with credit backpressure.
+//!
+//! The paper's reliability assumptions (Sec. II-C) hold by construction:
+//! a flit is only sent when a receiver buffer slot for its VC is free, so
+//! *no packet is ever dropped* anywhere in the network.
+
+use crate::packet::{Flit, FlitKind};
+use crate::util::SplitMix64;
+use std::collections::VecDeque;
+
+/// Link-level error model of the off-chip SerDes protocol (paper
+/// Sec. III-A.2). Applied word-by-word at send time:
+///
+/// * a *payload* word hit by a bit error is corrupted in place — the flit's
+///   data is flipped; the destination DNP's CRC check will flag the packet
+///   footer and software handles it (the packet "goes on its way");
+/// * an *envelope* word (header/footer) hit by a bit error is caught by the
+///   link CRC and **retransmitted** from the link's memory buffer — the
+///   word is delivered intact but the line stalls for `retx_cycles`.
+///
+/// Routing information is therefore never corrupted, exactly the paper's
+/// reliability requirement ("avoid bad routing due to corrupted headers").
+#[derive(Debug)]
+pub struct LinkFx {
+    pub ber_per_word: f64,
+    pub retx_cycles: u64,
+    rng: SplitMix64,
+    pub payload_corruptions: u64,
+    pub envelope_retx: u64,
+}
+
+impl LinkFx {
+    pub fn new(ber_per_word: f64, retx_cycles: u64, seed: u64) -> Self {
+        Self {
+            ber_per_word,
+            retx_cycles,
+            rng: SplitMix64::new(seed),
+            payload_corruptions: 0,
+            envelope_retx: 0,
+        }
+    }
+
+    /// Returns (possibly corrupted flit, extra line-stall cycles).
+    fn apply(&mut self, mut flit: Flit) -> (Flit, u64) {
+        if self.ber_per_word > 0.0 && self.rng.chance(self.ber_per_word) {
+            let is_envelope =
+                flit.kind == FlitKind::Head || flit.kind == FlitKind::Tail || flit.seq < 5;
+            if is_envelope {
+                self.envelope_retx += 1;
+                return (flit, self.retx_cycles);
+            }
+            let bit = self.rng.below(32) as u32;
+            flit.data ^= 1 << bit;
+            self.payload_corruptions += 1;
+        }
+        (flit, 0)
+    }
+}
+
+/// Index of a channel in the [`ChannelArena`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ChannelId(pub u32);
+
+/// One in-flight flit: (flit, vc, cycle at which it reaches the rx buffer).
+#[derive(Debug, Clone, Copy)]
+struct InFlight {
+    flit: Flit,
+    vc: u8,
+    ready: u64,
+}
+
+#[derive(Debug)]
+pub struct Channel {
+    /// Pipeline latency (wire + downstream switch input stage).
+    pub latency: u64,
+    /// Serialization rate: cycles occupied per word on the physical link.
+    pub cycles_per_word: u64,
+    /// Per-VC receiver buffer depth (flits).
+    pub vc_depth: usize,
+
+    in_flight: VecDeque<InFlight>,
+    rx_bufs: Vec<VecDeque<Flit>>,
+    /// Sender-side credit counters, one per VC.
+    credits: Vec<usize>,
+    /// Credits travelling back to the sender: (vc, cycle available).
+    credit_return: VecDeque<(u8, u64)>,
+    /// Credit return flight time (0 = instant; off-chip links set this).
+    pub credit_lat: u64,
+    /// Earliest cycle the serializer accepts the next word.
+    next_send_ok: u64,
+    /// Optional link-error model (off-chip SerDes links).
+    pub fx: Option<LinkFx>,
+
+    // --- statistics ---
+    pub words_sent: u64,
+    pub busy_cycles: u64,
+    last_sent_cycle: u64,
+}
+
+impl Channel {
+    pub fn new(latency: u64, cycles_per_word: u64, vcs: usize, vc_depth: usize) -> Self {
+        assert!(vcs > 0 && vc_depth > 0 && cycles_per_word > 0);
+        Self {
+            latency,
+            cycles_per_word,
+            vc_depth,
+            in_flight: VecDeque::new(),
+            rx_bufs: (0..vcs).map(|_| VecDeque::new()).collect(),
+            credits: vec![vc_depth; vcs],
+            credit_return: VecDeque::new(),
+            credit_lat: 0,
+            next_send_ok: 0,
+            fx: None,
+            words_sent: 0,
+            busy_cycles: 0,
+            last_sent_cycle: u64::MAX,
+        }
+    }
+
+    pub fn vcs(&self) -> usize {
+        self.rx_bufs.len()
+    }
+
+    /// Can the sender push a flit on `vc` this cycle?
+    #[inline]
+    pub fn can_send(&self, vc: u8, now: u64) -> bool {
+        self.credits[vc as usize] > 0 && now >= self.next_send_ok
+    }
+
+    /// Push one flit. Panics if `can_send` would be false (callers must
+    /// check — this catches scheduler bugs instead of dropping flits).
+    pub fn send(&mut self, flit: Flit, vc: u8, now: u64) {
+        assert!(self.can_send(vc, now), "send without credit/rate check");
+        let (flit, stall) = match &mut self.fx {
+            Some(fx) => fx.apply(flit),
+            None => (flit, 0),
+        };
+        self.credits[vc as usize] -= 1;
+        self.next_send_ok = now + self.cycles_per_word + stall;
+        self.in_flight.push_back(InFlight {
+            flit,
+            vc,
+            ready: now + self.cycles_per_word + self.latency + stall,
+        });
+        self.words_sent += 1;
+        if self.last_sent_cycle != now {
+            self.busy_cycles += self.cycles_per_word.min(1).max(1);
+            self.last_sent_cycle = now;
+        }
+    }
+
+    /// Advance time: land flits whose flight completed, release credits.
+    pub fn tick(&mut self, now: u64) {
+        while let Some(f) = self.in_flight.front() {
+            if f.ready <= now {
+                let f = self.in_flight.pop_front().unwrap();
+                self.rx_bufs[f.vc as usize].push_back(f.flit);
+            } else {
+                break;
+            }
+        }
+        while let Some(&(vc, ready)) = self.credit_return.front() {
+            if ready <= now {
+                self.credit_return.pop_front();
+                self.credits[vc as usize] += 1;
+                debug_assert!(self.credits[vc as usize] <= self.vc_depth);
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Receiver: look at the head-of-line flit of `vc`.
+    #[inline]
+    pub fn peek(&self, vc: u8) -> Option<&Flit> {
+        self.rx_bufs[vc as usize].front()
+    }
+
+    /// Receiver: consume the head-of-line flit of `vc`, freeing its credit.
+    pub fn pop(&mut self, vc: u8, now: u64) -> Flit {
+        let f = self.rx_bufs[vc as usize]
+            .pop_front()
+            .expect("pop from empty VC buffer");
+        if self.credit_lat == 0 {
+            // On-chip credit wires are combinational: free immediately.
+            self.credits[vc as usize] += 1;
+            debug_assert!(self.credits[vc as usize] <= self.vc_depth);
+        } else {
+            self.credit_return.push_back((vc, now + self.credit_lat));
+        }
+        f
+    }
+
+    /// Flits buffered at the receiver on `vc`.
+    pub fn rx_len(&self, vc: u8) -> usize {
+        self.rx_bufs[vc as usize].len()
+    }
+
+    /// Anything still moving or buffered?
+    pub fn is_idle(&self) -> bool {
+        self.in_flight.is_empty() && self.rx_bufs.iter().all(|b| b.is_empty())
+    }
+
+    /// Utilization over `elapsed` cycles: fraction of cycles the serializer
+    /// was occupied.
+    pub fn utilization(&self, elapsed: u64) -> f64 {
+        if elapsed == 0 {
+            0.0
+        } else {
+            (self.words_sent * self.cycles_per_word) as f64 / elapsed as f64
+        }
+    }
+}
+
+/// Arena of all channels in a network. Components hold `ChannelId`s.
+#[derive(Debug, Default)]
+pub struct ChannelArena {
+    chans: Vec<Channel>,
+}
+
+impl ChannelArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, c: Channel) -> ChannelId {
+        self.chans.push(c);
+        ChannelId(self.chans.len() as u32 - 1)
+    }
+
+    #[inline]
+    pub fn get(&self, id: ChannelId) -> &Channel {
+        &self.chans[id.0 as usize]
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, id: ChannelId) -> &mut Channel {
+        &mut self.chans[id.0 as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.chans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chans.is_empty()
+    }
+
+    pub fn tick_all(&mut self, now: u64) {
+        for c in &mut self.chans {
+            c.tick(now);
+        }
+    }
+
+    pub fn all_idle(&self) -> bool {
+        self.chans.iter().all(|c| c.is_idle())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (ChannelId, &Channel)> {
+        self.chans
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (ChannelId(i as u32), c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packet::{FlitKind, PacketId};
+
+    fn flit(seq: u16) -> Flit {
+        Flit {
+            pkt: PacketId(0),
+            kind: FlitKind::Body,
+            seq,
+            data: seq as u32,
+        }
+    }
+
+    #[test]
+    fn latency_is_respected() {
+        let mut c = Channel::new(5, 1, 1, 4);
+        c.send(flit(0), 0, 10);
+        for now in 10..16 {
+            c.tick(now);
+            assert!(c.peek(0).is_none(), "arrived early at {now}");
+        }
+        c.tick(16);
+        assert_eq!(c.peek(0).unwrap().seq, 0);
+    }
+
+    #[test]
+    fn serialization_rate_limits_sends() {
+        // 8 cycles/word, like the SHAPES SerDes at factor 16.
+        let mut c = Channel::new(0, 8, 1, 16);
+        assert!(c.can_send(0, 0));
+        c.send(flit(0), 0, 0);
+        for now in 1..8 {
+            assert!(!c.can_send(0, now), "rate violated at {now}");
+        }
+        assert!(c.can_send(0, 8));
+        c.send(flit(1), 0, 8);
+        c.tick(16);
+        assert_eq!(c.rx_len(0), 2);
+    }
+
+    #[test]
+    fn credits_block_when_buffer_full() {
+        let mut c = Channel::new(0, 1, 1, 2);
+        c.send(flit(0), 0, 0);
+        c.send(flit(1), 0, 1);
+        assert!(!c.can_send(0, 2), "third flit must be blocked");
+        c.tick(2);
+        // Still blocked: receiver hasn't popped.
+        assert!(!c.can_send(0, 2));
+        let f = c.pop(0, 2);
+        assert_eq!(f.seq, 0);
+        assert!(c.can_send(0, 2), "credit released after pop");
+    }
+
+    #[test]
+    fn credit_return_latency() {
+        let mut c = Channel::new(0, 1, 1, 1);
+        c.credit_lat = 4;
+        c.send(flit(0), 0, 0);
+        c.tick(1);
+        c.pop(0, 1);
+        assert!(!c.can_send(0, 2), "credit still in flight");
+        c.tick(5);
+        assert!(c.can_send(0, 5));
+    }
+
+    #[test]
+    fn vcs_are_independent() {
+        let mut c = Channel::new(0, 1, 2, 1);
+        c.send(flit(0), 0, 0);
+        c.tick(1);
+        // VC0 full; VC1 still has credit (rate allows at cycle 1).
+        assert!(!c.can_send(0, 1));
+        assert!(c.can_send(1, 1));
+        c.send(flit(1), 1, 1);
+        c.tick(2);
+        assert_eq!(c.peek(0).unwrap().seq, 0);
+        assert_eq!(c.peek(1).unwrap().seq, 1);
+    }
+
+    #[test]
+    fn fifo_order_per_vc() {
+        let mut c = Channel::new(3, 1, 1, 8);
+        for i in 0..5 {
+            c.send(flit(i), 0, i as u64);
+        }
+        c.tick(20);
+        for i in 0..5 {
+            assert_eq!(c.pop(0, 20).seq, i);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "send without credit")]
+    fn unchecked_send_panics() {
+        let mut c = Channel::new(0, 1, 1, 1);
+        c.send(flit(0), 0, 0);
+        c.send(flit(1), 0, 0); // no credit AND rate-violating
+    }
+
+    #[test]
+    fn utilization_counts_serializer_occupancy() {
+        let mut c = Channel::new(0, 8, 1, 64);
+        for i in 0..10u64 {
+            c.send(flit(i as u16), 0, i * 8);
+        }
+        // 10 words * 8 cycles over 80 cycles = 100% busy.
+        assert!((c.utilization(80) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arena_roundtrip() {
+        let mut a = ChannelArena::new();
+        let id0 = a.add(Channel::new(1, 1, 1, 4));
+        let id1 = a.add(Channel::new(2, 1, 1, 4));
+        assert_eq!(a.len(), 2);
+        a.get_mut(id0).send(flit(7), 0, 0);
+        a.tick_all(2);
+        assert_eq!(a.get(id0).peek(0).unwrap().seq, 7);
+        assert!(a.get(id1).is_idle());
+        assert!(!a.all_idle());
+    }
+}

@@ -1,0 +1,291 @@
+//! Cycle-driven simulation container: the DNP-Net.
+//!
+//! A [`Net`] owns every node (DNP tiles and NoC routers), every channel and
+//! the packet arena, and advances the whole system one clock cycle at a
+//! time. It also aggregates the [`NodeEvent`]s the DNPs emit into
+//! per-command / per-packet traces — the measurement machinery behind the
+//! paper's Figs. 8-11 and the bandwidth tables.
+
+pub mod channel;
+
+pub use channel::{Channel, ChannelArena, ChannelId, LinkFx};
+
+use crate::dnp::{DnpNode, NodeEvent};
+use crate::noc::NocRouterNode;
+use crate::packet::{DnpAddr, PacketOp, PacketStore};
+use crate::rdma::Command;
+use std::collections::HashMap;
+
+/// A node of the DNP-Net.
+pub enum Node {
+    Dnp(DnpNode),
+    Noc(NocRouterNode),
+}
+
+impl Node {
+    pub fn as_dnp(&self) -> Option<&DnpNode> {
+        match self {
+            Node::Dnp(d) => Some(d),
+            _ => None,
+        }
+    }
+
+    pub fn as_dnp_mut(&mut self) -> Option<&mut DnpNode> {
+        match self {
+            Node::Dnp(d) => Some(d),
+            _ => None,
+        }
+    }
+}
+
+/// Per-command trace (tag-keyed).
+#[derive(Debug, Clone, Default)]
+pub struct CmdTrace {
+    pub node: usize,
+    /// Cycle the command reached the CMD FIFO (the paper's t0).
+    pub issued: Option<u64>,
+    /// Cycle the master-port read was issued (end of L1).
+    pub read_start: Option<u64>,
+    /// Cycle the command finished executing at the source.
+    pub done: Option<u64>,
+}
+
+/// Per-packet trace (uid-keyed).
+#[derive(Debug, Clone, Default)]
+pub struct PktTrace {
+    pub tag: u32,
+    pub src_node: Option<usize>,
+    /// Cycle the head flit entered the source switch.
+    pub injected: Option<u64>,
+    /// (node, port, cycle) each time the head crossed a switch into an
+    /// inter-tile output — source first, then each transit hop.
+    pub tx_hops: Vec<(usize, usize, u64)>,
+    /// Head flit reached the destination RDMA controller (end of L3).
+    pub arrived: Option<u64>,
+    /// First payload word written to destination memory (end of L4).
+    pub first_write: Option<u64>,
+    /// Tail processed at the destination.
+    pub delivered: Option<u64>,
+    pub dst_node: Option<usize>,
+    pub op: Option<PacketOp>,
+    pub corrupt: bool,
+    pub lut_miss: bool,
+    pub payload_words: u32,
+}
+
+/// Aggregated measurement state.
+#[derive(Debug, Default)]
+pub struct TraceBook {
+    /// Tracing on/off (off for long bandwidth runs — the counters in
+    /// channels/nodes keep accumulating either way).
+    pub enabled: bool,
+    pub cmds: HashMap<(usize, u32), CmdTrace>,
+    pub pkts: HashMap<u64, PktTrace>,
+    pub delivered: u64,
+    pub delivered_words: u64,
+    pub corrupt_packets: u64,
+    pub lut_misses: u64,
+}
+
+impl TraceBook {
+    fn cmd(&mut self, node: usize, tag: u32) -> &mut CmdTrace {
+        let t = self.cmds.entry((node, tag)).or_default();
+        t.node = node;
+        t
+    }
+
+    fn pkt(&mut self, uid: u64) -> &mut PktTrace {
+        self.pkts.entry(uid).or_default()
+    }
+}
+
+/// The whole simulated system.
+pub struct Net {
+    pub nodes: Vec<Node>,
+    pub chans: ChannelArena,
+    pub store: PacketStore,
+    pub cycle: u64,
+    pub traces: TraceBook,
+    /// DNP address → node index.
+    pub addr_map: HashMap<DnpAddr, usize>,
+}
+
+impl Net {
+    pub fn new() -> Self {
+        Self {
+            nodes: Vec::new(),
+            chans: ChannelArena::new(),
+            store: PacketStore::new(),
+            cycle: 0,
+            traces: TraceBook {
+                enabled: true,
+                ..Default::default()
+            },
+            addr_map: HashMap::new(),
+        }
+    }
+
+    pub fn add_dnp(&mut self, node: DnpNode) -> usize {
+        let idx = self.nodes.len();
+        self.addr_map.insert(node.addr, idx);
+        self.nodes.push(Node::Dnp(node));
+        idx
+    }
+
+    pub fn add_noc(&mut self, node: NocRouterNode) -> usize {
+        let idx = self.nodes.len();
+        self.nodes.push(Node::Noc(node));
+        idx
+    }
+
+    pub fn dnp(&self, idx: usize) -> &DnpNode {
+        self.nodes[idx].as_dnp().expect("node is not a DNP")
+    }
+
+    pub fn dnp_mut(&mut self, idx: usize) -> &mut DnpNode {
+        self.nodes[idx].as_dnp_mut().expect("node is not a DNP")
+    }
+
+    pub fn node_of(&self, addr: DnpAddr) -> usize {
+        self.addr_map[&addr]
+    }
+
+    /// Software: issue a command to the DNP at node `idx` this cycle.
+    pub fn issue(&mut self, idx: usize, cmd: Command) {
+        let now = self.cycle;
+        self.dnp_mut(idx).issue(cmd, now);
+    }
+
+    /// Advance one clock cycle.
+    pub fn step(&mut self) {
+        let now = self.cycle;
+        self.chans.tick_all(now);
+        for i in 0..self.nodes.len() {
+            match &mut self.nodes[i] {
+                Node::Dnp(d) => {
+                    d.tick(now, &mut self.chans, &mut self.store);
+                    // Drain this node's events immediately: uids of live
+                    // packets are still resolvable.
+                    let events = std::mem::take(&mut d.events);
+                    Self::absorb_events(&mut self.traces, &self.store, i, events);
+                }
+                Node::Noc(r) => r.tick(now, &mut self.chans, &self.store),
+            }
+        }
+        self.cycle += 1;
+    }
+
+    fn absorb_events(
+        traces: &mut TraceBook,
+        store: &PacketStore,
+        node: usize,
+        events: Vec<NodeEvent>,
+    ) {
+        for ev in events {
+            match ev {
+                NodeEvent::Delivered {
+                    pkt: _,
+                    uid,
+                    src: _,
+                    op,
+                    corrupt,
+                    lut_miss,
+                    first_write,
+                    cycle,
+                    payload_words,
+                } => {
+                    traces.delivered += 1;
+                    traces.delivered_words += payload_words as u64;
+                    if corrupt {
+                        traces.corrupt_packets += 1;
+                    }
+                    if lut_miss {
+                        traces.lut_misses += 1;
+                    }
+                    if traces.enabled {
+                        let t = traces.pkt(uid);
+                        t.delivered = Some(cycle);
+                        t.dst_node = Some(node);
+                        t.op = Some(op);
+                        t.corrupt = corrupt;
+                        t.lut_miss = lut_miss;
+                        t.first_write = first_write;
+                        t.payload_words = payload_words;
+                    }
+                }
+                _ if !traces.enabled => {}
+                NodeEvent::CmdIssued { tag, cycle } => {
+                    traces.cmd(node, tag).issued = Some(cycle);
+                }
+                NodeEvent::ReadStart { tag, cycle } => {
+                    traces.cmd(node, tag).read_start = Some(cycle);
+                }
+                NodeEvent::CmdDone { tag, cycle } => {
+                    traces.cmd(node, tag).done = Some(cycle);
+                }
+                NodeEvent::HeadInjected { pkt, tag, cycle } => {
+                    let uid = store.uid(pkt);
+                    let t = traces.pkt(uid);
+                    t.tag = tag;
+                    t.src_node = Some(node);
+                    t.injected = Some(cycle);
+                }
+                NodeEvent::HeadTx { pkt, port, cycle } => {
+                    let uid = store.uid(pkt);
+                    traces.pkt(uid).tx_hops.push((node, port, cycle));
+                }
+                NodeEvent::HeadArrived { pkt, cycle } => {
+                    let uid = store.uid(pkt);
+                    traces.pkt(uid).arrived = Some(cycle);
+                }
+                NodeEvent::GetServiced { .. } => {}
+            }
+        }
+    }
+
+    /// Is the whole system quiescent?
+    pub fn is_idle(&self) -> bool {
+        self.store.live() == 0
+            && self.chans.all_idle()
+            && self
+                .nodes
+                .iter()
+                .all(|n| n.as_dnp().map(|d| d.is_idle()).unwrap_or(true))
+    }
+
+    /// Run until idle; returns the cycle count, or `None` if `max_cycles`
+    /// elapsed first (deadlock / livelock guard for tests).
+    pub fn run_until_idle(&mut self, max_cycles: u64) -> Option<u64> {
+        let start = self.cycle;
+        while self.cycle - start < max_cycles {
+            self.step();
+            if self.is_idle() {
+                return Some(self.cycle - start);
+            }
+        }
+        None
+    }
+
+    /// Run exactly `n` cycles.
+    pub fn run(&mut self, n: u64) {
+        for _ in 0..n {
+            self.step();
+        }
+    }
+
+    /// Find the packet trace for the first packet of command `tag` issued
+    /// at node `src`.
+    pub fn pkt_of_tag(&self, tag: u32) -> Option<&PktTrace> {
+        self.traces
+            .pkts
+            .values()
+            .filter(|p| p.tag == tag && p.injected.is_some())
+            .min_by_key(|p| p.injected)
+    }
+}
+
+impl Default for Net {
+    fn default() -> Self {
+        Self::new()
+    }
+}

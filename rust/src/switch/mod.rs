@@ -1,0 +1,696 @@
+//! The fully-switched crossbar (SWITCH + RTR + ARB of paper Fig. 1).
+//!
+//! "The routing logic (RTR) configures the SWITCH paths between the DNP
+//! ports, sustaining up to L+M+N simultaneous packet transactions."
+//!
+//! The fabric is *wormhole*: when a head flit wins arbitration for an
+//! output, the path input→output is held until the tail flit releases it.
+//! Each output port moves at most one flit per cycle (the DNP internal
+//! width is one word), so aggregate switch bandwidth = #ports words/cycle.
+//!
+//! The same fabric is instantiated by the DNP core (with RDMA delivery
+//! sessions as "local outputs") and by the ST-Spidergon NoC routers (with
+//! the DNP-facing port as the local redirect) — the modular reuse the
+//! paper's IP-library design calls for.
+
+pub mod arbiter;
+
+pub use arbiter::Arbiter;
+
+use crate::config::ArbPolicy;
+use crate::packet::{Flit, FlitKind, PacketStore};
+use crate::route::{Decision, OutSel, Router};
+use crate::sim::channel::{ChannelArena, ChannelId};
+use std::collections::VecDeque;
+
+/// Where an input port's flits come from.
+#[derive(Debug, Clone, Copy)]
+pub enum InputSrc {
+    /// An incoming inter-tile channel (per-VC buffered).
+    Chan(ChannelId),
+    /// An internal injection lane fed by the DNP engine (TX path).
+    Inject,
+}
+
+/// Destination of a delivered flit when the packet terminates here.
+pub trait LocalSink {
+    /// May session `s` absorb one flit this cycle?
+    fn can_accept(&self, s: usize, now: u64) -> bool;
+    /// Absorb one flit on session `s`.
+    fn accept(&mut self, s: usize, flit: Flit, now: u64);
+}
+
+/// A no-op sink for nodes that never terminate packets (pure routers).
+pub struct NoSink;
+
+impl LocalSink for NoSink {
+    fn can_accept(&self, _s: usize, _now: u64) -> bool {
+        false
+    }
+    fn accept(&mut self, _s: usize, _f: Flit, _now: u64) {
+        unreachable!("NoSink cannot accept flits")
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct RouteState {
+    out: OutSel,
+    out_vc: u8,
+    /// Set once the head won an output (or local session): the wormhole
+    /// is bound and this input VC may not be re-granted elsewhere.
+    locked: bool,
+}
+
+#[derive(Debug)]
+struct Input {
+    src: InputSrc,
+    /// Injection lane buffer (only used when `src == Inject`).
+    inj: VecDeque<Flit>,
+    /// Routing decision for the packet currently at the head of each VC.
+    route: Vec<Option<RouteState>>,
+}
+
+#[derive(Debug)]
+struct Output {
+    ch: ChannelId,
+    /// Wormhole lock per *output VC*: (input index, input VC). VCs must
+    /// multiplex the physical link independently — a single per-port lock
+    /// would let a stalled VC0 packet block the VC1 escape channel and
+    /// void the dateline deadlock-avoidance guarantee.
+    locks: Vec<Option<(usize, u8)>>,
+    /// Round-robin pointer over output VCs (physical-link time-sharing).
+    rr_vc: usize,
+}
+
+/// Crossbar switch fabric.
+pub struct SwitchFabric {
+    inputs: Vec<Input>,
+    outputs: Vec<Output>,
+    /// Wormhole locks of the local delivery sessions.
+    local_locks: Vec<Option<(usize, u8)>>,
+    /// If set, `OutSel::Local` decisions are redirected to this output port
+    /// (used by NoC routers whose "local" is the attached DNP link).
+    pub local_redirect: Option<usize>,
+    arbs: Vec<Arbiter>,
+    local_arb: Arbiter,
+    vcs: usize,
+    /// Injection lane capacity in flits.
+    inj_cap: usize,
+    /// Routed heads not yet granted a path (arbitration work pending).
+    unlocked_routes: usize,
+    /// Pending (ungranted) routed heads per output port / toward Local —
+    /// lets `serve_outputs` skip ports with no candidates (§Perf).
+    routes_to_port: Vec<u32>,
+    routes_to_local: u32,
+    /// Wormhole paths currently held (output VCs + local sessions).
+    active_locks: usize,
+    /// Scratch requester bitmap (reused across cycles: §Perf — the
+    /// per-grant `Vec` allocation dominated the idle profile).
+    scratch: Vec<bool>,
+    /// Total flits moved (stats / perf counters).
+    pub flits_switched: u64,
+    /// Probe log: (packet, output port, cycle) for every Head flit sent to
+    /// an output channel. Drained by the owning node each tick; feeds the
+    /// L2/L3 latency breakdowns of the paper's Figs. 9-11.
+    pub head_log: Vec<(crate::packet::PacketId, usize, u64)>,
+}
+
+impl SwitchFabric {
+    pub fn new(
+        in_srcs: Vec<InputSrc>,
+        out_chs: Vec<ChannelId>,
+        local_sessions: usize,
+        vcs: usize,
+        inj_cap: usize,
+        arb: ArbPolicy,
+    ) -> Self {
+        let n_in = in_srcs.len();
+        let requesters = n_in * vcs;
+        let n_out = out_chs.len();
+        let inputs = in_srcs
+            .into_iter()
+            .map(|src| Input {
+                src,
+                inj: VecDeque::new(),
+                route: vec![None; vcs],
+            })
+            .collect();
+        let outputs: Vec<Output> = out_chs
+            .into_iter()
+            .map(|ch| Output {
+                ch,
+                locks: vec![None; vcs],
+                rr_vc: 0,
+            })
+            .collect();
+        let arbs = (0..outputs.len() * vcs)
+            .map(|_| Arbiter::new(arb, requesters))
+            .collect();
+        Self {
+            inputs,
+            outputs,
+            local_locks: vec![None; local_sessions],
+            local_redirect: None,
+            arbs,
+            local_arb: Arbiter::new(arb, requesters),
+            vcs,
+            inj_cap,
+            unlocked_routes: 0,
+            routes_to_port: vec![0; n_out],
+            routes_to_local: 0,
+            active_locks: 0,
+            scratch: vec![false; n_in * vcs],
+            flits_switched: 0,
+            head_log: Vec::new(),
+        }
+    }
+
+    /// Nothing buffered, routed or locked anywhere in this fabric?
+    /// (O(inputs × vcs) peeks — the idle fast path of the node tick.)
+    pub fn is_quiet(&self, chans: &ChannelArena) -> bool {
+        if self.active_locks != 0 || self.unlocked_routes != 0 {
+            return false;
+        }
+        self.inputs.iter().all(|i| match i.src {
+            InputSrc::Inject => i.inj.is_empty(),
+            InputSrc::Chan(id) => {
+                let c = chans.get(id);
+                (0..c.vcs() as u8).all(|v| c.rx_len(v) == 0)
+            }
+        })
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.inputs.len()
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.outputs.len()
+    }
+
+    /// Can injection lane `i` take another flit this cycle?
+    pub fn can_inject(&self, i: usize) -> bool {
+        self.inputs[i].inj.len() < self.inj_cap
+    }
+
+    /// Push a flit into injection lane (input index) `i`.
+    pub fn inject(&mut self, i: usize, flit: Flit) {
+        debug_assert!(matches!(self.inputs[i].src, InputSrc::Inject));
+        debug_assert!(self.can_inject(i));
+        self.inputs[i].inj.push_back(flit);
+    }
+
+    /// Flits waiting in injection lane `i`.
+    pub fn inject_backlog(&self, i: usize) -> usize {
+        self.inputs[i].inj.len()
+    }
+
+    fn peek_input<'a>(
+        input: &'a Input,
+        chans: &'a ChannelArena,
+        vc: u8,
+    ) -> Option<&'a Flit> {
+        match input.src {
+            InputSrc::Chan(id) => chans.get(id).peek(vc),
+            InputSrc::Inject => {
+                if vc == 0 {
+                    input.inj.front()
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    fn pop_input(input: &mut Input, chans: &mut ChannelArena, vc: u8, now: u64) -> Flit {
+        match input.src {
+            InputSrc::Chan(id) => chans.get_mut(id).pop(vc, now),
+            InputSrc::Inject => input.inj.pop_front().expect("empty injection lane"),
+        }
+    }
+
+    /// One switch cycle: route fresh heads, then move at most one flit per
+    /// output port (and per local session).
+    pub fn tick(
+        &mut self,
+        now: u64,
+        router: &dyn Router,
+        chans: &mut ChannelArena,
+        store: &PacketStore,
+        sink: &mut dyn LocalSink,
+    ) {
+        self.route_heads(router, chans, store);
+        self.serve_outputs(now, chans);
+        self.serve_local(now, chans, sink);
+    }
+
+    /// RTR stage: compute the decision for every VC whose head-of-line flit
+    /// is a Head and has no route yet.
+    fn route_heads(&mut self, router: &dyn Router, chans: &ChannelArena, store: &PacketStore) {
+        let redirect = self.local_redirect;
+        let mut newly_routed = 0usize;
+        let mut port_bumps: Vec<usize> = Vec::new();
+        let mut local_bumps = 0u32;
+        for input in &mut self.inputs {
+            for vc in 0..self.vcs as u8 {
+                if input.route[vc as usize].is_some() {
+                    continue;
+                }
+                if let Some(f) = Self::peek_input(input, chans, vc) {
+                    if f.kind == FlitKind::Head {
+                        let hdr = &store.get(f.pkt).net;
+                        let Decision { out, vc: out_vc } = router.decide(hdr.src, hdr.dst, vc);
+                        let out = match (out, redirect) {
+                            (OutSel::Local, Some(p)) => OutSel::Port(p),
+                            (o, _) => o,
+                        };
+                        input.route[vc as usize] =
+                            Some(RouteState { out, out_vc, locked: false });
+                        newly_routed += 1;
+                        match out {
+                            OutSel::Port(p) => port_bumps.push(p),
+                            OutSel::Local => local_bumps += 1,
+                        }
+                    }
+                }
+            }
+        }
+        self.unlocked_routes += newly_routed;
+        for p in port_bumps {
+            self.routes_to_port[p] += 1;
+        }
+        self.routes_to_local += local_bumps;
+    }
+
+    /// Move at most one flit per output port per cycle, time-sharing the
+    /// physical link between output VCs (locked streams first at the
+    /// round-robin VC, then fresh heads via arbitration).
+    fn serve_outputs(&mut self, now: u64, chans: &mut ChannelArena) {
+        if self.active_locks == 0 && self.unlocked_routes == 0 {
+            return; // §Perf: nothing in flight anywhere
+        }
+        let n_in = self.inputs.len();
+        let vcs = self.vcs;
+        for oi in 0..self.outputs.len() {
+            let out_ch = self.outputs[oi].ch;
+            let start = self.outputs[oi].rr_vc;
+            let mut sent = false;
+            // Pass 1: locked streams, starting from the RR pointer.
+            for k in 0..vcs {
+                let ov = (start + k) % vcs;
+                let Some((ii, ivc)) = self.outputs[oi].locks[ov] else {
+                    continue;
+                };
+                if Self::peek_input(&self.inputs[ii], chans, ivc).is_none() {
+                    continue; // bubble: upstream hasn't delivered yet
+                }
+                if !chans.get(out_ch).can_send(ov as u8, now) {
+                    // The physical serializer is busy (or this VC has no
+                    // credit): per-cycle rate applies to the whole port.
+                    continue;
+                }
+                let flit = Self::pop_input(&mut self.inputs[ii], chans, ivc, now);
+                chans.get_mut(out_ch).send(flit, ov as u8, now);
+                self.flits_switched += 1;
+                if flit.kind == FlitKind::Tail {
+                    self.outputs[oi].locks[ov] = None;
+                    self.inputs[ii].route[ivc as usize] = None;
+                    self.active_locks -= 1;
+                }
+                self.outputs[oi].rr_vc = (ov + 1) % vcs;
+                sent = true;
+                break;
+            }
+            if sent {
+                continue;
+            }
+            if self.routes_to_port[oi] == 0 {
+                continue;
+            }
+            // Pass 2: grant a free output VC to a waiting head flit.
+            for k in 0..vcs {
+                let ov = (start + k) % vcs;
+                if self.outputs[oi].locks[ov].is_some() {
+                    continue;
+                }
+                if !chans.get(out_ch).can_send(ov as u8, now) {
+                    continue;
+                }
+                self.scratch.iter_mut().for_each(|b| *b = false);
+                let mut any = false;
+                for (ii, input) in self.inputs.iter().enumerate() {
+                    for vc in 0..vcs as u8 {
+                        let Some(rs) = input.route[vc as usize] else {
+                            continue;
+                        };
+                        // Bound wormholes may not be re-granted.
+                        if rs.locked || rs.out != OutSel::Port(oi) || rs.out_vc as usize != ov
+                        {
+                            continue;
+                        }
+                        if Self::peek_input(input, chans, vc).is_none() {
+                            continue;
+                        }
+                        self.scratch[ii * vcs + vc as usize] = true;
+                        any = true;
+                    }
+                }
+                if !any {
+                    continue;
+                }
+                let scratch = std::mem::take(&mut self.scratch);
+                let grant = self.arbs[oi * vcs + ov].grant(&scratch, now);
+                self.scratch = scratch;
+                let Some(w) = grant else {
+                    continue;
+                };
+                let (ii, vc) = (w / vcs, (w % vcs) as u8);
+                let flit = Self::pop_input(&mut self.inputs[ii], chans, vc, now);
+                debug_assert_eq!(flit.kind, FlitKind::Head);
+                chans.get_mut(out_ch).send(flit, ov as u8, now);
+                self.flits_switched += 1;
+                self.head_log.push((flit.pkt, oi, now));
+                // Single-flit packets do not exist (envelope is 6 words),
+                // so a Head always locks the path.
+                self.outputs[oi].locks[ov] = Some((ii, vc));
+                self.inputs[ii].route[vc as usize].as_mut().unwrap().locked = true;
+                self.unlocked_routes -= 1;
+                self.routes_to_port[oi] -= 1;
+                self.active_locks += 1;
+                self.outputs[oi].rr_vc = (ov + 1) % vcs;
+                break;
+            }
+        }
+    }
+
+    /// Serve local delivery: locked sessions first, then grant free
+    /// sessions to routed heads bound for Local.
+    fn serve_local(&mut self, now: u64, chans: &mut ChannelArena, sink: &mut dyn LocalSink) {
+        if self.active_locks == 0 && self.unlocked_routes == 0 {
+            return;
+        }
+        let n_in = self.inputs.len();
+        let vcs = self.vcs;
+        // Locked sessions: stream one flit each.
+        for s in 0..self.local_locks.len() {
+            let Some((ii, vc)) = self.local_locks[s] else {
+                continue;
+            };
+            if Self::peek_input(&self.inputs[ii], chans, vc).is_none() {
+                continue;
+            }
+            if !sink.can_accept(s, now) {
+                continue;
+            }
+            let flit = Self::pop_input(&mut self.inputs[ii], chans, vc, now);
+            sink.accept(s, flit, now);
+            self.flits_switched += 1;
+            if flit.kind == FlitKind::Tail {
+                self.local_locks[s] = None;
+                self.inputs[ii].route[vc as usize] = None;
+                self.active_locks -= 1;
+            }
+        }
+        // Grant free sessions.
+        for s in 0..self.local_locks.len() {
+            if self.local_locks[s].is_some() {
+                continue;
+            }
+            if !sink.can_accept(s, now) {
+                continue;
+            }
+            if self.routes_to_local == 0 {
+                continue;
+            }
+            self.scratch.iter_mut().for_each(|b| *b = false);
+            let mut any = false;
+            for (ii, input) in self.inputs.iter().enumerate() {
+                for vc in 0..vcs as u8 {
+                    let Some(rs) = input.route[vc as usize] else {
+                        continue;
+                    };
+                    if rs.locked || rs.out != OutSel::Local {
+                        continue;
+                    }
+                    if Self::peek_input(input, chans, vc).is_none() {
+                        continue;
+                    }
+                    self.scratch[ii * vcs + vc as usize] = true;
+                    any = true;
+                }
+            }
+            if !any {
+                continue;
+            }
+            let scratch = std::mem::take(&mut self.scratch);
+            let grant = self.local_arb.grant(&scratch, now);
+            self.scratch = scratch;
+            let Some(w) = grant else {
+                continue;
+            };
+            let (ii, vc) = (w / vcs, (w % vcs) as u8);
+            let flit = Self::pop_input(&mut self.inputs[ii], chans, vc, now);
+            debug_assert_eq!(flit.kind, FlitKind::Head);
+            sink.accept(s, flit, now);
+            self.flits_switched += 1;
+            self.local_locks[s] = Some((ii, vc));
+            self.inputs[ii].route[vc as usize].as_mut().unwrap().locked = true;
+            self.unlocked_routes -= 1;
+            self.routes_to_local -= 1;
+            self.active_locks += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packet::{DnpAddr, NetHeader, Packet, PacketOp, RdmaHeader};
+    use crate::route::Decision as RDecision;
+    use crate::sim::channel::Channel;
+
+    /// Router stub: everything to port 0 on VC 0, except dst raw==99 → Local.
+    struct ToPort0;
+    impl Router for ToPort0 {
+        fn decide(&self, _src: DnpAddr, dst: DnpAddr, _vc: u8) -> RDecision {
+            if dst.raw() == 99 {
+                RDecision { out: OutSel::Local, vc: 0 }
+            } else {
+                RDecision { out: OutSel::Port(0), vc: 0 }
+            }
+        }
+    }
+
+    struct CountSink {
+        flits: Vec<Flit>,
+        busy: bool,
+    }
+    impl LocalSink for CountSink {
+        fn can_accept(&self, _s: usize, _now: u64) -> bool {
+            !self.busy
+        }
+        fn accept(&mut self, _s: usize, f: Flit, _now: u64) {
+            self.flits.push(f);
+        }
+    }
+
+    fn mk_packet(store: &mut PacketStore, dst: u32, len: usize) -> crate::packet::PacketId {
+        store.insert(Packet::new(
+            NetHeader {
+                dst: DnpAddr::new(dst),
+                src: DnpAddr::new(1),
+                len: len as u16,
+                vc: 0,
+            },
+            RdmaHeader {
+                op: PacketOp::Put,
+                dst_mem: 0,
+                src_mem: 0,
+                resp_dst: DnpAddr::new(0),
+            },
+            vec![0xAB; len],
+        ))
+    }
+
+    fn inject_packet(fab: &mut SwitchFabric, store: &PacketStore, lane: usize, id: crate::packet::PacketId) {
+        for seq in 0..store.wire_flits(id) {
+            fab.inject(lane, store.flit(id, seq));
+        }
+    }
+
+    #[test]
+    fn single_packet_transits_to_output() {
+        let mut chans = ChannelArena::new();
+        let out = chans.add(Channel::new(0, 1, 1, 16));
+        let mut fab = SwitchFabric::new(
+            vec![InputSrc::Inject],
+            vec![out],
+            0,
+            1,
+            64,
+            ArbPolicy::RoundRobin,
+        );
+        let mut store = PacketStore::new();
+        let id = mk_packet(&mut store, 5, 3); // 9 flits
+        inject_packet(&mut fab, &store, 0, id);
+        let mut sink = NoSink;
+        for now in 0..20 {
+            chans.tick_all(now);
+            fab.tick(now, &ToPort0, &mut chans, &store, &mut sink);
+        }
+        chans.tick_all(20);
+        assert_eq!(chans.get(out).rx_len(0), 9);
+        assert_eq!(fab.flits_switched, 9);
+    }
+
+    #[test]
+    fn wormhole_lock_prevents_interleaving() {
+        // Two injection lanes race for one output; flits of the two packets
+        // must NOT interleave on the wire.
+        let mut chans = ChannelArena::new();
+        let out = chans.add(Channel::new(0, 1, 1, 64));
+        let mut fab = SwitchFabric::new(
+            vec![InputSrc::Inject, InputSrc::Inject],
+            vec![out],
+            0,
+            1,
+            64,
+            ArbPolicy::RoundRobin,
+        );
+        let mut store = PacketStore::new();
+        let a = mk_packet(&mut store, 5, 4);
+        let b = mk_packet(&mut store, 5, 4);
+        inject_packet(&mut fab, &store, 0, a);
+        inject_packet(&mut fab, &store, 1, b);
+        let mut sink = NoSink;
+        for now in 0..40 {
+            chans.tick_all(now);
+            fab.tick(now, &ToPort0, &mut chans, &store, &mut sink);
+        }
+        chans.tick_all(40);
+        let mut seen = Vec::new();
+        while chans.get(out).peek(0).is_some() {
+            seen.push(chans.get_mut(out).pop(0, 40));
+        }
+        assert_eq!(seen.len(), 20);
+        // Partition into contiguous runs by packet id: exactly 2 runs.
+        let mut runs = 1;
+        for w in seen.windows(2) {
+            if w[0].pkt != w[1].pkt {
+                runs += 1;
+            }
+        }
+        assert_eq!(runs, 2, "packets interleaved: {seen:?}");
+    }
+
+    #[test]
+    fn local_delivery_through_sink() {
+        let mut chans = ChannelArena::new();
+        let mut fab = SwitchFabric::new(
+            vec![InputSrc::Inject],
+            vec![],
+            1,
+            1,
+            64,
+            ArbPolicy::RoundRobin,
+        );
+        let mut store = PacketStore::new();
+        let id = mk_packet(&mut store, 99, 2); // routed Local
+        inject_packet(&mut fab, &store, 0, id);
+        let mut sink = CountSink { flits: vec![], busy: false };
+        for now in 0..20 {
+            chans.tick_all(now);
+            fab.tick(now, &ToPort0, &mut chans, &store, &mut sink);
+        }
+        assert_eq!(sink.flits.len(), 8);
+        assert_eq!(sink.flits[0].kind, FlitKind::Head);
+        assert_eq!(sink.flits.last().unwrap().kind, FlitKind::Tail);
+    }
+
+    #[test]
+    fn sink_backpressure_stalls_delivery() {
+        let mut chans = ChannelArena::new();
+        let mut fab = SwitchFabric::new(
+            vec![InputSrc::Inject],
+            vec![],
+            1,
+            1,
+            64,
+            ArbPolicy::RoundRobin,
+        );
+        let mut store = PacketStore::new();
+        let id = mk_packet(&mut store, 99, 2);
+        inject_packet(&mut fab, &store, 0, id);
+        let mut sink = CountSink { flits: vec![], busy: true };
+        for now in 0..10 {
+            chans.tick_all(now);
+            fab.tick(now, &ToPort0, &mut chans, &store, &mut sink);
+        }
+        assert_eq!(sink.flits.len(), 0, "busy sink must stall the wormhole");
+        sink.busy = false;
+        for now in 10..30 {
+            chans.tick_all(now);
+            fab.tick(now, &ToPort0, &mut chans, &store, &mut sink);
+        }
+        assert_eq!(sink.flits.len(), 8);
+    }
+
+    #[test]
+    fn local_redirect_sends_local_to_port() {
+        let mut chans = ChannelArena::new();
+        let out = chans.add(Channel::new(0, 1, 1, 16));
+        let mut fab = SwitchFabric::new(
+            vec![InputSrc::Inject],
+            vec![out],
+            0,
+            1,
+            64,
+            ArbPolicy::RoundRobin,
+        );
+        fab.local_redirect = Some(0);
+        let mut store = PacketStore::new();
+        let id = mk_packet(&mut store, 99, 1); // Local → redirected to port 0
+        inject_packet(&mut fab, &store, 0, id);
+        let mut sink = NoSink;
+        for now in 0..20 {
+            chans.tick_all(now);
+            fab.tick(now, &ToPort0, &mut chans, &store, &mut sink);
+        }
+        chans.tick_all(20);
+        assert_eq!(chans.get(out).rx_len(0), 7);
+    }
+
+    #[test]
+    fn backpressured_output_blocks_then_drains() {
+        let mut chans = ChannelArena::new();
+        // Tiny downstream buffer: depth 2.
+        let out = chans.add(Channel::new(0, 1, 1, 2));
+        let mut fab = SwitchFabric::new(
+            vec![InputSrc::Inject],
+            vec![out],
+            0,
+            1,
+            64,
+            ArbPolicy::RoundRobin,
+        );
+        let mut store = PacketStore::new();
+        let id = mk_packet(&mut store, 5, 3);
+        inject_packet(&mut fab, &store, 0, id);
+        let mut sink = NoSink;
+        for now in 0..5 {
+            chans.tick_all(now);
+            fab.tick(now, &ToPort0, &mut chans, &store, &mut sink);
+        }
+        // Only 2 flits fit downstream.
+        assert_eq!(fab.flits_switched, 2);
+        // Drain one per cycle and confirm progress resumes.
+        for now in 5..30 {
+            chans.tick_all(now);
+            if chans.get(out).peek(0).is_some() {
+                chans.get_mut(out).pop(0, now);
+            }
+            fab.tick(now, &ToPort0, &mut chans, &store, &mut sink);
+        }
+        assert_eq!(fab.flits_switched, 9);
+    }
+}

@@ -1,0 +1,404 @@
+//! DNP-Net topology builders (paper Fig. 2: "examples of on-chip and
+//! off-chip network topologies and services offered by reconfiguring the
+//! parametric DNP").
+//!
+//! * [`torus3d`] — k-ary 3-cube over off-chip SerDes links (the SHAPES
+//!   off-chip network, Fig. 6); also used degenerately for 1D/2D rings.
+//! * [`mesh2d_chip`] — the MT2D exploration (Fig. 7b): one chip whose
+//!   tiles are joined point-to-point by their DNP on-chip ports in a 2D
+//!   mesh.
+//! * [`spidergon_chip`] — the MTNoC exploration (Fig. 7a): one chip whose
+//!   tiles hang off an ST-Spidergon NoC through the DNI.
+//! * [`two_tiles_offchip`] / [`ring_offchip`] — micro-benchmark fixtures
+//!   for the single/multi-hop latency experiments (Figs. 9-11).
+
+use crate::config::{DnpConfig, RouteOrder};
+use crate::dnp::DnpNode;
+use crate::noc::{NocRouterNode, NOC_PORT_ACROSS, NOC_PORT_CCW, NOC_PORT_CW};
+use crate::packet::{AddrFormat, DnpAddr};
+use crate::phy::{dni_channel, noc_channel, offchip_channel, onchip_channel};
+use crate::rdma::EVENT_WORDS;
+use crate::route::{
+    mesh::mesh_port, spidergon_neighbor, Decision, MeshRouter, OutSel, Router, TableRouter,
+    TorusRouter,
+};
+use crate::sim::channel::{Channel, ChannelId};
+use crate::sim::Net;
+
+/// Default tile memory size (words). 256 KiB per tile.
+pub const DEFAULT_MEM_WORDS: usize = 1 << 16;
+
+fn cq_base(cfg: &DnpConfig, mem_words: usize) -> u32 {
+    (mem_words as u32) - cfg.cq_len as u32 * EVENT_WORDS
+}
+
+/// A channel that is wired to a port nobody routes through — Table I's
+/// "not all ports are used even though they are present and accounted
+/// for". Never carries flits.
+fn dangling(net: &mut Net, cfg: &DnpConfig) -> ChannelId {
+    net.chans
+        .add(Channel::new(1, 1, cfg.vcs.max(2), cfg.vc_buf_depth))
+}
+
+/// Build a full 3D torus of DNPs over off-chip SerDes links.
+///
+/// Node index = `x + y*X + z*X*Y`; DNP addresses are the paper's 18-bit
+/// `(x, y, z)` encoding. Each DNP uses 6 off-chip ports (dimension ±);
+/// the `N` on-chip ports (and off-chip ports beyond 6) stay dangling.
+pub fn torus3d(dims: [u32; 3], cfg: &DnpConfig, mem_words: usize) -> Net {
+    assert!(cfg.m_ports >= 6, "3D torus needs M >= 6 off-chip ports");
+    let fmt = AddrFormat::Torus3D { dims };
+    let n = (dims[0] * dims[1] * dims[2]) as usize;
+    let mut net = Net::new();
+    let base = cfg.n_ports; // off-chip port block starts after on-chip
+
+    let idx = |c: [u32; 3]| -> usize {
+        (c[0] + c[1] * dims[0] + c[2] * dims[0] * dims[1]) as usize
+    };
+    let coords = |i: usize| -> [u32; 3] {
+        let i = i as u32;
+        [
+            i % dims[0],
+            (i / dims[0]) % dims[1],
+            i / (dims[0] * dims[1]),
+        ]
+    };
+
+    // Directed link u --(dim,dir)--> v gets one SerDes channel.
+    // out_ch[u][dim*2+dir] drives it; it lands on v's input port
+    // (dim*2 + !dir).
+    let mut out_ch = vec![[None::<ChannelId>; 6]; n];
+    let mut in_ch = vec![[None::<ChannelId>; 6]; n];
+    for u in 0..n {
+        let c = coords(u);
+        for dim in 0..3 {
+            if dims[dim] < 2 {
+                continue; // degenerate ring: no links
+            }
+            for (d, step) in [(0usize, 1u32), (1, dims[dim] - 1)] {
+                let mut vc = c;
+                vc[dim] = (c[dim] + step) % dims[dim];
+                let v = idx(vc);
+                let seed = (u * 6 + dim * 2 + d) as u64 + 0x5EED;
+                let ch = net.chans.add(offchip_channel(cfg, seed));
+                out_ch[u][dim * 2 + d] = Some(ch);
+                in_ch[v][dim * 2 + (1 - d)] = Some(ch);
+            }
+        }
+    }
+
+    for u in 0..n {
+        let c = coords(u);
+        let addr = fmt.encode(&c);
+        let mut ins = Vec::with_capacity(cfg.inter_ports());
+        let mut outs = Vec::with_capacity(cfg.inter_ports());
+        for p in 0..cfg.inter_ports() {
+            // Ports: [0..N) on-chip (dangling here), [N..N+M) off-chip.
+            let (i_ch, o_ch) = if p >= base && p - base < 6 {
+                (in_ch[u][p - base], out_ch[u][p - base])
+            } else {
+                (None, None)
+            };
+            ins.push(i_ch.unwrap_or_else(|| dangling(&mut net, cfg)));
+            outs.push(o_ch.unwrap_or_else(|| dangling(&mut net, cfg)));
+        }
+        let router = Box::new(TorusRouter::new(addr, dims, cfg.route_order, base));
+        let mut node = DnpNode::new(
+            addr,
+            cfg.clone(),
+            router,
+            ins,
+            outs,
+            mem_words,
+            cq_base(cfg, mem_words),
+        );
+        // Run-time route-priority rewrites rebuild the router (Sec. III-A).
+        node.set_router_factory(Box::new(move |order: RouteOrder| {
+            Box::new(TorusRouter::new(addr, dims, order, base)) as Box<dyn Router>
+        }));
+        net.add_dnp(node);
+    }
+    net
+}
+
+/// Two DNPs joined by one bidirectional off-chip SerDes link — the
+/// fixture for the single-hop PUT measurement (Fig. 9/10, off-chip).
+pub fn two_tiles_offchip(cfg: &DnpConfig, mem_words: usize) -> Net {
+    torus3d([2, 1, 1], cfg, mem_words)
+}
+
+/// A 1D off-chip ring of `k` DNPs — the multi-hop fixture (Fig. 11).
+pub fn ring_offchip(k: u32, cfg: &DnpConfig, mem_words: usize) -> Net {
+    torus3d([k, 1, 1], cfg, mem_words)
+}
+
+/// Two DNPs joined by a direct on-chip link — the single-hop on-chip
+/// fixture (Fig. 9/10, on-chip). Implemented as a degenerate 1×2 mesh.
+pub fn two_tiles_onchip(cfg: &DnpConfig, mem_words: usize) -> Net {
+    mesh2d_chip([2, 1], cfg, mem_words)
+}
+
+/// MT2D (Fig. 7b): tiles joined point-to-point into an on-chip 2D mesh by
+/// their DNP on-chip ports. Physical ports are assigned per node in
+/// direction order [X+, X-, Y+, Y-] over the directions that exist, so a
+/// 2×4 chip needs exactly the N=3 on-chip ports of Table I.
+pub fn mesh2d_chip(dims: [u32; 2], cfg: &DnpConfig, mem_words: usize) -> Net {
+    let fmt = AddrFormat::Mesh2D { dims };
+    let n = (dims[0] * dims[1]) as usize;
+    let mut net = Net::new();
+    let idx = |c: [u32; 2]| -> usize { (c[0] + c[1] * dims[0]) as usize };
+    let coords = |i: usize| -> [u32; 2] { [i as u32 % dims[0], i as u32 / dims[0]] };
+
+    // Per-node: map direction (0:X+, 1:X-, 2:Y+, 3:Y-) to physical port.
+    let dir_of = |c: [u32; 2], d: usize| -> Option<[u32; 2]> {
+        let mut t = c;
+        match d {
+            0 if c[0] + 1 < dims[0] => t[0] += 1,
+            1 if c[0] > 0 => t[0] -= 1,
+            2 if c[1] + 1 < dims[1] => t[1] += 1,
+            3 if c[1] > 0 => t[1] -= 1,
+            _ => return None,
+        }
+        Some(t)
+    };
+    let mut port_of = vec![[None::<usize>; 4]; n];
+    let mut degree = vec![0usize; n];
+    for u in 0..n {
+        let c = coords(u);
+        for d in 0..4 {
+            if dir_of(c, d).is_some() {
+                port_of[u][d] = Some(degree[u]);
+                degree[u] += 1;
+            }
+        }
+        assert!(
+            degree[u] <= cfg.n_ports,
+            "node degree {} exceeds N={} on-chip ports",
+            degree[u],
+            cfg.n_ports
+        );
+    }
+
+    // One on-chip channel per directed link.
+    let mut out_ch = vec![[None::<ChannelId>; 4]; n];
+    let mut in_ch = vec![[None::<ChannelId>; 4]; n];
+    for u in 0..n {
+        let c = coords(u);
+        for d in 0..4 {
+            if let Some(vcoord) = dir_of(c, d) {
+                let v = idx(vcoord);
+                let back = match d {
+                    0 => 1,
+                    1 => 0,
+                    2 => 3,
+                    _ => 2,
+                };
+                let ch = net.chans.add(onchip_channel(cfg));
+                out_ch[u][d] = Some(ch);
+                in_ch[v][back] = Some(ch);
+            }
+        }
+    }
+
+    for u in 0..n {
+        let c = coords(u);
+        let addr = fmt.encode(&c);
+        let mut ins = Vec::with_capacity(cfg.inter_ports());
+        let mut outs = Vec::with_capacity(cfg.inter_ports());
+        // Physical on-chip ports 0..degree get the mesh links (direction
+        // order); the rest (and all off-chip ports) dangle.
+        let mut by_port_in = vec![None; cfg.inter_ports()];
+        let mut by_port_out = vec![None; cfg.inter_ports()];
+        for d in 0..4 {
+            if let Some(p) = port_of[u][d] {
+                by_port_in[p] = in_ch[u][d];
+                by_port_out[p] = out_ch[u][d];
+            }
+        }
+        for p in 0..cfg.inter_ports() {
+            ins.push(by_port_in[p].unwrap_or_else(|| dangling(&mut net, cfg)));
+            outs.push(by_port_out[p].unwrap_or_else(|| dangling(&mut net, cfg)));
+        }
+        // Table-driven router: XY-route, translated to physical ports.
+        let mr = MeshRouter::new(addr, dims, 0);
+        let mut tr = TableRouter::new(addr);
+        for v in 0..n {
+            if v == u {
+                continue;
+            }
+            let dst = fmt.encode(&coords(v));
+            match mr.decide(addr, dst, 0) {
+                Decision { out: OutSel::Port(mp), .. } => {
+                    let d = mp - mesh_port(0, 0, false); // mp is 0..4
+                    let phys = port_of[u][d].expect("XY route uses an existing link");
+                    tr.install(dst, phys, 0);
+                }
+                _ => unreachable!("v != u"),
+            }
+        }
+        let node = DnpNode::new(
+            addr,
+            cfg.clone(),
+            Box::new(tr),
+            ins,
+            outs,
+            mem_words,
+            cq_base(cfg, mem_words),
+        );
+        net.add_dnp(node);
+    }
+    net
+}
+
+/// Router of an MTNoC tile DNP: everything non-local exits through the
+/// single on-chip port into the NoC.
+#[derive(Debug, Clone)]
+struct StarRouter {
+    me: DnpAddr,
+}
+
+impl Router for StarRouter {
+    fn decide(&self, _src: DnpAddr, dst: DnpAddr, _cur_vc: u8) -> Decision {
+        if dst == self.me {
+            Decision { out: OutSel::Local, vc: 0 }
+        } else {
+            Decision { out: OutSel::Port(0), vc: 0 }
+        }
+    }
+}
+
+/// MTNoC (Fig. 7a): `n` tiles on an ST-Spidergon NoC. Node layout in the
+/// returned net: DNPs at indices `0..n`, NoC routers at `n..2n`.
+pub fn spidergon_chip(n: u32, cfg: &DnpConfig, mem_words: usize) -> Net {
+    assert!(n >= 2 && n % 2 == 0, "Spidergon needs an even tile count");
+    let fmt = AddrFormat::Flat { n };
+    let mut net = Net::new();
+
+    // DNI channels per tile: dnp→noc and noc→dnp.
+    let to_noc: Vec<ChannelId> = (0..n).map(|_| net.chans.add(dni_channel(cfg))).collect();
+    let to_dnp: Vec<ChannelId> = (0..n).map(|_| net.chans.add(dni_channel(cfg))).collect();
+
+    // NoC ring/across channels: for each router i and port p (CW/CCW/ACR),
+    // a directed channel to the neighbor's matching input.
+    let mut noc_out = vec![[None::<ChannelId>; 3]; n as usize];
+    let mut noc_in = vec![[None::<ChannelId>; 3]; n as usize];
+    for i in 0..n {
+        for (p, back) in [
+            (NOC_PORT_CW, NOC_PORT_CCW),
+            (NOC_PORT_CCW, NOC_PORT_CW),
+            (NOC_PORT_ACROSS, NOC_PORT_ACROSS),
+        ] {
+            let j = spidergon_neighbor(i, p, n);
+            let ch = net.chans.add(noc_channel(cfg));
+            noc_out[i as usize][p] = Some(ch);
+            noc_in[j as usize][back] = Some(ch);
+        }
+    }
+
+    // Tile DNPs (node indices 0..n).
+    for i in 0..n {
+        let addr = fmt.encode(&[i]);
+        let mut ins = Vec::with_capacity(cfg.inter_ports());
+        let mut outs = Vec::with_capacity(cfg.inter_ports());
+        for p in 0..cfg.inter_ports() {
+            if p == 0 {
+                ins.push(to_dnp[i as usize]);
+                outs.push(to_noc[i as usize]);
+            } else {
+                ins.push(dangling(&mut net, cfg));
+                outs.push(dangling(&mut net, cfg));
+            }
+        }
+        let node = DnpNode::new(
+            addr,
+            cfg.clone(),
+            Box::new(StarRouter { me: addr }),
+            ins,
+            outs,
+            mem_words,
+            cq_base(cfg, mem_words),
+        );
+        net.add_dnp(node);
+    }
+
+    // NoC routers (node indices n..2n).
+    for i in 0..n {
+        let iu = i as usize;
+        let ins = vec![
+            noc_in[iu][NOC_PORT_CW].unwrap(),
+            noc_in[iu][NOC_PORT_CCW].unwrap(),
+            noc_in[iu][NOC_PORT_ACROSS].unwrap(),
+            to_noc[iu],
+        ];
+        let outs = vec![
+            noc_out[iu][NOC_PORT_CW].unwrap(),
+            noc_out[iu][NOC_PORT_CCW].unwrap(),
+            noc_out[iu][NOC_PORT_ACROSS].unwrap(),
+            to_dnp[iu],
+        ];
+        net.add_noc(NocRouterNode::new(i, n, cfg, ins, outs));
+    }
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn torus_2x2x2_has_8_dnps() {
+        let cfg = DnpConfig::shapes_rdt();
+        let net = torus3d([2, 2, 2], &cfg, 1 << 12);
+        assert_eq!(net.nodes.len(), 8);
+        assert!(net.nodes.iter().all(|n| n.as_dnp().is_some()));
+    }
+
+    #[test]
+    fn torus_addresses_match_coordinates() {
+        let cfg = DnpConfig::shapes_rdt();
+        let net = torus3d([2, 2, 2], &cfg, 1 << 12);
+        let fmt = AddrFormat::Torus3D { dims: [2, 2, 2] };
+        for (i, node) in net.nodes.iter().enumerate() {
+            let d = node.as_dnp().unwrap();
+            let c = fmt.decode(d.addr);
+            assert_eq!(
+                i as u32,
+                c[0] + c[1] * 2 + c[2] * 4,
+                "node order mismatch"
+            );
+        }
+    }
+
+    #[test]
+    fn mesh_2x4_respects_three_ports() {
+        let cfg = DnpConfig::mt2d(); // N = 3
+        let net = mesh2d_chip([4, 2], &cfg, 1 << 12);
+        assert_eq!(net.nodes.len(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds N=")]
+    fn mesh_3x3_needs_four_ports() {
+        // A 3×3 mesh has a degree-4 center node: N=3 must be rejected.
+        let cfg = DnpConfig::mt2d();
+        mesh2d_chip([3, 3], &cfg, 1 << 12);
+    }
+
+    #[test]
+    fn spidergon_chip_has_tiles_and_routers() {
+        let cfg = DnpConfig::mtnoc();
+        let net = spidergon_chip(8, &cfg, 1 << 12);
+        assert_eq!(net.nodes.len(), 16);
+        assert_eq!(
+            net.nodes.iter().filter(|n| n.as_dnp().is_some()).count(),
+            8
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "M >= 6")]
+    fn torus_requires_six_offchip_ports() {
+        let cfg = DnpConfig::mtnoc(); // M = 1
+        torus3d([2, 2, 2], &cfg, 1 << 12);
+    }
+}

@@ -1,0 +1,46 @@
+//! Shared utilities: deterministic RNG, statistics, small helpers.
+
+pub mod rng;
+pub mod stats;
+
+pub use rng::SplitMix64;
+pub use stats::{mad, median, percentile, Accum, Histogram};
+
+/// Integer ceiling division.
+#[inline]
+pub const fn ceil_div(a: u64, b: u64) -> u64 {
+    (a + b - 1) / b
+}
+
+/// Cycles → nanoseconds at a given clock (MHz).
+#[inline]
+pub fn cycles_to_ns(cycles: u64, freq_mhz: f64) -> f64 {
+    cycles as f64 * 1e3 / freq_mhz
+}
+
+/// Bits/cycle → GB/s at a given clock (MHz).
+#[inline]
+pub fn bits_per_cycle_to_gbs(bits: f64, freq_mhz: f64) -> f64 {
+    bits * freq_mhz * 1e6 / 8.0 / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_cases() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn paper_unit_conversions() {
+        // 100 cycles @500 MHz = 200 ns (paper, Sec. IV).
+        assert!((cycles_to_ns(100, 500.0) - 200.0).abs() < 1e-9);
+        // 64 bit/cycle @500 MHz = 4 GB/s (paper: BW_int = L*32 = 64).
+        assert!((bits_per_cycle_to_gbs(64.0, 500.0) - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,278 @@
+//! Property-based tests (hand-rolled harness — the image has no proptest).
+//!
+//! Each property runs many randomized cases from a seeded [`SplitMix64`];
+//! failures carry the case index so they replay deterministically.
+
+use dnp::config::{DnpConfig, RouteOrder};
+use dnp::packet::{AddrFormat, DnpAddr, Fragmenter, MAX_PAYLOAD_WORDS};
+use dnp::rdma::Command;
+use dnp::route::{OutSel, Router, TorusRouter};
+use dnp::util::SplitMix64;
+use dnp::{topology, traffic, Net};
+
+/// Property: on any random torus, with any coordinate priority, every
+/// (src, dst) pair is delivered in exactly the sum of per-ring minimal
+/// distances, and the VC class never exceeds 1.
+#[test]
+fn prop_torus_routing_delivers_minimally() {
+    let mut rng = SplitMix64::new(0xAB70);
+    for case in 0..200 {
+        let dims = [
+            rng.range(1, 5) as u32,
+            rng.range(1, 5) as u32,
+            rng.range(1, 5) as u32,
+        ];
+        let order = *rng.pick(&RouteOrder::all());
+        let fmt = AddrFormat::Torus3D { dims };
+        let n = dims.iter().product::<u32>();
+        if n < 2 {
+            continue;
+        }
+        let coords =
+            |i: u32| [i % dims[0], (i / dims[0]) % dims[1], i / (dims[0] * dims[1])];
+        let s = coords(rng.below(n as u64) as u32);
+        let d = coords(rng.below(n as u64) as u32);
+        let src = fmt.encode(&s);
+        let dst = fmt.encode(&d);
+        let mut cur = s;
+        let mut vc = 0u8;
+        let mut hops = 0u32;
+        loop {
+            let r = TorusRouter::new(fmt.encode(&cur), dims, order, 0);
+            let dec = r.decide(src, dst, vc);
+            match dec.out {
+                OutSel::Local => break,
+                OutSel::Port(p) => {
+                    vc = dec.vc;
+                    assert!(vc <= 1, "case {case}: vc {vc} out of range");
+                    let dim = p / 2;
+                    let k = dims[dim];
+                    cur[dim] = if p % 2 == 0 {
+                        (cur[dim] + 1) % k
+                    } else {
+                        (cur[dim] + k - 1) % k
+                    };
+                    hops += 1;
+                    assert!(hops <= 12, "case {case}: dims {dims:?} {s:?}->{d:?} livelock");
+                }
+            }
+        }
+        let mut expect = 0u32;
+        for dim in 0..3 {
+            let k = dims[dim];
+            let fwd = (d[dim] + k - s[dim]) % k;
+            expect += fwd.min(k - fwd);
+        }
+        assert_eq!(hops, expect, "case {case}: non-minimal path");
+    }
+}
+
+/// Property: random mixtures of PUT/SEND/GET traffic on random small tori
+/// always drain (no deadlock), conserve packet counts, never corrupt at
+/// zero BER and never leak store slots.
+#[test]
+fn prop_random_traffic_conservation() {
+    let mut rng = SplitMix64::new(0xBEEF);
+    for case in 0..12 {
+        let dims_pool = [[2u32, 2, 2], [3, 2, 1], [4, 2, 1], [2, 3, 2]];
+        let dims = *rng.pick(&dims_pool);
+        let cfg = DnpConfig::shapes_rdt();
+        let mut net = topology::torus3d(dims, &cfg, 1 << 16);
+        let n = net.nodes.len();
+        let slots: Vec<usize> = (0..n).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        let fmt = AddrFormat::Torus3D { dims };
+        let coords =
+            |i: u32| [i % dims[0], (i / dims[0]) % dims[1], i / (dims[0] * dims[1])];
+        let addrs: Vec<DnpAddr> = (0..n as u32).map(|i| fmt.encode(&coords(i))).collect();
+
+        let mut plan = Vec::new();
+        let mut expected = 0u64;
+        for slot in 0..n {
+            for c in 0..rng.range(1, 6) {
+                let mut peer = rng.below(n as u64) as usize;
+                if peer == slot {
+                    peer = (peer + 1) % n;
+                }
+                let len = rng.range(1, 300) as u32; // crosses the 256 boundary
+                let kind = rng.below(3);
+                let (cmd, deliveries) = match kind {
+                    0 => {
+                        let l = len.min(traffic::RX_WINDOW);
+                        (
+                            Command::put(traffic::TX_BASE, addrs[peer], traffic::rx_addr(slot), l),
+                            Fragmenter::packet_count(l) as u64,
+                        )
+                    }
+                    1 => {
+                        let l = len.min(64);
+                        (
+                            Command::send(traffic::TX_BASE, addrs[peer], l),
+                            Fragmenter::packet_count(l) as u64,
+                        )
+                    }
+                    _ => {
+                        let l = len.min(traffic::RX_WINDOW);
+                        (
+                            Command::get(
+                                addrs[peer],
+                                traffic::TX_BASE,
+                                addrs[slot],
+                                traffic::rx_addr(peer),
+                                l,
+                            ),
+                            // Request packet + response fragments.
+                            1 + Fragmenter::packet_count(l) as u64,
+                        )
+                    }
+                };
+                expected += deliveries;
+                plan.push(traffic::Planned {
+                    node: slot,
+                    at: rng.below(500),
+                    cmd: cmd.with_tag((slot * 100 + c as usize) as u32),
+                });
+            }
+        }
+        let mut feeder = traffic::Feeder::new(plan);
+        traffic::run_plan(&mut net, &mut feeder, 10_000_000)
+            .unwrap_or_else(|| panic!("case {case}: traffic wedged (dims {dims:?})"));
+        assert_eq!(net.traces.delivered, expected, "case {case}: conservation");
+        assert_eq!(net.traces.corrupt_packets, 0, "case {case}: zero BER");
+        assert_eq!(net.store.live(), 0, "case {case}: packet leak");
+    }
+}
+
+/// Property: fragmentation partitions any length exactly, in order, with
+/// all fragments <= 256 words and contiguous destination addresses.
+#[test]
+fn prop_fragmenter_partition() {
+    let mut rng = SplitMix64::new(77);
+    for case in 0..500 {
+        let len = rng.below(5000) as u32;
+        let dst = rng.next_u32() & 0xFFFF;
+        let frags: Vec<_> = Fragmenter::new(len, dst).collect();
+        assert_eq!(frags.len() as u32, Fragmenter::packet_count(len), "case {case}");
+        let mut off = 0u32;
+        for f in &frags {
+            assert_eq!(f.offset, off, "case {case}: contiguous");
+            assert_eq!(f.dst_mem, dst.wrapping_add(off), "case {case}: dst walks");
+            assert!(f.len as usize <= MAX_PAYLOAD_WORDS, "case {case}");
+            off += f.len;
+        }
+        assert_eq!(off, len, "case {case}: full coverage");
+    }
+}
+
+/// Property: random data PUT between random nodes arrives bit-exact (the
+/// end-to-end memory-to-memory integrity invariant).
+#[test]
+fn prop_put_data_integrity() {
+    let mut rng = SplitMix64::new(0xDA7A);
+    let cfg = DnpConfig::shapes_rdt();
+    for case in 0..10 {
+        let mut net = topology::torus3d([2, 2, 2], &cfg, 1 << 16);
+        let fmt = AddrFormat::Torus3D { dims: [2, 2, 2] };
+        let s = rng.below(8) as usize;
+        let mut d = rng.below(8) as usize;
+        if d == s {
+            d = (d + 1) % 8;
+        }
+        let len = rng.range(1, 600) as u32;
+        let data: Vec<u32> = (0..len).map(|_| rng.next_u32()).collect();
+        net.dnp_mut(s).mem.write_slice(0x1000, &data);
+        net.dnp_mut(d).register_buffer(0x8000, 1024, 0);
+        let dc = [d as u32 % 2, (d as u32 / 2) % 2, d as u32 / 4];
+        net.issue(
+            s,
+            Command::put(0x1000, fmt.encode(&dc), 0x8000, len).with_tag(1),
+        );
+        net.run_until_idle(1_000_000)
+            .unwrap_or_else(|| panic!("case {case} wedged"));
+        assert_eq!(
+            net.dnp(d).mem.read_slice(0x8000, len),
+            &data[..],
+            "case {case}: s={s} d={d} len={len}"
+        );
+    }
+}
+
+/// Property: the config parser round-trips valid settings and rejects
+/// junk without panicking.
+#[test]
+fn prop_config_parse_fuzz() {
+    let mut rng = SplitMix64::new(0xC0FF);
+    for case in 0..100 {
+        let l = rng.range(1, 4);
+        let n = rng.range(1, 4);
+        let m = rng.range(1, 8);
+        let factor = [4u32, 8, 16, 32][rng.below(4) as usize];
+        let text =
+            format!("l_ports = {l}\nn_ports = {n}\nm_ports = {m}\nserdes.factor = {factor}\n");
+        let c = dnp::config::parse_config(&text, DnpConfig::default())
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(c.l_ports as u64, l);
+        assert_eq!(c.m_ports as u64, m);
+        assert_eq!(c.serdes.factor, factor);
+    }
+    for _ in 0..300 {
+        let len = rng.below(40) as usize;
+        let soup: String = (0..len).map(|_| (rng.below(94) as u8 + 32) as char).collect();
+        let _ = dnp::config::parse_config(&soup, DnpConfig::default()); // must not panic
+    }
+}
+
+/// Property: simulation determinism — identical plans give identical
+/// cycle counts, deliveries and word counts.
+#[test]
+fn prop_simulation_determinism() {
+    let run = |seed: u64| -> (u64, u64, u64) {
+        let cfg = DnpConfig::shapes_rdt();
+        let mut net = topology::torus3d([2, 2, 2], &cfg, 1 << 16);
+        let nodes: Vec<(usize, DnpAddr)> = net
+            .nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| n.as_dnp().map(|d| (i, d.addr)))
+            .collect();
+        let slots: Vec<usize> = (0..8).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        let plan = traffic::uniform_random(&nodes, 8, 16, 10, seed);
+        let mut feeder = traffic::Feeder::new(plan);
+        let cycles = traffic::run_plan(&mut net, &mut feeder, 5_000_000).unwrap();
+        (cycles, net.traces.delivered, net.traces.delivered_words)
+    };
+    for seed in [1u64, 42, 0xFFFF_FFFF] {
+        assert_eq!(run(seed), run(seed), "seed {seed}");
+    }
+    assert_ne!(run(1), run(2), "different seeds must differ");
+}
+
+/// Property: under BER injection sweeps, every packet still arrives (no
+/// drops ever) and the corruption rate tracks the injected rate.
+#[test]
+fn prop_ber_sweep_no_drops() {
+    for (case, ber) in [0.0, 0.001, 0.01, 0.05].into_iter().enumerate() {
+        let mut cfg = DnpConfig::shapes_rdt();
+        cfg.serdes.ber_per_word = ber;
+        let mut net = topology::two_tiles_offchip(&cfg, 1 << 16);
+        let fmt = AddrFormat::Torus3D { dims: [2, 1, 1] };
+        net.dnp_mut(1).register_buffer(0x4000, 0x4000, 0);
+        let count = 30u32;
+        for i in 0..count {
+            net.issue(
+                0,
+                Command::put(0x1000, fmt.encode(&[1, 0, 0]), 0x4000, 64).with_tag(i),
+            );
+        }
+        net.run_until_idle(20_000_000)
+            .unwrap_or_else(|| panic!("case {case} (ber={ber}) wedged"));
+        assert_eq!(net.traces.delivered, count as u64, "case {case}: drops");
+        if ber == 0.0 {
+            assert_eq!(net.traces.corrupt_packets, 0, "case {case}");
+        }
+        if ber >= 0.01 {
+            assert!(net.traces.corrupt_packets > 0, "case {case}: ber={ber}");
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Integration: the PJRT runtime against the AOT artifacts, cross-checked
+//! with the pure-rust oracle. Requires `make artifacts`.
+
+use dnp::lqcd::{dslash_rust, run_lqcd_2x2x2};
+use dnp::runtime::{default_artifacts_dir, Runtime};
+use dnp::util::SplitMix64;
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = SplitMix64::new(seed);
+    (0..n).map(|_| (r.f64() * 2.0 - 1.0) as f32).collect()
+}
+
+#[test]
+fn pjrt_dslash_matches_rust_oracle() {
+    let l = 4usize;
+    let lp = l + 2;
+    let pre = rand_vec(lp * lp * lp * 3, 1);
+    let pim = rand_vec(lp * lp * lp * 3, 2);
+    let ure = rand_vec(3 * lp * lp * lp * 9, 3);
+    let uim = rand_vec(3 * lp * lp * lp * 9, 4);
+
+    let mut rt = Runtime::cpu(default_artifacts_dir()).expect("PJRT client");
+    let shp_psi = [lp, lp, lp, 3];
+    let shp_u = [3, lp, lp, lp, 3, 3];
+    let outs = rt
+        .run_f32(
+            "dslash_4",
+            &[
+                (&pre, &shp_psi),
+                (&pim, &shp_psi),
+                (&ure, &shp_u),
+                (&uim, &shp_u),
+            ],
+        )
+        .expect("run dslash_4 — did `make artifacts` run?");
+
+    let (ore, oim, norm) = dslash_rust(l, &pre, &pim, &ure, &uim);
+    assert_eq!(outs[0].len(), ore.len());
+    for (i, (&a, &b)) in outs[0].iter().zip(ore.iter()).enumerate() {
+        assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0), "re[{i}]: {a} vs {b}");
+    }
+    for (i, (&a, &b)) in outs[1].iter().zip(oim.iter()).enumerate() {
+        assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0), "im[{i}]: {a} vs {b}");
+    }
+    let pn = outs[2][0];
+    assert!((pn - norm).abs() / norm < 1e-3, "norm {pn} vs {norm}");
+}
+
+#[test]
+fn pjrt_axpy_and_norm2() {
+    let n = 192usize;
+    let x = rand_vec(n, 10);
+    let xi = rand_vec(n, 11);
+    let y = rand_vec(n, 12);
+    let yi = rand_vec(n, 13);
+    let a = [2.5f32];
+    let mut rt = Runtime::cpu(default_artifacts_dir()).expect("PJRT client");
+    let outs = rt
+        .run_f32(
+            "axpy_192",
+            &[(&a, &[]), (&x, &[n]), (&xi, &[n]), (&y, &[n]), (&yi, &[n])],
+        )
+        .expect("axpy artifact");
+    for i in 0..n {
+        assert!((outs[0][i] - (y[i] + 2.5 * x[i])).abs() < 1e-5);
+        assert!((outs[1][i] - (yi[i] + 2.5 * xi[i])).abs() < 1e-5);
+    }
+    let outs = rt
+        .run_f32("norm2_192", &[(&x, &[n]), (&xi, &[n])])
+        .expect("norm2 artifact");
+    let want: f32 = x.iter().map(|v| v * v).sum::<f32>() + xi.iter().map(|v| v * v).sum::<f32>();
+    assert!((outs[0][0] - want).abs() / want < 1e-5);
+}
+
+#[test]
+fn lqcd_pjrt_and_oracle_agree() {
+    // The full three-layer check: simulated DNP-Net halo exchange + PJRT
+    // compute must produce the same physics as the rust oracle.
+    let pjrt = run_lqcd_2x2x2(2, [4, 4, 4], true).expect("pjrt run");
+    let oracle = run_lqcd_2x2x2(2, [4, 4, 4], false).expect("oracle run");
+    assert_eq!(pjrt.halo_cycles, oracle.halo_cycles, "same network behaviour");
+    for (a, b) in pjrt.norms.iter().zip(oracle.norms.iter()) {
+        assert!((a - b).abs() / b < 1e-3, "norm {a} vs {b}");
+    }
+}
+
+#[test]
+fn artifact_compile_is_cached() {
+    let mut rt = Runtime::cpu(default_artifacts_dir()).expect("PJRT client");
+    rt.load("dslash_4").expect("first load");
+    let t = std::time::Instant::now();
+    rt.load("dslash_4").expect("second load");
+    assert!(t.elapsed().as_millis() < 50, "second load must hit the cache");
+}

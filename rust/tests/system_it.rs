@@ -1,0 +1,321 @@
+//! System-level integration: whole-net scenarios across topologies,
+//! runtime reconfiguration, fault injection and error handling.
+
+use dnp::config::{ArbPolicy, DnpConfig, RouteOrder};
+use dnp::dnp::regs::{encode_route_order, REG_ROUTE_PRIORITY};
+use dnp::fault::{apply_tables, recompute_tables, LinkFault};
+use dnp::metrics;
+use dnp::packet::{AddrFormat, DnpAddr};
+use dnp::rdma::{Command, CqReader, EventKind};
+use dnp::topology;
+use dnp::traffic;
+use dnp::Net;
+
+fn dnp_slots(net: &Net) -> Vec<(usize, DnpAddr)> {
+    net.nodes
+        .iter()
+        .enumerate()
+        .filter_map(|(i, n)| n.as_dnp().map(|d| (i, d.addr)))
+        .collect()
+}
+
+/// Every pair of a 4×3×2 torus can exchange a PUT (wormhole + VC dateline
+/// under a dense, staggered load).
+#[test]
+fn torus_4x3x2_all_pairs() {
+    let cfg = DnpConfig::shapes_rdt();
+    let dims = [4, 3, 2];
+    let mut net = topology::torus3d(dims, &cfg, 1 << 16);
+    let nodes = dnp_slots(&net);
+    let slots: Vec<usize> = nodes.iter().map(|&(i, _)| i).collect();
+    traffic::setup_buffers(&mut net, &slots);
+    net.traces.enabled = false;
+    let mut plan = Vec::new();
+    for (slot, &(node, _)) in nodes.iter().enumerate() {
+        for (pslot, &(_, peer)) in nodes.iter().enumerate() {
+            if pslot == slot {
+                continue;
+            }
+            plan.push(traffic::Planned {
+                node,
+                at: (slot as u64) * 7 + (pslot as u64) * 3,
+                cmd: Command::put(traffic::TX_BASE, peer, traffic::rx_addr(slot), 8)
+                    .with_tag((slot * 100 + pslot) as u32),
+            });
+        }
+    }
+    let total = plan.len() as u64;
+    let mut feeder = traffic::Feeder::new(plan);
+    traffic::run_plan(&mut net, &mut feeder, 5_000_000).expect("all-pairs drains");
+    assert_eq!(net.traces.delivered, total);
+    assert_eq!(net.traces.lut_misses, 0);
+    assert_eq!(net.traces.corrupt_packets, 0);
+}
+
+/// MTNoC: all pairs across the Spidergon NoC (DNI + aFirst + dateline).
+#[test]
+fn spidergon_chip_all_pairs() {
+    let cfg = DnpConfig::mtnoc();
+    let mut net = topology::spidergon_chip(8, &cfg, 1 << 16);
+    let nodes = dnp_slots(&net);
+    assert_eq!(nodes.len(), 8);
+    let slots: Vec<usize> = nodes.iter().map(|&(i, _)| i).collect();
+    traffic::setup_buffers(&mut net, &slots);
+    let mut plan = Vec::new();
+    for (slot, &(node, _)) in nodes.iter().enumerate() {
+        for (pslot, &(_, peer)) in nodes.iter().enumerate() {
+            if pslot == slot {
+                continue;
+            }
+            plan.push(traffic::Planned {
+                node,
+                at: slot as u64 * 5,
+                cmd: Command::put(traffic::TX_BASE, peer, traffic::rx_addr(slot), 16)
+                    .with_tag((slot * 10 + pslot) as u32),
+            });
+        }
+    }
+    let total = plan.len() as u64;
+    let mut feeder = traffic::Feeder::new(plan);
+    traffic::run_plan(&mut net, &mut feeder, 5_000_000).expect("NoC traffic drains");
+    assert_eq!(net.traces.delivered, total);
+}
+
+/// MT2D: all pairs across the on-chip 2×4 mesh.
+#[test]
+fn mesh_chip_all_pairs() {
+    let cfg = DnpConfig::mt2d();
+    let mut net = topology::mesh2d_chip([4, 2], &cfg, 1 << 16);
+    let nodes = dnp_slots(&net);
+    let slots: Vec<usize> = nodes.iter().map(|&(i, _)| i).collect();
+    traffic::setup_buffers(&mut net, &slots);
+    let mut plan = Vec::new();
+    for (slot, &(node, _)) in nodes.iter().enumerate() {
+        for (pslot, &(_, peer)) in nodes.iter().enumerate() {
+            if pslot == slot {
+                continue;
+            }
+            plan.push(traffic::Planned {
+                node,
+                at: 0,
+                cmd: Command::put(traffic::TX_BASE, peer, traffic::rx_addr(slot), 16)
+                    .with_tag((slot * 10 + pslot) as u32),
+            });
+        }
+    }
+    let total = plan.len() as u64;
+    let mut feeder = traffic::Feeder::new(plan);
+    traffic::run_plan(&mut net, &mut feeder, 5_000_000).expect("mesh traffic drains");
+    assert_eq!(net.traces.delivered, total);
+}
+
+/// Run-time route-priority rewrite (Sec. III-A): software writes the
+/// priority register; subsequent packets take the other dimension first.
+#[test]
+fn route_priority_register_changes_paths() {
+    let cfg = DnpConfig::shapes_rdt(); // default ZYX
+    let dims = [3, 3, 3];
+    let fmt = AddrFormat::Torus3D { dims };
+    let mut net = topology::torus3d(dims, &cfg, 1 << 16);
+    let dst = fmt.encode(&[1, 0, 1]);
+    let dst_node = net.node_of(dst);
+    net.dnp_mut(dst_node).register_buffer(0x4000, 1024, 0);
+
+    // ZYX: first hop consumes Z → port base + 2*2 = off-chip port 4+n.
+    net.issue(0, Command::put(0x40, dst, 0x4000, 1).with_tag(1));
+    net.run_until_idle(100_000).unwrap();
+    let first_hop_port = |net: &Net, tag: u32| -> usize {
+        net.traces
+            .pkts
+            .values()
+            .find(|p| p.tag == tag)
+            .and_then(|p| p.tx_hops.iter().find(|(n, _, _)| *n == 0))
+            .map(|&(_, p, _)| p)
+            .expect("tx hop")
+    };
+    let zyx_port = first_hop_port(&net, 1);
+    assert_eq!(zyx_port, cfg.n_ports + 2 * 2, "Z consumed first under ZYX");
+
+    // Rewrite the priority register to XYZ and send again.
+    net.dnp_mut(0)
+        .regs
+        .write(REG_ROUTE_PRIORITY, encode_route_order(RouteOrder::XYZ));
+    net.issue(0, Command::put(0x40, dst, 0x4000, 1).with_tag(2));
+    net.run_until_idle(100_000).unwrap();
+    let xyz_port = first_hop_port(&net, 2);
+    assert_eq!(xyz_port, cfg.n_ports, "X consumed first under XYZ");
+}
+
+/// Hard link fault: recompute tables, re-install, traffic still delivers.
+#[test]
+fn fault_reroute_delivers_traffic() {
+    let cfg = DnpConfig::shapes_rdt();
+    let dims = [4, 2, 2];
+    let mut net = topology::torus3d(dims, &cfg, 1 << 16);
+    let fault = LinkFault { from: [0, 0, 0], dim: 0, plus: true };
+    let tables = recompute_tables(dims, &[fault], &cfg, cfg.n_ports).expect("still connected");
+    apply_tables(&mut net, tables);
+
+    let nodes = dnp_slots(&net);
+    let slots: Vec<usize> = nodes.iter().map(|&(i, _)| i).collect();
+    traffic::setup_buffers(&mut net, &slots);
+    // All-pairs after reroute. NOTE: the dead channel still exists in the
+    // arena but no table points at it.
+    let mut plan = Vec::new();
+    for (slot, &(node, _)) in nodes.iter().enumerate() {
+        for &(_, peer) in nodes.iter() {
+            if peer == nodes[slot].1 {
+                continue;
+            }
+            plan.push(traffic::Planned {
+                node,
+                at: 0,
+                cmd: Command::put(traffic::TX_BASE, peer, traffic::rx_addr(slot), 4)
+                    .with_tag(0),
+            });
+        }
+    }
+    let total = plan.len() as u64;
+    let mut feeder = traffic::Feeder::new(plan);
+    traffic::run_plan(&mut net, &mut feeder, 5_000_000).expect("rerouted traffic drains");
+    assert_eq!(net.traces.delivered, total);
+    // The faulted wire must be silent.
+    let dead = net
+        .chans
+        .iter()
+        .filter(|(_, c)| c.words_sent == 0)
+        .count();
+    assert!(dead >= 2, "the two dead directions never carried a word");
+}
+
+/// BER injection: payloads corrupt (flagged via CQ), envelopes survive,
+/// everything still delivers (paper Sec. II-C / III-A.2).
+#[test]
+fn ber_injection_flags_but_delivers() {
+    let mut cfg = DnpConfig::shapes_rdt();
+    cfg.serdes.ber_per_word = 0.02;
+    let mut net = topology::two_tiles_offchip(&cfg, 1 << 16);
+    let fmt = AddrFormat::Torus3D { dims: [2, 1, 1] };
+    let dst = fmt.encode(&[1, 0, 0]);
+    net.dnp_mut(1).register_buffer(0x4000, 0x4000, 0);
+    for i in 0..20 {
+        net.issue(0, Command::put(0x40, dst, 0x4000, 128).with_tag(i));
+    }
+    net.run_until_idle(10_000_000).expect("BER traffic drains");
+    assert_eq!(net.traces.delivered, 20, "no packet may be dropped");
+    assert!(
+        net.traces.corrupt_packets > 0,
+        "2% word BER over 20x128 words must corrupt something"
+    );
+    // CQ on the receiving tile carries CorruptPayload events.
+    let dnp1 = net.dnp(1);
+    let mut rd = CqReader::new(dnp1.cq.base(), cfg.cq_len);
+    let mut kinds = Vec::new();
+    while let Some(ev) = rd.poll(&dnp1.mem, &dnp1.cq) {
+        kinds.push(ev.kind);
+    }
+    assert!(kinds.contains(&EventKind::PacketWritten));
+    assert!(kinds.contains(&EventKind::CorruptPayload));
+}
+
+/// The CQ tells software exactly what happened, in order, on a clean run.
+#[test]
+fn completion_queue_event_stream() {
+    let cfg = DnpConfig::shapes_rdt();
+    let mut net = topology::two_tiles_offchip(&cfg, 1 << 16);
+    let fmt = AddrFormat::Torus3D { dims: [2, 1, 1] };
+    let dst = fmt.encode(&[1, 0, 0]);
+    net.dnp_mut(1).register_buffer(0x4000, 256, 0);
+    net.issue(0, Command::put(0x40, dst, 0x4000, 4).with_tag(77));
+    net.run_until_idle(100_000).unwrap();
+
+    // Sender CQ: CmdDone with our tag.
+    let d0 = net.dnp(0);
+    let mut rd = CqReader::new(d0.cq.base(), cfg.cq_len);
+    let ev = rd.poll(&d0.mem, &d0.cq).expect("sender event");
+    assert_eq!(ev.kind, EventKind::CmdDone);
+    assert_eq!(ev.len_or_tag, 77);
+
+    // Receiver CQ: PacketWritten with the landing address.
+    let d1 = net.dnp(1);
+    let mut rd = CqReader::new(d1.cq.base(), cfg.cq_len);
+    let ev = rd.poll(&d1.mem, &d1.cq).expect("receiver event");
+    assert_eq!(ev.kind, EventKind::PacketWritten);
+    assert_eq!(ev.addr, 0x4000);
+    assert_eq!(ev.len_or_tag, 4);
+}
+
+/// Arbitration policies: all three drain the same contended workload.
+#[test]
+fn arbitration_policies_all_drain() {
+    for arb in [
+        ArbPolicy::RoundRobin,
+        ArbPolicy::FixedPriority,
+        ArbPolicy::LeastRecentlyServed,
+    ] {
+        let mut cfg = DnpConfig::shapes_rdt();
+        cfg.arb = arb;
+        let mut net = topology::torus3d([2, 2, 2], &cfg, 1 << 16);
+        let nodes = dnp_slots(&net);
+        let slots: Vec<usize> = nodes.iter().map(|&(i, _)| i).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        let plan = traffic::hotspot(&nodes, 0, 4, 32);
+        let total = plan.len() as u64;
+        let mut feeder = traffic::Feeder::new(plan);
+        traffic::run_plan(&mut net, &mut feeder, 5_000_000)
+            .unwrap_or_else(|| panic!("{arb:?} wedged"));
+        assert_eq!(net.traces.delivered, total, "{arb:?}");
+    }
+}
+
+/// Big-payload fragmentation across the network: a 1000-word PUT arrives
+/// intact (4 wire packets reassembled in order at the same buffer).
+#[test]
+fn fragmented_put_reassembles() {
+    let cfg = DnpConfig::shapes_rdt();
+    let mut net = topology::two_tiles_offchip(&cfg, 1 << 16);
+    let fmt = AddrFormat::Torus3D { dims: [2, 1, 1] };
+    let dst = fmt.encode(&[1, 0, 0]);
+    let data: Vec<u32> = (0..1000).map(|i| i * 3 + 1).collect();
+    net.dnp_mut(0).mem.write_slice(0x1000, &data);
+    net.dnp_mut(1).register_buffer(0x4000, 1024, 0);
+    net.issue(0, Command::put(0x1000, dst, 0x4000, 1000).with_tag(5));
+    net.run_until_idle(1_000_000).expect("fragmented PUT drains");
+    assert_eq!(net.traces.delivered, 4, "1000 words = 4 packets");
+    assert_eq!(net.dnp(1).mem.read_slice(0x4000, 1000), &data[..]);
+}
+
+/// Latency measured with tracing ON equals the counters with tracing OFF
+/// (tracing must not perturb simulated behaviour).
+#[test]
+fn tracing_does_not_perturb_simulation() {
+    let run = |trace: bool| -> u64 {
+        let cfg = DnpConfig::shapes_rdt();
+        let mut net = topology::torus3d([2, 2, 2], &cfg, 1 << 16);
+        net.traces.enabled = trace;
+        let slots: Vec<usize> = (0..8).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        let mut feeder = traffic::Feeder::new(traffic::halo_exchange_3d([2, 2, 2], 64));
+        traffic::run_plan(&mut net, &mut feeder, 1_000_000).expect("drains")
+    };
+    assert_eq!(run(true), run(false));
+}
+
+/// Smoke over the metrics helpers on a live net.
+#[test]
+fn metrics_helpers_report() {
+    let cfg = DnpConfig::shapes_rdt();
+    let mut net = topology::two_tiles_offchip(&cfg, 1 << 16);
+    let fmt = AddrFormat::Torus3D { dims: [2, 1, 1] };
+    let dst = fmt.encode(&[1, 0, 0]);
+    net.dnp_mut(1).register_buffer(0x4000, 512, 0);
+    net.issue(0, Command::put(0x40, dst, 0x4000, 256).with_tag(1));
+    net.run_until_idle(1_000_000).unwrap();
+    let elapsed = net.cycle;
+    assert!(metrics::delivered_gbs(&net, elapsed, 500.0) > 0.0);
+    assert!(metrics::peak_channel_bits_per_cycle(&net, elapsed) > 0.0);
+    assert!(metrics::intra_tile_bw_bits_per_cycle(&net, 1, elapsed) > 0.0);
+    let util = metrics::channel_utilization(&net, elapsed);
+    assert!(util.iter().any(|&(_, u)| u > 0.0));
+    assert!(util.iter().all(|&(_, u)| u <= 1.0 + 1e-9));
+}
