@@ -23,9 +23,19 @@ fn main() {
 
     println!("== LQCD on 8 RDTs, 2x2x2 3D torus (paper Sec. IV) ==");
     println!("-- compute backend: PJRT (JAX/Pallas artifact dslash_4) --");
-    let pjrt = run_lqcd_2x2x2(steps, [4, 4, 4], true).expect(
-        "PJRT run failed — did `make artifacts` run and is DNP_ARTIFACTS set correctly?",
-    );
+    let pjrt = match run_lqcd_2x2x2(steps, [4, 4, 4], true) {
+        Ok(r) => r,
+        Err(e) => {
+            // Default builds carry no PJRT (the `pjrt` feature gates the
+            // xla dependency); fall back to the pure-rust oracle so the
+            // example still demonstrates the full simulated exchange.
+            println!("PJRT unavailable ({e:#}); running oracle backend only\n");
+            let oracle =
+                run_lqcd_2x2x2(steps, [4, 4, 4], false).expect("oracle run");
+            println!("{}\n", oracle.summary());
+            return;
+        }
+    };
     println!("{}\n", pjrt.summary());
 
     println!("-- cross-check: pure-rust oracle backend --");

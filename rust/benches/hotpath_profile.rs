@@ -2,8 +2,10 @@
 //!
 //! This is the L3 optimization harness: it measures how many flit-hops and
 //! simulated cycles per second the simulator itself sustains on a
-//! saturated 4×4×4 torus, a saturated MTNoC chip, and the LQCD halo
-//! pattern. EXPERIMENTS.md §Perf records before/after for every
+//! saturated 4×4×4 torus, a *sparse* 4×4×4 torus (large command gaps —
+//! the regime of the paper's latency figures, where the event-driven
+//! scheduler's cycle-skipping dominates), a saturated MTNoC chip, and the
+//! LQCD halo pattern. EXPERIMENTS.md §Perf records before/after for every
 //! optimization step.
 
 use dnp::bench::{banner, wall, Table};
@@ -31,6 +33,32 @@ fn saturated_torus() -> (u64, u64, f64) {
         let slots: Vec<usize> = nodes.iter().map(|&(i, _)| i).collect();
         traffic::setup_buffers(&mut net, &slots);
         let plan = traffic::uniform_random(&nodes, 12, 64, 4, 7);
+        let mut feeder = traffic::Feeder::new(plan);
+        traffic::run_plan(&mut net, &mut feeder, 10_000_000).expect("drains");
+        flits = net
+            .nodes
+            .iter()
+            .filter_map(|n| n.as_dnp().map(|d| d.fabric.flits_switched))
+            .sum();
+        cycles = net.cycle;
+    });
+    (flits, cycles, r.median_s)
+}
+
+/// Sparse traffic: the same torus, but each node issues its PUTs with a
+/// mean gap of 64 cycles — most components are quiescent most of the
+/// time, like the paper's latency experiments (Figs. 8-11).
+fn sparse_torus() -> (u64, u64, f64) {
+    let cfg = DnpConfig::shapes_rdt();
+    let mut flits = 0u64;
+    let mut cycles = 0u64;
+    let r = wall(1, 3, || {
+        let mut net = topology::torus3d([4, 4, 4], &cfg, 1 << 18);
+        net.traces.enabled = false;
+        let nodes = dnp_slots(&net);
+        let slots: Vec<usize> = nodes.iter().map(|&(i, _)| i).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        let plan = traffic::uniform_random(&nodes, 12, 16, 64, 7);
         let mut feeder = traffic::Feeder::new(plan);
         traffic::run_plan(&mut net, &mut feeder, 10_000_000).expect("drains");
         flits = net
@@ -120,6 +148,7 @@ fn main() {
     ]);
     for (name, (flits, cycles, secs)) in [
         ("torus 4x4x4 uniform", saturated_torus()),
+        ("torus 4x4x4 sparse g64", sparse_torus()),
         ("MTNoC 8-tile uniform", saturated_noc()),
         ("LQCD halo x10", halo_phase()),
     ] {

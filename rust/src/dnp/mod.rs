@@ -200,8 +200,19 @@ impl DnpNode {
             && self.cq_defer.is_empty()
     }
 
-    /// One cycle of the whole DNP.
-    pub fn tick(&mut self, now: u64, chans: &mut ChannelArena, store: &mut PacketStore) {
+    /// Fully quiescent: nothing queued internally AND nothing buffered,
+    /// routed or locked in the switch fabric. While this holds, a tick is
+    /// a provable no-op — the scheduler contract (see [`crate::sim`])
+    /// lets the `Net` skip this node until an external wake (a command
+    /// issue or a flit landing on an input channel) re-activates it.
+    pub fn quiescent(&self, chans: &ChannelArena) -> bool {
+        self.is_idle() && self.fabric.is_quiet(chans)
+    }
+
+    /// One cycle of the whole DNP. Returns `true` when the node is
+    /// quiescent at the *end* of the tick — the signal the event-driven
+    /// scheduler uses to put this node to sleep.
+    pub fn tick(&mut self, now: u64, chans: &mut ChannelArena, store: &mut PacketStore) -> bool {
         let timing = self.cfg.timing;
 
         // --- REG bank: run-time route-priority rewrite (Sec. III-A).
@@ -213,18 +224,8 @@ impl DnpNode {
 
         // --- §Perf idle fast path: a fully quiescent DNP skips the whole
         // tick (common in large nets where traffic is localized).
-        if self.slave_q.is_empty()
-            && self.fetching.is_none()
-            && self.cmd_tx.is_none()
-            && self.svc_tx.is_none()
-            && self.svc_fetching.is_none()
-            && self.get_q.is_empty()
-            && self.cmd_fifo.is_empty()
-            && self.cq_defer.is_empty()
-            && self.rx.iter().all(|s| s.is_none())
-            && self.fabric.is_quiet(chans)
-        {
-            return;
+        if self.quiescent(chans) {
+            return true;
         }
 
         // --- Intra-tile slave: commands land in the CMD FIFO.
@@ -292,6 +293,10 @@ impl DnpNode {
         self.regs.hw_set(regs::REG_PKTS_SENT, self.pkts_sent as u32);
         self.regs.hw_set(regs::REG_PKTS_RECV, self.pkts_recv as u32);
         self.regs.hw_set(regs::REG_CQ_WRITTEN, self.cq.written as u32);
+
+        // End-of-tick quiescence: tells the scheduler whether this node
+        // may sleep from the next cycle on.
+        self.quiescent(chans)
     }
 
     /// ENG: fetch/decode commands, run the two TX streams.

@@ -36,6 +36,10 @@ pub mod packet;
 pub mod phy;
 pub mod rdma;
 pub mod route;
+/// PJRT bridge — needs the `xla` crate, so it only builds with the
+/// `pjrt` feature (the default build is dependency-free; the LQCD paths
+/// fall back to the pure-rust oracle).
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod switch;

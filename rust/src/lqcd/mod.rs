@@ -24,10 +24,11 @@
 use crate::config::DnpConfig;
 use crate::packet::AddrFormat;
 use crate::rdma::Command;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{default_artifacts_dir, Runtime};
 use crate::topology;
+use crate::util::error::{bail, Context, Result};
 use crate::util::SplitMix64;
-use anyhow::{bail, Context, Result};
 use std::time::Instant;
 
 /// Tile-memory layout for the halo exchange (word addresses).
@@ -323,11 +324,17 @@ pub fn run_lqcd_2x2x2(steps: usize, local: [u32; 3], use_pjrt: bool) -> Result<L
         .map(|i| Tile::new([i % 2, (i / 2) % 2, i / 4], l, global))
         .collect();
 
+    #[cfg(feature = "pjrt")]
     let mut rt = if use_pjrt {
         Some(Runtime::cpu(default_artifacts_dir()).context("PJRT runtime")?)
     } else {
         None
     };
+    #[cfg(not(feature = "pjrt"))]
+    if use_pjrt {
+        bail!("built without the `pjrt` feature; rerun with the rust-oracle backend");
+    }
+    #[cfg(feature = "pjrt")]
     let artifact = format!("dslash_{l}");
 
     let mut result = LqcdResult {
@@ -367,6 +374,7 @@ pub fn run_lqcd_2x2x2(steps: usize, local: [u32; 3], use_pjrt: bool) -> Result<L
         result.halo_cycles.push(net.cycle - t0);
 
         // --- Phase 2: Dslash on every tile (PJRT or rust oracle).
+        #[cfg(feature = "pjrt")]
         let lp = l + 2;
         let wall = Instant::now();
         let mut norm_global = 0.0f64;
@@ -377,6 +385,7 @@ pub fn run_lqcd_2x2x2(steps: usize, local: [u32; 3], use_pjrt: bool) -> Result<L
                 *f = net.dnp(n).mem.read_slice(rx, face_words).to_vec();
             }
             let (pre, pim) = tile.assemble_padded(l, &faces);
+            #[cfg(feature = "pjrt")]
             let (ore, oim, norm) = match &mut rt {
                 Some(rt) => {
                     let shp_psi = [lp, lp, lp, 3];
@@ -397,6 +406,8 @@ pub fn run_lqcd_2x2x2(steps: usize, local: [u32; 3], use_pjrt: bool) -> Result<L
                 }
                 None => dslash_rust(l, &pre, &pim, &tile.u_re, &tile.u_im),
             };
+            #[cfg(not(feature = "pjrt"))]
+            let (ore, oim, norm) = dslash_rust(l, &pre, &pim, &tile.u_re, &tile.u_im);
             tile.psi_re = ore;
             tile.psi_im = oim;
             norm_global += norm as f64;

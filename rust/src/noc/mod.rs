@@ -65,11 +65,14 @@ impl NocRouterNode {
         }
     }
 
-    pub fn tick(&mut self, now: u64, chans: &mut ChannelArena, store: &PacketStore) {
+    /// One router cycle. Returns `true` when the fabric is quiet at the
+    /// end of the tick — the event scheduler's cool-down signal.
+    pub fn tick(&mut self, now: u64, chans: &mut ChannelArena, store: &PacketStore) -> bool {
         if self.fabric.is_quiet(chans) {
-            return; // §Perf idle fast path
+            return true; // §Perf idle fast path
         }
         self.fabric
             .tick(now, &*self.router, chans, store, &mut NoSink);
+        self.fabric.is_quiet(chans)
     }
 }

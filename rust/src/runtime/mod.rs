@@ -10,7 +10,7 @@
 //! format: jax ≥ 0.5 emits protos with 64-bit instruction ids which the
 //! image's xla_extension 0.5.1 rejects; the text parser reassigns ids.
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 

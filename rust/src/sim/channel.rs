@@ -10,6 +10,7 @@
 //! a flit is only sent when a receiver buffer slot for its VC is free, so
 //! *no packet is ever dropped* anywhere in the network.
 
+use super::wheel::EventWheel;
 use crate::packet::{Flit, FlitKind};
 use crate::util::SplitMix64;
 use std::collections::VecDeque;
@@ -97,10 +98,13 @@ pub struct Channel {
     /// Optional link-error model (off-chip SerDes links).
     pub fx: Option<LinkFx>,
 
+    /// Flits currently buffered at the receiver, summed over VCs (O(1)
+    /// occupancy probe for the scheduler's quiet checks).
+    rx_total: usize,
+
     // --- statistics ---
     pub words_sent: u64,
     pub busy_cycles: u64,
-    last_sent_cycle: u64,
 }
 
 impl Channel {
@@ -117,9 +121,9 @@ impl Channel {
             credit_lat: 0,
             next_send_ok: 0,
             fx: None,
+            rx_total: 0,
             words_sent: 0,
             busy_cycles: 0,
-            last_sent_cycle: u64::MAX,
         }
     }
 
@@ -135,7 +139,9 @@ impl Channel {
 
     /// Push one flit. Panics if `can_send` would be false (callers must
     /// check — this catches scheduler bugs instead of dropping flits).
-    pub fn send(&mut self, flit: Flit, vc: u8, now: u64) {
+    /// Returns the cycle the flit lands in the receiver buffer (the wake
+    /// cycle the caller must schedule when event-stepping).
+    pub fn send(&mut self, flit: Flit, vc: u8, now: u64) -> u64 {
         assert!(self.can_send(vc, now), "send without credit/rate check");
         let (flit, stall) = match &mut self.fx {
             Some(fx) => fx.apply(flit),
@@ -143,16 +149,15 @@ impl Channel {
         };
         self.credits[vc as usize] -= 1;
         self.next_send_ok = now + self.cycles_per_word + stall;
-        self.in_flight.push_back(InFlight {
-            flit,
-            vc,
-            ready: now + self.cycles_per_word + self.latency + stall,
-        });
+        let ready = now + self.cycles_per_word + self.latency + stall;
+        self.in_flight.push_back(InFlight { flit, vc, ready });
         self.words_sent += 1;
-        if self.last_sent_cycle != now {
-            self.busy_cycles += self.cycles_per_word.min(1).max(1);
-            self.last_sent_cycle = now;
-        }
+        // The serializer is occupied for the whole word time, so
+        // `busy_cycles / elapsed == utilization(elapsed)` holds on
+        // off-chip links where cycles_per_word > 1 (retransmission
+        // stalls are tracked separately in `LinkFx::envelope_retx`).
+        self.busy_cycles += self.cycles_per_word;
+        ready
     }
 
     /// Advance time: land flits whose flight completed, release credits.
@@ -161,6 +166,7 @@ impl Channel {
             if f.ready <= now {
                 let f = self.in_flight.pop_front().unwrap();
                 self.rx_bufs[f.vc as usize].push_back(f.flit);
+                self.rx_total += 1;
             } else {
                 break;
             }
@@ -187,6 +193,7 @@ impl Channel {
         let f = self.rx_bufs[vc as usize]
             .pop_front()
             .expect("pop from empty VC buffer");
+        self.rx_total -= 1;
         if self.credit_lat == 0 {
             // On-chip credit wires are combinational: free immediately.
             self.credits[vc as usize] += 1;
@@ -202,9 +209,31 @@ impl Channel {
         self.rx_bufs[vc as usize].len()
     }
 
+    /// Flits buffered at the receiver, all VCs (O(1)).
+    #[inline]
+    pub fn rx_total(&self) -> usize {
+        self.rx_total
+    }
+
     /// Anything still moving or buffered?
     pub fn is_idle(&self) -> bool {
-        self.in_flight.is_empty() && self.rx_bufs.iter().all(|b| b.is_empty())
+        self.in_flight.is_empty() && self.rx_total == 0
+    }
+
+    /// Earliest future cycle at which this channel changes state on its
+    /// own (a flit landing or a credit arriving back at the sender).
+    /// `None` means the channel is inert until someone sends or pops.
+    ///
+    /// Diagnostic/introspection only: the *sanctioned* wake source for
+    /// the scheduler is the [`ChannelArena`]'s event wheel, fed by the
+    /// `send`/`pop` wrappers — do not build wake logic on this method.
+    pub fn next_event(&self) -> Option<u64> {
+        let flit = self.in_flight.front().map(|f| f.ready);
+        let credit = self.credit_return.front().map(|&(_, at)| at);
+        match (flit, credit) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
     }
 
     /// Utilization over `elapsed` cycles: fraction of cycles the serializer
@@ -219,9 +248,25 @@ impl Channel {
 }
 
 /// Arena of all channels in a network. Components hold `ChannelId`s.
+///
+/// The arena owns the [`EventWheel`] that drives event stepping: the
+/// [`send`]/[`pop`] wrappers are the *only* sanctioned mutation path on
+/// the simulation hot loop — they register the flit-landing and
+/// credit-return wake-ups the scheduler relies on. Calling
+/// `get_mut(id).send(..)` directly is fine for standalone dense loops
+/// (unit tests), but skips wake registration and must never be mixed
+/// with [`Net::step`](crate::sim::Net::step)-driven runs.
+///
+/// [`send`]: ChannelArena::send
+/// [`pop`]: ChannelArena::pop
 #[derive(Debug, Default)]
 pub struct ChannelArena {
     chans: Vec<Channel>,
+    wheel: EventWheel,
+    /// Flits resident in any channel (in flight or rx-buffered), across
+    /// the arena — O(1) replacement for scanning `all_idle` each cycle.
+    /// Only maintained by the `send`/`pop` wrappers.
+    resident: u64,
 }
 
 impl ChannelArena {
@@ -232,6 +277,62 @@ impl ChannelArena {
     pub fn add(&mut self, c: Channel) -> ChannelId {
         self.chans.push(c);
         ChannelId(self.chans.len() as u32 - 1)
+    }
+
+    /// Send through channel `id`, registering its landing wake-up.
+    pub fn send(&mut self, id: ChannelId, flit: Flit, vc: u8, now: u64) {
+        let ready = self.chans[id.0 as usize].send(flit, vc, now);
+        self.wheel.schedule(ready, id.0);
+        self.resident += 1;
+    }
+
+    /// Pop from channel `id`, registering the credit-return wake-up (a
+    /// returning credit can un-stall the upstream serializer, so the
+    /// channel must be ticked when it lands).
+    pub fn pop(&mut self, id: ChannelId, vc: u8, now: u64) -> Flit {
+        let c = &mut self.chans[id.0 as usize];
+        let f = c.pop(vc, now);
+        if c.credit_lat > 0 {
+            self.wheel.schedule(now + c.credit_lat, id.0);
+        }
+        self.resident -= 1;
+        f
+    }
+
+    /// Flits resident anywhere in the arena (wrapper-maintained).
+    pub fn resident(&self) -> u64 {
+        self.resident
+    }
+
+    /// Tick exactly the channels with a wake-up due at `now`; afterwards
+    /// `woken` holds those that have flits waiting at their receiver
+    /// (deduplicated wake list for the node scheduler).
+    pub fn process_due(&mut self, now: u64, woken: &mut Vec<u32>) {
+        woken.clear();
+        self.wheel.take_due(now, woken);
+        if woken.is_empty() {
+            return;
+        }
+        for &id in woken.iter() {
+            self.chans[id as usize].tick(now);
+        }
+        woken.sort_unstable();
+        woken.dedup();
+        woken.retain(|&id| self.chans[id as usize].rx_total() > 0);
+    }
+
+    /// Dense mode: the channels were all ticked anyway — just discard the
+    /// due wake entries so the wheel neither grows without bound nor
+    /// replays stale events if the net later switches to event stepping.
+    pub fn discard_due(&mut self, now: u64, scratch: &mut Vec<u32>) {
+        scratch.clear();
+        self.wheel.take_due(now, scratch);
+        scratch.clear();
+    }
+
+    /// Cycle of the earliest scheduled channel wake-up.
+    pub fn next_wake(&self) -> Option<u64> {
+        self.wheel.next_at()
     }
 
     #[inline]
@@ -379,6 +480,84 @@ mod tests {
         }
         // 10 words * 8 cycles over 80 cycles = 100% busy.
         assert!((c.utilization(80) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn busy_cycles_track_serializer_occupancy_offchip() {
+        // SerDes link at 8 cycles/word: 10 words must count 80 busy
+        // cycles, agreeing with utilization() (the old accounting clamped
+        // to 1 cycle/word and disagreed on every off-chip link).
+        let mut c = Channel::new(0, 8, 1, 64);
+        for i in 0..10u64 {
+            c.send(flit(i as u16), 0, i * 8);
+        }
+        assert_eq!(c.busy_cycles, 80);
+        assert!((c.utilization(80) - c.busy_cycles as f64 / 80.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn send_reports_landing_cycle() {
+        let mut c = Channel::new(5, 8, 1, 4);
+        let ready = c.send(flit(0), 0, 100);
+        assert_eq!(ready, 100 + 8 + 5);
+        c.tick(ready - 1);
+        assert!(c.peek(0).is_none());
+        c.tick(ready);
+        assert_eq!(c.peek(0).unwrap().seq, 0);
+    }
+
+    #[test]
+    fn arena_wrappers_maintain_wakes_and_residency() {
+        let mut a = ChannelArena::new();
+        let id = a.add(Channel::new(3, 1, 1, 4));
+        a.get_mut(id).credit_lat = 2;
+        assert_eq!(a.resident(), 0);
+        assert_eq!(a.next_wake(), None);
+        a.send(id, flit(1), 0, 0);
+        assert_eq!(a.resident(), 1);
+        // Landing wake at 0 + 1 (word) + 3 (latency).
+        assert_eq!(a.next_wake(), Some(4));
+        let mut woken = Vec::new();
+        a.process_due(3, &mut woken);
+        assert!(woken.is_empty(), "nothing lands before cycle 4");
+        a.process_due(4, &mut woken);
+        assert_eq!(woken, vec![id.0], "landing must wake the receiver");
+        let f = a.pop(id, 0, 4);
+        assert_eq!(f.seq, 1);
+        assert_eq!(a.resident(), 0);
+        // Credit-return wake at 4 + credit_lat.
+        assert_eq!(a.next_wake(), Some(6));
+        a.process_due(6, &mut woken);
+        assert!(woken.is_empty(), "credit wake ticks but wakes no receiver");
+        assert!(a.get(id).can_send(0, 6));
+        assert_eq!(a.next_wake(), None);
+    }
+
+    #[test]
+    fn rx_total_matches_per_vc_lengths() {
+        let mut c = Channel::new(0, 1, 2, 4);
+        c.send(flit(0), 0, 0);
+        c.send(flit(1), 1, 1);
+        c.tick(2);
+        assert_eq!(c.rx_total(), 2);
+        assert_eq!(c.rx_len(0) + c.rx_len(1), 2);
+        c.pop(0, 2);
+        assert_eq!(c.rx_total(), 1);
+    }
+
+    #[test]
+    fn next_event_reports_flit_then_credit() {
+        let mut c = Channel::new(4, 1, 1, 2);
+        c.credit_lat = 10;
+        assert_eq!(c.next_event(), None);
+        c.send(flit(0), 0, 0);
+        assert_eq!(c.next_event(), Some(5));
+        c.tick(5);
+        assert_eq!(c.next_event(), None, "landed; nothing in flight");
+        c.pop(0, 5);
+        assert_eq!(c.next_event(), Some(15), "credit still travelling");
+        c.tick(15);
+        assert_eq!(c.next_event(), None);
     }
 
     #[test]

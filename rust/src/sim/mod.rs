@@ -1,14 +1,58 @@
-//! Cycle-driven simulation container: the DNP-Net.
+//! Event-driven simulation container: the DNP-Net.
 //!
 //! A [`Net`] owns every node (DNP tiles and NoC routers), every channel and
-//! the packet arena, and advances the whole system one clock cycle at a
-//! time. It also aggregates the [`NodeEvent`]s the DNPs emit into
-//! per-command / per-packet traces — the measurement machinery behind the
-//! paper's Figs. 8-11 and the bandwidth tables.
+//! the packet arena, and advances the whole system through simulated time.
+//! It also aggregates the [`NodeEvent`]s the DNPs emit into per-command /
+//! per-packet traces — the measurement machinery behind the paper's
+//! Figs. 8-11 and the bandwidth tables.
+//!
+//! # Scheduler contract
+//!
+//! [`Net::step`] is *activity-tracked*: instead of ticking every channel
+//! and every node each cycle (the dense loop, still available as
+//! [`Net::step_dense`] and used by the equivalence suite), it only visits
+//!
+//! 1. channels whose [`EventWheel`](wheel::EventWheel) wake-up is due this
+//!    cycle — a flit landing in a receiver buffer or a credit arriving
+//!    back at the sender — and
+//! 2. *hot* nodes, in ascending node-index order (the same order the
+//!    dense loop uses, which matters because an on-chip credit freed by a
+//!    pop is visible to higher-indexed nodes within the same cycle).
+//!
+//! Who must schedule a wake, and when:
+//!
+//! * **Channels** — every `ChannelArena::send` registers the flit's
+//!   landing cycle and every `ChannelArena::pop` on a link with
+//!   `credit_lat > 0` registers the credit's return cycle. Switch code
+//!   must therefore move flits exclusively through the arena wrappers.
+//! * **Nodes** — a node never schedules point wakes for its internal
+//!   timers; instead it stays *hot* (ticked every cycle) for as long as
+//!   `tick` reports it non-quiescent, so pending timers (slave queue,
+//!   CQ deferrals, LUT stalls, serializer back-pressure, VC-arbitration
+//!   bubbles) are re-examined each cycle exactly as in the dense loop.
+//!   A node is cooled only when its `tick` returns `true` (quiescent at
+//!   end of tick: every queue empty and its fabric quiet), at which point
+//!   a tick is a provable no-op.
+//! * **Re-heating** — a cold node is re-activated by (a) a flit landing
+//!   on one of its input channels (the `Net` maps every channel to its
+//!   receiving node at `add_dnp`/`add_noc` time), or (b) any external
+//!   mutation through [`Net::issue`]/[`Net::dnp_mut`]. The run helpers
+//!   ([`Net::run`], [`Net::run_until_idle`], `traffic::run_plan`) also
+//!   re-heat every node on entry, so arbitrary setup done between runs
+//!   can never be missed.
+//!
+//! When no node is hot, simulated time jumps straight to the next channel
+//! wake ([`Net::advance`]) — the cycle-skipping that makes sparse-traffic
+//! latency sweeps run orders of magnitude faster than the dense loop.
+//! A missed wake-up deadlocks the net, which is why
+//! `rust/tests/equivalence.rs` pins dense and event-driven stepping to
+//! bit-exact agreement on cycle counts, counters and per-packet traces.
 
 pub mod channel;
+pub mod wheel;
 
 pub use channel::{Channel, ChannelArena, ChannelId, LinkFx};
+pub use wheel::EventWheel;
 
 use crate::dnp::{DnpNode, NodeEvent};
 use crate::noc::NocRouterNode;
@@ -39,7 +83,7 @@ impl Node {
 }
 
 /// Per-command trace (tag-keyed).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct CmdTrace {
     pub node: usize,
     /// Cycle the command reached the CMD FIFO (the paper's t0).
@@ -51,7 +95,7 @@ pub struct CmdTrace {
 }
 
 /// Per-packet trace (uid-keyed).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct PktTrace {
     pub tag: u32,
     pub src_node: Option<usize>,
@@ -81,6 +125,11 @@ pub struct TraceBook {
     pub enabled: bool,
     pub cmds: HashMap<(usize, u32), CmdTrace>,
     pub pkts: HashMap<u64, PktTrace>,
+    /// tag → uid of the command's *first-injected* packet, recorded at
+    /// `HeadInjected` time (events arrive in cycle order, so the first
+    /// entry is the earliest injection). O(1) backing for
+    /// [`Net::pkt_of_tag`] instead of a scan over every traced packet.
+    pub tag_uid: HashMap<u32, u64>,
     pub delivered: u64,
     pub delivered_words: u64,
     pub corrupt_packets: u64,
@@ -108,6 +157,19 @@ pub struct Net {
     pub traces: TraceBook,
     /// DNP address → node index.
     pub addr_map: HashMap<DnpAddr, usize>,
+
+    // --- activity-tracked scheduler state (see module docs) ---
+    /// Hot node indices, sorted ascending (dense tick order must be
+    /// preserved among active nodes).
+    hot: Vec<usize>,
+    /// Per-node hot flag (O(1) membership for `heat`).
+    is_hot: Vec<bool>,
+    /// channel id → receiving node (`usize::MAX` = unattached), built as
+    /// nodes register their input channels.
+    chan_dst: Vec<usize>,
+    /// Reusable scratch buffers (allocation-free steady state).
+    hot_scratch: Vec<usize>,
+    woken_chans: Vec<u32>,
 }
 
 impl Net {
@@ -122,19 +184,70 @@ impl Net {
                 ..Default::default()
             },
             addr_map: HashMap::new(),
+            hot: Vec::new(),
+            is_hot: Vec::new(),
+            chan_dst: Vec::new(),
+            hot_scratch: Vec::new(),
+            woken_chans: Vec::new(),
         }
+    }
+
+    /// Mark node `i` runnable: it will be ticked every cycle until its
+    /// tick reports quiescence again.
+    fn heat(&mut self, i: usize) {
+        if !self.is_hot[i] {
+            self.is_hot[i] = true;
+            let pos = self.hot.binary_search(&i).unwrap_err();
+            self.hot.insert(pos, i);
+        }
+    }
+
+    /// Re-activate every node. Run helpers call this on entry so state
+    /// mutated between runs (buffer registration, memory pokes, register
+    /// writes) is guaranteed to be noticed; a genuinely idle node cools
+    /// again after a single no-op tick.
+    pub fn heat_all(&mut self) {
+        for i in 0..self.nodes.len() {
+            self.heat(i);
+        }
+    }
+
+    /// Number of currently hot (runnable) nodes.
+    pub fn hot_count(&self) -> usize {
+        self.hot.len()
+    }
+
+    /// Record that channel `ch` terminates at node `idx` (its receiver).
+    fn bind_chan_dst(&mut self, ch: ChannelId, idx: usize) {
+        let slot = ch.0 as usize;
+        if self.chan_dst.len() <= slot {
+            self.chan_dst.resize(slot + 1, usize::MAX);
+        }
+        self.chan_dst[slot] = idx;
     }
 
     pub fn add_dnp(&mut self, node: DnpNode) -> usize {
         let idx = self.nodes.len();
+        let ins: Vec<ChannelId> = node.fabric.input_channel_ids().collect();
+        for ch in ins {
+            self.bind_chan_dst(ch, idx);
+        }
         self.addr_map.insert(node.addr, idx);
         self.nodes.push(Node::Dnp(node));
+        self.is_hot.push(false);
+        self.heat(idx);
         idx
     }
 
     pub fn add_noc(&mut self, node: NocRouterNode) -> usize {
         let idx = self.nodes.len();
+        let ins: Vec<ChannelId> = node.fabric.input_channel_ids().collect();
+        for ch in ins {
+            self.bind_chan_dst(ch, idx);
+        }
         self.nodes.push(Node::Noc(node));
+        self.is_hot.push(false);
+        self.heat(idx);
         idx
     }
 
@@ -142,7 +255,11 @@ impl Net {
         self.nodes[idx].as_dnp().expect("node is not a DNP")
     }
 
+    /// Mutable DNP access. Also re-heats the node: external mutation can
+    /// create work (a register write, a buffer registration, a memory
+    /// poke) that a sleeping node would otherwise never notice.
     pub fn dnp_mut(&mut self, idx: usize) -> &mut DnpNode {
+        self.heat(idx);
         self.nodes[idx].as_dnp_mut().expect("node is not a DNP")
     }
 
@@ -156,20 +273,80 @@ impl Net {
         self.dnp_mut(idx).issue(cmd, now);
     }
 
-    /// Advance one clock cycle.
+    /// Advance one clock cycle, event-driven: tick only the channels with
+    /// a wake-up due now and the hot nodes (in index order). Bit-exact
+    /// with [`step_dense`](Self::step_dense) — the skipped components are
+    /// exactly those whose tick would be a no-op.
     pub fn step(&mut self) {
         let now = self.cycle;
+
+        // Phase 1: due channel wakes — land flits, release credits, and
+        // re-heat the receiver of every channel now holding rx flits.
+        let mut woken = std::mem::take(&mut self.woken_chans);
+        self.chans.process_due(now, &mut woken);
+        for &cid in &woken {
+            let dst = self
+                .chan_dst
+                .get(cid as usize)
+                .copied()
+                .unwrap_or(usize::MAX);
+            if dst != usize::MAX {
+                self.heat(dst);
+            }
+        }
+        self.woken_chans = woken;
+
+        // Phase 2: hot nodes, ascending index (dense order). Node ticks
+        // cannot heat other nodes directly — cross-node effects travel
+        // through channels, whose wakes fire on later cycles.
+        let mut hot = std::mem::take(&mut self.hot_scratch);
+        hot.clear();
+        hot.extend_from_slice(&self.hot);
+        let mut cooled = false;
+        for &i in &hot {
+            let idle = match &mut self.nodes[i] {
+                Node::Dnp(d) => {
+                    let idle = d.tick(now, &mut self.chans, &mut self.store);
+                    // Drain this node's events immediately: uids of live
+                    // packets are still resolvable.
+                    let events = std::mem::take(&mut d.events);
+                    Self::absorb_events(&mut self.traces, &self.store, i, events);
+                    idle
+                }
+                Node::Noc(r) => r.tick(now, &mut self.chans, &self.store),
+            };
+            if idle {
+                self.is_hot[i] = false;
+                cooled = true;
+            }
+        }
+        self.hot_scratch = hot;
+        if cooled {
+            let Self { hot, is_hot, .. } = self;
+            hot.retain(|&i| is_hot[i]);
+        }
+        self.cycle += 1;
+    }
+
+    /// Advance one clock cycle the dense way: tick *every* channel and
+    /// *every* node. Reference semantics for the equivalence suite; the
+    /// due wake entries are discarded so the wheel stays consistent.
+    pub fn step_dense(&mut self) {
+        let now = self.cycle;
+        let mut scratch = std::mem::take(&mut self.woken_chans);
+        self.chans.discard_due(now, &mut scratch);
+        self.woken_chans = scratch;
         self.chans.tick_all(now);
         for i in 0..self.nodes.len() {
             match &mut self.nodes[i] {
                 Node::Dnp(d) => {
                     d.tick(now, &mut self.chans, &mut self.store);
-                    // Drain this node's events immediately: uids of live
-                    // packets are still resolvable.
                     let events = std::mem::take(&mut d.events);
                     Self::absorb_events(&mut self.traces, &self.store, i, events);
                 }
-                Node::Noc(r) => r.tick(now, &mut self.chans, &self.store),
+                Node::Noc(r) => {
+                    r.tick(now, &mut self.chans, &self.store);
+                }
             }
         }
         self.cycle += 1;
@@ -225,6 +402,9 @@ impl Net {
                 }
                 NodeEvent::HeadInjected { pkt, tag, cycle } => {
                     let uid = store.uid(pkt);
+                    // First injection wins: events arrive in cycle order,
+                    // so this is the command's earliest packet.
+                    traces.tag_uid.entry(tag).or_insert(uid);
                     let t = traces.pkt(uid);
                     t.tag = tag;
                     t.src_node = Some(node);
@@ -243,7 +423,9 @@ impl Net {
         }
     }
 
-    /// Is the whole system quiescent?
+    /// Is the whole system quiescent? (Full scan — authoritative but
+    /// O(nodes + channels); the run loops use [`idle_now`](Self::idle_now)
+    /// instead.)
     pub fn is_idle(&self) -> bool {
         self.store.live() == 0
             && self.chans.all_idle()
@@ -253,12 +435,85 @@ impl Net {
                 .all(|n| n.as_dnp().map(|d| d.is_idle()).unwrap_or(true))
     }
 
+    /// O(1) quiescence probe from the scheduler's live counters: no hot
+    /// node, no live packet, no flit resident in any channel. Agrees with
+    /// [`is_idle`](Self::is_idle) at every step boundary of an
+    /// event-driven run (a node cools in the same tick it drains).
+    pub fn idle_now(&self) -> bool {
+        self.hot.is_empty() && self.store.live() == 0 && self.chans.resident() == 0
+    }
+
+    /// Cycle of the next scheduled channel wake-up, if any.
+    pub fn next_wake(&self) -> Option<u64> {
+        self.chans.next_wake()
+    }
+
+    /// Jump simulated time forward without stepping. Only sound when no
+    /// node is hot and no channel wake is scheduled before `cycle` — the
+    /// run helpers uphold this; external callers should prefer
+    /// [`advance`](Self::advance).
+    pub fn advance_to(&mut self, cycle: u64) {
+        debug_assert!(cycle >= self.cycle, "time must move forward");
+        debug_assert!(self.hot.is_empty(), "cannot skip over hot nodes");
+        self.cycle = cycle;
+    }
+
+    /// Event-driven advance: when nothing is runnable this cycle, jump
+    /// straight to the next scheduled wake, then execute one step.
+    /// Returns `false` (without stepping) when the net is fully idle and
+    /// has no future events — stepping would only spin the clock.
+    pub fn advance(&mut self) -> bool {
+        if self.hot.is_empty() {
+            match self.chans.next_wake() {
+                Some(t) if t > self.cycle => self.cycle = t,
+                Some(_) => {}
+                None => return false,
+            }
+        }
+        self.step();
+        true
+    }
+
     /// Run until idle; returns the cycle count, or `None` if `max_cycles`
-    /// elapsed first (deadlock / livelock guard for tests).
+    /// elapsed first (deadlock / livelock guard for tests). Event-driven:
+    /// skips straight over stretches where only flits-in-flight exist.
     pub fn run_until_idle(&mut self, max_cycles: u64) -> Option<u64> {
+        self.heat_all();
         let start = self.cycle;
         while self.cycle - start < max_cycles {
+            if self.hot.is_empty() {
+                match self.chans.next_wake() {
+                    Some(t) if t > self.cycle => {
+                        self.cycle = t.min(start + max_cycles);
+                        continue;
+                    }
+                    Some(_) => {}
+                    None => {
+                        // Not idle (the post-step check below would have
+                        // returned), yet nothing can ever change — a true
+                        // deadlock. Burn the budget like the dense loop
+                        // would and report the timeout.
+                        self.cycle = start + max_cycles;
+                        return None;
+                    }
+                }
+            }
             self.step();
+            // Post-step check, exactly where the dense loop tests
+            // `is_idle` — including a drain on the last allowed cycle.
+            if self.idle_now() {
+                return Some(self.cycle - start);
+            }
+        }
+        None
+    }
+
+    /// Dense-reference twin of [`run_until_idle`](Self::run_until_idle)
+    /// (equivalence suite).
+    pub fn run_until_idle_dense(&mut self, max_cycles: u64) -> Option<u64> {
+        let start = self.cycle;
+        while self.cycle - start < max_cycles {
+            self.step_dense();
             if self.is_idle() {
                 return Some(self.cycle - start);
             }
@@ -266,21 +521,37 @@ impl Net {
         None
     }
 
-    /// Run exactly `n` cycles.
+    /// Run exactly `n` cycles of simulated time, skipping dead stretches.
     pub fn run(&mut self, n: u64) {
-        for _ in 0..n {
+        self.heat_all();
+        let end = self.cycle + n;
+        while self.cycle < end {
+            if self.hot.is_empty() {
+                match self.chans.next_wake() {
+                    Some(t) if t > self.cycle => {
+                        self.cycle = t.min(end);
+                        continue;
+                    }
+                    Some(_) => {}
+                    None => {
+                        // Fully inert: every remaining cycle is a no-op.
+                        self.cycle = end;
+                        return;
+                    }
+                }
+            }
             self.step();
         }
     }
 
-    /// Find the packet trace for the first packet of command `tag` issued
-    /// at node `src`.
+    /// Find the packet trace for the first packet of command `tag`
+    /// (earliest injection), via the O(1) tag index maintained at
+    /// `HeadInjected` time.
     pub fn pkt_of_tag(&self, tag: u32) -> Option<&PktTrace> {
         self.traces
-            .pkts
-            .values()
-            .filter(|p| p.tag == tag && p.injected.is_some())
-            .min_by_key(|p| p.injected)
+            .tag_uid
+            .get(&tag)
+            .and_then(|uid| self.traces.pkts.get(uid))
     }
 }
 

@@ -1,0 +1,229 @@
+//! Bucketed event wheel: the timing backbone of the event-driven scheduler.
+//!
+//! Components register *wake-up cycles* (a flit landing, a credit return)
+//! keyed by an opaque `u32` id. The wheel answers two questions in O(1)
+//! amortized time: "which ids are due at cycle `now`?" ([`take_due`]) and
+//! "when is the next scheduled event?" ([`next_at`]).
+//!
+//! Near-future events (within [`WHEEL_SLOTS`] cycles) live in a circular
+//! bucket array; far-future events overflow into a sorted map and are
+//! promoted into the buckets as the wheel turns. Duplicate registrations
+//! are allowed — consumers must treat a wake as *idempotent* ("check your
+//! state at cycle t"), never as "exactly one thing happened".
+//!
+//! [`take_due`]: EventWheel::take_due
+//! [`next_at`]: EventWheel::next_at
+
+use std::collections::BTreeMap;
+
+/// Bucket span of the wheel. Covers every link latency in the model
+/// (off-chip SerDes ≈ 106 cycles) so the overflow map is rarely touched.
+const WHEEL_SLOTS: usize = 512;
+
+/// A bucketed timer wheel over `u32` ids.
+#[derive(Debug)]
+pub struct EventWheel {
+    /// Slot `c % WHEEL_SLOTS` holds the ids scheduled for cycle `c`, for
+    /// `base <= c < base + WHEEL_SLOTS` (one cycle per slot at a time).
+    buckets: Vec<Vec<u32>>,
+    /// All events strictly before `base` have been taken.
+    base: u64,
+    /// Far-future events: cycle → ids.
+    overflow: BTreeMap<u64, Vec<u32>>,
+    /// Total ids currently scheduled (buckets + overflow).
+    count: usize,
+    /// Cycle of the earliest scheduled event — kept exact by `schedule`
+    /// (min) and recomputed once per `take_due`, so [`next_at`] is O(1)
+    /// on the cycle-skipping hot path.
+    ///
+    /// [`next_at`]: EventWheel::next_at
+    next: Option<u64>,
+}
+
+impl Default for EventWheel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EventWheel {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
+            base: 0,
+            overflow: BTreeMap::new(),
+            count: 0,
+            next: None,
+        }
+    }
+
+    /// Number of scheduled (not yet taken) events.
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Register `id` to be woken at cycle `at`. Scheduling in the past is
+    /// clamped to the present so the event still fires (idempotent wakes
+    /// make a late tick harmless; a silently dropped one would deadlock).
+    pub fn schedule(&mut self, at: u64, id: u32) {
+        let at = at.max(self.base);
+        if at < self.base + WHEEL_SLOTS as u64 {
+            self.buckets[(at % WHEEL_SLOTS as u64) as usize].push(id);
+        } else {
+            self.overflow.entry(at).or_default().push(id);
+        }
+        self.count += 1;
+        self.next = Some(self.next.map_or(at, |n| n.min(at)));
+    }
+
+    /// Drain every id scheduled at cycles `<= now` into `out` (appended),
+    /// then advance the wheel base to `now + 1`. Arbitrary forward jumps
+    /// are fine: skipped empty cycles cost at most one pass over the
+    /// bucket array.
+    pub fn take_due(&mut self, now: u64, out: &mut Vec<u32>) {
+        if now < self.base {
+            return; // this cycle was already drained
+        }
+        if self.count == 0 {
+            self.base = now + 1;
+            return;
+        }
+        if self.next.is_some_and(|n| n > now) {
+            // Nothing due yet: advancing the base is enough (no bucket in
+            // [base, now] is occupied, by the cache invariant).
+            self.base = now + 1;
+            return;
+        }
+        let before = out.len();
+        let span = (now - self.base + 1).min(WHEEL_SLOTS as u64);
+        for k in 0..span {
+            let slot = ((self.base + k) % WHEEL_SLOTS as u64) as usize;
+            out.append(&mut self.buckets[slot]);
+        }
+        while let Some(entry) = self.overflow.first_entry() {
+            if *entry.key() <= now {
+                out.append(&mut entry.remove());
+            } else {
+                break;
+            }
+        }
+        self.count -= out.len() - before;
+        self.base = now + 1;
+        // Promote overflow events that now fall inside the bucket span.
+        while let Some(entry) = self.overflow.first_entry() {
+            let at = *entry.key();
+            if at < self.base + WHEEL_SLOTS as u64 {
+                let ids = entry.remove();
+                self.buckets[(at % WHEEL_SLOTS as u64) as usize].extend(ids);
+            } else {
+                break;
+            }
+        }
+        self.next = self.scan_next();
+    }
+
+    /// Cycle of the earliest scheduled event, if any. O(1): served from
+    /// the cache maintained by `schedule`/`take_due`.
+    pub fn next_at(&self) -> Option<u64> {
+        self.next
+    }
+
+    /// Recompute the earliest scheduled cycle by scanning (O(slots) —
+    /// paid once per `take_due`, not per query).
+    fn scan_next(&self) -> Option<u64> {
+        if self.count == 0 {
+            return None;
+        }
+        for k in 0..WHEEL_SLOTS as u64 {
+            let at = self.base + k;
+            if !self.buckets[(at % WHEEL_SLOTS as u64) as usize].is_empty() {
+                return Some(at);
+            }
+        }
+        self.overflow.keys().next().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(w: &mut EventWheel, now: u64) -> Vec<u32> {
+        let mut v = Vec::new();
+        w.take_due(now, &mut v);
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn events_fire_at_their_cycle() {
+        let mut w = EventWheel::new();
+        w.schedule(3, 10);
+        w.schedule(5, 11);
+        assert_eq!(w.next_at(), Some(3));
+        assert_eq!(drain(&mut w, 0), vec![]);
+        assert_eq!(drain(&mut w, 3), vec![10]);
+        assert_eq!(w.next_at(), Some(5));
+        assert_eq!(drain(&mut w, 4), vec![]);
+        assert_eq!(drain(&mut w, 5), vec![11]);
+        assert!(w.is_empty());
+        assert_eq!(w.next_at(), None);
+    }
+
+    #[test]
+    fn jump_collects_everything_due() {
+        let mut w = EventWheel::new();
+        w.schedule(2, 1);
+        w.schedule(100, 2);
+        w.schedule(5000, 3); // overflow
+        assert_eq!(drain(&mut w, 1000), vec![1, 2]);
+        assert_eq!(w.next_at(), Some(5000));
+        assert_eq!(drain(&mut w, 5000), vec![3]);
+    }
+
+    #[test]
+    fn overflow_promotes_into_buckets() {
+        let mut w = EventWheel::new();
+        w.schedule(10_000, 7);
+        assert_eq!(w.next_at(), Some(10_000));
+        // Turning the wheel close to the event moves it into the buckets.
+        assert_eq!(drain(&mut w, 9_900), vec![]);
+        assert_eq!(w.next_at(), Some(10_000));
+        assert_eq!(drain(&mut w, 10_000), vec![7]);
+    }
+
+    #[test]
+    fn past_schedules_clamp_to_present() {
+        let mut w = EventWheel::new();
+        assert_eq!(drain(&mut w, 50), vec![]);
+        w.schedule(10, 9); // already in the past: must still fire
+        assert_eq!(w.next_at(), Some(51));
+        assert_eq!(drain(&mut w, 51), vec![9]);
+    }
+
+    #[test]
+    fn duplicate_ids_fire_each_time() {
+        let mut w = EventWheel::new();
+        w.schedule(4, 5);
+        w.schedule(4, 5);
+        w.schedule(6, 5);
+        assert_eq!(drain(&mut w, 4), vec![5, 5]);
+        assert_eq!(drain(&mut w, 6), vec![5]);
+    }
+
+    #[test]
+    fn same_slot_different_turns_do_not_alias() {
+        let mut w = EventWheel::new();
+        // Two events whose cycles collide mod WHEEL_SLOTS: the far one
+        // must sit in overflow, not fire early.
+        w.schedule(3, 1);
+        w.schedule(3 + WHEEL_SLOTS as u64, 2);
+        assert_eq!(drain(&mut w, 3), vec![1]);
+        assert_eq!(w.next_at(), Some(3 + WHEEL_SLOTS as u64));
+        assert_eq!(drain(&mut w, 3 + WHEEL_SLOTS as u64), vec![2]);
+    }
+}

@@ -166,17 +166,25 @@ impl SwitchFabric {
     }
 
     /// Nothing buffered, routed or locked anywhere in this fabric?
-    /// (O(inputs × vcs) peeks — the idle fast path of the node tick.)
+    /// (O(inputs) counter probes — the idle fast path of the node tick
+    /// and the scheduler's cool-down check.)
     pub fn is_quiet(&self, chans: &ChannelArena) -> bool {
         if self.active_locks != 0 || self.unlocked_routes != 0 {
             return false;
         }
         self.inputs.iter().all(|i| match i.src {
             InputSrc::Inject => i.inj.is_empty(),
-            InputSrc::Chan(id) => {
-                let c = chans.get(id);
-                (0..c.vcs() as u8).all(|v| c.rx_len(v) == 0)
-            }
+            InputSrc::Chan(id) => chans.get(id).rx_total() == 0,
+        })
+    }
+
+    /// The inter-tile channels feeding this fabric's input ports — the
+    /// owning `Net` registers itself as their receiver so a flit landing
+    /// on any of them re-activates the node in the event scheduler.
+    pub fn input_channel_ids(&self) -> impl Iterator<Item = ChannelId> + '_ {
+        self.inputs.iter().filter_map(|i| match i.src {
+            InputSrc::Chan(id) => Some(id),
+            InputSrc::Inject => None,
         })
     }
 
@@ -224,7 +232,8 @@ impl SwitchFabric {
 
     fn pop_input(input: &mut Input, chans: &mut ChannelArena, vc: u8, now: u64) -> Flit {
         match input.src {
-            InputSrc::Chan(id) => chans.get_mut(id).pop(vc, now),
+            // Arena wrapper: registers the credit-return wake-up.
+            InputSrc::Chan(id) => chans.pop(id, vc, now),
             InputSrc::Inject => input.inj.pop_front().expect("empty injection lane"),
         }
     }
@@ -245,14 +254,22 @@ impl SwitchFabric {
     }
 
     /// RTR stage: compute the decision for every VC whose head-of-line flit
-    /// is a Head and has no route yet.
+    /// is a Head and has no route yet. Counters are bumped in place —
+    /// this runs every cycle on every active switch, so it must stay
+    /// allocation-free (§Perf).
     fn route_heads(&mut self, router: &dyn Router, chans: &ChannelArena, store: &PacketStore) {
-        let redirect = self.local_redirect;
-        let mut newly_routed = 0usize;
-        let mut port_bumps: Vec<usize> = Vec::new();
-        let mut local_bumps = 0u32;
-        for input in &mut self.inputs {
-            for vc in 0..self.vcs as u8 {
+        let Self {
+            inputs,
+            routes_to_port,
+            routes_to_local,
+            unlocked_routes,
+            vcs,
+            local_redirect,
+            ..
+        } = self;
+        let redirect = *local_redirect;
+        for input in inputs.iter_mut() {
+            for vc in 0..*vcs as u8 {
                 if input.route[vc as usize].is_some() {
                     continue;
                 }
@@ -266,20 +283,15 @@ impl SwitchFabric {
                         };
                         input.route[vc as usize] =
                             Some(RouteState { out, out_vc, locked: false });
-                        newly_routed += 1;
+                        *unlocked_routes += 1;
                         match out {
-                            OutSel::Port(p) => port_bumps.push(p),
-                            OutSel::Local => local_bumps += 1,
+                            OutSel::Port(p) => routes_to_port[p] += 1,
+                            OutSel::Local => *routes_to_local += 1,
                         }
                     }
                 }
             }
         }
-        self.unlocked_routes += newly_routed;
-        for p in port_bumps {
-            self.routes_to_port[p] += 1;
-        }
-        self.routes_to_local += local_bumps;
     }
 
     /// Move at most one flit per output port per cycle, time-sharing the
@@ -289,7 +301,6 @@ impl SwitchFabric {
         if self.active_locks == 0 && self.unlocked_routes == 0 {
             return; // §Perf: nothing in flight anywhere
         }
-        let n_in = self.inputs.len();
         let vcs = self.vcs;
         for oi in 0..self.outputs.len() {
             let out_ch = self.outputs[oi].ch;
@@ -310,7 +321,7 @@ impl SwitchFabric {
                     continue;
                 }
                 let flit = Self::pop_input(&mut self.inputs[ii], chans, ivc, now);
-                chans.get_mut(out_ch).send(flit, ov as u8, now);
+                chans.send(out_ch, flit, ov as u8, now);
                 self.flits_switched += 1;
                 if flit.kind == FlitKind::Tail {
                     self.outputs[oi].locks[ov] = None;
@@ -367,7 +378,7 @@ impl SwitchFabric {
                 let (ii, vc) = (w / vcs, (w % vcs) as u8);
                 let flit = Self::pop_input(&mut self.inputs[ii], chans, vc, now);
                 debug_assert_eq!(flit.kind, FlitKind::Head);
-                chans.get_mut(out_ch).send(flit, ov as u8, now);
+                chans.send(out_ch, flit, ov as u8, now);
                 self.flits_switched += 1;
                 self.head_log.push((flit.pkt, oi, now));
                 // Single-flit packets do not exist (envelope is 6 words),
@@ -389,7 +400,6 @@ impl SwitchFabric {
         if self.active_locks == 0 && self.unlocked_routes == 0 {
             return;
         }
-        let n_in = self.inputs.len();
         let vcs = self.vcs;
         // Locked sessions: stream one flit each.
         for s in 0..self.local_locks.len() {

@@ -76,6 +76,12 @@ impl Feeder {
         self.next >= self.plan.len()
     }
 
+    /// Issue cycle of the next pending command, if any (the scheduler's
+    /// jump target when the net itself has nothing due).
+    pub fn next_at(&self) -> Option<u64> {
+        self.plan.get(self.next).map(|p| p.at)
+    }
+
     pub fn total(&self) -> usize {
         self.plan.len()
     }
@@ -83,11 +89,59 @@ impl Feeder {
 
 /// Run a feeder to completion: pump + step until the plan is issued and
 /// the net drains. Returns elapsed cycles, or None on timeout.
+///
+/// Event-driven: pumps through the net's scheduler, checks completion
+/// with the O(1) live counters ([`Net::idle_now`]) instead of a full
+/// `is_idle` scan per cycle, and when no node is runnable jumps straight
+/// to the earlier of the next channel wake and the next planned command.
 pub fn run_plan(net: &mut Net, feeder: &mut Feeder, max_cycles: u64) -> Option<u64> {
+    net.heat_all();
     let start = net.cycle;
     while net.cycle - start < max_cycles {
         feeder.pump(net);
+        if net.hot_count() == 0 {
+            // Nothing runnable this cycle: skip to the next event. The
+            // invariant "hot-empty and wake-free implies idle" holds for
+            // the net itself, so a missing wake with a non-exhausted
+            // feeder means time passes in silence until the next command.
+            let target = match (net.next_wake(), feeder.next_at()) {
+                (Some(w), Some(f)) => Some(w.min(f)),
+                (w, f) => w.or(f),
+            };
+            match target {
+                Some(t) if t > net.cycle => {
+                    net.advance_to(t.min(start + max_cycles));
+                    continue; // pump at the new cycle before stepping
+                }
+                Some(_) => {}
+                None => {
+                    // Feeder exhausted and net inert: finished (or, on a
+                    // true deadlock, the post-step check already failed —
+                    // spend the budget like the dense loop would).
+                    if net.idle_now() {
+                        return Some(net.cycle - start);
+                    }
+                    net.advance_to(start + max_cycles);
+                    return None;
+                }
+            }
+        }
         net.step();
+        if feeder.exhausted() && net.idle_now() {
+            return Some(net.cycle - start);
+        }
+    }
+    None
+}
+
+/// Dense-reference twin of [`run_plan`]: every channel and node ticked
+/// every cycle, full `is_idle` scan. Kept for the dense-vs-event
+/// equivalence suite (`rust/tests/equivalence.rs`).
+pub fn run_plan_dense(net: &mut Net, feeder: &mut Feeder, max_cycles: u64) -> Option<u64> {
+    let start = net.cycle;
+    while net.cycle - start < max_cycles {
+        feeder.pump(net);
+        net.step_dense();
         if feeder.exhausted() && net.is_idle() {
             return Some(net.cycle - start);
         }

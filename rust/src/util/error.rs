@@ -1,0 +1,112 @@
+//! Minimal `anyhow`-shaped error plumbing (the image carries no external
+//! crates; this keeps the default build dependency-free).
+//!
+//! Supports exactly the surface the crate uses: [`Result`], [`Error`],
+//! [`bail!`], and [`Context::context`]/[`Context::with_context`] on both
+//! `Result` and `Option`.
+
+use std::fmt;
+
+/// A boxed, message-chained error.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+
+    /// Prepend a context line, anyhow-style (`context: cause`).
+    pub fn wrap(self, ctx: impl fmt::Display) -> Self {
+        Self {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` (alternate) prints the same single-line chain.
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self { msg: e.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+pub use crate::bail;
+
+/// Attach context to failures, on both `Result` and `Option`.
+pub trait Context<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("broke at {}", 42)
+    }
+
+    #[test]
+    fn bail_formats() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "broke at 42");
+        assert_eq!(format!("{e:#}"), "broke at 42");
+    }
+
+    #[test]
+    fn context_chains_on_result_and_option() {
+        let r: Result<(), _> = Err(Error::msg("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+
+        let o: Option<u8> = None;
+        let e = o.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "missing x");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "disk");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("disk"));
+    }
+}

@@ -1,5 +1,7 @@
-//! Shared utilities: deterministic RNG, statistics, small helpers.
+//! Shared utilities: deterministic RNG, statistics, error plumbing,
+//! small helpers.
 
+pub mod error;
 pub mod rng;
 pub mod stats;
 

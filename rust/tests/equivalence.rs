@@ -1,0 +1,249 @@
+//! Dense vs event-driven scheduler equivalence.
+//!
+//! The activity-tracked, cycle-skipping core (`Net::step` / `Net::run*` /
+//! `traffic::run_plan`) must be *bit-exact* with the dense reference loop
+//! (`Net::step_dense` / `Net::run_until_idle_dense` /
+//! `traffic::run_plan_dense`): identical final cycle counts, identical
+//! delivered / corrupt / LUT-miss counters, and identical per-packet and
+//! per-command traces on the same seeded plans. A single missed wake-up
+//! deadlocks or desynchronizes the net — this suite is the tripwire.
+
+use dnp::config::DnpConfig;
+use dnp::packet::DnpAddr;
+use dnp::rdma::Command;
+use dnp::sim::{CmdTrace, PktTrace};
+use dnp::{topology, traffic, Net};
+
+fn dnp_slots(net: &Net) -> Vec<(usize, DnpAddr)> {
+    net.nodes
+        .iter()
+        .enumerate()
+        .filter_map(|(i, n)| n.as_dnp().map(|d| (i, d.addr)))
+        .collect()
+}
+
+/// Sorted, comparable snapshot of everything a run observed.
+#[derive(Debug, PartialEq)]
+struct Snapshot {
+    elapsed: Option<u64>,
+    final_cycle: u64,
+    delivered: u64,
+    delivered_words: u64,
+    corrupt: u64,
+    lut_misses: u64,
+    pkts: Vec<(u64, PktTrace)>,
+    cmds: Vec<((usize, u32), CmdTrace)>,
+    flits_switched: u64,
+    words_on_wires: u64,
+}
+
+fn snapshot(net: &Net, elapsed: Option<u64>) -> Snapshot {
+    let mut pkts: Vec<(u64, PktTrace)> = net
+        .traces
+        .pkts
+        .iter()
+        .map(|(&uid, t)| (uid, t.clone()))
+        .collect();
+    pkts.sort_by_key(|&(uid, _)| uid);
+    let mut cmds: Vec<((usize, u32), CmdTrace)> = net
+        .traces
+        .cmds
+        .iter()
+        .map(|(&k, t)| (k, t.clone()))
+        .collect();
+    cmds.sort_by_key(|&(k, _)| k);
+    Snapshot {
+        elapsed,
+        final_cycle: net.cycle,
+        delivered: net.traces.delivered,
+        delivered_words: net.traces.delivered_words,
+        corrupt: net.traces.corrupt_packets,
+        lut_misses: net.traces.lut_misses,
+        pkts,
+        cmds,
+        flits_switched: net
+            .nodes
+            .iter()
+            .map(|n| match n {
+                dnp::sim::Node::Dnp(d) => d.fabric.flits_switched,
+                dnp::sim::Node::Noc(r) => r.fabric.flits_switched,
+            })
+            .sum(),
+        words_on_wires: net.chans.iter().map(|(_, c)| c.words_sent).sum(),
+    }
+}
+
+/// Run `plan` on two identically-built nets, dense and event-driven, and
+/// assert the snapshots match.
+fn assert_plan_equivalent(
+    mut build: impl FnMut() -> Net,
+    plan: Vec<traffic::Planned>,
+    max_cycles: u64,
+    label: &str,
+) {
+    let mut dense_net = build();
+    let mut feeder = traffic::Feeder::new(plan.clone());
+    let dense_elapsed = traffic::run_plan_dense(&mut dense_net, &mut feeder, max_cycles);
+    assert!(dense_elapsed.is_some(), "{label}: dense run must drain");
+    let dense = snapshot(&dense_net, dense_elapsed);
+
+    let mut event_net = build();
+    let mut feeder = traffic::Feeder::new(plan);
+    let event_elapsed = traffic::run_plan(&mut event_net, &mut feeder, max_cycles);
+    let event = snapshot(&event_net, event_elapsed);
+
+    assert_eq!(
+        dense.elapsed, event.elapsed,
+        "{label}: elapsed cycles diverged"
+    );
+    assert_eq!(
+        dense.final_cycle, event.final_cycle,
+        "{label}: final cycle diverged"
+    );
+    assert_eq!(dense, event, "{label}: run snapshots diverged");
+}
+
+fn torus_uniform_plan(net: &Net, count: usize, mean_gap: u64, seed: u64) -> Vec<traffic::Planned> {
+    let nodes = dnp_slots(net);
+    traffic::uniform_random(&nodes, count, 24, mean_gap, seed)
+}
+
+#[test]
+fn uniform_random_torus_matches_dense() {
+    let cfg = DnpConfig::shapes_rdt();
+    let build = || {
+        let mut net = topology::torus3d([3, 3, 2], &cfg, 1 << 16);
+        let slots: Vec<usize> = (0..net.nodes.len()).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        net
+    };
+    let plan = torus_uniform_plan(&build(), 5, 12, 0xFEED_0001);
+    assert_plan_equivalent(build, plan, 2_000_000, "uniform torus 3x3x2");
+}
+
+#[test]
+fn sparse_uniform_torus_matches_dense() {
+    // Large gaps: the event core spends most of its time cycle-skipping —
+    // exactly the regime where a missed wake-up would show up as a
+    // different completion cycle.
+    let cfg = DnpConfig::shapes_rdt();
+    let build = || {
+        let mut net = topology::torus3d([2, 2, 2], &cfg, 1 << 16);
+        let slots: Vec<usize> = (0..net.nodes.len()).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        net
+    };
+    let plan = torus_uniform_plan(&build(), 4, 300, 0xFEED_0002);
+    assert_plan_equivalent(build, plan, 2_000_000, "sparse torus 2x2x2");
+}
+
+#[test]
+fn spidergon_chip_matches_dense() {
+    let cfg = DnpConfig::mtnoc();
+    let build = || {
+        let mut net = topology::spidergon_chip(8, &cfg, 1 << 16);
+        let slots: Vec<usize> = dnp_slots(&net).iter().map(|&(i, _)| i).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        net
+    };
+    let plan = {
+        let net = build();
+        let nodes = dnp_slots(&net);
+        traffic::uniform_random(&nodes, 8, 6, 0xFEED_0003)
+    };
+    assert_plan_equivalent(build, plan, 2_000_000, "MTNoC Spidergon 8");
+}
+
+#[test]
+fn lqcd_halo_matches_dense() {
+    let cfg = DnpConfig::shapes_rdt();
+    let build = || {
+        let mut net = topology::torus3d([2, 2, 2], &cfg, 1 << 16);
+        let slots: Vec<usize> = (0..8).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        net
+    };
+    let plan = traffic::halo_exchange_3d([2, 2, 2], 96);
+    assert_plan_equivalent(build, plan, 2_000_000, "LQCD halo 2x2x2");
+}
+
+#[test]
+fn ber_retransmission_matches_dense() {
+    // LinkFx stalls (envelope retransmission) shift both the serializer
+    // and the landing cycles; the wake bookkeeping must follow exactly.
+    let mut cfg = DnpConfig::shapes_rdt();
+    cfg.serdes.ber_per_word = 2e-3;
+    let build = || {
+        let mut net = topology::torus3d([2, 2, 1], &cfg, 1 << 16);
+        let slots: Vec<usize> = (0..net.nodes.len()).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        net
+    };
+    let plan = torus_uniform_plan(&build(), 6, 10, 0xFEED_0004);
+    assert_plan_equivalent(build, plan, 2_000_000, "BER torus 2x2x1");
+}
+
+#[test]
+fn run_until_idle_matches_dense() {
+    // The direct-issue path (benches, examples) rather than a feeder.
+    let cfg = DnpConfig::shapes_rdt();
+    let build = || {
+        let mut net = topology::ring_offchip(5, &cfg, 1 << 16);
+        net.dnp_mut(3).register_buffer(0x4000, 1024, 0).unwrap();
+        net.dnp_mut(0)
+            .mem
+            .write_slice(0x1000, &(0..64).collect::<Vec<u32>>());
+        net
+    };
+    let fmt = dnp::packet::AddrFormat::Torus3D { dims: [5, 1, 1] };
+    let issue = |net: &mut Net| {
+        for (i, len) in [(0u32, 48u32), (1, 16), (4, 8)] {
+            net.issue(
+                i as usize,
+                Command::put(0x1000, fmt.encode(&[3, 0, 0]), 0x4000, len).with_tag(i),
+            );
+        }
+    };
+
+    let mut dense_net = build();
+    issue(&mut dense_net);
+    let dense_elapsed = dense_net.run_until_idle_dense(1_000_000);
+    let dense = snapshot(&dense_net, dense_elapsed);
+
+    let mut event_net = build();
+    issue(&mut event_net);
+    let event_elapsed = event_net.run_until_idle(1_000_000);
+    let event = snapshot(&event_net, event_elapsed);
+
+    assert!(dense_elapsed.is_some(), "dense must drain");
+    assert_eq!(dense, event, "run_until_idle snapshots diverged");
+}
+
+#[test]
+fn idle_run_skips_but_preserves_time() {
+    // An empty net: `run(n)` must land on exactly `cycle + n` with no
+    // state change, however far it skips.
+    let cfg = DnpConfig::shapes_rdt();
+    let mut net = topology::torus3d([2, 2, 2], &cfg, 1 << 16);
+    net.run(1_000_000);
+    assert_eq!(net.cycle, 1_000_000);
+    assert!(net.is_idle());
+    assert!(net.idle_now());
+
+    // And traffic issued afterwards still behaves identically to a fresh
+    // net, just shifted in time (trace stamps are absolute, so compare
+    // the relative quantities).
+    let slots: Vec<usize> = (0..8).collect();
+    traffic::setup_buffers(&mut net, &slots);
+    let plan = traffic::halo_exchange_3d([2, 2, 2], 16);
+    let mut feeder = traffic::Feeder::new(plan.clone());
+    let shifted = traffic::run_plan(&mut net, &mut feeder, 1_000_000).expect("drains");
+
+    let mut fresh = topology::torus3d([2, 2, 2], &cfg, 1 << 16);
+    traffic::setup_buffers(&mut fresh, &slots);
+    let mut feeder = traffic::Feeder::new(plan);
+    let base = traffic::run_plan(&mut fresh, &mut feeder, 1_000_000).expect("drains");
+    assert_eq!(shifted, base, "idle prefix must not change elapsed cycles");
+    assert_eq!(net.traces.delivered, fresh.traces.delivered);
+    assert_eq!(net.traces.delivered_words, fresh.traces.delivered_words);
+}

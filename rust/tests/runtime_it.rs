@@ -1,5 +1,7 @@
 //! Integration: the PJRT runtime against the AOT artifacts, cross-checked
-//! with the pure-rust oracle. Requires `make artifacts`.
+//! with the pure-rust oracle. Requires `make artifacts` and a build with
+//! the `pjrt` feature (the default build is dependency-free).
+#![cfg(feature = "pjrt")]
 
 use dnp::lqcd::{dslash_rust, run_lqcd_2x2x2};
 use dnp::runtime::{default_artifacts_dir, Runtime};
