@@ -1,0 +1,86 @@
+//! Hybrid system tour — the paper's Fig. 2 composition: a 2×2 off-chip
+//! SerDes torus of chips, each chip a 2×2 on-chip mesh of tiles, every
+//! tile's DNP serving both regimes through the same crossbar (gateway
+//! tiles additionally own the chip's off-chip links).
+//!
+//! Shows the on-chip vs cross-chip latency gap on the same net, then runs
+//! one hybrid halo-exchange phase over the global 4×4 tile lattice.
+//!
+//! Run: `cargo run --release --example hybrid_system`
+
+use dnp::config::DnpConfig;
+use dnp::packet::AddrFormat;
+use dnp::rdma::Command;
+use dnp::util::{median, percentile};
+use dnp::{topology, traffic};
+
+const CHIPS: [u32; 3] = [2, 2, 1];
+const TILES: [u32; 2] = [2, 2];
+
+fn main() {
+    // 1. The hybrid render of the parametric DNP: N=4 on-chip mesh ports,
+    //    M=6 off-chip torus ports behind one switch.
+    let cfg = DnpConfig::hybrid();
+    println!(
+        "DNP config: L={} N={} M={} ({} chips x {} tiles = {} DNPs)",
+        cfg.l_ports,
+        cfg.n_ports,
+        cfg.m_ports,
+        CHIPS.iter().product::<u32>(),
+        TILES.iter().product::<u32>(),
+        CHIPS.iter().product::<u32>() * TILES.iter().product::<u32>(),
+    );
+    let fmt = AddrFormat::Hybrid { chip_dims: CHIPS, tile_dims: TILES };
+    let mut net = topology::hybrid_torus_mesh(CHIPS, TILES, &cfg, 1 << 16);
+
+    // 2. One PUT to an on-chip neighbour tile, one to the diagonally
+    //    opposite chip: same API, two latency regimes.
+    let near = fmt.encode(&[0, 0, 0, 1, 0]);
+    let far = fmt.encode(&[1, 1, 0, 1, 1]);
+    let near_node = traffic::hybrid_node_index(CHIPS, TILES, [0, 0, 0], [1, 0]);
+    let far_node = traffic::hybrid_node_index(CHIPS, TILES, [1, 1, 0], [1, 1]);
+    let payload: Vec<u32> = (0..64).map(|i| 0x5A17_0000 | i).collect();
+    net.dnp_mut(0).mem.write_slice(0x1000, &payload);
+    net.dnp_mut(near_node).register_buffer(0x4000, 256, 0).unwrap();
+    net.dnp_mut(far_node).register_buffer(0x4000, 256, 0).unwrap();
+    net.issue(0, Command::put(0x1000, near, 0x4000, 64).with_tag(1));
+    net.issue(0, Command::put(0x1000, far, 0x4000, 64).with_tag(2));
+    net.run_until_idle(1_000_000).expect("PUTs complete");
+    assert_eq!(net.dnp(near_node).mem.read_slice(0x4000, 64), &payload[..]);
+    assert_eq!(net.dnp(far_node).mem.read_slice(0x4000, 64), &payload[..]);
+    let lat = |tag: u32| {
+        let t = net.pkt_of_tag(tag).expect("trace");
+        t.delivered.unwrap() - t.injected.unwrap()
+    };
+    println!(
+        "PUT of 64 words: on-chip neighbour {} cycles, cross-chip (2 SerDes hops) {} cycles",
+        lat(1),
+        lat(2)
+    );
+
+    // 3. A hybrid halo-exchange phase: the global 4×4 tile lattice, every
+    //    site exchanging with its 4 neighbours — on-chip in the mesh
+    //    interior, over SerDes at chip edges.
+    let mut net = topology::hybrid_torus_mesh(CHIPS, TILES, &cfg, 1 << 16);
+    let slots: Vec<usize> = (0..net.nodes.len()).collect();
+    traffic::setup_buffers(&mut net, &slots);
+    let plan = traffic::hybrid_halo_exchange(CHIPS, TILES, 64);
+    let msgs = plan.len();
+    let mut feeder = traffic::Feeder::new(plan);
+    let cycles = traffic::run_plan(&mut net, &mut feeder, 10_000_000).expect("halo drains");
+    let lats: Vec<f64> = net
+        .traces
+        .pkts
+        .values()
+        .filter_map(|p| Some((p.delivered? - p.injected?) as f64))
+        .collect();
+    println!(
+        "halo phase: {} messages x 64 words in {} cycles (packet latency median {:.0}, p95 {:.0})",
+        msgs,
+        cycles,
+        median(&lats),
+        percentile(&lats, 95.0)
+    );
+    assert_eq!(net.traces.delivered, msgs as u64);
+    assert_eq!(net.traces.lut_misses, 0);
+}

@@ -97,6 +97,32 @@ fn saturated_noc() -> (u64, u64, f64) {
     (flits, cycles, r.median_s)
 }
 
+/// Hybrid multi-chip system: a 2×2 chip torus of 2×2 tile meshes under
+/// hierarchical uniform-random traffic — mixed channel classes (1
+/// word/cycle mesh links, 8 cycles/word SerDes links) behind the same
+/// switches, most destinations behind a chip crossing.
+fn hybrid_uniform() -> (u64, u64, f64) {
+    let cfg = DnpConfig::hybrid();
+    let mut flits = 0u64;
+    let mut cycles = 0u64;
+    let r = wall(1, 3, || {
+        let mut net = topology::hybrid_torus_mesh([2, 2, 1], [2, 2], &cfg, 1 << 16);
+        net.traces.enabled = false;
+        let slots: Vec<usize> = (0..net.nodes.len()).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        let plan = traffic::hybrid_uniform_random([2, 2, 1], [2, 2], 24, 48, 8, 13);
+        let mut feeder = traffic::Feeder::new(plan);
+        traffic::run_plan(&mut net, &mut feeder, 10_000_000).expect("drains");
+        flits = net
+            .nodes
+            .iter()
+            .filter_map(|n| n.as_dnp().map(|d| d.fabric.flits_switched))
+            .sum();
+        cycles = net.cycle;
+    });
+    (flits, cycles, r.median_s)
+}
+
 fn halo_phase() -> (u64, u64, f64) {
     let cfg = DnpConfig::shapes_rdt();
     let mut flits = 0u64;
@@ -150,6 +176,7 @@ fn main() {
         ("torus 4x4x4 uniform", saturated_torus()),
         ("torus 4x4x4 sparse g64", sparse_torus()),
         ("MTNoC 8-tile uniform", saturated_noc()),
+        ("hybrid 2x2 chips x 2x2", hybrid_uniform()),
         ("LQCD halo x10", halo_phase()),
     ] {
         t.row(&[

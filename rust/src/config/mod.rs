@@ -209,6 +209,19 @@ impl DnpConfig {
         }
     }
 
+    /// Hybrid multi-chip render (Fig. 2, the SHAPES platform): tiles form
+    /// an on-chip 2D mesh (N=4 covers interior-tile degree), chips form an
+    /// off-chip 3D torus (M=6 covers a gateway owning all three
+    /// dimensions). Used by [`crate::topology::hybrid_torus_mesh`].
+    pub fn hybrid() -> Self {
+        Self {
+            l_ports: 2,
+            n_ports: 4,
+            m_ports: 6,
+            ..Self::base()
+        }
+    }
+
     fn base() -> Self {
         Self {
             l_ports: 2,
@@ -284,6 +297,14 @@ mod tests {
         assert_eq!((a.n_ports, a.m_ports), (1, 1));
         let b = DnpConfig::mt2d();
         assert_eq!((b.n_ports, b.m_ports), (3, 1));
+    }
+
+    #[test]
+    fn hybrid_design_point() {
+        let c = DnpConfig::hybrid();
+        assert_eq!((c.n_ports, c.m_ports), (4, 6));
+        assert!(c.vcs >= 2, "hybrid routing needs the dateline + delivery VCs");
+        c.validate().unwrap();
     }
 
     #[test]

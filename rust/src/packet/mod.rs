@@ -69,6 +69,15 @@ pub enum AddrFormat {
     Mesh2D { dims: [u32; 2] },
     /// Flat numbering (single ring / Spidergon / tables).
     Flat { n: u32 },
+    /// Hierarchical `(cx, cy, cz, tx, ty)`: a 3D torus of chips, each chip
+    /// a 2D mesh of tiles — the paper's hybrid on-chip × off-chip system
+    /// (Fig. 2, the SHAPES platform). Bit layout: 4+4+4 bits of chip
+    /// coordinates (up to 16 chips per dimension), 3+3 bits of tile
+    /// coordinates (up to 8 tiles per dimension) = the full 18 bits.
+    Hybrid {
+        chip_dims: [u32; 3],
+        tile_dims: [u32; 2],
+    },
 }
 
 impl AddrFormat {
@@ -79,6 +88,9 @@ impl AddrFormat {
             AddrFormat::Torus3DLocal { dims, local } => dims.iter().product::<u32>() * local,
             AddrFormat::Mesh2D { dims } => dims.iter().product(),
             AddrFormat::Flat { n } => n,
+            AddrFormat::Hybrid { chip_dims, tile_dims } => {
+                chip_dims.iter().product::<u32>() * tile_dims.iter().product::<u32>()
+            }
         }
     }
 
@@ -110,6 +122,21 @@ impl AddrFormat {
                 debug_assert!(coords[0] < n);
                 DnpAddr::new(coords[0])
             }
+            AddrFormat::Hybrid { chip_dims, tile_dims } => {
+                debug_assert_eq!(coords.len(), 5);
+                debug_assert!(chip_dims.iter().all(|&d| d <= 16));
+                debug_assert!(tile_dims.iter().all(|&d| d <= 8));
+                debug_assert!(coords[..3].iter().zip(chip_dims.iter()).all(|(c, d)| c < d));
+                debug_assert!(coords[3..].iter().zip(tile_dims.iter()).all(|(c, d)| c < d));
+                // 4+4+4 bits chip torus, 3+3 bits on-chip tile mesh.
+                DnpAddr::new(
+                    coords[0]
+                        | (coords[1] << 4)
+                        | (coords[2] << 8)
+                        | (coords[3] << 12)
+                        | (coords[4] << 15),
+                )
+            }
         }
     }
 
@@ -125,8 +152,25 @@ impl AddrFormat {
             }
             AddrFormat::Mesh2D { .. } => vec![a & 0x1FF, (a >> 9) & 0x1FF],
             AddrFormat::Flat { .. } => vec![a],
+            AddrFormat::Hybrid { .. } => hybrid_split(addr).to_vec(),
         }
     }
+}
+
+/// Allocation-free decode of the fixed [`AddrFormat::Hybrid`] bit layout
+/// (4+4+4 chip bits, 3+3 tile bits) into `[cx, cy, cz, tx, ty]`. The
+/// hierarchical router decodes per head-flit hop, so this must not
+/// heap-allocate; `AddrFormat::decode` delegates to it for consistency.
+#[inline]
+pub fn hybrid_split(addr: DnpAddr) -> [u32; 5] {
+    let a = addr.raw();
+    [
+        a & 0xF,
+        (a >> 4) & 0xF,
+        (a >> 8) & 0xF,
+        (a >> 12) & 0x7,
+        (a >> 15) & 0x7,
+    ]
 }
 
 /// RDMA operation carried by a packet (paper Sec. II-A).
@@ -347,6 +391,32 @@ mod tests {
         let a = f.encode(&[3, 1, 2, 7]);
         assert_eq!(f.decode(a), vec![3, 1, 2, 7]);
         assert_eq!(f.node_count(), 4 * 4 * 4 * 8);
+    }
+
+    #[test]
+    fn addr_roundtrip_hybrid() {
+        let f = AddrFormat::Hybrid { chip_dims: [4, 3, 2], tile_dims: [2, 2] };
+        assert_eq!(f.node_count(), 4 * 3 * 2 * 2 * 2);
+        for cx in 0..4 {
+            for cy in 0..3 {
+                for cz in 0..2 {
+                    for tx in 0..2 {
+                        for ty in 0..2 {
+                            let a = f.encode(&[cx, cy, cz, tx, ty]);
+                            assert_eq!(f.decode(a), vec![cx, cy, cz, tx, ty]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn addr_hybrid_max_fits_18_bits() {
+        let f = AddrFormat::Hybrid { chip_dims: [16, 16, 16], tile_dims: [8, 8] };
+        let a = f.encode(&[15, 15, 15, 7, 7]);
+        assert_eq!(a.raw() & !ADDR_MASK, 0);
+        assert_eq!(f.decode(a), vec![15, 15, 15, 7, 7]);
     }
 
     #[test]

@@ -1,0 +1,301 @@
+//! Two-level hierarchical routing for the hybrid multi-chip system
+//! (paper Fig. 2: multi-tile chips joined by a 3D SerDes torus, tiles
+//! joined by the DNP on-chip ports inside each chip).
+//!
+//! A packet from tile `(sc, st)` to tile `(dc, dt)` travels in phases:
+//!
+//! 1. **source / transit chip, chip coordinates differ** — the chip
+//!    coordinates are consumed first, in the configured priority order,
+//!    exactly like [`TorusRouter`](super::TorusRouter): the packet mesh-
+//!    routes (XY, VC 0) to the gateway tile owning the next dimension's
+//!    off-chip ports, then crosses the SerDes link with the stateless
+//!    dateline VC scheme (VC 1 escape on and after the wrap link);
+//! 2. **destination chip** — the packet arrived off-chip at a gateway and
+//!    mesh-routes (XY) to the destination tile on VC 1.
+//!
+//! Deadlock freedom: the chip-level rings are broken by the dateline
+//! scheme, the dimension order makes inter-ring dependencies acyclic
+//! (mesh segments between gateways only ever connect a ring to a
+//! *later*-priority ring), and the delivery-phase mesh hops ride VC 1, so
+//! a packet draining into its destination chip never waits on an off-chip
+//! credit — the classic hierarchical-network cycle through a shared
+//! intra-group network (cf. Dragonfly VC escalation) cannot close.
+//! Intra-chip traffic stays on VC 0 and terminates locally.
+//!
+//! Gateway assignment: chip dimension `d` is owned by the tile with
+//! row-major index `d % (TX*TY)`, which owns both its `+` and `-`
+//! off-chip ports. Physical ports are compacted per tile: on-chip mesh
+//! links occupy ports `0..degree` in direction order `[X+, X-, Y+, Y-]`
+//! (as in [`mesh2d_chip`](crate::topology::mesh2d_chip)); off-chip links
+//! occupy `N + 2*k + dir` for the `k`-th owned dimension.
+
+use super::torus::Dir;
+use super::{Decision, OutSel, Router};
+use crate::config::RouteOrder;
+use crate::packet::{hybrid_split, DnpAddr};
+
+/// Row-major tile index of the gateway owning chip dimension `dim`.
+pub fn gateway_tile(tile_dims: [u32; 2], dim: usize) -> [u32; 2] {
+    let n = tile_dims[0] * tile_dims[1];
+    let g = dim as u32 % n;
+    [g % tile_dims[0], g / tile_dims[0]]
+}
+
+/// Per-node hierarchical router for the hybrid torus-of-meshes.
+#[derive(Debug, Clone)]
+pub struct HierRouter {
+    my_chip: [u32; 3],
+    my_tile: [u32; 2],
+    chip_dims: [u32; 3],
+    order: RouteOrder,
+    /// Mesh direction (0:X+, 1:X-, 2:Y+, 3:Y-) → physical on-chip port of
+    /// this tile (`None` where the mesh border leaves the link unwired).
+    mesh_ports: [Option<usize>; 4],
+    /// `(dim, ±)` → physical off-chip port; `Some` only on the gateway
+    /// tile owning that dimension.
+    offchip_ports: [[Option<usize>; 2]; 3],
+    /// Chip dimension → tile coordinates of its gateway.
+    gateways: [[u32; 2]; 3],
+}
+
+impl HierRouter {
+    pub fn new(
+        me: DnpAddr,
+        chip_dims: [u32; 3],
+        tile_dims: [u32; 2],
+        order: RouteOrder,
+        mesh_ports: [Option<usize>; 4],
+        offchip_ports: [[Option<usize>; 2]; 3],
+    ) -> Self {
+        let c = hybrid_split(me);
+        Self {
+            my_chip: [c[0], c[1], c[2]],
+            my_tile: [c[3], c[4]],
+            chip_dims,
+            order,
+            mesh_ports,
+            offchip_ports,
+            gateways: [
+                gateway_tile(tile_dims, 0),
+                gateway_tile(tile_dims, 1),
+                gateway_tile(tile_dims, 2),
+            ],
+        }
+    }
+
+    /// Minimal-path direction along chip ring `dim` toward coordinate
+    /// `to`; ties break toward Plus (as in `TorusRouter`).
+    fn ring_step(&self, dim: usize, to: u32) -> Option<Dir> {
+        let k = self.chip_dims[dim];
+        let from = self.my_chip[dim];
+        if from == to {
+            return None;
+        }
+        let fwd = (to + k - from) % k;
+        let bwd = (from + k - to) % k;
+        if fwd <= bwd {
+            Some(Dir::Plus)
+        } else {
+            Some(Dir::Minus)
+        }
+    }
+
+    fn crosses_dateline(&self, dim: usize, dir: Dir) -> bool {
+        let k = self.chip_dims[dim];
+        match dir {
+            Dir::Plus => self.my_chip[dim] == k - 1,
+            Dir::Minus => self.my_chip[dim] == 0,
+        }
+    }
+
+    /// One XY hop toward `target` inside this chip, on `vc`; Local when
+    /// already there.
+    fn mesh_toward(&self, target: [u32; 2], vc: u8) -> Decision {
+        for dim in 0..2 {
+            if target[dim] != self.my_tile[dim] {
+                let minus = target[dim] < self.my_tile[dim];
+                let p = self.mesh_ports[dim * 2 + usize::from(minus)]
+                    .expect("XY route uses an existing on-chip link");
+                return Decision { out: OutSel::Port(p), vc };
+            }
+        }
+        Decision { out: OutSel::Local, vc: 0 }
+    }
+}
+
+impl Router for HierRouter {
+    fn decide(&self, src: DnpAddr, dst: DnpAddr, _cur_vc: u8) -> Decision {
+        // Allocation-free decodes: this runs per head-flit hop (§Perf).
+        let d = hybrid_split(dst);
+        let dchip = [d[0], d[1], d[2]];
+        if dchip == self.my_chip {
+            // Destination chip: deliver on-chip. Packets that crossed a
+            // chip boundary switch to the VC-1 delivery class (see module
+            // docs); purely intra-chip traffic stays on VC 0.
+            let s = hybrid_split(src);
+            let vc = u8::from([s[0], s[1], s[2]] != self.my_chip);
+            return self.mesh_toward([d[3], d[4]], vc);
+        }
+        // Chip coordinates first, in priority order (Sec. III-A).
+        for &dim in &self.order.0 {
+            let Some(dir) = self.ring_step(dim, dchip[dim]) else {
+                continue;
+            };
+            let gw = self.gateways[dim];
+            if gw != self.my_tile {
+                // Walk to the gateway owning this dimension (VC 0).
+                return self.mesh_toward(gw, 0);
+            }
+            // At the gateway: cross the SerDes link. Dateline scheme,
+            // stateless exactly as in `TorusRouter`: chip-DOR never
+            // revisits an earlier ring, so the entry coordinate of the
+            // current ring equals the source's. (`src` is decoded only on
+            // this arm — the mesh-walk majority of hops skips it.)
+            let s = hybrid_split(src);
+            let wrapped_already = match dir {
+                Dir::Plus => self.my_chip[dim] < s[dim],
+                Dir::Minus => self.my_chip[dim] > s[dim],
+            };
+            let vc = u8::from(wrapped_already || self.crosses_dateline(dim, dir));
+            let p = self.offchip_ports[dim][usize::from(dir == Dir::Minus)]
+                .expect("gateway tile owns this dimension's off-chip ports");
+            return Decision { out: OutSel::Port(p), vc };
+        }
+        unreachable!("all chip coordinates equal was handled above")
+    }
+
+    fn min_vcs(&self) -> usize {
+        // Dateline escape + VC-1 delivery class once any chip ring exists.
+        if self.chip_dims.iter().any(|&k| k > 1) {
+            2
+        } else {
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packet::AddrFormat;
+
+    const CHIPS: [u32; 3] = [4, 2, 1];
+    const TILES: [u32; 2] = [2, 2];
+
+    fn fmt() -> AddrFormat {
+        AddrFormat::Hybrid { chip_dims: CHIPS, tile_dims: TILES }
+    }
+
+    /// Build the router of one tile with the canonical compact port maps
+    /// the `hybrid_torus_mesh` builder produces (N=4 mesh slots in
+    /// direction order over existing links, off-chip block after them).
+    fn router_at(chip: [u32; 3], tile: [u32; 2]) -> HierRouter {
+        let mut mesh_ports = [None; 4];
+        let mut deg = 0;
+        let exists = |d: usize| match d {
+            0 => tile[0] + 1 < TILES[0],
+            1 => tile[0] > 0,
+            2 => tile[1] + 1 < TILES[1],
+            _ => tile[1] > 0,
+        };
+        for d in 0..4 {
+            if exists(d) {
+                mesh_ports[d] = Some(deg);
+                deg += 1;
+            }
+        }
+        let n_ports = 4;
+        let mut offchip_ports = [[None; 2]; 3];
+        let mut owned = 0;
+        for dim in 0..3 {
+            if CHIPS[dim] >= 2 && gateway_tile(TILES, dim) == tile {
+                offchip_ports[dim] = [Some(n_ports + 2 * owned), Some(n_ports + 2 * owned + 1)];
+                owned += 1;
+            }
+        }
+        HierRouter::new(
+            fmt().encode(&[chip[0], chip[1], chip[2], tile[0], tile[1]]),
+            CHIPS,
+            TILES,
+            RouteOrder::XYZ,
+            mesh_ports,
+            offchip_ports,
+        )
+    }
+
+    #[test]
+    fn local_delivery_at_destination_tile() {
+        let r = router_at([1, 1, 0], [1, 0]);
+        let a = fmt().encode(&[1, 1, 0, 1, 0]);
+        assert_eq!(r.decide(a, a, 0).out, OutSel::Local);
+    }
+
+    #[test]
+    fn intra_chip_is_xy_on_vc0() {
+        let r = router_at([2, 0, 0], [0, 0]);
+        let src = fmt().encode(&[2, 0, 0, 0, 0]);
+        let dst = fmt().encode(&[2, 0, 0, 1, 1]);
+        let d = r.decide(src, dst, 0);
+        // X first: port of direction X+ at tile (0,0) is 0.
+        assert_eq!(d.out, OutSel::Port(0));
+        assert_eq!(d.vc, 0);
+    }
+
+    #[test]
+    fn gateway_emits_offchip_port_for_first_differing_dim() {
+        // Dim 0 gateway is tile (0,0); from chip x=0 to x=1, Plus.
+        let r = router_at([0, 0, 0], [0, 0]);
+        let src = fmt().encode(&[0, 0, 0, 0, 0]);
+        let dst = fmt().encode(&[1, 0, 0, 1, 1]);
+        let d = r.decide(src, dst, 0);
+        // Tile (0,0) has mesh degree 2 (X+, Y+), so its dim-0 Plus port
+        // sits at n_ports + 0 = 4.
+        assert_eq!(d.out, OutSel::Port(4));
+        assert_eq!(d.vc, 0, "no wrap: stays on VC 0");
+    }
+
+    #[test]
+    fn non_gateway_walks_to_the_owning_gateway() {
+        // Dim 1 gateway is tile (1,0); a packet at tile (0,1) needing a
+        // dim-1 hop must first mesh-route toward (1,0): X first.
+        let r = router_at([0, 0, 0], [0, 1]);
+        let src = fmt().encode(&[0, 0, 0, 0, 1]);
+        let dst = fmt().encode(&[0, 1, 0, 0, 0]);
+        let d = r.decide(src, dst, 0);
+        // Tile (0,1): directions X+ and Y- exist → ports [Some(0), None,
+        // None, Some(1)]; X+ is port 0.
+        assert_eq!(d.out, OutSel::Port(0));
+        assert_eq!(d.vc, 0);
+    }
+
+    #[test]
+    fn dateline_vc_switch_on_chip_wrap() {
+        // Chip x=3 → x=0 going Plus crosses the wrap: VC 1.
+        let r = router_at([3, 0, 0], [0, 0]);
+        let src = fmt().encode(&[3, 0, 0, 0, 0]);
+        let dst = fmt().encode(&[0, 0, 0, 0, 0]);
+        assert_eq!(r.decide(src, dst, 0).vc, 1);
+        // Past the wrap (src x=3, now at x=0, still going Plus): stays
+        // on the escape VC.
+        let r = router_at([0, 0, 0], [0, 0]);
+        let dst = fmt().encode(&[1, 0, 0, 0, 0]);
+        assert_eq!(r.decide(src, dst, 0).vc, 1);
+    }
+
+    #[test]
+    fn delivery_phase_rides_vc1() {
+        // Packet from another chip, now in the destination chip at the
+        // dim-0 gateway, heading for tile (1,1): mesh hops use VC 1.
+        let r = router_at([2, 1, 0], [0, 0]);
+        let src = fmt().encode(&[0, 0, 0, 0, 0]);
+        let dst = fmt().encode(&[2, 1, 0, 1, 1]);
+        let d = r.decide(src, dst, 0);
+        assert_eq!(d.out, OutSel::Port(0)); // X+ first
+        assert_eq!(d.vc, 1);
+    }
+
+    #[test]
+    fn min_vcs_two_with_chip_rings() {
+        assert_eq!(router_at([0, 0, 0], [0, 0]).min_vcs(), 2);
+    }
+}

@@ -12,14 +12,19 @@
 //! * [`mesh::MeshRouter`] — XY routing for the MT2D on-chip 2D mesh.
 //! * [`spidergon::SpidergonRouter`] — Across-First routing on the
 //!   ST-Spidergon NoC topology.
+//! * [`hier::HierRouter`] — two-level routing for the hybrid multi-chip
+//!   system (chip-torus DOR over off-chip ports, then mesh XY inside the
+//!   destination chip — paper Fig. 2).
 //! * [`table::TableRouter`] — fully general table-driven routing (used by
 //!   the fault-tolerance extension to install recomputed routes).
 
+pub mod hier;
 pub mod mesh;
 pub mod spidergon;
 pub mod table;
 pub mod torus;
 
+pub use hier::HierRouter;
 pub use mesh::MeshRouter;
 pub use spidergon::{spidergon_neighbor, SpidergonRouter};
 pub use table::TableRouter;

@@ -9,6 +9,10 @@
 //!   mesh.
 //! * [`spidergon_chip`] — the MTNoC exploration (Fig. 7a): one chip whose
 //!   tiles hang off an ST-Spidergon NoC through the DNI.
+//! * [`hybrid_torus_mesh`] — the full SHAPES platform composition
+//!   (Fig. 2): a 3D torus of chips over off-chip SerDes links, each chip
+//!   a 2D mesh of tiles over on-chip links, one DNP per tile serving both
+//!   regimes at once.
 //! * [`two_tiles_offchip`] / [`ring_offchip`] — micro-benchmark fixtures
 //!   for the single/multi-hop latency experiments (Figs. 9-11).
 
@@ -19,8 +23,8 @@ use crate::packet::{AddrFormat, DnpAddr};
 use crate::phy::{dni_channel, noc_channel, offchip_channel, onchip_channel};
 use crate::rdma::EVENT_WORDS;
 use crate::route::{
-    mesh::mesh_port, spidergon_neighbor, Decision, MeshRouter, OutSel, Router, TableRouter,
-    TorusRouter,
+    hier::gateway_tile, mesh::mesh_port, spidergon_neighbor, Decision, HierRouter, MeshRouter,
+    OutSel, Router, TableRouter, TorusRouter,
 };
 use crate::sim::channel::{Channel, ChannelId};
 use crate::sim::Net;
@@ -138,6 +142,71 @@ pub fn two_tiles_onchip(cfg: &DnpConfig, mem_words: usize) -> Net {
     mesh2d_chip([2, 1], cfg, mem_words)
 }
 
+/// Step from tile `t` in mesh direction `d` (0:X+, 1:X-, 2:Y+, 3:Y-) on a
+/// `dims` 2D mesh; `None` when the step would leave the mesh.
+fn mesh_step(dims: [u32; 2], t: [u32; 2], d: usize) -> Option<[u32; 2]> {
+    let mut v = t;
+    match d {
+        0 if t[0] + 1 < dims[0] => v[0] += 1,
+        1 if t[0] > 0 => v[0] -= 1,
+        2 if t[1] + 1 < dims[1] => v[1] += 1,
+        3 if t[1] > 0 => v[1] -= 1,
+        _ => return None,
+    }
+    Some(v)
+}
+
+/// Per-tile physical-port map of a `dims` 2D mesh: directions in order
+/// [X+, X-, Y+, Y-] over the links that exist, compacted onto on-chip
+/// ports `0..degree` (row-major tile indexing). Panics when a tile's
+/// degree exceeds `n_ports` — shared by [`mesh2d_chip`] (one chip) and
+/// [`hybrid_torus_mesh`] (every chip).
+fn mesh_port_map(dims: [u32; 2], n_ports: usize) -> Vec<[Option<usize>; 4]> {
+    let n = (dims[0] * dims[1]) as usize;
+    let mut map = vec![[None::<usize>; 4]; n];
+    for (t, ports) in map.iter_mut().enumerate() {
+        let tc = [t as u32 % dims[0], t as u32 / dims[0]];
+        let mut degree = 0;
+        for d in 0..4 {
+            if mesh_step(dims, tc, d).is_some() {
+                ports[d] = Some(degree);
+                degree += 1;
+            }
+        }
+        assert!(
+            degree <= n_ports,
+            "tile degree {degree} exceeds N={n_ports} on-chip ports"
+        );
+    }
+    map
+}
+
+/// Wire one `dims` 2D mesh of directed on-chip channels; returns the
+/// per-tile direction-indexed (in, out) channel tables (row-major tiles).
+#[allow(clippy::type_complexity)]
+fn wire_mesh2d(
+    net: &mut Net,
+    dims: [u32; 2],
+    cfg: &DnpConfig,
+) -> (Vec<[Option<ChannelId>; 4]>, Vec<[Option<ChannelId>; 4]>) {
+    let n = (dims[0] * dims[1]) as usize;
+    let idx = |c: [u32; 2]| -> usize { (c[0] + c[1] * dims[0]) as usize };
+    let mut out_ch = vec![[None::<ChannelId>; 4]; n];
+    let mut in_ch = vec![[None::<ChannelId>; 4]; n];
+    for t in 0..n {
+        let tc = [t as u32 % dims[0], t as u32 / dims[0]];
+        for d in 0..4 {
+            if let Some(v) = mesh_step(dims, tc, d) {
+                let back = [1, 0, 3, 2][d];
+                let ch = net.chans.add(onchip_channel(cfg));
+                out_ch[t][d] = Some(ch);
+                in_ch[idx(v)][back] = Some(ch);
+            }
+        }
+    }
+    (in_ch, out_ch)
+}
+
 /// MT2D (Fig. 7b): tiles joined point-to-point into an on-chip 2D mesh by
 /// their DNP on-chip ports. Physical ports are assigned per node in
 /// direction order [X+, X-, Y+, Y-] over the directions that exist, so a
@@ -146,59 +215,10 @@ pub fn mesh2d_chip(dims: [u32; 2], cfg: &DnpConfig, mem_words: usize) -> Net {
     let fmt = AddrFormat::Mesh2D { dims };
     let n = (dims[0] * dims[1]) as usize;
     let mut net = Net::new();
-    let idx = |c: [u32; 2]| -> usize { (c[0] + c[1] * dims[0]) as usize };
     let coords = |i: usize| -> [u32; 2] { [i as u32 % dims[0], i as u32 / dims[0]] };
 
-    // Per-node: map direction (0:X+, 1:X-, 2:Y+, 3:Y-) to physical port.
-    let dir_of = |c: [u32; 2], d: usize| -> Option<[u32; 2]> {
-        let mut t = c;
-        match d {
-            0 if c[0] + 1 < dims[0] => t[0] += 1,
-            1 if c[0] > 0 => t[0] -= 1,
-            2 if c[1] + 1 < dims[1] => t[1] += 1,
-            3 if c[1] > 0 => t[1] -= 1,
-            _ => return None,
-        }
-        Some(t)
-    };
-    let mut port_of = vec![[None::<usize>; 4]; n];
-    let mut degree = vec![0usize; n];
-    for u in 0..n {
-        let c = coords(u);
-        for d in 0..4 {
-            if dir_of(c, d).is_some() {
-                port_of[u][d] = Some(degree[u]);
-                degree[u] += 1;
-            }
-        }
-        assert!(
-            degree[u] <= cfg.n_ports,
-            "node degree {} exceeds N={} on-chip ports",
-            degree[u],
-            cfg.n_ports
-        );
-    }
-
-    // One on-chip channel per directed link.
-    let mut out_ch = vec![[None::<ChannelId>; 4]; n];
-    let mut in_ch = vec![[None::<ChannelId>; 4]; n];
-    for u in 0..n {
-        let c = coords(u);
-        for d in 0..4 {
-            if let Some(vcoord) = dir_of(c, d) {
-                let v = idx(vcoord);
-                let back = match d {
-                    0 => 1,
-                    1 => 0,
-                    2 => 3,
-                    _ => 2,
-                };
-                let ch = net.chans.add(onchip_channel(cfg));
-                out_ch[u][d] = Some(ch);
-                in_ch[v][back] = Some(ch);
-            }
-        }
-    }
+    let port_of = mesh_port_map(dims, cfg.n_ports);
+    let (in_ch, out_ch) = wire_mesh2d(&mut net, dims, cfg);
 
     for u in 0..n {
         let c = coords(u);
@@ -246,6 +266,179 @@ pub fn mesh2d_chip(dims: [u32; 2], cfg: &DnpConfig, mem_words: usize) -> Net {
             cq_base(cfg, mem_words),
         );
         net.add_dnp(node);
+    }
+    net
+}
+
+/// Hybrid multi-chip system (paper Fig. 2): `chip_dims` chips on an
+/// off-chip 3D SerDes torus, each chip a `tile_dims` on-chip 2D mesh of
+/// tiles — one DNP per tile serving both regimes through the same switch.
+///
+/// Node index = `chip * T + tile` with `chip = cx + cy*CX + cz*CX*CY` and
+/// `tile = tx + ty*TX`; addresses use the 18-bit hierarchical
+/// [`AddrFormat::Hybrid`] encoding. Every tile owns its on-chip mesh
+/// links (physical ports `0..degree` in direction order `[X+, X-, Y+,
+/// Y-]`, as in [`mesh2d_chip`]); chip dimension `d` is owned by the
+/// *gateway* tile with row-major index `d % T`, which carries that
+/// dimension's two off-chip SerDes links on ports `N + 2k`/`N + 2k + 1`
+/// (`k` = rank among the dimensions it owns). Routing is the two-level
+/// [`HierRouter`]: chip-torus DOR with the dateline VC scheme, then mesh
+/// XY inside the destination chip on the VC-1 delivery class.
+pub fn hybrid_torus_mesh(
+    chip_dims: [u32; 3],
+    tile_dims: [u32; 2],
+    cfg: &DnpConfig,
+    mem_words: usize,
+) -> Net {
+    assert!(
+        chip_dims.iter().all(|&d| (1..=16).contains(&d)),
+        "chip dims must be 1..=16 (4-bit coordinate fields)"
+    );
+    assert!(
+        tile_dims.iter().all(|&d| (1..=8).contains(&d)),
+        "tile dims must be 1..=8 (3-bit coordinate fields)"
+    );
+    assert!(
+        cfg.vcs >= 2,
+        "hybrid routing needs >= 2 VCs (dateline escape + delivery class)"
+    );
+    let fmt = AddrFormat::Hybrid { chip_dims, tile_dims };
+    let nchips = chip_dims.iter().product::<u32>() as usize;
+    let ntiles = (tile_dims[0] * tile_dims[1]) as usize;
+    let n = nchips * ntiles;
+    let base = cfg.n_ports; // off-chip port block starts after on-chip
+
+    let chip_idx = |c: [u32; 3]| -> usize {
+        (c[0] + c[1] * chip_dims[0] + c[2] * chip_dims[0] * chip_dims[1]) as usize
+    };
+    let chip_coords = |i: usize| -> [u32; 3] {
+        let i = i as u32;
+        [
+            i % chip_dims[0],
+            (i / chip_dims[0]) % chip_dims[1],
+            i / (chip_dims[0] * chip_dims[1]),
+        ]
+    };
+    let tile_idx = |t: [u32; 2]| -> usize { (t[0] + t[1] * tile_dims[0]) as usize };
+    let tile_coords = |i: usize| -> [u32; 2] { [i as u32 % tile_dims[0], i as u32 / tile_dims[0]] };
+
+    // --- Per-tile physical port maps (identical in every chip).
+    // Mesh links: the same [X+, X-, Y+, Y-] compaction as `mesh2d_chip`.
+    let mesh_port_of = mesh_port_map(tile_dims, cfg.n_ports);
+    // Off-chip links: the gateway of chip dimension `dim` owns its ± port
+    // pair, compacted onto the off-chip block after any dimensions it
+    // already owns.
+    let mut off_port_of = vec![[[None::<usize>; 2]; 3]; ntiles];
+    let mut owned = vec![0usize; ntiles];
+    for dim in 0..3 {
+        if chip_dims[dim] < 2 {
+            continue; // degenerate ring: no links, no gateway
+        }
+        let g = tile_idx(gateway_tile(tile_dims, dim));
+        off_port_of[g][dim] = [Some(base + 2 * owned[g]), Some(base + 2 * owned[g] + 1)];
+        owned[g] += 1;
+        assert!(
+            2 * owned[g] <= cfg.m_ports,
+            "gateway tile {} owns {} torus dimensions but M={} off-chip ports",
+            g,
+            owned[g],
+            cfg.m_ports
+        );
+    }
+
+    let mut net = Net::new();
+
+    // --- On-chip mesh channels, one per directed link, per chip.
+    let mut mesh_out = vec![[None::<ChannelId>; 4]; n];
+    let mut mesh_in = vec![[None::<ChannelId>; 4]; n];
+    for chip in 0..nchips {
+        let (in_ch, out_ch) = wire_mesh2d(&mut net, tile_dims, cfg);
+        for t in 0..ntiles {
+            mesh_in[chip * ntiles + t] = in_ch[t];
+            mesh_out[chip * ntiles + t] = out_ch[t];
+        }
+    }
+
+    // --- Off-chip SerDes channels: gateway tile of `dim` in chip u to the
+    // gateway tile of `dim` in the ±neighbour chip.
+    let mut off_out = vec![[None::<ChannelId>; 6]; n];
+    let mut off_in = vec![[None::<ChannelId>; 6]; n];
+    for chip in 0..nchips {
+        let cc = chip_coords(chip);
+        for dim in 0..3 {
+            if chip_dims[dim] < 2 {
+                continue;
+            }
+            let g = tile_idx(gateway_tile(tile_dims, dim));
+            for (d, step) in [(0usize, 1u32), (1, chip_dims[dim] - 1)] {
+                let mut nc = cc;
+                nc[dim] = (cc[dim] + step) % chip_dims[dim];
+                let u = chip * ntiles + g;
+                let v = chip_idx(nc) * ntiles + g;
+                let seed = (chip * 6 + dim * 2 + d) as u64 + 0x417B_5EED;
+                let ch = net.chans.add(offchip_channel(cfg, seed));
+                off_out[u][dim * 2 + d] = Some(ch);
+                off_in[v][dim * 2 + (1 - d)] = Some(ch);
+            }
+        }
+    }
+
+    // --- Nodes, in chip-major order (node index = chip * T + tile).
+    for chip in 0..nchips {
+        let cc = chip_coords(chip);
+        for t in 0..ntiles {
+            let tc = tile_coords(t);
+            let u = chip * ntiles + t;
+            let addr = fmt.encode(&[cc[0], cc[1], cc[2], tc[0], tc[1]]);
+            let mut by_port_in = vec![None; cfg.inter_ports()];
+            let mut by_port_out = vec![None; cfg.inter_ports()];
+            for d in 0..4 {
+                if let Some(p) = mesh_port_of[t][d] {
+                    by_port_in[p] = mesh_in[u][d];
+                    by_port_out[p] = mesh_out[u][d];
+                }
+            }
+            for dim in 0..3 {
+                for d in 0..2 {
+                    if let Some(p) = off_port_of[t][dim][d] {
+                        by_port_in[p] = off_in[u][dim * 2 + d];
+                        by_port_out[p] = off_out[u][dim * 2 + d];
+                    }
+                }
+            }
+            let mut ins = Vec::with_capacity(cfg.inter_ports());
+            let mut outs = Vec::with_capacity(cfg.inter_ports());
+            for p in 0..cfg.inter_ports() {
+                ins.push(by_port_in[p].unwrap_or_else(|| dangling(&mut net, cfg)));
+                outs.push(by_port_out[p].unwrap_or_else(|| dangling(&mut net, cfg)));
+            }
+            let mesh_ports = mesh_port_of[t];
+            let off_ports = off_port_of[t];
+            let router = Box::new(HierRouter::new(
+                addr,
+                chip_dims,
+                tile_dims,
+                cfg.route_order,
+                mesh_ports,
+                off_ports,
+            ));
+            let mut node = DnpNode::new(
+                addr,
+                cfg.clone(),
+                router,
+                ins,
+                outs,
+                mem_words,
+                cq_base(cfg, mem_words),
+            );
+            // Run-time route-priority rewrites reorder the chip DOR.
+            node.set_router_factory(Box::new(move |order: RouteOrder| {
+                Box::new(HierRouter::new(
+                    addr, chip_dims, tile_dims, order, mesh_ports, off_ports,
+                )) as Box<dyn Router>
+            }));
+            net.add_dnp(node);
+        }
     }
     net
 }
@@ -400,5 +593,69 @@ mod tests {
     fn torus_requires_six_offchip_ports() {
         let cfg = DnpConfig::mtnoc(); // M = 1
         torus3d([2, 2, 2], &cfg, 1 << 12);
+    }
+
+    #[test]
+    fn hybrid_2x2x1_of_2x2_has_16_dnps() {
+        let cfg = DnpConfig::hybrid();
+        let net = hybrid_torus_mesh([2, 2, 1], [2, 2], &cfg, 1 << 12);
+        assert_eq!(net.nodes.len(), 16);
+        assert!(net.nodes.iter().all(|n| n.as_dnp().is_some()));
+    }
+
+    #[test]
+    fn hybrid_addresses_match_chip_major_order() {
+        let cfg = DnpConfig::hybrid();
+        let net = hybrid_torus_mesh([2, 2, 1], [2, 2], &cfg, 1 << 12);
+        let fmt = AddrFormat::Hybrid { chip_dims: [2, 2, 1], tile_dims: [2, 2] };
+        for (i, node) in net.nodes.iter().enumerate() {
+            let c = fmt.decode(node.as_dnp().unwrap().addr);
+            let chip = c[0] + c[1] * 2 + c[2] * 4;
+            let tile = c[3] + c[4] * 2;
+            assert_eq!(i as u32, chip * 4 + tile, "node order mismatch");
+            // Pin the builder's layout to the traffic-side helpers: the
+            // generators and tests derive addresses through these, so the
+            // two implementations must never drift apart.
+            assert_eq!(
+                c,
+                crate::traffic::hybrid_coords([2, 2, 1], [2, 2], i).to_vec(),
+                "builder layout diverged from traffic::hybrid_coords"
+            );
+            assert_eq!(
+                i,
+                crate::traffic::hybrid_node_index(
+                    [2, 2, 1],
+                    [2, 2],
+                    [c[0], c[1], c[2]],
+                    [c[3], c[4]],
+                ),
+                "builder layout diverged from traffic::hybrid_node_index"
+            );
+        }
+    }
+
+    #[test]
+    fn hybrid_single_tile_chips_degenerate_to_torus() {
+        // tile_dims [1,1]: the lone tile is gateway for every dimension —
+        // needs M >= 6 but no on-chip ports.
+        let cfg = DnpConfig::shapes_rdt(); // N=1, M=6
+        let net = hybrid_torus_mesh([2, 2, 2], [1, 1], &cfg, 1 << 12);
+        assert_eq!(net.nodes.len(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "off-chip ports")]
+    fn hybrid_rejects_gateway_port_overflow() {
+        // Single tile owning 3 dimensions with M=1 must be rejected.
+        let cfg = DnpConfig::mtnoc(); // N=1, M=1
+        hybrid_torus_mesh([2, 2, 2], [1, 1], &cfg, 1 << 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds N=")]
+    fn hybrid_rejects_mesh_degree_overflow() {
+        // A 3×3 tile mesh has a degree-4 center tile: N=1 must be rejected.
+        let cfg = DnpConfig::shapes_rdt();
+        hybrid_torus_mesh([2, 1, 1], [3, 3], &cfg, 1 << 12);
     }
 }

@@ -158,14 +158,18 @@ pub fn uniform_random(
     mean_gap: u64,
     seed: u64,
 ) -> Vec<Planned> {
+    // Hard assert: the re-draw loop below would spin forever on one node.
+    assert!(nodes.len() >= 2, "uniform_random needs at least two nodes");
     let mut rng = SplitMix64::new(seed);
     let mut plan = Vec::new();
     for (slot, &(node, _)) in nodes.iter().enumerate() {
         let mut t = 0u64;
         for i in 0..count {
+            // Re-draw on self-hits: remapping `slot` to a fixed neighbour
+            // would give that neighbour twice the traffic probability.
             let mut peer = rng.below(nodes.len() as u64) as usize;
-            if peer == slot {
-                peer = (peer + 1) % nodes.len();
+            while peer == slot {
+                peer = rng.below(nodes.len() as u64) as usize;
             }
             let (_, dst_addr) = nodes[peer];
             t += 1 + rng.below(mean_gap.max(1) * 2);
@@ -214,6 +218,113 @@ pub fn halo_exchange_3d(dims: [u32; 3], len: u32) -> Vec<Planned> {
                         .with_tag((node * 8 + tag) as u32),
                 });
                 tag += 1;
+            }
+        }
+    }
+    plan
+}
+
+/// Node index of chip `c` / tile `t` under the
+/// [`hybrid_torus_mesh`](crate::topology::hybrid_torus_mesh) layout
+/// (chip-major, row-major within both levels).
+pub fn hybrid_node_index(
+    chip_dims: [u32; 3],
+    tile_dims: [u32; 2],
+    c: [u32; 3],
+    t: [u32; 2],
+) -> usize {
+    let chip = c[0] + c[1] * chip_dims[0] + c[2] * chip_dims[0] * chip_dims[1];
+    let tile = t[0] + t[1] * tile_dims[0];
+    (chip * tile_dims[0] * tile_dims[1] + tile) as usize
+}
+
+/// Inverse of [`hybrid_node_index`]: the `[cx, cy, cz, tx, ty]` encode
+/// coordinates of node `i` — the single source of the chip-major layout
+/// for traffic generation and tests.
+pub fn hybrid_coords(chip_dims: [u32; 3], tile_dims: [u32; 2], i: usize) -> [u32; 5] {
+    let tiles = tile_dims[0] * tile_dims[1];
+    let (chip, tile) = (i as u32 / tiles, i as u32 % tiles);
+    [
+        chip % chip_dims[0],
+        (chip / chip_dims[0]) % chip_dims[1],
+        chip / (chip_dims[0] * chip_dims[1]),
+        tile % tile_dims[0],
+        tile / tile_dims[0],
+    ]
+}
+
+/// Uniform-random traffic over the hierarchical address format: every
+/// tile PUTs `count` messages to uniformly random other tiles anywhere in
+/// the chip×tile system (self-hits re-drawn), with random gaps of mean
+/// `mean_gap` cycles — the cross-chip stress pattern of the hybrid
+/// topology (most destinations live behind a SerDes crossing).
+pub fn hybrid_uniform_random(
+    chip_dims: [u32; 3],
+    tile_dims: [u32; 2],
+    count: usize,
+    len: u32,
+    mean_gap: u64,
+    seed: u64,
+) -> Vec<Planned> {
+    let fmt = AddrFormat::Hybrid { chip_dims, tile_dims };
+    let n = fmt.node_count() as usize;
+    // Node index == slot under the hybrid builder's chip-major layout, so
+    // the generic generator applies directly.
+    let nodes: Vec<(usize, DnpAddr)> = (0..n)
+        .map(|i| (i, fmt.encode(&hybrid_coords(chip_dims, tile_dims, i))))
+        .collect();
+    uniform_random(&nodes, count, len, mean_gap, seed)
+}
+
+/// Halo exchange on the hybrid system: tiles form one global 2D lattice
+/// of `(CX*TX) × (CY*TY)` sites (wrapping at the torus edges), and every
+/// site PUTs `len` words to each of its four X/Y neighbours — on-chip in
+/// the mesh interior, across a SerDes chip boundary at chip edges — plus
+/// its two Z neighbours (same tile, ±Z chip) when the chip torus extends
+/// in Z. One exchange phase, all at cycle 0.
+pub fn hybrid_halo_exchange(chip_dims: [u32; 3], tile_dims: [u32; 2], len: u32) -> Vec<Planned> {
+    let fmt = AddrFormat::Hybrid { chip_dims, tile_dims };
+    let global = [chip_dims[0] * tile_dims[0], chip_dims[1] * tile_dims[1]];
+    let mut plan = Vec::new();
+    for cz in 0..chip_dims[2] {
+        for gy in 0..global[1] {
+            for gx in 0..global[0] {
+                let split = |g: u32, dim: usize| (g / tile_dims[dim], g % tile_dims[dim]);
+                let (cx, tx) = split(gx, 0);
+                let (cy, ty) = split(gy, 1);
+                let node = hybrid_node_index(chip_dims, tile_dims, [cx, cy, cz], [tx, ty]);
+                let mut tag = 0u32;
+                let mut push = |dst: DnpAddr, tag: &mut u32| {
+                    plan.push(Planned {
+                        node,
+                        at: 0,
+                        cmd: Command::put(TX_BASE, dst, rx_addr(node), len)
+                            .with_tag(node as u32 * 8 + *tag),
+                    });
+                    *tag += 1;
+                };
+                // X/Y neighbours on the global (wrapping) lattice.
+                for (dim, g) in [(0usize, gx), (1, gy)] {
+                    let k = global[dim];
+                    if k < 2 {
+                        continue;
+                    }
+                    for step in [1, k - 1] {
+                        let ng = (g + step) % k;
+                        let (nc, nt) = split(ng, dim);
+                        let c = if dim == 0 { [nc, cy, cz] } else { [cx, nc, cz] };
+                        let t = if dim == 0 { [nt, ty] } else { [tx, nt] };
+                        push(fmt.encode(&[c[0], c[1], c[2], t[0], t[1]]), &mut tag);
+                    }
+                }
+                // Z neighbours: chip-level only, same tile.
+                let kz = chip_dims[2];
+                if kz >= 2 {
+                    for step in [1, kz - 1] {
+                        let nz = (cz + step) % kz;
+                        push(fmt.encode(&[cx, cy, nz, tx, ty]), &mut tag);
+                    }
+                }
             }
         }
     }
@@ -277,13 +388,22 @@ pub fn permutation(
     plan
 }
 
-/// Back-to-back LOOPBACKs on one node (the intra-tile bandwidth probe).
-pub fn loopback_stream(node: usize, count: usize, len: u32) -> Vec<Planned> {
+/// Back-to-back LOOPBACKs on one node (the intra-tile bandwidth probe),
+/// rotating over the node's `windows` registered RX windows. Pass the
+/// window count [`setup_buffers`] actually registered (one per node slot):
+/// a hardcoded rotation wider than the registered layout would aim every
+/// excess iteration at an unregistered window.
+pub fn loopback_stream(node: usize, count: usize, len: u32, windows: usize) -> Vec<Planned> {
+    assert!(windows >= 1, "loopback_stream needs at least one RX window");
+    assert!(
+        len <= RX_WINDOW,
+        "loopback payload of {len} words overruns the {RX_WINDOW}-word RX window"
+    );
     (0..count)
         .map(|i| Planned {
             node,
             at: 0,
-            cmd: Command::loopback(TX_BASE, RX_BASE + (i as u32 % 4) * RX_WINDOW, len)
+            cmd: Command::loopback(TX_BASE, RX_BASE + (i % windows) as u32 * RX_WINDOW, len)
                 .with_tag(i as u32),
         })
         .collect()
@@ -355,6 +475,98 @@ mod tests {
         let mut feeder = Feeder::new(plan);
         run_plan(&mut net, &mut feeder, 1_000_000).expect("permutation drains");
         assert_eq!(net.traces.delivered, 32);
+    }
+
+    #[test]
+    fn uniform_random_destination_histogram_is_flat() {
+        // Regression: the old self-hit remap `(slot + 1) % n` gave each
+        // node's successor double the per-pair probability (2/n instead
+        // of 1/(n-1)). With n=8 and 20_000 draws per node the expected
+        // per-pair count is 20000/7 ≈ 2857 (σ ≈ 50); the biased generator
+        // produced 2500 / 5000 splits, far outside ±250.
+        let n = 8usize;
+        let count = 20_000usize;
+        let nodes: Vec<(usize, DnpAddr)> =
+            (0..n).map(|i| (i, DnpAddr::new(i as u32))).collect();
+        let plan = uniform_random(&nodes, count, 4, 1, 0xD157_0001);
+        let mut pair = vec![vec![0u64; n]; n];
+        for p in &plan {
+            let slot = p.cmd.tag as usize / count;
+            pair[slot][p.cmd.dst_dnp.raw() as usize] += 1;
+        }
+        let expect = count as f64 / (n - 1) as f64;
+        for (slot, row) in pair.iter().enumerate() {
+            assert_eq!(row[slot], 0, "self-send from slot {slot}");
+            for (peer, &c) in row.iter().enumerate() {
+                if peer == slot {
+                    continue;
+                }
+                assert!(
+                    (c as f64 - expect).abs() < 250.0,
+                    "pair ({slot} -> {peer}) count {c} deviates from {expect:.0}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn loopback_two_node_net_drains_without_lut_misses() {
+        // Regression: the old hardcoded 4-window rotation aimed loopbacks
+        // at windows `setup_buffers` never registered on small nets.
+        let cfg = DnpConfig::shapes_rdt();
+        let mut net = topology::two_tiles_offchip(&cfg, 1 << 16);
+        let slots: Vec<usize> = vec![0, 1];
+        setup_buffers(&mut net, &slots);
+        let plan = loopback_stream(0, 8, 32, slots.len());
+        for p in &plan {
+            let w = p.cmd.dst_addr;
+            assert!(
+                w >= RX_BASE && w < RX_BASE + slots.len() as u32 * RX_WINDOW,
+                "loopback targets unregistered window 0x{w:x}"
+            );
+        }
+        let mut feeder = Feeder::new(plan);
+        run_plan(&mut net, &mut feeder, 1_000_000).expect("loopback stream drains");
+        assert_eq!(net.traces.delivered, 8);
+        assert_eq!(net.traces.lut_misses, 0);
+    }
+
+    #[test]
+    fn hybrid_halo_counts_and_windows() {
+        // 2×2×1 chips of 2×2 tiles: global 4×4 lattice, 4 XY neighbours
+        // per site, no Z links.
+        let plan = hybrid_halo_exchange([2, 2, 1], [2, 2], 16);
+        assert_eq!(plan.len(), 16 * 4);
+        let fmt = AddrFormat::Hybrid { chip_dims: [2, 2, 1], tile_dims: [2, 2] };
+        let mut cross_chip = 0;
+        for p in &plan {
+            let src = p.node as u32;
+            let d = fmt.decode(p.cmd.dst_dnp);
+            let dst = hybrid_node_index([2, 2, 1], [2, 2], [d[0], d[1], d[2]], [d[3], d[4]]);
+            assert_ne!(dst, p.node, "halo must never self-send");
+            assert_eq!(p.cmd.dst_addr, rx_addr(p.node), "lands in the sender's window");
+            if dst as u32 / 4 != src / 4 {
+                cross_chip += 1;
+            }
+        }
+        // Every site sits on at least one chip edge of the 2×2 chip grid:
+        // half of all halo messages cross a chip boundary.
+        assert_eq!(cross_chip, 32);
+    }
+
+    #[test]
+    fn hybrid_uniform_random_covers_cross_chip_pairs() {
+        let plan = hybrid_uniform_random([2, 1, 1], [2, 2], 16, 8, 4, 0xD157_0002);
+        assert_eq!(plan.len(), 8 * 16);
+        let fmt = AddrFormat::Hybrid { chip_dims: [2, 1, 1], tile_dims: [2, 2] };
+        let mut cross = false;
+        for p in &plan {
+            let d = fmt.decode(p.cmd.dst_dnp);
+            let dst = hybrid_node_index([2, 1, 1], [2, 2], [d[0], d[1], d[2]], [d[3], d[4]]);
+            assert_ne!(dst, p.node, "self-send in hybrid uniform traffic");
+            cross |= dst / 4 != p.node / 4;
+        }
+        assert!(cross, "16 draws per tile must hit the other chip");
     }
 
     #[test]

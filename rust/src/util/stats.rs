@@ -2,13 +2,22 @@
 //! (the image has no `criterion`; see `crate::bench`).
 
 /// Online accumulator: count / mean / min / max / variance (Welford).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Accum {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+/// `Default` must match [`Accum::new`]: a derived default would seed
+/// `min`/`max` at `0.0`, making every default-constructed accumulator
+/// report `min <= 0` / `max >= 0` regardless of the samples pushed.
+impl Default for Accum {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Accum {
@@ -184,6 +193,27 @@ mod tests {
         assert!((a.var() - 5.0 / 3.0).abs() < 1e-12);
         assert_eq!(a.min(), 1.0);
         assert_eq!(a.max(), 4.0);
+    }
+
+    #[test]
+    fn accum_default_matches_new() {
+        // Regression: the derived Default seeded min/max at 0.0, so a
+        // default-constructed accumulator reported min <= 0 / max >= 0
+        // no matter what was pushed.
+        assert_eq!(Accum::default().min(), f64::INFINITY);
+        assert_eq!(Accum::default().max(), f64::NEG_INFINITY);
+        let mut d = Accum::default();
+        let mut n = Accum::new();
+        for x in [3.5, 2.0, 7.25] {
+            d.push(x);
+            n.push(x);
+        }
+        assert_eq!(d.count(), n.count());
+        assert_eq!(d.min(), n.min());
+        assert_eq!(d.max(), n.max());
+        assert_eq!(d.mean(), n.mean());
+        assert_eq!(d.var(), n.var());
+        assert_eq!(d.min(), 2.0, "min must exceed 0 when all samples do");
     }
 
     #[test]

@@ -149,7 +149,7 @@ fn spidergon_chip_matches_dense() {
     let plan = {
         let net = build();
         let nodes = dnp_slots(&net);
-        traffic::uniform_random(&nodes, 8, 6, 0xFEED_0003)
+        traffic::uniform_random(&nodes, 8, 16, 6, 0xFEED_0003)
     };
     assert_plan_equivalent(build, plan, 2_000_000, "MTNoC Spidergon 8");
 }
@@ -165,6 +165,36 @@ fn lqcd_halo_matches_dense() {
     };
     let plan = traffic::halo_exchange_3d([2, 2, 2], 96);
     assert_plan_equivalent(build, plan, 2_000_000, "LQCD halo 2x2x2");
+}
+
+#[test]
+fn hybrid_halo_matches_dense() {
+    // The hybrid topology mixes channel classes with different latencies
+    // and serialization rates (1 word/cycle on-chip mesh links, 8
+    // cycles/word SerDes links) behind the same switches — the scheduler
+    // must interleave their wakes exactly as the dense loop does.
+    let cfg = DnpConfig::hybrid();
+    let build = || {
+        let mut net = topology::hybrid_torus_mesh([2, 2, 1], [2, 2], &cfg, 1 << 16);
+        let slots: Vec<usize> = (0..net.nodes.len()).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        net
+    };
+    let plan = traffic::hybrid_halo_exchange([2, 2, 1], [2, 2], 48);
+    assert_plan_equivalent(build, plan, 2_000_000, "hybrid halo 2x2x1 of 2x2");
+}
+
+#[test]
+fn hybrid_uniform_matches_dense() {
+    let cfg = DnpConfig::hybrid();
+    let build = || {
+        let mut net = topology::hybrid_torus_mesh([2, 1, 1], [2, 2], &cfg, 1 << 16);
+        let slots: Vec<usize> = (0..net.nodes.len()).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        net
+    };
+    let plan = traffic::hybrid_uniform_random([2, 1, 1], [2, 2], 6, 24, 15, 0xFEED_0005);
+    assert_plan_equivalent(build, plan, 2_000_000, "hybrid uniform 2x1x1 of 2x2");
 }
 
 #[test]

@@ -1,0 +1,143 @@
+//! Hybrid multi-chip system integration: the paper's Fig. 2 composition
+//! (on-chip tile meshes × off-chip chip torus) exercised end-to-end —
+//! all-pairs delivery across chip boundaries, halo traffic, data
+//! integrity and gateway transit behaviour.
+
+use dnp::config::DnpConfig;
+use dnp::packet::{AddrFormat, DnpAddr};
+use dnp::rdma::Command;
+use dnp::{topology, traffic, Net};
+
+const CHIPS: [u32; 3] = [2, 2, 1];
+const TILES: [u32; 2] = [2, 2];
+
+fn fmt() -> AddrFormat {
+    AddrFormat::Hybrid { chip_dims: CHIPS, tile_dims: TILES }
+}
+
+fn build() -> Net {
+    let cfg = DnpConfig::hybrid();
+    let mut net = topology::hybrid_torus_mesh(CHIPS, TILES, &cfg, 1 << 16);
+    let slots: Vec<usize> = (0..net.nodes.len()).collect();
+    traffic::setup_buffers(&mut net, &slots);
+    net
+}
+
+fn addr_of(node: usize) -> DnpAddr {
+    fmt().encode(&traffic::hybrid_coords(CHIPS, TILES, node))
+}
+
+/// Acceptance: every tile reaches every tile, including across chip
+/// boundaries, under a staggered all-pairs PUT load.
+#[test]
+fn hybrid_all_pairs_cross_chip_delivery() {
+    let mut net = build();
+    let n = net.nodes.len();
+    assert_eq!(n, 16);
+    let mut plan = Vec::new();
+    for slot in 0..n {
+        for peer in 0..n {
+            if peer == slot {
+                continue;
+            }
+            plan.push(traffic::Planned {
+                node: slot,
+                at: (slot as u64) * 7 + (peer as u64) * 3,
+                cmd: Command::put(traffic::TX_BASE, addr_of(peer), traffic::rx_addr(slot), 8)
+                    .with_tag((slot * 100 + peer) as u32),
+            });
+        }
+    }
+    let total = plan.len() as u64;
+    assert_eq!(total, 16 * 15);
+    let mut feeder = traffic::Feeder::new(plan);
+    traffic::run_plan(&mut net, &mut feeder, 5_000_000)
+        .expect("hybrid all-pairs must drain (deadlock?)");
+    assert_eq!(net.traces.delivered, total);
+    assert_eq!(net.traces.lut_misses, 0);
+    assert_eq!(net.traces.corrupt_packets, 0);
+    // Every (src, dst) pair delivered exactly once, at the right node.
+    for slot in 0..n {
+        for peer in 0..n {
+            if peer == slot {
+                continue;
+            }
+            let t = net
+                .pkt_of_tag((slot * 100 + peer) as u32)
+                .unwrap_or_else(|| panic!("no trace for {slot} -> {peer}"));
+            assert_eq!(t.dst_node, Some(peer), "{slot} -> {peer} landed elsewhere");
+            assert_eq!(t.src_node, Some(slot));
+        }
+    }
+}
+
+/// Cross-chip PUT integrity: payload bits survive the mesh → SerDes →
+/// mesh path, and the cross-chip trip costs more than the on-chip one.
+#[test]
+fn hybrid_cross_chip_put_integrity_and_latency() {
+    let cfg = DnpConfig::hybrid();
+    let mut net = topology::hybrid_torus_mesh(CHIPS, TILES, &cfg, 1 << 16);
+    // Corner tile of chip (0,0) to the far tile of chip (1,1): mesh hops
+    // on both sides plus two SerDes crossings.
+    let far = fmt().encode(&[1, 1, 0, 1, 1]);
+    let near = fmt().encode(&[0, 0, 0, 0, 1]);
+    let far_node = traffic::hybrid_node_index(CHIPS, TILES, [1, 1, 0], [1, 1]);
+    let near_node = traffic::hybrid_node_index(CHIPS, TILES, [0, 0, 0], [0, 1]);
+    let payload: Vec<u32> = (0..64).map(|i| 0xC0DE_0000 | i).collect();
+    net.dnp_mut(0).mem.write_slice(0x1000, &payload);
+    net.dnp_mut(far_node).register_buffer(0x4000, 256, 0).unwrap();
+    net.dnp_mut(near_node).register_buffer(0x4000, 256, 0).unwrap();
+    net.issue(0, Command::put(0x1000, far, 0x4000, 64).with_tag(1));
+    net.issue(0, Command::put(0x1000, near, 0x4000, 64).with_tag(2));
+    net.run_until_idle(1_000_000).expect("both PUTs complete");
+    assert_eq!(net.dnp(far_node).mem.read_slice(0x4000, 64), &payload[..]);
+    assert_eq!(net.dnp(near_node).mem.read_slice(0x4000, 64), &payload[..]);
+    let lat = |tag: u32| {
+        let t = net.pkt_of_tag(tag).expect("trace");
+        t.delivered.unwrap() - t.injected.unwrap()
+    };
+    assert!(
+        lat(1) > lat(2),
+        "cross-chip PUT ({}) must out-latency the on-chip one ({})",
+        lat(1),
+        lat(2)
+    );
+}
+
+/// Hybrid halo exchange drains and splits exactly between on-chip and
+/// cross-chip messages.
+#[test]
+fn hybrid_halo_exchange_drains() {
+    let mut net = build();
+    let plan = traffic::hybrid_halo_exchange(CHIPS, TILES, 32);
+    let total = plan.len() as u64;
+    let mut feeder = traffic::Feeder::new(plan);
+    traffic::run_plan(&mut net, &mut feeder, 5_000_000).expect("halo drains");
+    assert_eq!(net.traces.delivered, total);
+    assert_eq!(net.traces.lut_misses, 0);
+}
+
+/// Transit traffic passes through gateway tiles: a packet between
+/// non-gateway tiles of different chips logs inter-tile hops at both the
+/// source-side and destination-side gateway DNPs.
+#[test]
+fn hybrid_transit_crosses_gateways() {
+    let cfg = DnpConfig::hybrid();
+    let mut net = topology::hybrid_torus_mesh(CHIPS, TILES, &cfg, 1 << 16);
+    // Tile (1,1) is never a gateway (dims 0/1 map to tiles 0 and 1).
+    let src_node = traffic::hybrid_node_index(CHIPS, TILES, [0, 0, 0], [1, 1]);
+    let dst_node = traffic::hybrid_node_index(CHIPS, TILES, [1, 0, 0], [1, 1]);
+    let dst = fmt().encode(&[1, 0, 0, 1, 1]);
+    net.dnp_mut(dst_node).register_buffer(0x4000, 256, 0).unwrap();
+    net.dnp_mut(src_node).mem.write_slice(0x1000, &[0xAB; 16]);
+    net.issue(src_node, Command::put(0x1000, dst, 0x4000, 16).with_tag(9));
+    net.run_until_idle(1_000_000).expect("transit PUT completes");
+    let t = net.pkt_of_tag(9).expect("trace");
+    assert_eq!(t.dst_node, Some(dst_node));
+    let hop_nodes: Vec<usize> = t.tx_hops.iter().map(|&(n, _, _)| n).collect();
+    // Gateway of dim 0 is tile (0,0) of each chip.
+    let src_gw = traffic::hybrid_node_index(CHIPS, TILES, [0, 0, 0], [0, 0]);
+    let dst_gw = traffic::hybrid_node_index(CHIPS, TILES, [1, 0, 0], [0, 0]);
+    assert!(hop_nodes.contains(&src_gw), "no source-gateway hop in {hop_nodes:?}");
+    assert!(hop_nodes.contains(&dst_gw), "no destination-gateway hop in {hop_nodes:?}");
+}
