@@ -123,6 +123,35 @@ fn hybrid_uniform() -> (u64, u64, f64) {
     (flits, cycles, r.median_s)
 }
 
+/// §Fault smoke: the same hybrid system with one SerDes cable dead and
+/// the recovered two-level tables installed — table-driven routing (a
+/// HashMap probe per head hop instead of the arithmetic `HierRouter`) on
+/// the hot path, plus the detour traffic the fault induces.
+fn hybrid_faulted_uniform() -> (u64, u64, f64) {
+    use dnp::fault::{self, HierLinkFault};
+    let cfg = DnpConfig::hybrid();
+    let mut flits = 0u64;
+    let mut cycles = 0u64;
+    let r = wall(1, 3, || {
+        let (mut net, wiring) = topology::hybrid_torus_mesh_wired([2, 2, 1], [2, 2], &cfg, 1 << 16);
+        net.traces.enabled = false;
+        let slots: Vec<usize> = (0..net.nodes.len()).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        let faults = [HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: true }];
+        fault::inject_hybrid(&mut net, &wiring, &faults, &cfg).expect("recoverable");
+        let plan = traffic::hybrid_uniform_random([2, 2, 1], [2, 2], 24, 48, 8, 13);
+        let mut feeder = traffic::Feeder::new(plan);
+        traffic::run_plan(&mut net, &mut feeder, 10_000_000).expect("drains");
+        flits = net
+            .nodes
+            .iter()
+            .filter_map(|n| n.as_dnp().map(|d| d.fabric.flits_switched))
+            .sum();
+        cycles = net.cycle;
+    });
+    (flits, cycles, r.median_s)
+}
+
 fn halo_phase() -> (u64, u64, f64) {
     let cfg = DnpConfig::shapes_rdt();
     let mut flits = 0u64;
@@ -177,6 +206,7 @@ fn main() {
         ("torus 4x4x4 sparse g64", sparse_torus()),
         ("MTNoC 8-tile uniform", saturated_noc()),
         ("hybrid 2x2 chips x 2x2", hybrid_uniform()),
+        ("hybrid 2x2 faulted link", hybrid_faulted_uniform()),
         ("LQCD halo x10", halo_phase()),
     ] {
         t.row(&[

@@ -443,6 +443,20 @@ impl DnpNode {
         self.pkts_recv += 1;
         let cq_at = now + timing.cq_write;
         match d.rdma.op {
+            PacketOp::GetRequest if d.corrupt => {
+                // The request's payload carries the length: servicing a
+                // corrupted one would stream a garbage-sized response.
+                // Drop it and tell software via the CQ instead.
+                self.cq_defer.push((
+                    Event {
+                        kind: EventKind::CorruptPayload,
+                        peer: d.net.src,
+                        addr: d.rdma.src_mem,
+                        len_or_tag: d.payload.first().copied().unwrap_or(0),
+                    },
+                    cq_at,
+                ));
+            }
             PacketOp::GetRequest => {
                 self.get_q.push_back(GetService {
                     initiator: d.net.src,
@@ -469,7 +483,11 @@ impl DnpNode {
                     },
                     cq_at,
                 ));
-                if d.corrupt {
+                // One failure, one error event: a LUT-missed packet wrote
+                // nothing anywhere (no landing address to report), so the
+                // LutMiss event above already covers it — flagging it
+                // corrupt too would make retry software re-issue twice.
+                if d.corrupt && !d.lut_miss {
                     self.cq_defer.push((
                         Event {
                             kind: EventKind::CorruptPayload,

@@ -1,0 +1,618 @@
+//! Fault-aware routing for the hybrid torus-of-meshes (paper Fig. 2 +
+//! Sec. V roadmap; cf. the APEnet+ fault-management follow-up,
+//! arXiv:1307.1270).
+//!
+//! The flat-torus machinery of the parent module covers one level; the
+//! hybrid system of [`crate::topology::hybrid_torus_mesh`] has two: chips
+//! joined by off-chip SerDes links into a 3D torus, tiles joined by
+//! on-chip links into a 2D mesh per chip, with all off-chip links of a
+//! chip dimension terminating at one *gateway* tile. A hard fault
+//! ([`HierLinkFault`]) can hit either level, and recovery must respect the
+//! hierarchy:
+//!
+//! * **(a) dead SerDes link** — the chip-level survivor graph loses that
+//!   edge; chip hops detour over the surviving wires of the same ring or
+//!   over other dimensions (BFS over the chip torus, healthy-DOR-first
+//!   tie-break).
+//! * **(b) dead gateway** — when *all* off-chip wires of a gateway tile
+//!   die, its dimension is unusable from that chip: the chip-level BFS
+//!   re-homes the traffic onto another dimension's ring, i.e. onto the
+//!   gateway tile owning that dimension. (The SerDes wires physically
+//!   terminate at the gateway, so "an alternate gateway" necessarily means
+//!   an alternate *dimension*; a chip whose every gateway is dead is
+//!   simply unreachable and the recomputation reports `None`.)
+//! * **(c) dead mesh link** — the chip's tile-mesh survivor graph loses
+//!   the edge; intra-chip walks (to a gateway, or the delivery walk to the
+//!   destination tile) detour via BFS with healthy-XY-first tie-break.
+//!   A chip whose mesh is internally partitioned would need out-and-back
+//!   transit through a neighbour chip; the two-level scheme treats that as
+//!   unrecoverable (`None`) rather than installing hierarchy-violating
+//!   routes.
+//!
+//! # Escape-VC discipline
+//!
+//! The recovered tables must preserve the deadlock argument documented in
+//! `route/hier.rs` with the same 2 VCs:
+//!
+//! * delivery-phase mesh hops (destination tile in this chip) always ride
+//!   the **VC-1 delivery class**: VC-1 mesh traffic terminates inside the
+//!   chip at a local sink, so it never waits on an off-chip credit —
+//!   unchanged from the healthy scheme (intra-chip sources join the class,
+//!   which only strengthens the invariant);
+//! * outbound/transit mesh walks toward a gateway stay on VC 0, even when
+//!   detoured (per-destination BFS trees with XY preference keep the VC-0
+//!   mesh dependencies tree-shaped per target);
+//! * off-chip hops that coincide with the healthy chip-DOR decision keep
+//!   the healthy stateless dateline VC; hops that deviate (detours and
+//!   re-homed rings) ride the **escape VC 1**, the Boppana-Chalasani
+//!   extra-VC convention the flat module already uses.
+//!
+//! # Known approximations
+//!
+//! A per-(node, dst) table cannot carry per-packet wrap state, so the
+//! dateline VC is evaluated as if each node were the packet's source
+//! (the same convention as [`recompute_tables`](super::recompute_tables)):
+//! on chip rings of k >= 4 a packet past the wrap can be handed back to
+//! VC 0, weakening the Dally-Seitz argument — rings of k <= 3 (every
+//! configuration this repo ships and tests) have no post-wrap transit
+//! hop, so the scheme is sound there. Similarly, the per-target BFS mesh
+//! detours are acyclic per destination but their *union* is not
+//! turn-model-checked; on tile meshes >= 3x3 an adversarial fault set
+//! could in principle close a mesh VC cycle under saturation. ROADMAP
+//! tracks the rigorous fix (static per-channel dateline classes /
+//! turn-restricted detour selection).
+
+use super::{LinkFault, SurvivorGraph};
+use crate::config::{DnpConfig, RouteOrder};
+use crate::packet::{AddrFormat, DnpAddr};
+use crate::route::hier::gateway_tile;
+use crate::route::{HierRouter, OutSel, Router, TableRouter};
+use crate::sim::channel::ChannelId;
+use crate::sim::Net;
+use crate::topology::{hybrid_port_maps, mesh_step, HybridWiring};
+use crate::traffic::{hybrid_coords, hybrid_node_index};
+use std::collections::VecDeque;
+
+/// A hard fault on one bidirectional link of the hybrid system (kills both
+/// directed channels of the physical cable, exactly like [`LinkFault`] on
+/// the flat torus).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HierLinkFault {
+    /// Off-chip SerDes cable of chip dimension `dim`, leaving `chip` in
+    /// the `plus` (or minus) direction. Both gateways keep their other
+    /// wires; in a k=2 ring the ± cables are distinct.
+    Serdes {
+        chip: [u32; 3],
+        dim: usize,
+        /// true = the (+) cable out of `chip`.
+        plus: bool,
+    },
+    /// On-chip mesh link inside `chip`, leaving `tile` along mesh
+    /// dimension `dim` (0 = X, 1 = Y) in the `plus` direction.
+    Mesh {
+        chip: [u32; 3],
+        tile: [u32; 2],
+        dim: usize,
+        plus: bool,
+    },
+}
+
+/// Adjacency of one chip's surviving tile mesh.
+pub(crate) struct MeshSurvivor {
+    dims: [u32; 2],
+    /// tile → direction (0:X+, 1:X-, 2:Y+, 3:Y-) → neighbour tile.
+    adj: Vec<[Option<usize>; 4]>,
+}
+
+impl MeshSurvivor {
+    fn new(dims: [u32; 2], faults: &[([u32; 2], usize, bool)]) -> Self {
+        let n = (dims[0] * dims[1]) as usize;
+        let idx = |t: [u32; 2]| (t[0] + t[1] * dims[0]) as usize;
+        let mut adj = vec![[None; 4]; n];
+        for (t, a) in adj.iter_mut().enumerate() {
+            let tc = [t as u32 % dims[0], t as u32 / dims[0]];
+            for (d, slot) in a.iter_mut().enumerate() {
+                *slot = mesh_step(dims, tc, d).map(idx);
+            }
+        }
+        for &(tile, dim, plus) in faults {
+            let d = dim * 2 + usize::from(!plus);
+            let u = idx(tile);
+            if let Some(v) = adj[u][d] {
+                adj[u][d] = None;
+                adj[v][[1, 0, 3, 2][d]] = None;
+            }
+        }
+        Self { dims, adj }
+    }
+
+    fn dists_to(&self, dst: usize) -> Vec<u32> {
+        let mut dist = vec![u32::MAX; self.adj.len()];
+        dist[dst] = 0;
+        let mut q = VecDeque::from([dst]);
+        while let Some(u) = q.pop_front() {
+            for &v in self.adj[u].iter().flatten() {
+                if dist[v] == u32::MAX {
+                    dist[v] = dist[u] + 1;
+                    q.push_back(v);
+                }
+            }
+        }
+        dist
+    }
+
+    fn connected(&self) -> bool {
+        self.dists_to(0).iter().all(|&d| d != u32::MAX)
+    }
+
+    /// Next mesh direction from tile `t` toward `target`, minimizing the
+    /// BFS distance; the healthy XY hop wins ties so untouched walks stay
+    /// exactly XY.
+    fn next_hop(&self, dist: &[u32], t: usize, target: usize) -> Option<usize> {
+        let tc = [t as u32 % self.dims[0], t as u32 / self.dims[0]];
+        let sc = [
+            target as u32 % self.dims[0],
+            target as u32 / self.dims[0],
+        ];
+        let mut best: Option<(u32, usize)> = None;
+        let mut consider = |d: usize, best: &mut Option<(u32, usize)>| {
+            if let Some(v) = self.adj[t][d] {
+                let dv = dist[v];
+                if dv != u32::MAX && best.map(|(bd, _)| dv < bd).unwrap_or(true) {
+                    *best = Some((dv, d));
+                }
+            }
+        };
+        for dim in 0..2 {
+            if sc[dim] != tc[dim] {
+                consider(dim * 2 + usize::from(sc[dim] < tc[dim]), &mut best);
+                break;
+            }
+        }
+        for d in 0..4 {
+            consider(d, &mut best);
+        }
+        best.map(|(_, d)| d)
+    }
+}
+
+/// Row-major chip index of chip coordinates `c` — derived from the
+/// canonical layout helpers in [`crate::traffic`] (a chip index is a node
+/// index under a degenerate single-tile chip), so the fault tables can
+/// never drift from the builder's node ordering.
+fn chip_index(dims: [u32; 3], c: [u32; 3]) -> usize {
+    hybrid_node_index(dims, [1, 1], c, [0, 0])
+}
+
+/// Inverse of [`chip_index`].
+fn chip_coords(dims: [u32; 3], i: usize) -> [u32; 3] {
+    let c = hybrid_coords(dims, [1, 1], i);
+    [c[0], c[1], c[2]]
+}
+
+/// Two-level survivor graph of the hybrid system: the chip torus over
+/// surviving SerDes cables plus one tile-mesh survivor per chip.
+pub struct HierSurvivorGraph {
+    pub(crate) chips: SurvivorGraph,
+    pub(crate) meshes: Vec<MeshSurvivor>,
+}
+
+impl HierSurvivorGraph {
+    pub fn new(chip_dims: [u32; 3], tile_dims: [u32; 2], faults: &[HierLinkFault]) -> Self {
+        let nchips = chip_dims.iter().product::<u32>() as usize;
+        let serdes: Vec<LinkFault> = faults
+            .iter()
+            .filter_map(|f| match *f {
+                HierLinkFault::Serdes { chip, dim, plus } => {
+                    Some(LinkFault { from: chip, dim, plus })
+                }
+                HierLinkFault::Mesh { .. } => None,
+            })
+            .collect();
+        let chips = SurvivorGraph::new(chip_dims, &serdes);
+        let mut per_chip: Vec<Vec<([u32; 2], usize, bool)>> = vec![Vec::new(); nchips];
+        for f in faults {
+            if let HierLinkFault::Mesh { chip, tile, dim, plus } = *f {
+                per_chip[chip_index(chip_dims, chip)].push((tile, dim, plus));
+            }
+        }
+        let meshes = per_chip
+            .iter()
+            .map(|fs| MeshSurvivor::new(tile_dims, fs))
+            .collect();
+        Self { chips, meshes }
+    }
+
+    /// Recovery is possible iff the chip torus stays connected over the
+    /// surviving SerDes cables AND every chip's tile mesh stays internally
+    /// connected (see module docs).
+    pub fn connected(&self) -> bool {
+        self.chips.connected() && self.meshes.iter().all(|m| m.connected())
+    }
+}
+
+/// The healthy chip-DOR hop from chip `a` toward chip `b`: first differing
+/// dimension in priority order, minimal direction, ties toward `+` —
+/// exactly `HierRouter`'s chip-level decision.
+fn healthy_chip_hop(
+    a: [u32; 3],
+    b: [u32; 3],
+    dims: [u32; 3],
+    order: RouteOrder,
+) -> Option<(usize, usize)> {
+    for &dim in &order.0 {
+        if a[dim] == b[dim] {
+            continue;
+        }
+        let k = dims[dim];
+        let fwd = (b[dim] + k - a[dim]) % k;
+        let bwd = (a[dim] + k - b[dim]) % k;
+        return Some((dim, usize::from(fwd > bwd)));
+    }
+    None
+}
+
+/// Next chip hop `(dim, dir)` from chip `a` toward chip `b` over the
+/// surviving chip torus; the healthy DOR hop wins ties so untouched rings
+/// keep their dimension order.
+fn chip_next_hop(
+    chips: &SurvivorGraph,
+    dist: &[u32],
+    a: usize,
+    a_c: [u32; 3],
+    b_c: [u32; 3],
+    chip_dims: [u32; 3],
+    order: RouteOrder,
+) -> Option<(usize, usize)> {
+    let mut best: Option<(u32, usize, usize)> = None;
+    let mut consider = |dim: usize, d: usize, best: &mut Option<(u32, usize, usize)>| {
+        if let Some(v) = chips.neighbor(a, dim * 2 + d) {
+            let dv = dist[v];
+            if dv != u32::MAX && best.map(|(bd, _, _)| dv < bd).unwrap_or(true) {
+                *best = Some((dv, dim, d));
+            }
+        }
+    };
+    if let Some((dim, d)) = healthy_chip_hop(a_c, b_c, chip_dims, order) {
+        consider(dim, d, &mut best);
+    }
+    for &dim in &order.0 {
+        for d in 0..2 {
+            consider(dim, d, &mut best);
+        }
+    }
+    best.map(|(_, dim, d)| (dim, d))
+}
+
+/// Compute fault-tolerant per-tile routing tables for the whole hybrid
+/// system — the two-level generalization of
+/// [`recompute_tables`](super::recompute_tables). See the module docs for
+/// the detour and escape-VC discipline.
+///
+/// Returns `None` when the fault set disconnects the chip torus or
+/// partitions a chip's tile mesh.
+pub fn recompute_hybrid_tables(
+    chip_dims: [u32; 3],
+    tile_dims: [u32; 2],
+    faults: &[HierLinkFault],
+    cfg: &DnpConfig,
+) -> Option<Vec<TableRouter>> {
+    let g = HierSurvivorGraph::new(chip_dims, tile_dims, faults);
+    if !g.connected() {
+        return None;
+    }
+    let fmt = AddrFormat::Hybrid { chip_dims, tile_dims };
+    let nchips = chip_dims.iter().product::<u32>() as usize;
+    let ntiles = (tile_dims[0] * tile_dims[1]) as usize;
+    let n = nchips * ntiles;
+    let (mesh_port_of, off_port_of) = hybrid_port_maps(chip_dims, tile_dims, cfg);
+    let addrs: Vec<DnpAddr> = (0..n)
+        .map(|i| fmt.encode(&hybrid_coords(chip_dims, tile_dims, i)))
+        .collect();
+    // Reference healthy router per node, to detect "deviating" hops.
+    let healthy: Vec<HierRouter> = (0..n)
+        .map(|i| {
+            let t = i % ntiles;
+            HierRouter::new(
+                addrs[i],
+                chip_dims,
+                tile_dims,
+                cfg.route_order,
+                mesh_port_of[t],
+                off_port_of[t],
+            )
+        })
+        .collect();
+    let tile_idx = |t: [u32; 2]| (t[0] + t[1] * tile_dims[0]) as usize;
+    // Per-chip mesh BFS distances to every tile and chip-level BFS
+    // distances to every chip (both reused across all dsts).
+    let mesh_dists: Vec<Vec<Vec<u32>>> = g
+        .meshes
+        .iter()
+        .map(|m| (0..ntiles).map(|s| m.dists_to(s)).collect())
+        .collect();
+    let chip_dists: Vec<Vec<u32>> = (0..nchips).map(|b| g.chips.dists_to(b)).collect();
+
+    let mut tables: Vec<TableRouter> = addrs.iter().map(|&a| TableRouter::new(a)).collect();
+    for dst in 0..n {
+        let (bchip, stile) = (dst / ntiles, dst % ntiles);
+        let b_c = chip_coords(chip_dims, bchip);
+        for u in 0..n {
+            if u == dst {
+                continue;
+            }
+            let (achip, t) = (u / ntiles, u % ntiles);
+            let (port, vc) = if achip == bchip {
+                // Delivery phase: mesh toward the destination tile on the
+                // VC-1 delivery class (terminates inside this chip).
+                let d = g.meshes[achip].next_hop(&mesh_dists[achip][stile], t, stile)?;
+                let port = mesh_port_of[t][d].expect("mesh hop uses an existing link");
+                (port, 1)
+            } else {
+                let (dim, dir) = chip_next_hop(
+                    &g.chips,
+                    &chip_dists[bchip],
+                    achip,
+                    chip_coords(chip_dims, achip),
+                    b_c,
+                    chip_dims,
+                    cfg.route_order,
+                )?;
+                let gw = tile_idx(gateway_tile(tile_dims, dim));
+                if t == gw {
+                    let port =
+                        off_port_of[t][dim][dir].expect("gateway owns this dimension's ports");
+                    // Healthy-consistent off-chip hops keep their healthy
+                    // dateline VC; deviating hops (detours, re-homed
+                    // rings) ride escape VC 1 (flat-module convention).
+                    let hd = healthy[u].decide(addrs[u], addrs[dst], 0);
+                    let vc = if hd.out == OutSel::Port(port) { hd.vc } else { 1 };
+                    (port, vc)
+                } else {
+                    // Outbound/transit mesh walk toward the gateway: VC 0
+                    // always, detoured or not — putting it on VC 1 would
+                    // let the delivery class wait on off-chip credits and
+                    // void the route/hier.rs deadlock argument.
+                    let d = g.meshes[achip].next_hop(&mesh_dists[achip][gw], t, gw)?;
+                    (mesh_port_of[t][d].expect("mesh hop uses an existing link"), 0)
+                }
+            };
+            tables[u].install(addrs[dst], port, vc);
+        }
+    }
+    Some(tables)
+}
+
+/// Net-level hard-fault injection on a hybrid system: recompute the
+/// two-level tables over the survivors and install them into the running
+/// net ([`apply_tables`](super::apply_tables)). Returns the directed
+/// channels the faults killed — after reconfiguration no flit may ever
+/// cross them again (the fault suite asserts `words_sent` stays frozen) —
+/// or `None` when the fault set is unrecoverable.
+pub fn inject_hybrid(
+    net: &mut Net,
+    wiring: &HybridWiring,
+    faults: &[HierLinkFault],
+    cfg: &DnpConfig,
+) -> Option<Vec<ChannelId>> {
+    let tables = recompute_hybrid_tables(wiring.chip_dims, wiring.tile_dims, faults, cfg)?;
+    super::apply_tables(net, tables);
+    Some(faults.iter().flat_map(|f| wiring.channels_of(f)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::route::testutil::walk;
+
+    const CHIPS: [u32; 3] = [2, 2, 1];
+    const TILES: [u32; 2] = [2, 2];
+
+    fn fmt() -> AddrFormat {
+        AddrFormat::Hybrid { chip_dims: CHIPS, tile_dims: TILES }
+    }
+
+    fn addr(c: [u32; 3], t: [u32; 2]) -> DnpAddr {
+        fmt().encode(&[c[0], c[1], c[2], t[0], t[1]])
+    }
+
+    fn node(c: [u32; 3], t: [u32; 2]) -> usize {
+        hybrid_node_index(CHIPS, TILES, c, t)
+    }
+
+    #[test]
+    fn serdes_fault_uses_surviving_minus_wire_on_escape_vc() {
+        let cfg = DnpConfig::hybrid();
+        let f = HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: true };
+        let tables = recompute_hybrid_tables(CHIPS, TILES, &[f], &cfg).expect("recoverable");
+        // At the dim-0 gateway of chip (0,0,0): the healthy hop to chip
+        // (1,0,0) used the dead + wire; recovery takes the − wire (k=2:
+        // distinct cable, same chip distance) on the escape VC.
+        let u = node([0, 0, 0], [0, 0]);
+        let d = tables[u].decide(addr([0, 0, 0], [0, 0]), addr([1, 0, 0], [0, 0]), 0);
+        assert_eq!(d.out, OutSel::Port(cfg.n_ports + 1), "must take the X− wire");
+        assert_eq!(d.vc, 1, "deviating off-chip hop rides the escape VC");
+    }
+
+    #[test]
+    fn dead_gateway_rehomes_dimension_to_alternate_gateway() {
+        let cfg = DnpConfig::hybrid();
+        // All off-chip wires of chip (0,0,0)'s dim-0 gateway die: its X
+        // ring is unusable from this chip.
+        let faults = [
+            HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: true },
+            HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: false },
+        ];
+        let tables = recompute_hybrid_tables(CHIPS, TILES, &faults, &cfg).expect("recoverable");
+        // From the (dead) dim-0 gateway tile (0,0) toward chip (1,0,0):
+        // traffic re-homes onto the dim-1 ring, i.e. mesh-walks toward the
+        // dim-1 gateway tile (1,0) — its X+ mesh port is physical port 0.
+        let u = node([0, 0, 0], [0, 0]);
+        let d = tables[u].decide(addr([0, 0, 0], [0, 0]), addr([1, 0, 0], [1, 1]), 0);
+        assert_eq!(d.out, OutSel::Port(0), "must walk toward the dim-1 gateway");
+        assert_eq!(d.vc, 0, "outbound mesh walks stay VC 0 even when re-homed");
+        // And the dim-1 gateway itself emits on its Y off-chip port pair.
+        let gw1 = node([0, 0, 0], [1, 0]);
+        let d = tables[gw1].decide(addr([0, 0, 0], [1, 0]), addr([1, 0, 0], [1, 1]), 0);
+        assert!(
+            d.out == OutSel::Port(cfg.n_ports) || d.out == OutSel::Port(cfg.n_ports + 1),
+            "dim-1 gateway must cross on its off-chip ports: {d:?}"
+        );
+    }
+
+    #[test]
+    fn mesh_fault_detours_intra_chip_on_delivery_vc() {
+        let cfg = DnpConfig::hybrid();
+        let f = HierLinkFault::Mesh { chip: [0, 0, 0], tile: [0, 0], dim: 0, plus: true };
+        let tables = recompute_hybrid_tables(CHIPS, TILES, &[f], &cfg).expect("recoverable");
+        // (0,0) -> (1,0) inside chip 0: X+ is dead, detour goes Y+ first
+        // (tile (0,0)'s Y+ sits on physical port 1 after compaction).
+        let u = node([0, 0, 0], [0, 0]);
+        let d = tables[u].decide(addr([0, 0, 0], [0, 0]), addr([0, 0, 0], [1, 0]), 0);
+        assert_eq!(d.out, OutSel::Port(1), "detour must start Y+");
+        assert_eq!(d.vc, 1, "delivery walk rides the VC-1 delivery class");
+        // Other chips are untouched: same intra-chip pair keeps XY.
+        let v = node([1, 0, 0], [0, 0]);
+        let d = tables[v].decide(addr([1, 0, 0], [0, 0]), addr([1, 0, 0], [1, 0]), 0);
+        assert_eq!(d.out, OutSel::Port(0));
+    }
+
+    #[test]
+    fn unrecoverable_fault_sets_report_none() {
+        let cfg = DnpConfig::hybrid();
+        // Chip-level: cut both X cables of a 2x1x1 chip ring.
+        let faults = [
+            HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: true },
+            HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: false },
+        ];
+        assert!(recompute_hybrid_tables([2, 1, 1], TILES, &faults, &cfg).is_none());
+        // Mesh-level: the only link of a 1x2 tile mesh dies.
+        let f = [HierLinkFault::Mesh { chip: [0, 0, 0], tile: [0, 0], dim: 1, plus: true }];
+        assert!(recompute_hybrid_tables(CHIPS, [1, 2], &f, &cfg).is_none());
+    }
+
+    #[test]
+    fn no_fault_tables_reproduce_healthy_hier_router() {
+        let cfg = DnpConfig::hybrid();
+        let tables = recompute_hybrid_tables(CHIPS, TILES, &[], &cfg).unwrap();
+        let (mesh_ports, off_ports) = hybrid_port_maps(CHIPS, TILES, &cfg);
+        let n = 16usize;
+        for u in 0..n {
+            let uc = hybrid_coords(CHIPS, TILES, u);
+            let me = fmt().encode(&uc);
+            let healthy = HierRouter::new(
+                me,
+                CHIPS,
+                TILES,
+                cfg.route_order,
+                mesh_ports[u % 4],
+                off_ports[u % 4],
+            );
+            for d in 0..n {
+                if d == u {
+                    continue;
+                }
+                let dc = hybrid_coords(CHIPS, TILES, d);
+                let dst = fmt().encode(&dc);
+                let td = tables[u].decide(me, dst, 0);
+                let hd = healthy.decide(me, dst, 0);
+                assert_eq!(td.out, hd.out, "{u} -> {d}: port diverged");
+                if uc[..3] == dc[..3] {
+                    // Intra-chip routes join the VC-1 delivery class (the
+                    // table cannot tell local from arriving traffic).
+                    assert_eq!(td.vc, 1, "{u} -> {d}");
+                } else {
+                    assert_eq!(td.vc, hd.vc, "{u} -> {d}: VC diverged");
+                }
+            }
+        }
+    }
+
+    /// Static all-pairs walk over the recovered tables for each acceptance
+    /// fault scenario: every pair must deliver within a hop bound and the
+    /// walk must never traverse a dead (node, port).
+    #[test]
+    fn all_pairs_walk_avoids_dead_links() {
+        let cfg = DnpConfig::hybrid();
+        let (mesh_ports, off_ports) = hybrid_port_maps(CHIPS, TILES, &cfg);
+        let ntiles = 4usize;
+        // (node, physical out-port) -> next node, from the builder wiring.
+        let next = |u: usize, port: usize| -> usize {
+            let c = hybrid_coords(CHIPS, TILES, u);
+            let t = u % ntiles;
+            for (d, p) in mesh_ports[t].iter().enumerate() {
+                if *p == Some(port) {
+                    let nt = mesh_step(TILES, [c[3], c[4]], d).expect("wired mesh port");
+                    return node([c[0], c[1], c[2]], nt);
+                }
+            }
+            for (dim, pair) in off_ports[t].iter().enumerate() {
+                for (dir, p) in pair.iter().enumerate() {
+                    if *p == Some(port) {
+                        let k = CHIPS[dim];
+                        let mut nc = [c[0], c[1], c[2]];
+                        nc[dim] = (nc[dim] + if dir == 0 { 1 } else { k - 1 }) % k;
+                        return node(nc, [c[3], c[4]]);
+                    }
+                }
+            }
+            panic!("walk used unwired port {port} at node {u}");
+        };
+        let scenarios: Vec<Vec<HierLinkFault>> = vec![
+            vec![HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: true }],
+            vec![
+                HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: true },
+                HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: false },
+            ],
+            vec![HierLinkFault::Mesh { chip: [0, 0, 0], tile: [0, 0], dim: 0, plus: true }],
+        ];
+        for faults in &scenarios {
+            let tables = recompute_hybrid_tables(CHIPS, TILES, faults, &cfg).expect("recoverable");
+            // Dead (node, port) pairs, both directions of each fault.
+            let mut dead: Vec<(usize, usize)> = Vec::new();
+            for f in faults {
+                match *f {
+                    HierLinkFault::Serdes { chip, dim, plus } => {
+                        let gw = gateway_tile(TILES, dim);
+                        let d = usize::from(!plus);
+                        let mut nc = chip;
+                        nc[dim] = (chip[dim] + if plus { 1 } else { CHIPS[dim] - 1 }) % CHIPS[dim];
+                        let g = (gw[0] + gw[1] * TILES[0]) as usize;
+                        dead.push((node(chip, gw), off_ports[g][dim][d].unwrap()));
+                        dead.push((node(nc, gw), off_ports[g][dim][1 - d].unwrap()));
+                    }
+                    HierLinkFault::Mesh { chip, tile, dim, plus } => {
+                        let d = dim * 2 + usize::from(!plus);
+                        let nt = mesh_step(TILES, tile, d).unwrap();
+                        let back = [1usize, 0, 3, 2][d];
+                        let ti = (tile[0] + tile[1] * TILES[0]) as usize;
+                        let ni = (nt[0] + nt[1] * TILES[0]) as usize;
+                        dead.push((node(chip, tile), mesh_ports[ti][d].unwrap()));
+                        dead.push((node(chip, nt), mesh_ports[ni][back].unwrap()));
+                    }
+                }
+            }
+            let routers: Vec<Box<dyn Router>> = tables
+                .into_iter()
+                .map(|t| Box::new(t) as Box<dyn Router>)
+                .collect();
+            for s in 0..16usize {
+                let sc = hybrid_coords(CHIPS, TILES, s);
+                let src = fmt().encode(&sc);
+                for d in 0..16usize {
+                    if d == s {
+                        continue;
+                    }
+                    let dst = fmt().encode(&hybrid_coords(CHIPS, TILES, d));
+                    let path = walk(&routers, &next, s, src, dst, 32);
+                    for hop in &path {
+                        assert!(
+                            !dead.contains(hop),
+                            "{s} -> {d} crossed dead link {hop:?} ({faults:?})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -6,13 +6,43 @@
 //! the reconfiguration flavour that fits the DNP's table-capable RTR:
 //! when a bidirectional link dies, every node's routing table is
 //! recomputed over the surviving graph (shortest path under an
-//! up*/down*-free BFS metric, dimension-ordered tie-break), and installed
+//! up*/down*-free BFS metric, route-order tie-break), and installed
 //! through the µP-style [`TableRouter`] — the programmable-RTR replacement
 //! the paper's roadmap sketches.
 //!
-//! Payload-level faults (bit errors on the SerDes) are modelled separately
-//! by [`LinkFx`](crate::sim::channel::LinkFx); this module is about *hard*
-//! link failures.
+//! # The fault-recovery protocol
+//!
+//! 1. **Detection** — link-level CRC/timeout machinery flags a hard fault
+//!    (out of scope here; the simulator starts from a known fault set).
+//! 2. **Survivor graph** — software builds the adjacency of the surviving
+//!    links: [`SurvivorGraph`] for a flat torus, the two-level
+//!    [`hier::HierSurvivorGraph`] (chip torus × per-chip tile meshes) for
+//!    the hybrid system of `topology::hybrid_torus_mesh`.
+//! 3. **Recomputation** — per-destination shortest-path next hops over the
+//!    survivors ([`recompute_tables`] / [`hier::recompute_hybrid_tables`]).
+//!    Recovered routes that coincide with the healthy deterministic route
+//!    keep their healthy VC; deviating hops ride the escape VC 1, which
+//!    breaks the dependency cycles a detour could introduce
+//!    (Boppana-Chalasani's extra-VC argument). On the hybrid topology the
+//!    delivery-phase mesh hops additionally stay on the VC-1 delivery
+//!    class, preserving the hierarchical deadlock argument documented in
+//!    `route/hier.rs`. `None` is returned when some destination became
+//!    unreachable — reconfiguration cannot help and software must fence
+//!    the partition instead.
+//! 4. **Installation** — [`apply_tables`] swaps every node's router for
+//!    its recomputed [`TableRouter`] (matched by DNP address, so any node
+//!    layout works) and installs a router factory that keeps the table
+//!    across route-priority register rewrites: tables ignore the priority
+//!    register, so the rewrite is a no-op rather than a crash.
+//! 5. **Soft faults** — payload bit errors on the SerDes are modelled
+//!    separately by [`LinkFx`](crate::sim::channel::LinkFx); the
+//!    destination CQ's `CorruptPayload`/`LutMiss` events drive the
+//!    end-to-end retry loop of
+//!    [`traffic::retrying_plan`](crate::traffic::retrying_plan).
+
+pub mod hier;
+
+pub use hier::{inject_hybrid, recompute_hybrid_tables, HierLinkFault, HierSurvivorGraph};
 
 use crate::config::DnpConfig;
 use crate::packet::{AddrFormat, DnpAddr};
@@ -89,7 +119,7 @@ impl SurvivorGraph {
 
     /// BFS distances from `dst` over surviving links (reverse graph ==
     /// forward graph: links die bidirectionally).
-    fn dists_to(&self, dst: usize) -> Vec<u32> {
+    pub(crate) fn dists_to(&self, dst: usize) -> Vec<u32> {
         let mut dist = vec![u32::MAX; self.n()];
         dist[dst] = 0;
         let mut q = VecDeque::from([dst]);
@@ -115,10 +145,12 @@ impl SurvivorGraph {
 /// Compute fault-tolerant routing tables for every node.
 ///
 /// For each (node, dst): pick the out-port minimizing the BFS distance of
-/// the neighbor to dst; ties break by port index (a deterministic,
-/// dimension-ordered preference). Escape VC 1 is used for every recovered
-/// route that deviates from plain dimension order, which breaks the
-/// dependency cycles the detour could introduce (Boppana-Chalasani's
+/// the neighbor to dst; ties break in `cfg.route_order` priority (the
+/// dimension the healthy router would consume first wins, `+` before `-`),
+/// so every route the fault did not touch reproduces the healthy
+/// dimension-order decision exactly. Escape VC 1 is used for every
+/// recovered route that deviates from that healthy route, which breaks
+/// the dependency cycles the detour could introduce (Boppana-Chalasani's
 /// extra-VC argument).
 ///
 /// Returns `None` if some destination became unreachable.
@@ -155,15 +187,24 @@ pub fn recompute_tables(
             if u == dst {
                 continue;
             }
+            // Candidate ports in route-order priority (± within a
+            // dimension, Plus first — the healthy tie-break): with the
+            // strict `<` below, the first minimal candidate wins, so an
+            // order-consistent recovered route is never misclassified as
+            // deviating. (The old raw-port iteration was always X-first
+            // and parked healthy-equivalent ZYX routes on the escape VC.)
             let mut best: Option<(u32, usize)> = None;
-            for p in 0..6 {
-                if let Some(v) = g.neighbor(u, p) {
-                    let d = dist[v];
-                    if d == u32::MAX {
-                        continue;
-                    }
-                    if best.map(|(bd, _)| d < bd).unwrap_or(true) {
-                        best = Some((d, p));
+            for &dim in &cfg.route_order.0 {
+                for d in 0..2 {
+                    let p = dim * 2 + d;
+                    if let Some(v) = g.neighbor(u, p) {
+                        let dv = dist[v];
+                        if dv == u32::MAX {
+                            continue;
+                        }
+                        if best.map(|(bd, _)| dv < bd).unwrap_or(true) {
+                            best = Some((dv, p));
+                        }
                     }
                 }
             }
@@ -185,14 +226,22 @@ pub fn recompute_tables(
     Some(tables)
 }
 
-/// Install recomputed tables into a running torus net (the software
+/// Install recomputed tables into a running net (the software
 /// reconfiguration step after fault detection).
+///
+/// Tables are matched to nodes by their DNP address, so this works for any
+/// node layout — flat tori, the chip-major hybrid system, or nets that
+/// interleave DNPs with NoC routers. The installed router factory answers
+/// route-priority register rewrites by re-deriving (cloning) the installed
+/// table: tables ignore the priority register, so the write is survivable
+/// instead of fatal.
 pub fn apply_tables(net: &mut crate::sim::Net, tables: Vec<TableRouter>) {
-    for (i, t) in tables.into_iter().enumerate() {
-        let node = net.dnp_mut(i);
-        // Table routers ignore the priority register; drop the factory.
+    for t in tables {
+        let idx = net.node_of(t.me());
+        let node = net.dnp_mut(idx);
+        let on_rewrite = t.clone();
         node.set_router_factory(Box::new(move |_| {
-            panic!("route priority rewrite not supported in fault mode")
+            Box::new(on_rewrite.clone()) as Box<dyn Router>
         }));
         node.replace_router(Box::new(t));
     }
@@ -275,6 +324,87 @@ mod tests {
         let cfg = DnpConfig::shapes_rdt();
         let t = recompute_tables([2, 1, 1], &faults, &cfg, cfg.n_ports);
         assert!(t.is_none());
+    }
+
+    #[test]
+    fn zyx_tie_breaks_keep_healthy_port_and_vc() {
+        // Regression: distance ties used to break by raw port index
+        // (always X-first), so a ZYX config saw its order-consistent
+        // recovered routes as "deviating" and parked them on escape VC 1.
+        let mut cfg = DnpConfig::shapes_rdt();
+        cfg.route_order = crate::config::RouteOrder::ZYX;
+        let dims = [2, 2, 2];
+        // Fault on an X wire; (0,0,0) -> (1,1,1) healthy ZYX consumes Z
+        // first and is untouched by it.
+        let f = LinkFault { from: [0, 0, 0], dim: 0, plus: true };
+        let tables = recompute_tables(dims, &[f], &cfg, cfg.n_ports).unwrap();
+        let fmt = AddrFormat::Torus3D { dims };
+        let me = fmt.encode(&[0, 0, 0]);
+        let dst = fmt.encode(&[1, 1, 1]);
+        let healthy = TorusRouter::new(me, dims, cfg.route_order, cfg.n_ports);
+        let hd = healthy.decide(me, dst, 0);
+        let td = tables[0].decide(me, dst, 0);
+        assert_eq!(td.out, hd.out, "order-consistent route keeps its port");
+        assert_eq!(td.vc, hd.vc, "order-consistent route keeps its VC");
+    }
+
+    #[test]
+    fn no_fault_tables_reproduce_healthy_router_for_all_orders() {
+        // With an empty fault set the recomputation must be the identity:
+        // every (node, dst) decision — port AND vc — equals the healthy
+        // dimension-order router under every priority order.
+        let dims = [2, 3, 2];
+        let fmt = AddrFormat::Torus3D { dims };
+        let n = 12usize;
+        let coords = |i: usize| [i as u32 % 2, (i as u32 / 2) % 3, i as u32 / 6];
+        for order in crate::config::RouteOrder::all() {
+            let mut cfg = DnpConfig::shapes_rdt();
+            cfg.route_order = order;
+            let tables = recompute_tables(dims, &[], &cfg, cfg.n_ports).unwrap();
+            for u in 0..n {
+                let me = fmt.encode(&coords(u));
+                let healthy = TorusRouter::new(me, dims, order, cfg.n_ports);
+                for d in 0..n {
+                    if d == u {
+                        continue;
+                    }
+                    let dst = fmt.encode(&coords(d));
+                    assert_eq!(
+                        tables[u].decide(me, dst, 0),
+                        healthy.decide(me, dst, 0),
+                        "order {:?}: {u} -> {d}",
+                        order.0
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn priority_rewrite_survives_fault_mode() {
+        // Regression: `apply_tables` used to install a router factory that
+        // panicked, so any later route-priority register write aborted the
+        // whole simulation.
+        use crate::dnp::regs::{encode_route_order, REG_ROUTE_PRIORITY};
+        use crate::rdma::Command;
+        let cfg = DnpConfig::shapes_rdt();
+        let dims = [2, 1, 1];
+        let mut net = crate::topology::torus3d(dims, &cfg, 1 << 12);
+        let tables = recompute_tables(dims, &[], &cfg, cfg.n_ports).unwrap();
+        apply_tables(&mut net, tables);
+        for i in 0..2 {
+            net.dnp_mut(i).regs.write(
+                REG_ROUTE_PRIORITY,
+                encode_route_order(crate::config::RouteOrder::XYZ),
+            );
+        }
+        let fmt = AddrFormat::Torus3D { dims };
+        net.dnp_mut(1).register_buffer(0x100, 64, 0);
+        net.dnp_mut(0).mem.write(0x40, 0xFACE);
+        net.issue(0, Command::put(0x40, fmt.encode(&[1, 0, 0]), 0x100, 1));
+        net.run_until_idle(100_000)
+            .expect("post-rewrite PUT must complete");
+        assert_eq!(net.dnp(1).mem.read(0x100), 0xFACE);
     }
 
     #[test]

@@ -103,10 +103,16 @@ pub fn channel_utilization(net: &Net, elapsed: u64) -> Vec<(u32, f64)> {
 
 /// Observed traffic on the busiest channel, in payload bits/cycle — the
 /// measured per-port bandwidth (`BW_offchip = M × 4 bit/cycle` etc.).
+/// Counts payload words only (header/footer words are protocol overhead,
+/// not bandwidth) and, like [`delivered_gbs`], reports 0.0 for an empty
+/// window instead of silently substituting a 1-cycle one.
 pub fn peak_channel_bits_per_cycle(net: &Net, elapsed: u64) -> f64 {
+    if elapsed == 0 {
+        return 0.0;
+    }
     net.chans
         .iter()
-        .map(|(_, c)| c.words_sent as f64 * 32.0 / elapsed.max(1) as f64)
+        .map(|(_, c)| c.payload_words_sent as f64 * 32.0 / elapsed as f64)
         .fold(0.0, f64::max)
 }
 
@@ -152,6 +158,33 @@ mod tests {
             b.total(),
             b2.total()
         );
+    }
+
+    #[test]
+    fn peak_channel_counts_payload_words_and_guards_empty_window() {
+        // Regression: the helper claimed payload bandwidth but counted
+        // every wire word (6-word envelope included), and an elapsed==0
+        // window silently became a 1-cycle one instead of reporting 0.0
+        // like `delivered_gbs` does.
+        let cfg = DnpConfig::shapes_rdt();
+        let mut net = topology::two_tiles_offchip(&cfg, 1 << 12);
+        let fmt = AddrFormat::Torus3D { dims: [2, 1, 1] };
+        net.dnp_mut(1).register_buffer(0x100, 64, 0);
+        net.dnp_mut(0).mem.write_slice(0x40, &[7; 16]);
+        net.issue(0, Command::put(0x40, fmt.encode(&[1, 0, 0]), 0x100, 16).with_tag(1));
+        net.run_until_idle(100_000).expect("PUT completes");
+        assert_eq!(peak_channel_bits_per_cycle(&net, 0), 0.0, "empty window");
+        // The one active SerDes channel carried 16 payload + 6 envelope
+        // words; the peak must reflect the 16 payload words only.
+        let (words, payload) = net
+            .chans
+            .iter()
+            .map(|(_, c)| (c.words_sent, c.payload_words_sent))
+            .max()
+            .unwrap();
+        assert_eq!((words, payload), (22, 16));
+        let expect = 16.0 * 32.0 / 1000.0;
+        assert!((peak_channel_bits_per_cycle(&net, 1000) - expect).abs() < 1e-12);
     }
 
     #[test]

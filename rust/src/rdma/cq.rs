@@ -150,6 +150,20 @@ impl CqReader {
         }
     }
 
+    /// A reader synchronized to the writer's *current* position: events
+    /// already in the ring are skipped, only completions posted from now
+    /// on are returned. This is how software attaches to a DNP that has
+    /// been running (a fresh `new(base, len)` reader would replay — or
+    /// misalign against — whatever the ring already holds).
+    pub fn attach(writer: &CqWriter) -> Self {
+        Self {
+            base: writer.base,
+            len: writer.len,
+            rd: writer.wr,
+            consumed: writer.written,
+        }
+    }
+
     /// Pop the next event if the writer is ahead of us.
     pub fn poll(&mut self, mem: &TileMemory, writer: &CqWriter) -> Option<Event> {
         if self.consumed >= writer.written {
@@ -209,6 +223,23 @@ mod tests {
             let e = r.poll(&mem, &w).unwrap();
             assert_eq!(e.len_or_tag, i);
         }
+        assert!(r.poll(&mem, &w).is_none());
+    }
+
+    #[test]
+    fn attach_skips_prior_events() {
+        let mut mem = TileMemory::new(256);
+        let mut w = CqWriter::new(0x10, 8);
+        for i in 0..5 {
+            w.post(&mut mem, ev(EventKind::CmdDone, i));
+        }
+        // Attaching now must see nothing until the next post.
+        let mut r = CqReader::attach(&w);
+        assert!(r.poll(&mem, &w).is_none());
+        w.post(&mut mem, ev(EventKind::LutMiss, 99));
+        let e = r.poll(&mem, &w).unwrap();
+        assert_eq!(e.kind, EventKind::LutMiss);
+        assert_eq!(e.len_or_tag, 99);
         assert!(r.poll(&mem, &w).is_none());
     }
 

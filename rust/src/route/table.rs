@@ -24,6 +24,12 @@ impl TableRouter {
         }
     }
 
+    /// Address of the node this table routes for (used to match a
+    /// recomputed table to its net node at installation time).
+    pub fn me(&self) -> DnpAddr {
+        self.me
+    }
+
     /// Install (or replace) the route toward `dst`.
     pub fn install(&mut self, dst: DnpAddr, port: usize, vc: u8) {
         self.table.insert(

@@ -11,7 +11,7 @@
 //! *no packet is ever dropped* anywhere in the network.
 
 use super::wheel::EventWheel;
-use crate::packet::{Flit, FlitKind};
+use crate::packet::{Flit, FlitKind, NET_HDR_WORDS, RDMA_HDR_WORDS};
 use crate::util::SplitMix64;
 use std::collections::VecDeque;
 
@@ -104,6 +104,10 @@ pub struct Channel {
 
     // --- statistics ---
     pub words_sent: u64,
+    /// Subset of `words_sent` that carried packet *payload* (body flits
+    /// past the envelope header words) — the basis of payload-bandwidth
+    /// metrics, which must not count header/footer words.
+    pub payload_words_sent: u64,
     pub busy_cycles: u64,
 }
 
@@ -123,6 +127,7 @@ impl Channel {
             fx: None,
             rx_total: 0,
             words_sent: 0,
+            payload_words_sent: 0,
             busy_cycles: 0,
         }
     }
@@ -152,6 +157,11 @@ impl Channel {
         let ready = now + self.cycles_per_word + self.latency + stall;
         self.in_flight.push_back(InFlight { flit, vc, ready });
         self.words_sent += 1;
+        // Payload words are the body flits after the 5 envelope header
+        // words (the footer is the tail flit).
+        if flit.kind == FlitKind::Body && flit.seq as usize >= NET_HDR_WORDS + RDMA_HDR_WORDS {
+            self.payload_words_sent += 1;
+        }
         // The serializer is occupied for the whole word time, so
         // `busy_cycles / elapsed == utilization(elapsed)` holds on
         // off-chip links where cycles_per_word > 1 (retransmission
@@ -493,6 +503,27 @@ mod tests {
         }
         assert_eq!(c.busy_cycles, 80);
         assert!((c.utilization(80) - c.busy_cycles as f64 / 80.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn payload_words_counted_separately_from_envelope() {
+        // A 3-payload-word packet on the wire: head, 4 envelope body
+        // words, 3 payload body words, footer tail — only the payload
+        // words may count toward payload bandwidth.
+        let mut c = Channel::new(0, 1, 1, 32);
+        let total = 9u16;
+        for seq in 0..total {
+            let kind = if seq == 0 {
+                FlitKind::Head
+            } else if seq == total - 1 {
+                FlitKind::Tail
+            } else {
+                FlitKind::Body
+            };
+            c.send(Flit { pkt: PacketId(0), kind, seq, data: 0 }, 0, seq as u64);
+        }
+        assert_eq!(c.words_sent, 9);
+        assert_eq!(c.payload_words_sent, 3);
     }
 
     #[test]

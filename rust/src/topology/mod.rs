@@ -18,6 +18,7 @@
 
 use crate::config::{DnpConfig, RouteOrder};
 use crate::dnp::DnpNode;
+use crate::fault::hier::HierLinkFault;
 use crate::noc::{NocRouterNode, NOC_PORT_ACROSS, NOC_PORT_CCW, NOC_PORT_CW};
 use crate::packet::{AddrFormat, DnpAddr};
 use crate::phy::{dni_channel, noc_channel, offchip_channel, onchip_channel};
@@ -143,8 +144,9 @@ pub fn two_tiles_onchip(cfg: &DnpConfig, mem_words: usize) -> Net {
 }
 
 /// Step from tile `t` in mesh direction `d` (0:X+, 1:X-, 2:Y+, 3:Y-) on a
-/// `dims` 2D mesh; `None` when the step would leave the mesh.
-fn mesh_step(dims: [u32; 2], t: [u32; 2], d: usize) -> Option<[u32; 2]> {
+/// `dims` 2D mesh; `None` when the step would leave the mesh. Shared with
+/// the fault module's mesh survivor graph so both agree on what exists.
+pub(crate) fn mesh_step(dims: [u32; 2], t: [u32; 2], d: usize) -> Option<[u32; 2]> {
     let mut v = t;
     match d {
         0 if t[0] + 1 < dims[0] => v[0] += 1,
@@ -290,44 +292,28 @@ pub fn hybrid_torus_mesh(
     cfg: &DnpConfig,
     mem_words: usize,
 ) -> Net {
-    assert!(
-        chip_dims.iter().all(|&d| (1..=16).contains(&d)),
-        "chip dims must be 1..=16 (4-bit coordinate fields)"
-    );
-    assert!(
-        tile_dims.iter().all(|&d| (1..=8).contains(&d)),
-        "tile dims must be 1..=8 (3-bit coordinate fields)"
-    );
-    assert!(
-        cfg.vcs >= 2,
-        "hybrid routing needs >= 2 VCs (dateline escape + delivery class)"
-    );
-    let fmt = AddrFormat::Hybrid { chip_dims, tile_dims };
-    let nchips = chip_dims.iter().product::<u32>() as usize;
+    hybrid_torus_mesh_wired(chip_dims, tile_dims, cfg, mem_words).0
+}
+
+/// Per-tile physical port maps of the hybrid render (identical in every
+/// chip): mesh direction → on-chip port (`mesh2d_chip` compaction), and
+/// owned chip dimension → off-chip ± port pair on the gateway tile.
+/// Shared between [`hybrid_torus_mesh`] and the fault-recovery table
+/// recomputation ([`crate::fault::hier`]), which must agree on the wiring.
+#[allow(clippy::type_complexity)]
+pub(crate) fn hybrid_port_maps(
+    chip_dims: [u32; 3],
+    tile_dims: [u32; 2],
+    cfg: &DnpConfig,
+) -> (Vec<[Option<usize>; 4]>, Vec<[[Option<usize>; 2]; 3]>) {
     let ntiles = (tile_dims[0] * tile_dims[1]) as usize;
-    let n = nchips * ntiles;
     let base = cfg.n_ports; // off-chip port block starts after on-chip
-
-    let chip_idx = |c: [u32; 3]| -> usize {
-        (c[0] + c[1] * chip_dims[0] + c[2] * chip_dims[0] * chip_dims[1]) as usize
-    };
-    let chip_coords = |i: usize| -> [u32; 3] {
-        let i = i as u32;
-        [
-            i % chip_dims[0],
-            (i / chip_dims[0]) % chip_dims[1],
-            i / (chip_dims[0] * chip_dims[1]),
-        ]
-    };
-    let tile_idx = |t: [u32; 2]| -> usize { (t[0] + t[1] * tile_dims[0]) as usize };
-    let tile_coords = |i: usize| -> [u32; 2] { [i as u32 % tile_dims[0], i as u32 / tile_dims[0]] };
-
-    // --- Per-tile physical port maps (identical in every chip).
     // Mesh links: the same [X+, X-, Y+, Y-] compaction as `mesh2d_chip`.
     let mesh_port_of = mesh_port_map(tile_dims, cfg.n_ports);
     // Off-chip links: the gateway of chip dimension `dim` owns its ± port
     // pair, compacted onto the off-chip block after any dimensions it
     // already owns.
+    let tile_idx = |t: [u32; 2]| -> usize { (t[0] + t[1] * tile_dims[0]) as usize };
     let mut off_port_of = vec![[[None::<usize>; 2]; 3]; ntiles];
     let mut owned = vec![0usize; ntiles];
     for dim in 0..3 {
@@ -345,6 +331,103 @@ pub fn hybrid_torus_mesh(
             cfg.m_ports
         );
     }
+    (mesh_port_of, off_port_of)
+}
+
+/// Directed-channel map of a hybrid net, returned by
+/// [`hybrid_torus_mesh_wired`]: lets the fault-injection layer and the
+/// fault tests resolve a logical link (a [`HierLinkFault`]) to the two
+/// physical [`Channel`]s realizing it — e.g. to assert a dead wire never
+/// carries another flit.
+pub struct HybridWiring {
+    pub chip_dims: [u32; 3],
+    pub tile_dims: [u32; 2],
+    /// node → mesh direction (0:X+, 1:X-, 2:Y+, 3:Y-) → outgoing channel.
+    pub mesh_out: Vec<[Option<ChannelId>; 4]>,
+    /// node → off-chip `dim*2 + dir` (dir 0 = +, 1 = −) → outgoing channel.
+    pub off_out: Vec<[Option<ChannelId>; 6]>,
+}
+
+impl HybridWiring {
+    fn node(&self, chip: [u32; 3], tile: [u32; 2]) -> usize {
+        crate::traffic::hybrid_node_index(self.chip_dims, self.tile_dims, chip, tile)
+    }
+
+    /// The two directed channels (forward, reverse) realizing the logical
+    /// bidirectional link a fault kills. Panics when the link does not
+    /// exist in this net (degenerate ring or off-mesh step).
+    pub fn channels_of(&self, f: &HierLinkFault) -> [ChannelId; 2] {
+        match *f {
+            HierLinkFault::Serdes { chip, dim, plus } => {
+                let k = self.chip_dims[dim];
+                assert!(k >= 2, "dimension {dim} has no SerDes links");
+                let gw = gateway_tile(self.tile_dims, dim);
+                let mut nc = chip;
+                nc[dim] = (chip[dim] + if plus { 1 } else { k - 1 }) % k;
+                let u = self.node(chip, gw);
+                let v = self.node(nc, gw);
+                let d = usize::from(!plus);
+                [
+                    self.off_out[u][dim * 2 + d].expect("SerDes link wired"),
+                    self.off_out[v][dim * 2 + (1 - d)].expect("SerDes link wired"),
+                ]
+            }
+            HierLinkFault::Mesh { chip, tile, dim, plus } => {
+                let d = dim * 2 + usize::from(!plus);
+                let nt = mesh_step(self.tile_dims, tile, d).expect("mesh link exists");
+                let back = [1usize, 0, 3, 2][d];
+                let u = self.node(chip, tile);
+                let v = self.node(chip, nt);
+                [
+                    self.mesh_out[u][d].expect("mesh link wired"),
+                    self.mesh_out[v][back].expect("mesh link wired"),
+                ]
+            }
+        }
+    }
+}
+
+/// [`hybrid_torus_mesh`] plus the [`HybridWiring`] channel map the fault
+/// subsystem needs to target individual physical links.
+pub fn hybrid_torus_mesh_wired(
+    chip_dims: [u32; 3],
+    tile_dims: [u32; 2],
+    cfg: &DnpConfig,
+    mem_words: usize,
+) -> (Net, HybridWiring) {
+    assert!(
+        chip_dims.iter().all(|&d| (1..=16).contains(&d)),
+        "chip dims must be 1..=16 (4-bit coordinate fields)"
+    );
+    assert!(
+        tile_dims.iter().all(|&d| (1..=8).contains(&d)),
+        "tile dims must be 1..=8 (3-bit coordinate fields)"
+    );
+    assert!(
+        cfg.vcs >= 2,
+        "hybrid routing needs >= 2 VCs (dateline escape + delivery class)"
+    );
+    let fmt = AddrFormat::Hybrid { chip_dims, tile_dims };
+    let nchips = chip_dims.iter().product::<u32>() as usize;
+    let ntiles = (tile_dims[0] * tile_dims[1]) as usize;
+    let n = nchips * ntiles;
+
+    let chip_idx = |c: [u32; 3]| -> usize {
+        (c[0] + c[1] * chip_dims[0] + c[2] * chip_dims[0] * chip_dims[1]) as usize
+    };
+    let chip_coords = |i: usize| -> [u32; 3] {
+        let i = i as u32;
+        [
+            i % chip_dims[0],
+            (i / chip_dims[0]) % chip_dims[1],
+            i / (chip_dims[0] * chip_dims[1]),
+        ]
+    };
+    let tile_idx = |t: [u32; 2]| -> usize { (t[0] + t[1] * tile_dims[0]) as usize };
+    let tile_coords = |i: usize| -> [u32; 2] { [i as u32 % tile_dims[0], i as u32 / tile_dims[0]] };
+
+    // --- Per-tile physical port maps (identical in every chip).
+    let (mesh_port_of, off_port_of) = hybrid_port_maps(chip_dims, tile_dims, cfg);
 
     let mut net = Net::new();
 
@@ -440,7 +523,13 @@ pub fn hybrid_torus_mesh(
             net.add_dnp(node);
         }
     }
-    net
+    let wiring = HybridWiring {
+        chip_dims,
+        tile_dims,
+        mesh_out,
+        off_out,
+    };
+    (net, wiring)
 }
 
 /// Router of an MTNoC tile DNP: everything non-local exits through the

@@ -8,7 +8,7 @@
 //! permutation traffic.
 
 use crate::packet::{AddrFormat, DnpAddr};
-use crate::rdma::Command;
+use crate::rdma::{Command, CqReader, EventKind};
 use crate::sim::Net;
 use crate::util::SplitMix64;
 
@@ -94,6 +94,12 @@ impl Feeder {
 /// with the O(1) live counters ([`Net::idle_now`]) instead of a full
 /// `is_idle` scan per cycle, and when no node is runnable jumps straight
 /// to the earlier of the next channel wake and the next planned command.
+///
+/// Budget contract, shared bit-exactly with [`run_plan_dense`]: steps may
+/// execute at cycles `start ..= start + max_cycles - 1` and the drain
+/// check runs after every step, so a plan whose last event lands on the
+/// final allowed cycle reports `Some(max_cycles)` in both modes (the
+/// equivalence suite pins this exact budget edge).
 pub fn run_plan(net: &mut Net, feeder: &mut Feeder, max_cycles: u64) -> Option<u64> {
     net.heat_all();
     let start = net.cycle;
@@ -109,8 +115,20 @@ pub fn run_plan(net: &mut Net, feeder: &mut Feeder, max_cycles: u64) -> Option<u
                 (w, f) => w.or(f),
             };
             match target {
+                Some(t) if t >= start + max_cycles => {
+                    // The next event lies at or beyond the budget edge: no
+                    // step inside the budget can change anything, exactly
+                    // as in the dense loop (whose last step runs at cycle
+                    // `start + max_cycles - 1` and cannot see it either).
+                    // Burn the remaining budget and report the timeout —
+                    // explicitly, instead of clamping the jump to the edge
+                    // and falling out of the loop guard, which conflated
+                    // this case with an event landing *inside* the budget.
+                    net.advance_to(start + max_cycles);
+                    return None;
+                }
                 Some(t) if t > net.cycle => {
-                    net.advance_to(t.min(start + max_cycles));
+                    net.advance_to(t);
                     continue; // pump at the new cycle before stepping
                 }
                 Some(_) => {}
@@ -147,6 +165,142 @@ pub fn run_plan_dense(net: &mut Net, feeder: &mut Feeder, max_cycles: u64) -> Op
         }
     }
     None
+}
+
+/// Tag base for the PUTs [`retrying_plan`] re-issues, keeping recovery
+/// traffic distinguishable from the original plan in the traces.
+pub const RETRY_TAG_BASE: u32 = 0x4000_0000;
+
+/// Outcome of [`retrying_plan`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryReport {
+    /// Cycles from the first command to the final drain, all rounds.
+    pub elapsed: u64,
+    /// PUTs re-issued across all recovery rounds.
+    pub retries: u64,
+    /// Recovery rounds that issued at least one retry.
+    pub rounds: u32,
+}
+
+/// Run `plan` with end-to-end retry driven by the destination CQs: after
+/// each drained round, software polls every DNP's completion queue, and
+/// every `CorruptPayload` (payload bit errors on a BER-afflicted SerDes
+/// link) or `LutMiss` (destination window not registered) event triggers a
+/// re-issue of the transfer from its source. The CQ event carries the peer
+/// DNP, landing address and length; the source memory address is looked up
+/// from the plan's own commands (keyed by source node, destination node
+/// and window — two plan entries sharing that triple with *different*
+/// source offsets are indistinguishable at the destination, and the later
+/// one wins; error events matching no plan entry, e.g. from GET response
+/// legs, are not retried). Rounds repeat until a round completes with no
+/// error events.
+///
+/// `LutMiss` retries only succeed once software repairs the registration;
+/// use [`retrying_plan_with`] to run a repair hook before each round.
+/// Returns `None` when a round times out or `max_rounds` recovery rounds
+/// were not enough (e.g. a LUT miss nobody repairs).
+pub fn retrying_plan(
+    net: &mut Net,
+    plan: Vec<Planned>,
+    max_cycles: u64,
+    max_rounds: u32,
+) -> Option<RetryReport> {
+    retrying_plan_with(net, plan, max_cycles, max_rounds, |_, _| {})
+}
+
+/// [`retrying_plan`] with a software repair hook, called once before each
+/// recovery round (argument: the 1-based round number) — e.g. to register
+/// the missing LUT window a `LutMiss` reported.
+pub fn retrying_plan_with(
+    net: &mut Net,
+    plan: Vec<Planned>,
+    max_cycles: u64,
+    max_rounds: u32,
+    mut repair: impl FnMut(&mut Net, u32),
+) -> Option<RetryReport> {
+    // Reconstruction table: (source node, destination node, window) →
+    // source memory address, from the plan itself — the CQ error event
+    // does not carry the source offset.
+    let mut src_of: std::collections::HashMap<(usize, usize, u32), u32> = plan
+        .iter()
+        .map(|p| {
+            let dst = net.node_of(p.cmd.dst_dnp);
+            ((p.node, dst, p.cmd.dst_addr), p.cmd.src_addr)
+        })
+        .collect();
+    // One software-side CQ reader per DNP, attached at the writer's
+    // current position before the first round: every completion of *this*
+    // plan is seen, while events a previous run already posted are not
+    // replayed as fresh errors.
+    let mut readers: Vec<Option<CqReader>> = net
+        .nodes
+        .iter()
+        .map(|n| n.as_dnp().map(|d| CqReader::attach(&d.cq)))
+        .collect();
+    let start = net.cycle;
+    let mut feeder = Feeder::new(plan);
+    run_plan(net, &mut feeder, max_cycles)?;
+    let mut retries = 0u64;
+    let mut rounds = 0u32;
+    let mut retry_tag = RETRY_TAG_BASE;
+    loop {
+        // Software fault handling: scan every CQ for error completions and
+        // rebuild the failed transfers.
+        let mut redo: Vec<Planned> = Vec::new();
+        for (node, rd) in readers.iter_mut().enumerate() {
+            let Some(rd) = rd else { continue };
+            let d = net.dnp(node);
+            // The scan runs once per round: a node that completed more
+            // events than the ring holds has overwritten slots we never
+            // read — fail loudly instead of silently dropping (or
+            // double-reading) error events.
+            assert!(
+                d.cq.written - rd.consumed() <= d.cfg.cq_len as u64,
+                "node {node}: CQ ring lapped between retry rounds \
+                 (raise cfg.cq_len or split the plan into rounds)"
+            );
+            let me = d.addr;
+            loop {
+                let ev = {
+                    let d = net.dnp(node);
+                    rd.poll(&d.mem, &d.cq)
+                };
+                let Some(ev) = ev else { break };
+                if !matches!(ev.kind, EventKind::CorruptPayload | EventKind::LutMiss) {
+                    continue;
+                }
+                let src = net.node_of(ev.peer);
+                // Only transfers the plan itself describes can be rebuilt;
+                // an unmatched event (e.g. a corrupt GET response, whose
+                // source offset lives on the serving node) is skipped
+                // rather than re-issued with a fabricated source address.
+                let Some(src_addr) = src_of.get(&(src, node, ev.addr)).copied() else {
+                    continue;
+                };
+                redo.push(Planned {
+                    node: src,
+                    at: net.cycle,
+                    cmd: Command::put(src_addr, me, ev.addr, ev.len_or_tag).with_tag(retry_tag),
+                });
+                retry_tag += 1;
+            }
+        }
+        if redo.is_empty() {
+            return Some(RetryReport { elapsed: net.cycle - start, retries, rounds });
+        }
+        if rounds >= max_rounds {
+            return None;
+        }
+        rounds += 1;
+        retries += redo.len() as u64;
+        repair(net, rounds);
+        for p in &redo {
+            let dst = net.node_of(p.cmd.dst_dnp);
+            src_of.insert((p.node, dst, p.cmd.dst_addr), p.cmd.src_addr);
+        }
+        let mut feeder = Feeder::new(redo);
+        run_plan(net, &mut feeder, max_cycles)?;
+    }
 }
 
 /// Uniform-random traffic: `count` PUTs per node to random other nodes,
@@ -274,6 +428,34 @@ pub fn hybrid_uniform_random(
         .map(|i| (i, fmt.encode(&hybrid_coords(chip_dims, tile_dims, i))))
         .collect();
     uniform_random(&nodes, count, len, mean_gap, seed)
+}
+
+/// Staggered all-pairs PUT load on the hybrid system: every tile sends
+/// `len` words to every other tile, issue cycles staggered per pair
+/// (`slot*7 + peer*3`), tag `slot*100 + peer`, landing in the window the
+/// receiver exposes to the sender's slot ([`rx_addr`]) — the acceptance
+/// workload of the hybrid integration and fault-recovery suites (shared
+/// so the tag/window/stagger conventions live in one place).
+pub fn hybrid_all_pairs(chip_dims: [u32; 3], tile_dims: [u32; 2], len: u32) -> Vec<Planned> {
+    let fmt = AddrFormat::Hybrid { chip_dims, tile_dims };
+    let n = fmt.node_count() as usize;
+    assert!(n < 100, "tag scheme packs the peer into two decimal digits");
+    let mut plan = Vec::new();
+    for slot in 0..n {
+        for peer in 0..n {
+            if peer == slot {
+                continue;
+            }
+            let dst = fmt.encode(&hybrid_coords(chip_dims, tile_dims, peer));
+            plan.push(Planned {
+                node: slot,
+                at: (slot as u64) * 7 + (peer as u64) * 3,
+                cmd: Command::put(TX_BASE, dst, rx_addr(slot), len)
+                    .with_tag((slot * 100 + peer) as u32),
+            });
+        }
+    }
+    plan
 }
 
 /// Halo exchange on the hybrid system: tiles form one global 2D lattice
@@ -567,6 +749,103 @@ mod tests {
             cross |= dst / 4 != p.node / 4;
         }
         assert!(cross, "16 draws per tile must hit the other chip");
+    }
+
+    #[test]
+    fn retrying_plan_clean_run_reports_zero_retries() {
+        let cfg = DnpConfig::shapes_rdt();
+        let mut net = topology::torus3d([2, 2, 1], &cfg, 1 << 16);
+        let slots: Vec<usize> = (0..4).collect();
+        setup_buffers(&mut net, &slots);
+        let plan = halo_exchange_3d([2, 2, 1], 16);
+        let total = plan.len() as u64;
+        let report = retrying_plan(&mut net, plan, 1_000_000, 4).expect("clean run drains");
+        assert_eq!(report.retries, 0);
+        assert_eq!(report.rounds, 0);
+        assert!(report.elapsed > 0);
+        assert_eq!(net.traces.delivered, total);
+    }
+
+    #[test]
+    fn lut_miss_retry_lands_after_software_repairs_registration() {
+        // A PUT races software buffer registration: the first attempt
+        // misses the LUT, the CQ's LutMiss event drives a retry, and the
+        // repair hook registers the window before the recovery round.
+        use crate::rdma::LUT_SENDOK;
+        let cfg = DnpConfig::shapes_rdt();
+        let mut net = topology::two_tiles_offchip(&cfg, 1 << 16);
+        let fmt = AddrFormat::Torus3D { dims: [2, 1, 1] };
+        let pattern: Vec<u32> = (0..16).collect();
+        net.dnp_mut(0).mem.write_slice(TX_BASE, &pattern);
+        let plan = vec![Planned {
+            node: 0,
+            at: 0,
+            cmd: Command::put(TX_BASE, fmt.encode(&[1, 0, 0]), rx_addr(0), 16).with_tag(1),
+        }];
+        let report = retrying_plan_with(&mut net, plan, 1_000_000, 3, |net, round| {
+            if round == 1 {
+                net.dnp_mut(1)
+                    .register_buffer(rx_addr(0), RX_WINDOW, LUT_SENDOK)
+                    .expect("LUT capacity");
+            }
+        })
+        .expect("retry must converge once the window exists");
+        assert_eq!(report.retries, 1);
+        assert_eq!(report.rounds, 1);
+        assert_eq!(net.traces.lut_misses, 1);
+        assert_eq!(net.dnp(1).mem.read_slice(rx_addr(0), 16), &pattern[..]);
+    }
+
+    #[test]
+    fn retrying_plan_ignores_completions_of_earlier_runs() {
+        // A net that already ran traffic holds CQ events; a retry loop
+        // attached afterwards must not replay them as fresh errors.
+        use crate::rdma::LUT_SENDOK;
+        let cfg = DnpConfig::shapes_rdt();
+        let mut net = topology::two_tiles_offchip(&cfg, 1 << 16);
+        let fmt = AddrFormat::Torus3D { dims: [2, 1, 1] };
+        let dst = fmt.encode(&[1, 0, 0]);
+        net.dnp_mut(0).mem.write(TX_BASE, 0xAA);
+        // Phase 1 (no retry loop): a PUT that LUT-misses, leaving an
+        // error event in the destination ring.
+        let mut feeder = Feeder::new(vec![Planned {
+            node: 0,
+            at: 0,
+            cmd: Command::put(TX_BASE, dst, rx_addr(0), 1).with_tag(1),
+        }]);
+        run_plan(&mut net, &mut feeder, 1_000_000).expect("phase 1 drains");
+        assert_eq!(net.traces.lut_misses, 1);
+        // Phase 2: a clean plan under the retry loop — the stale LutMiss
+        // must not be replayed into a spurious retry.
+        net.dnp_mut(1)
+            .register_buffer(rx_addr(0), RX_WINDOW, LUT_SENDOK)
+            .expect("LUT capacity");
+        let plan = vec![Planned {
+            node: 0,
+            at: 0,
+            cmd: Command::put(TX_BASE, dst, rx_addr(0), 1).with_tag(2),
+        }];
+        let report = retrying_plan(&mut net, plan, 1_000_000, 3).expect("phase 2 clean");
+        assert_eq!(report.retries, 0);
+        assert_eq!(report.rounds, 0);
+    }
+
+    #[test]
+    fn unrepaired_lut_miss_exhausts_retry_rounds() {
+        let cfg = DnpConfig::shapes_rdt();
+        let mut net = topology::two_tiles_offchip(&cfg, 1 << 16);
+        let fmt = AddrFormat::Torus3D { dims: [2, 1, 1] };
+        net.dnp_mut(0).mem.write(TX_BASE, 0xDEAD);
+        let plan = vec![Planned {
+            node: 0,
+            at: 0,
+            cmd: Command::put(TX_BASE, fmt.encode(&[1, 0, 0]), rx_addr(0), 1).with_tag(1),
+        }];
+        assert!(
+            retrying_plan(&mut net, plan, 1_000_000, 2).is_none(),
+            "nobody repairs the LUT: the retry loop must give up"
+        );
+        assert_eq!(net.traces.lut_misses, 3, "original attempt + 2 retry rounds");
     }
 
     #[test]

@@ -214,6 +214,97 @@ fn ber_retransmission_matches_dense() {
 }
 
 #[test]
+fn run_plan_budget_edge_matches_dense() {
+    // Pin both modes at the exact cycle-budget boundary: with the budget
+    // set to the plan's exact drain time D, both must report Some(D) (the
+    // drain lands on the final allowed step); with D - 1 both must report
+    // None. Regression for the event loop clamping its jump to the budget
+    // edge and falling out of the loop guard.
+    let cfg = DnpConfig::shapes_rdt();
+    let build = || {
+        let mut net = topology::torus3d([2, 2, 2], &cfg, 1 << 16);
+        let slots: Vec<usize> = (0..8).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        net
+    };
+    let plan = traffic::halo_exchange_3d([2, 2, 2], 24);
+    let mut net = build();
+    let mut feeder = traffic::Feeder::new(plan.clone());
+    let d = traffic::run_plan(&mut net, &mut feeder, 2_000_000).expect("measure drain time");
+    assert!(d > 1);
+    for (budget, expect_some) in [(d, true), (d - 1, false)] {
+        let mut dense_net = build();
+        let mut feeder = traffic::Feeder::new(plan.clone());
+        let dense_elapsed = traffic::run_plan_dense(&mut dense_net, &mut feeder, budget);
+        let mut event_net = build();
+        let mut feeder = traffic::Feeder::new(plan.clone());
+        let event_elapsed = traffic::run_plan(&mut event_net, &mut feeder, budget);
+        assert_eq!(
+            dense_elapsed.is_some(),
+            expect_some,
+            "dense at budget {budget} (drain time {d})"
+        );
+        assert_eq!(
+            dense_elapsed, event_elapsed,
+            "budget {budget}: modes disagree at the edge"
+        );
+        assert_eq!(
+            snapshot(&dense_net, dense_elapsed),
+            snapshot(&event_net, event_elapsed),
+            "budget {budget}: snapshots diverged"
+        );
+    }
+}
+
+#[test]
+fn faulted_torus_reconfig_matches_dense() {
+    // Recomputed fault tables installed mid-run (packets in flight): the
+    // table swap plus the node re-heat it implies must leave dense and
+    // event-driven stepping bit-exact.
+    use dnp::fault::{self, LinkFault};
+    let cfg = DnpConfig::shapes_rdt();
+    let dims = [3, 2, 2];
+    let build = || {
+        let mut net = topology::torus3d(dims, &cfg, 1 << 16);
+        let slots: Vec<usize> = (0..net.nodes.len()).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        net
+    };
+    let plan = {
+        let net = build();
+        let nodes = dnp_slots(&net);
+        traffic::uniform_random(&nodes, 4, 8, 20, 0xFEED_0006)
+    };
+    let dead = LinkFault { from: [0, 0, 0], dim: 0, plus: true };
+    let tables = || fault::recompute_tables(dims, &[dead], &cfg, cfg.n_ports).expect("connected");
+    const SWAP_AT: u64 = 400; // mid-run: wormholes and commands in flight
+
+    let mut dense_net = build();
+    let mut feeder = traffic::Feeder::new(plan.clone());
+    for _ in 0..SWAP_AT {
+        feeder.pump(&mut dense_net);
+        dense_net.step_dense();
+    }
+    fault::apply_tables(&mut dense_net, tables());
+    let dense_elapsed = traffic::run_plan_dense(&mut dense_net, &mut feeder, 2_000_000);
+    assert!(dense_elapsed.is_some(), "faulted dense run must drain");
+    let dense = snapshot(&dense_net, dense_elapsed);
+
+    let mut event_net = build();
+    let mut feeder = traffic::Feeder::new(plan);
+    event_net.heat_all();
+    for _ in 0..SWAP_AT {
+        feeder.pump(&mut event_net);
+        event_net.step();
+    }
+    fault::apply_tables(&mut event_net, tables());
+    let event_elapsed = traffic::run_plan(&mut event_net, &mut feeder, 2_000_000);
+    let event = snapshot(&event_net, event_elapsed);
+
+    assert_eq!(dense, event, "mid-run reconfiguration diverged");
+}
+
+#[test]
 fn run_until_idle_matches_dense() {
     // The direct-issue path (benches, examples) rather than a feeder.
     let cfg = DnpConfig::shapes_rdt();

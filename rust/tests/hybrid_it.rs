@@ -4,7 +4,7 @@
 //! integrity and gateway transit behaviour.
 
 use dnp::config::DnpConfig;
-use dnp::packet::{AddrFormat, DnpAddr};
+use dnp::packet::AddrFormat;
 use dnp::rdma::Command;
 use dnp::{topology, traffic, Net};
 
@@ -23,10 +23,6 @@ fn build() -> Net {
     net
 }
 
-fn addr_of(node: usize) -> DnpAddr {
-    fmt().encode(&traffic::hybrid_coords(CHIPS, TILES, node))
-}
-
 /// Acceptance: every tile reaches every tile, including across chip
 /// boundaries, under a staggered all-pairs PUT load.
 #[test]
@@ -34,20 +30,7 @@ fn hybrid_all_pairs_cross_chip_delivery() {
     let mut net = build();
     let n = net.nodes.len();
     assert_eq!(n, 16);
-    let mut plan = Vec::new();
-    for slot in 0..n {
-        for peer in 0..n {
-            if peer == slot {
-                continue;
-            }
-            plan.push(traffic::Planned {
-                node: slot,
-                at: (slot as u64) * 7 + (peer as u64) * 3,
-                cmd: Command::put(traffic::TX_BASE, addr_of(peer), traffic::rx_addr(slot), 8)
-                    .with_tag((slot * 100 + peer) as u32),
-            });
-        }
-    }
+    let plan = traffic::hybrid_all_pairs(CHIPS, TILES, 8);
     let total = plan.len() as u64;
     assert_eq!(total, 16 * 15);
     let mut feeder = traffic::Feeder::new(plan);
