@@ -152,6 +152,72 @@ fn hybrid_faulted_uniform() -> (u64, u64, f64) {
     (flits, cycles, r.median_s)
 }
 
+/// §Shard scenario: a 3×3×3 chip torus of 2×2 tile meshes (108 DNPs)
+/// under hierarchical uniform-random traffic — a scale the single-thread
+/// loop is the bottleneck for, and the speedup scenario EXPERIMENTS.md
+/// §Shard records over 1/2/4/8 workers. Buffers use one wide RX window
+/// per tile: the per-peer window scheme of `setup_buffers` would exceed
+/// the 64-record LUT at this node count.
+const SHARD_CHIPS: [u32; 3] = [3, 3, 3];
+const SHARD_TILES: [u32; 2] = [2, 2];
+const SHARD_MEM: usize = 1 << 17;
+
+fn shard_scenario_plan() -> Vec<traffic::Planned> {
+    traffic::hybrid_uniform_random(SHARD_CHIPS, SHARD_TILES, 6, 48, 8, 0x5AAD_0001)
+}
+
+fn shard_scenario_nodes() -> usize {
+    (SHARD_CHIPS.iter().product::<u32>() * SHARD_TILES.iter().product::<u32>()) as usize
+}
+
+/// Sequential event-scheduler baseline on the §Shard scenario.
+fn shard_scenario_event() -> (u64, u64, f64) {
+    let cfg = DnpConfig::hybrid();
+    let n = shard_scenario_nodes();
+    let mut flits = 0u64;
+    let mut cycles = 0u64;
+    let r = wall(1, 3, || {
+        let mut net = topology::hybrid_torus_mesh(SHARD_CHIPS, SHARD_TILES, &cfg, SHARD_MEM);
+        net.traces.enabled = false;
+        let window = n as u32 * traffic::RX_WINDOW;
+        for i in 0..n {
+            net.dnp_mut(i)
+                .register_buffer(traffic::rx_addr(0), window, 0)
+                .expect("LUT capacity");
+        }
+        let mut feeder = traffic::Feeder::new(shard_scenario_plan());
+        traffic::run_plan(&mut net, &mut feeder, 10_000_000).expect("drains");
+        flits = dnp::metrics::net_totals(&net).flits_switched;
+        cycles = net.cycle;
+    });
+    (flits, cycles, r.median_s)
+}
+
+/// The §Shard scenario on the per-chip sharded runtime with `workers`
+/// threads — 27 shards free-running between SerDes-lookahead horizons.
+fn shard_scenario_sharded(workers: usize) -> (u64, u64, f64) {
+    use dnp::sim::ShardedNet;
+    let cfg = DnpConfig::hybrid();
+    let n = shard_scenario_nodes();
+    let mut flits = 0u64;
+    let mut cycles = 0u64;
+    let r = wall(1, 3, || {
+        let mut snet = ShardedNet::hybrid(SHARD_CHIPS, SHARD_TILES, &cfg, SHARD_MEM, workers);
+        snet.set_tracing(false);
+        let window = n as u32 * traffic::RX_WINDOW;
+        for i in 0..n {
+            snet.dnp_mut(i)
+                .register_buffer(traffic::rx_addr(0), window, 0)
+                .expect("LUT capacity");
+        }
+        let elapsed = traffic::run_plan_sharded(&mut snet, shard_scenario_plan(), 10_000_000)
+            .expect("drains");
+        flits = dnp::metrics::sharded_totals(&snet).flits_switched;
+        cycles = elapsed;
+    });
+    (flits, cycles, r.median_s)
+}
+
 fn halo_phase() -> (u64, u64, f64) {
     let cfg = DnpConfig::shapes_rdt();
     let mut flits = 0u64;
@@ -208,6 +274,11 @@ fn main() {
         ("hybrid 2x2 chips x 2x2", hybrid_uniform()),
         ("hybrid 2x2 faulted link", hybrid_faulted_uniform()),
         ("LQCD halo x10", halo_phase()),
+        ("hybrid 3x3x3 event", shard_scenario_event()),
+        ("hybrid 3x3x3 shard w1", shard_scenario_sharded(1)),
+        ("hybrid 3x3x3 shard w2", shard_scenario_sharded(2)),
+        ("hybrid 3x3x3 shard w4", shard_scenario_sharded(4)),
+        ("hybrid 3x3x3 shard w8", shard_scenario_sharded(8)),
     ] {
         t.row(&[
             name.into(),

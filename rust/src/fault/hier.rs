@@ -47,20 +47,31 @@
 //!   re-homed rings) ride the **escape VC 1**, the Boppana-Chalasani
 //!   extra-VC convention the flat module already uses.
 //!
-//! # Known approximations
+//! # Dateline verification
 //!
 //! A per-(node, dst) table cannot carry per-packet wrap state, so the
 //! dateline VC is evaluated as if each node were the packet's source
-//! (the same convention as [`recompute_tables`](super::recompute_tables)):
-//! on chip rings of k >= 4 a packet past the wrap can be handed back to
-//! VC 0, weakening the Dally-Seitz argument — rings of k <= 3 (every
-//! configuration this repo ships and tests) have no post-wrap transit
-//! hop, so the scheme is sound there. Similarly, the per-target BFS mesh
-//! detours are acyclic per destination but their *union* is not
-//! turn-model-checked; on tile meshes >= 3x3 an adversarial fault set
-//! could in principle close a mesh VC cycle under saturation. ROADMAP
-//! tracks the rigorous fix (static per-channel dateline classes /
-//! turn-restricted detour selection).
+//! (the same convention as [`recompute_tables`](super::recompute_tables)).
+//! That convention is sound only while no chip-level route takes a
+//! *post-wrap* hop on the same ring — true for minimal routes on rings of
+//! k <= 3 (ring distance <= 1), but violated by **every** k >= 4 ring
+//! (e.g. `src = k-1 → dst = 1` wraps at the dateline and then continues
+//! on VC 0) and by some detours past a wrap on smaller rings. Instead of
+//! silently installing unsound tables, [`recompute_hybrid_tables`] now
+//! *walks* every ordered chip pair over the exact hops and VCs the tables
+//! install and returns [`HierRecoveryError::DatelineHazard`] when a hop
+//! after a ring's wrap would ride VC 0. Every configuration this repo
+//! ships and tests passes the walk; the rigorous fix that would *accept*
+//! k >= 4 rings (static per-channel dateline classes) stays on the
+//! ROADMAP.
+//!
+//! # Known approximations
+//!
+//! The per-target BFS mesh detours are acyclic per destination but their
+//! *union* is not turn-model-checked; on tile meshes >= 3x3 an
+//! adversarial fault set could in principle close a mesh VC cycle under
+//! saturation. ROADMAP tracks the rigorous fix (turn-restricted detour
+//! selection).
 
 use super::{LinkFault, SurvivorGraph};
 use crate::config::{DnpConfig, RouteOrder};
@@ -70,7 +81,7 @@ use crate::route::{HierRouter, OutSel, Router, TableRouter};
 use crate::sim::channel::ChannelId;
 use crate::sim::Net;
 use crate::topology::{hybrid_port_maps, mesh_step, HybridWiring};
-use crate::traffic::{hybrid_coords, hybrid_node_index};
+use crate::traffic::hybrid_coords;
 use std::collections::VecDeque;
 
 /// A hard fault on one bidirectional link of the hybrid system (kills both
@@ -176,18 +187,17 @@ impl MeshSurvivor {
     }
 }
 
-/// Row-major chip index of chip coordinates `c` — derived from the
-/// canonical layout helpers in [`crate::traffic`] (a chip index is a node
-/// index under a degenerate single-tile chip), so the fault tables can
-/// never drift from the builder's node ordering.
+/// Row-major chip index of chip coordinates `c` — the topology layer's
+/// canonical mapping (itself derived from [`crate::traffic`]'s layout
+/// helpers), so the fault tables can never drift from the builder's node
+/// ordering.
 fn chip_index(dims: [u32; 3], c: [u32; 3]) -> usize {
-    hybrid_node_index(dims, [1, 1], c, [0, 0])
+    crate::topology::chip_index3(dims, c)
 }
 
 /// Inverse of [`chip_index`].
 fn chip_coords(dims: [u32; 3], i: usize) -> [u32; 3] {
-    let c = hybrid_coords(dims, [1, 1], i);
-    [c[0], c[1], c[2]]
+    crate::topology::chip_coords3(dims, i)
 }
 
 /// Two-level survivor graph of the hybrid system: the chip torus over
@@ -284,22 +294,92 @@ fn chip_next_hop(
     best.map(|(_, dim, d)| (dim, d))
 }
 
+/// Why [`recompute_hybrid_tables`] refused to produce tables. Every
+/// variant means "reconfiguration cannot recover this system soundly" —
+/// software must fence the partition (or re-plan the topology) instead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HierRecoveryError {
+    /// The chip torus is disconnected over the surviving SerDes cables.
+    ChipTorusDisconnected,
+    /// Chip `chip`'s tile mesh is internally partitioned (out-and-back
+    /// transit through a neighbour chip would violate the hierarchy).
+    MeshPartitioned { chip: usize },
+    /// The recovered route set would hand a post-dateline packet back to
+    /// VC 0 on chip ring `dim`: the chip-level walk from `src_chip` to
+    /// `dst_chip` crosses the ring's wrap link and later takes an
+    /// off-chip hop on the same ring whose installed VC is 0 (the
+    /// per-(node, dst) table evaluated the dateline as if that node were
+    /// the source). Installing such tables would silently void the
+    /// Dally-Seitz deadlock argument — see the module docs §Dateline
+    /// verification. This fires for *every* k >= 4 chip ring, faulted or
+    /// not, and for adversarial detours past a wrap on smaller rings.
+    DatelineHazard {
+        dim: usize,
+        src_chip: usize,
+        dst_chip: usize,
+    },
+}
+
+impl std::fmt::Display for HierRecoveryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            HierRecoveryError::ChipTorusDisconnected => {
+                write!(f, "chip torus disconnected over surviving SerDes cables")
+            }
+            HierRecoveryError::MeshPartitioned { chip } => {
+                write!(f, "tile mesh of chip {chip} is internally partitioned")
+            }
+            HierRecoveryError::DatelineHazard { dim, src_chip, dst_chip } => write!(
+                f,
+                "recovered routes violate the dateline discipline on chip ring {dim} \
+                 (chip {src_chip} -> chip {dst_chip} takes a post-wrap hop on VC 0)"
+            ),
+        }
+    }
+}
+
 /// Compute fault-tolerant per-tile routing tables for the whole hybrid
 /// system — the two-level generalization of
 /// [`recompute_tables`](super::recompute_tables). See the module docs for
 /// the detour and escape-VC discipline.
 ///
-/// Returns `None` when the fault set disconnects the chip torus or
-/// partitions a chip's tile mesh.
+/// Errors ([`HierRecoveryError`]) when the fault set disconnects the chip
+/// torus, partitions a chip's tile mesh, or — new — when the recovered
+/// VC assignment would violate the dateline discipline (the k >= 4-ring
+/// hazard the module docs §Dateline verification describes, previously a
+/// silently-unsound case).
+///
+/// ```
+/// use dnp::config::DnpConfig;
+/// use dnp::fault::{recompute_hybrid_tables, HierLinkFault, HierRecoveryError};
+///
+/// let cfg = DnpConfig::hybrid();
+/// // One dead SerDes cable on a 2x2x1-chip system: recoverable.
+/// let dead = HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: true };
+/// let tables = recompute_hybrid_tables([2, 2, 1], [2, 2], &[dead], &cfg).unwrap();
+/// assert_eq!(tables.len(), 16); // one table per tile
+/// // Cutting BOTH cables of a 2-chip ring disconnects it.
+/// let both = [
+///     HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: true },
+///     HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: false },
+/// ];
+/// assert_eq!(
+///     recompute_hybrid_tables([2, 1, 1], [2, 2], &both, &cfg).unwrap_err(),
+///     HierRecoveryError::ChipTorusDisconnected,
+/// );
+/// ```
 pub fn recompute_hybrid_tables(
     chip_dims: [u32; 3],
     tile_dims: [u32; 2],
     faults: &[HierLinkFault],
     cfg: &DnpConfig,
-) -> Option<Vec<TableRouter>> {
+) -> Result<Vec<TableRouter>, HierRecoveryError> {
     let g = HierSurvivorGraph::new(chip_dims, tile_dims, faults);
-    if !g.connected() {
-        return None;
+    if !g.chips.connected() {
+        return Err(HierRecoveryError::ChipTorusDisconnected);
+    }
+    if let Some(chip) = g.meshes.iter().position(|m| !m.connected()) {
+        return Err(HierRecoveryError::MeshPartitioned { chip });
     }
     let fmt = AddrFormat::Hybrid { chip_dims, tile_dims };
     let nchips = chip_dims.iter().product::<u32>() as usize;
@@ -345,7 +425,9 @@ pub fn recompute_hybrid_tables(
             let (port, vc) = if achip == bchip {
                 // Delivery phase: mesh toward the destination tile on the
                 // VC-1 delivery class (terminates inside this chip).
-                let d = g.meshes[achip].next_hop(&mesh_dists[achip][stile], t, stile)?;
+                let d = g.meshes[achip]
+                    .next_hop(&mesh_dists[achip][stile], t, stile)
+                    .ok_or(HierRecoveryError::MeshPartitioned { chip: achip })?;
                 let port = mesh_port_of[t][d].expect("mesh hop uses an existing link");
                 (port, 1)
             } else {
@@ -357,7 +439,8 @@ pub fn recompute_hybrid_tables(
                     b_c,
                     chip_dims,
                     cfg.route_order,
-                )?;
+                )
+                .ok_or(HierRecoveryError::ChipTorusDisconnected)?;
                 let gw = tile_idx(gateway_tile(tile_dims, dim));
                 if t == gw {
                     let port =
@@ -373,14 +456,67 @@ pub fn recompute_hybrid_tables(
                     // always, detoured or not — putting it on VC 1 would
                     // let the delivery class wait on off-chip credits and
                     // void the route/hier.rs deadlock argument.
-                    let d = g.meshes[achip].next_hop(&mesh_dists[achip][gw], t, gw)?;
+                    let d = g.meshes[achip]
+                        .next_hop(&mesh_dists[achip][gw], t, gw)
+                        .ok_or(HierRecoveryError::MeshPartitioned { chip: achip })?;
                     (mesh_port_of[t][d].expect("mesh hop uses an existing link"), 0)
                 }
             };
             tables[u].install(addrs[dst], port, vc);
         }
     }
-    Some(tables)
+
+    // §Dateline verification (module docs): walk every ordered chip pair
+    // over the exact chip-level hops and VCs the tables install, and
+    // refuse table sets that hand a post-dateline packet back to VC 0.
+    // Uses the same `chip_next_hop` / healthy-decide computation as the
+    // builder above, so the walk sees precisely the installed decisions
+    // (they depend only on the chips, not on the tiles involved).
+    for src in 0..nchips {
+        for dstc in 0..nchips {
+            if src == dstc {
+                continue;
+            }
+            let b_c = chip_coords(chip_dims, dstc);
+            let mut cur = src;
+            let mut wrapped = [false; 3];
+            let mut hops = 0usize;
+            while cur != dstc {
+                let cur_c = chip_coords(chip_dims, cur);
+                let (dim, dir) = chip_next_hop(
+                    &g.chips,
+                    &chip_dists[dstc],
+                    cur,
+                    cur_c,
+                    b_c,
+                    chip_dims,
+                    cfg.route_order,
+                )
+                .ok_or(HierRecoveryError::ChipTorusDisconnected)?;
+                let gw = tile_idx(gateway_tile(tile_dims, dim));
+                let u = cur * ntiles + gw;
+                let port = off_port_of[gw][dim][dir].expect("gateway owns this dimension's ports");
+                let hd = healthy[u].decide(addrs[u], addrs[dstc * ntiles], 0);
+                let vc = if hd.out == OutSel::Port(port) { hd.vc } else { 1 };
+                if wrapped[dim] && vc == 0 {
+                    return Err(HierRecoveryError::DatelineHazard {
+                        dim,
+                        src_chip: src,
+                        dst_chip: dstc,
+                    });
+                }
+                let k = chip_dims[dim];
+                let crossed = if dir == 0 { cur_c[dim] == k - 1 } else { cur_c[dim] == 0 };
+                wrapped[dim] |= crossed;
+                let mut nc = cur_c;
+                nc[dim] = (cur_c[dim] + if dir == 0 { 1 } else { k - 1 }) % k;
+                cur = chip_index(chip_dims, nc);
+                hops += 1;
+                assert!(hops <= 3 * nchips, "chip-level walk did not converge");
+            }
+        }
+    }
+    Ok(tables)
 }
 
 /// Net-level hard-fault injection on a hybrid system: recompute the
@@ -388,22 +524,39 @@ pub fn recompute_hybrid_tables(
 /// net ([`apply_tables`](super::apply_tables)). Returns the directed
 /// channels the faults killed — after reconfiguration no flit may ever
 /// cross them again (the fault suite asserts `words_sent` stays frozen) —
-/// or `None` when the fault set is unrecoverable.
+/// or the [`HierRecoveryError`] when the fault set is unrecoverable.
+///
+/// ```
+/// use dnp::config::DnpConfig;
+/// use dnp::fault::{self, HierLinkFault};
+/// use dnp::topology;
+///
+/// let cfg = DnpConfig::hybrid();
+/// let (mut net, wiring) = topology::hybrid_torus_mesh_wired([2, 1, 1], [2, 2], &cfg, 1 << 12);
+/// let dead = HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: true };
+/// let killed = fault::inject_hybrid(&mut net, &wiring, &[dead], &cfg).unwrap();
+/// // One cable = two directed channels, and they stay silent forever.
+/// assert_eq!(killed.len(), 2);
+/// for ch in killed {
+///     assert_eq!(net.chans.get(ch).words_sent, 0);
+/// }
+/// ```
 pub fn inject_hybrid(
     net: &mut Net,
     wiring: &HybridWiring,
     faults: &[HierLinkFault],
     cfg: &DnpConfig,
-) -> Option<Vec<ChannelId>> {
+) -> Result<Vec<ChannelId>, HierRecoveryError> {
     let tables = recompute_hybrid_tables(wiring.chip_dims, wiring.tile_dims, faults, cfg)?;
     super::apply_tables(net, tables);
-    Some(faults.iter().flat_map(|f| wiring.channels_of(f)).collect())
+    Ok(faults.iter().flat_map(|f| wiring.channels_of(f)).collect())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::route::testutil::walk;
+    use crate::traffic::hybrid_node_index;
 
     const CHIPS: [u32; 3] = [2, 2, 1];
     const TILES: [u32; 2] = [2, 2];
@@ -478,17 +631,78 @@ mod tests {
     }
 
     #[test]
-    fn unrecoverable_fault_sets_report_none() {
+    fn unrecoverable_fault_sets_report_their_reason() {
         let cfg = DnpConfig::hybrid();
         // Chip-level: cut both X cables of a 2x1x1 chip ring.
         let faults = [
             HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: true },
             HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: false },
         ];
-        assert!(recompute_hybrid_tables([2, 1, 1], TILES, &faults, &cfg).is_none());
+        assert_eq!(
+            recompute_hybrid_tables([2, 1, 1], TILES, &faults, &cfg).unwrap_err(),
+            HierRecoveryError::ChipTorusDisconnected
+        );
         // Mesh-level: the only link of a 1x2 tile mesh dies.
         let f = [HierLinkFault::Mesh { chip: [0, 0, 0], tile: [0, 0], dim: 1, plus: true }];
-        assert!(recompute_hybrid_tables(CHIPS, [1, 2], &f, &cfg).is_none());
+        assert_eq!(
+            recompute_hybrid_tables(CHIPS, [1, 2], &f, &cfg).unwrap_err(),
+            HierRecoveryError::MeshPartitioned { chip: 0 }
+        );
+    }
+
+    #[test]
+    fn k4_ring_dateline_hazard_is_refused_even_fault_free() {
+        // On a k=4 chip ring the per-(node, dst) tables are unsound even
+        // with zero faults: src chip 3 -> dst chip 1 wraps at 3 -> 0 and
+        // then continues 0 -> 1 on VC 0 (the table at chip 0 evaluates
+        // the dateline as if it were the source). Previously this
+        // installed silently; now it must be refused with the documented
+        // error.
+        let cfg = DnpConfig::hybrid();
+        match recompute_hybrid_tables([4, 1, 1], TILES, &[], &cfg) {
+            Err(HierRecoveryError::DatelineHazard { dim: 0, .. }) => {}
+            other => panic!("k=4 ring must be refused as a dateline hazard: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn k3_ring_is_sound_fault_free_but_refused_on_post_wrap_detour() {
+        let cfg = DnpConfig::hybrid();
+        // Fault-free k=3: every minimal route takes at most one hop per
+        // ring, so the stateless dateline convention is sound.
+        assert!(recompute_hybrid_tables([3, 1, 1], TILES, &[], &cfg).is_ok());
+        // A dead + cable forces 0 -> 2 -> 1: the first hop wraps the
+        // dateline (0 -> 2 via the minus wire) and the second continues
+        // on the same ring with a healthy-consistent VC 0 — exactly the
+        // hazard the walk must catch.
+        let dead = [HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: true }];
+        match recompute_hybrid_tables([3, 1, 1], TILES, &dead, &cfg) {
+            Err(HierRecoveryError::DatelineHazard { dim: 0, .. }) => {}
+            other => panic!("post-wrap detour must be refused: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shipped_fault_scenarios_stay_recoverable() {
+        // The dateline walk must not reject the acceptance scenarios the
+        // integration suite and the fault-recovery example run on 2x2x1
+        // chips: one dead cable, a fully isolated gateway, a dead mesh
+        // link.
+        let cfg = DnpConfig::hybrid();
+        let scenarios: Vec<Vec<HierLinkFault>> = vec![
+            vec![HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: true }],
+            vec![
+                HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: true },
+                HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: false },
+            ],
+            vec![HierLinkFault::Mesh { chip: [0, 0, 0], tile: [0, 0], dim: 0, plus: true }],
+        ];
+        for faults in &scenarios {
+            assert!(
+                recompute_hybrid_tables(CHIPS, TILES, faults, &cfg).is_ok(),
+                "{faults:?} must stay recoverable"
+            );
+        }
     }
 
     #[test]

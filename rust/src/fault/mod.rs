@@ -26,9 +26,13 @@
 //!    (Boppana-Chalasani's extra-VC argument). On the hybrid topology the
 //!    delivery-phase mesh hops additionally stay on the VC-1 delivery
 //!    class, preserving the hierarchical deadlock argument documented in
-//!    `route/hier.rs`. `None` is returned when some destination became
-//!    unreachable — reconfiguration cannot help and software must fence
-//!    the partition instead.
+//!    `route/hier.rs`. The flat recomputation returns `None` when some
+//!    destination became unreachable; the hybrid one returns a
+//!    [`hier::HierRecoveryError`] naming the reason — disconnection,
+//!    a partitioned tile mesh, or a recovered VC assignment that would
+//!    violate the dateline discipline (see `fault/hier.rs` §Dateline
+//!    verification) — because reconfiguration cannot help and software
+//!    must fence the partition instead.
 //! 4. **Installation** — [`apply_tables`] swaps every node's router for
 //!    its recomputed [`TableRouter`] (matched by DNP address, so any node
 //!    layout works) and installs a router factory that keeps the table
@@ -42,7 +46,9 @@
 
 pub mod hier;
 
-pub use hier::{inject_hybrid, recompute_hybrid_tables, HierLinkFault, HierSurvivorGraph};
+pub use hier::{
+    inject_hybrid, recompute_hybrid_tables, HierLinkFault, HierRecoveryError, HierSurvivorGraph,
+};
 
 use crate::config::DnpConfig;
 use crate::packet::{AddrFormat, DnpAddr};

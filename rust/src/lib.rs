@@ -7,10 +7,11 @@
 //!
 //! * **L3 (this crate)** — the DNP itself: RDMA engine (LOOPBACK / PUT /
 //!   SEND / GET over CMD FIFO + CQ + LUT), wormhole crossbar switch with
-//!   virtual channels, deterministic torus/mesh/Spidergon routing, SerDes
-//!   and NoC link models, topology builders, traffic generators, metrics
-//!   and the full experiment harness for every table and figure of the
-//!   paper's Section IV.
+//!   virtual channels, deterministic torus/mesh/Spidergon/hierarchical
+//!   routing with fault-recovery table recomputation, SerDes and NoC link
+//!   models, topology builders, traffic generators, metrics and the full
+//!   experiment harness for every table and figure of the paper's
+//!   Section IV.
 //! * **L2/L1 (python/, build-time only)** — the SHAPES benchmark kernel
 //!   (Lattice QCD Wilson-Dslash) in JAX with its SU(3) hot-spot as a
 //!   Pallas kernel, AOT-lowered to HLO text.
@@ -19,8 +20,17 @@
 //!   tiles' DSP would, with halo exchange running over the simulated
 //!   DNP-Net. Python never runs on the simulation path.
 //!
+//! The simulator runs the same semantics three ways — dense reference
+//! loop, activity-tracked event scheduler with cycle skipping, and (for
+//! the hybrid multi-chip system) per-chip parallel shards with
+//! SerDes-latency lookahead ([`sim::ShardedNet`]) — pinned bit-exact to
+//! each other by the equivalence suites (`rust/tests/equivalence.rs`,
+//! `rust/tests/sharded_equivalence.rs`).
+//!
 //! Start at [`topology`] to build a system, [`sim::Net`] to run it, and
-//! [`metrics`] to measure it. `examples/quickstart.rs` is a 60-line tour.
+//! [`metrics`] to measure it. `examples/quickstart.rs` is a 60-line tour;
+//! `docs/ARCHITECTURE.md` (repo root) maps every layer of the crate and
+//! states the execution-mode equivalence and deadlock-freedom arguments.
 
 pub mod bench;
 pub mod bus;

@@ -3,8 +3,21 @@
 //! collects while the simulator runs. Nothing here adds up configuration
 //! constants — every number is the difference of two observed cycle
 //! stamps.
+//!
+//! Two families of helpers:
+//!
+//! * **per-packet** — [`breakdown`]/[`latency`] reconstruct the paper's
+//!   L1..L4 stages from the trace stamps of one command;
+//! * **aggregate** — [`delivered_gbs`], [`intra_tile_bw_bits_per_cycle`],
+//!   [`channel_utilization`] and [`peak_channel_bits_per_cycle`] fold
+//!   counters over a measurement window. [`NetTotals`] is the common
+//!   counter bundle; [`net_totals`] reads it off one sequential [`Net`]
+//!   and [`sharded_totals`] merges it across the per-chip shards of a
+//!   [`ShardedNet`] (the shards count disjoint node/channel sets, so the
+//!   merge is a plain sum — a cross-chip delivery is counted once, by
+//!   the destination shard).
 
-use crate::sim::{CmdTrace, Net, PktTrace};
+use crate::sim::{CmdTrace, Net, PktTrace, ShardedNet};
 use crate::util::{bits_per_cycle_to_gbs, cycles_to_ns};
 
 /// Latency breakdown of one command/packet pair, following the paper's
@@ -116,6 +129,72 @@ pub fn peak_channel_bits_per_cycle(net: &Net, elapsed: u64) -> f64 {
         .fold(0.0, f64::max)
 }
 
+/// The counter bundle every execution mode exposes: delivery counters
+/// from the traces plus flit/word totals from the switches and wires.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetTotals {
+    pub delivered: u64,
+    pub delivered_words: u64,
+    pub corrupt_packets: u64,
+    pub lut_misses: u64,
+    /// Flits moved by all switch fabrics (DNP and NoC nodes).
+    pub flits_switched: u64,
+    /// Words put on all wires (channel `words_sent` sum).
+    pub words_on_wires: u64,
+}
+
+impl std::ops::Add for NetTotals {
+    type Output = NetTotals;
+    fn add(self, o: NetTotals) -> NetTotals {
+        NetTotals {
+            delivered: self.delivered + o.delivered,
+            delivered_words: self.delivered_words + o.delivered_words,
+            corrupt_packets: self.corrupt_packets + o.corrupt_packets,
+            lut_misses: self.lut_misses + o.lut_misses,
+            flits_switched: self.flits_switched + o.flits_switched,
+            words_on_wires: self.words_on_wires + o.words_on_wires,
+        }
+    }
+}
+
+/// Read the counter bundle off one sequential [`Net`].
+pub fn net_totals(net: &Net) -> NetTotals {
+    NetTotals {
+        delivered: net.traces.delivered,
+        delivered_words: net.traces.delivered_words,
+        corrupt_packets: net.traces.corrupt_packets,
+        lut_misses: net.traces.lut_misses,
+        flits_switched: net
+            .nodes
+            .iter()
+            .map(|n| match n {
+                crate::sim::Node::Dnp(d) => d.fabric.flits_switched,
+                crate::sim::Node::Noc(r) => r.fabric.flits_switched,
+            })
+            .sum(),
+        words_on_wires: net.chans.iter().map(|(_, c)| c.words_sent).sum(),
+    }
+}
+
+/// Merge the counter bundle across the per-chip shards of a
+/// [`ShardedNet`]. Node and channel sets are disjoint between shards, so
+/// every quantity is counted exactly once; the result is comparable 1:1
+/// with [`net_totals`] of the equivalent sequential run (the sharded
+/// equivalence suite asserts exactly that).
+pub fn sharded_totals(snet: &ShardedNet) -> NetTotals {
+    snet.fold_nets(NetTotals::default(), |acc, net| acc + net_totals(net))
+}
+
+/// Delivered-payload bandwidth of a sharded run over a window, GB/s —
+/// the sharded twin of [`delivered_gbs`].
+pub fn sharded_delivered_gbs(snet: &ShardedNet, elapsed: u64, freq_mhz: f64) -> f64 {
+    if elapsed == 0 {
+        return 0.0;
+    }
+    let bits = sharded_totals(snet).delivered_words as f64 * 32.0 / elapsed as f64;
+    bits_per_cycle_to_gbs(bits, freq_mhz)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,6 +264,24 @@ mod tests {
         assert_eq!((words, payload), (22, 16));
         let expect = 16.0 * 32.0 / 1000.0;
         assert!((peak_channel_bits_per_cycle(&net, 1000) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn net_totals_count_one_put() {
+        let cfg = DnpConfig::shapes_rdt();
+        let mut net = topology::two_tiles_offchip(&cfg, 1 << 12);
+        let fmt = AddrFormat::Torus3D { dims: [2, 1, 1] };
+        net.dnp_mut(1).register_buffer(0x100, 64, 0);
+        net.dnp_mut(0).mem.write_slice(0x40, &[1, 2, 3, 4]);
+        net.issue(0, Command::put(0x40, fmt.encode(&[1, 0, 0]), 0x100, 4).with_tag(1));
+        net.run_until_idle(100_000).expect("PUT completes");
+        let t = net_totals(&net);
+        assert_eq!(t.delivered, 1);
+        assert_eq!(t.delivered_words, 4);
+        assert_eq!((t.corrupt_packets, t.lut_misses), (0, 0));
+        // 4 payload + 6 envelope words crossed the one active wire.
+        assert_eq!(t.words_on_wires, 10);
+        assert!(t.flits_switched >= 10);
     }
 
     #[test]

@@ -6,8 +6,10 @@
 //! * [`onchip_channel`] — point-to-point parallel on-chip link, 1
 //!   word/cycle (Sec. IV: "inter-tile on-chip ports are designed to be
 //!   connected by point-to-point parallel links").
-//! * [`intra_channel`] — not a real wire: ENG→switch injection is modelled
-//!   inside the DNP; provided for symmetry in tests.
+//! * [`noc_channel`] / [`dni_channel`] — one hop of the ST-Spidergon NoC
+//!   fabric and the DNP↔NoC interface link (request/grant handshake cost).
+//!   There is no intra-tile channel: ENG→switch injection is modelled
+//!   inside the DNP itself.
 //!
 //! The serialization factor is THE off-chip knob (Sec. IV-V): factor 16 on
 //! two DDR lines gives 4 bit/cycle per direction; factor 8 doubles it.

@@ -68,6 +68,45 @@ impl LinkFx {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ChannelId(pub u32);
 
+/// Which side of a cross-shard boundary a channel realizes. In the
+/// sharded execution mode (see [`crate::sim::shard`]) every off-chip
+/// SerDes link is split into a *tx half* owned by the sending shard and
+/// an *rx half* owned by the receiving shard; the `u32` is the global
+/// boundary-link id the [`ShardedNet`](crate::sim::shard::ShardedNet)
+/// uses to route the resulting [`BoundaryOut`] events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BoundaryRole {
+    /// Both endpoints live in this arena (the only role in sequential
+    /// mode): `send`/`pop` behave exactly as documented below.
+    Interior,
+    /// Tx half of boundary link `id`: flits leave the shard at their
+    /// landing cycle instead of occupying the local receiver buffers.
+    Tx(u32),
+    /// Rx half of boundary link `id`: pops emit a cross-shard credit
+    /// instead of a local credit return.
+    Rx(u32),
+}
+
+/// A cross-shard event emitted by the arena wrappers on boundary
+/// channels, drained by the shard runner after every step and delivered
+/// to the peer shard at a synchronization barrier. `at` is the exact
+/// cycle the event takes effect on the other side — the same cycle the
+/// sequential event scheduler would apply it.
+#[derive(Debug, Clone, Copy)]
+pub enum BoundaryOut {
+    /// A flit sent on a tx half; it must appear in the remote receiver
+    /// buffer (and re-heat the receiving node) at cycle `at`.
+    Flit {
+        link: u32,
+        flit: Flit,
+        vc: u8,
+        at: u64,
+    },
+    /// A credit freed by a pop on an rx half; it must be restored to the
+    /// remote tx half's credit counter at cycle `at`.
+    Credit { link: u32, vc: u8, at: u64 },
+}
+
 /// One in-flight flit: (flit, vc, cycle at which it reaches the rx buffer).
 #[derive(Debug, Clone, Copy)]
 struct InFlight {
@@ -214,6 +253,45 @@ impl Channel {
         f
     }
 
+    /// Boundary tx half: reclaim the in-flight entry the preceding
+    /// [`send`](Self::send) pushed, returning `(flit, vc, landing cycle)`.
+    /// The flit's flight is completed by the *receiving shard* (the rx
+    /// half), so it must not also land locally.
+    pub(crate) fn take_in_flight_back(&mut self) -> (Flit, u8, u64) {
+        let f = self
+            .in_flight
+            .pop_back()
+            .expect("take_in_flight_back without a preceding send");
+        (f.flit, f.vc, f.ready)
+    }
+
+    /// Boundary rx half: consume the head-of-line flit of `vc` *without*
+    /// local credit bookkeeping — the credit belongs to the tx half in
+    /// the sending shard and travels back as a [`BoundaryOut::Credit`].
+    pub(crate) fn pop_no_credit(&mut self, vc: u8) -> Flit {
+        let f = self.rx_bufs[vc as usize]
+            .pop_front()
+            .expect("pop from empty VC buffer");
+        self.rx_total -= 1;
+        f
+    }
+
+    /// Boundary rx half: materialize a flit that completed its flight in
+    /// the sending shard directly into this receiver's `vc` buffer (the
+    /// shard runner calls this at exactly the landing cycle).
+    pub(crate) fn push_rx(&mut self, flit: Flit, vc: u8) {
+        self.rx_bufs[vc as usize].push_back(flit);
+        self.rx_total += 1;
+    }
+
+    /// Boundary tx half: restore one credit on `vc` — a remote pop's
+    /// credit arriving back at the sender (the shard runner calls this at
+    /// exactly the cycle the sequential scheduler would tick it in).
+    pub(crate) fn restore_credit(&mut self, vc: u8) {
+        self.credits[vc as usize] += 1;
+        debug_assert!(self.credits[vc as usize] <= self.vc_depth);
+    }
+
     /// Flits buffered at the receiver on `vc`.
     pub fn rx_len(&self, vc: u8) -> usize {
         self.rx_bufs[vc as usize].len()
@@ -275,8 +353,18 @@ pub struct ChannelArena {
     wheel: EventWheel,
     /// Flits resident in any channel (in flight or rx-buffered), across
     /// the arena — O(1) replacement for scanning `all_idle` each cycle.
-    /// Only maintained by the `send`/`pop` wrappers.
+    /// Only maintained by the `send`/`pop` wrappers. A flit in transit on
+    /// a boundary link is counted by neither shard (the tx half hands it
+    /// off at send time, the rx half counts it from its landing cycle);
+    /// the [`ShardedNet`](crate::sim::shard::ShardedNet) drain check
+    /// accounts for the in-between separately.
     resident: u64,
+    /// Per-channel boundary role (empty in sequential mode; lazily grown
+    /// by `mark_boundary_tx`/`mark_boundary_rx`, missing == Interior).
+    roles: Vec<BoundaryRole>,
+    /// Cross-shard events emitted by sends/pops on boundary channels,
+    /// drained by the shard runner after each step.
+    outbox: Vec<BoundaryOut>,
 }
 
 impl ChannelArena {
@@ -289,24 +377,111 @@ impl ChannelArena {
         ChannelId(self.chans.len() as u32 - 1)
     }
 
-    /// Send through channel `id`, registering its landing wake-up.
+    #[inline]
+    fn role(&self, id: ChannelId) -> BoundaryRole {
+        self.roles
+            .get(id.0 as usize)
+            .copied()
+            .unwrap_or(BoundaryRole::Interior)
+    }
+
+    fn set_role(&mut self, id: ChannelId, role: BoundaryRole) {
+        let slot = id.0 as usize;
+        if self.roles.len() <= slot {
+            self.roles.resize(slot + 1, BoundaryRole::Interior);
+        }
+        debug_assert_eq!(self.roles[slot], BoundaryRole::Interior, "role set twice");
+        self.roles[slot] = role;
+    }
+
+    /// Declare channel `id` the tx half of boundary link `link` (sharded
+    /// mode). Sends keep full sender-side semantics (credits,
+    /// serialization rate, link-error injection, statistics) but emit a
+    /// [`BoundaryOut::Flit`] instead of landing locally.
+    pub fn mark_boundary_tx(&mut self, id: ChannelId, link: u32) {
+        self.set_role(id, BoundaryRole::Tx(link));
+    }
+
+    /// Declare channel `id` the rx half of boundary link `link` (sharded
+    /// mode). Pops emit a [`BoundaryOut::Credit`] toward the remote tx
+    /// half instead of a local credit return.
+    pub fn mark_boundary_rx(&mut self, id: ChannelId, link: u32) {
+        self.set_role(id, BoundaryRole::Rx(link));
+    }
+
+    /// Send through channel `id`, registering its landing wake-up (or, on
+    /// a boundary tx half, emitting the cross-shard flit event carrying
+    /// the exact landing cycle).
     pub fn send(&mut self, id: ChannelId, flit: Flit, vc: u8, now: u64) {
+        let role = self.role(id);
         let ready = self.chans[id.0 as usize].send(flit, vc, now);
-        self.wheel.schedule(ready, id.0);
-        self.resident += 1;
+        match role {
+            BoundaryRole::Interior | BoundaryRole::Rx(_) => {
+                self.wheel.schedule(ready, id.0);
+                self.resident += 1;
+            }
+            BoundaryRole::Tx(link) => {
+                // The flight completes in the receiving shard: reclaim
+                // the in-flight entry (it carries any link-error effects
+                // `Channel::send` applied) and ship it.
+                let (flit, vc, at) = self.chans[id.0 as usize].take_in_flight_back();
+                debug_assert_eq!(at, ready);
+                self.outbox.push(BoundaryOut::Flit { link, flit, vc, at });
+            }
+        }
     }
 
     /// Pop from channel `id`, registering the credit-return wake-up (a
     /// returning credit can un-stall the upstream serializer, so the
-    /// channel must be ticked when it lands).
+    /// channel must be ticked when it lands). On a boundary rx half the
+    /// credit instead travels to the remote tx half as a
+    /// [`BoundaryOut::Credit`], timed exactly like the local return.
     pub fn pop(&mut self, id: ChannelId, vc: u8, now: u64) -> Flit {
+        let role = self.role(id);
         let c = &mut self.chans[id.0 as usize];
-        let f = c.pop(vc, now);
-        if c.credit_lat > 0 {
-            self.wheel.schedule(now + c.credit_lat, id.0);
-        }
+        let f = match role {
+            BoundaryRole::Interior | BoundaryRole::Tx(_) => {
+                let f = c.pop(vc, now);
+                if c.credit_lat > 0 {
+                    self.wheel.schedule(now + c.credit_lat, id.0);
+                }
+                f
+            }
+            BoundaryRole::Rx(link) => {
+                let f = c.pop_no_credit(vc);
+                let at = now + c.credit_lat;
+                self.outbox.push(BoundaryOut::Credit { link, vc, at });
+                f
+            }
+        };
         self.resident -= 1;
         f
+    }
+
+    /// Sharded mode: land a boundary flit in channel `id`'s receiver
+    /// buffer (the shard runner calls this at exactly the flit's landing
+    /// cycle; [`crate::sim::Net::boundary_rx`] wraps it to also re-heat
+    /// the receiving node).
+    pub fn push_rx(&mut self, id: ChannelId, flit: Flit, vc: u8) {
+        self.chans[id.0 as usize].push_rx(flit, vc);
+        self.resident += 1;
+    }
+
+    /// Sharded mode: restore one credit on boundary tx half `id` (called
+    /// at exactly the credit's arrival cycle).
+    pub fn restore_credit(&mut self, id: ChannelId, vc: u8) {
+        self.chans[id.0 as usize].restore_credit(vc);
+    }
+
+    /// Any cross-shard events pending in the outbox?
+    pub fn has_boundary_out(&self) -> bool {
+        !self.outbox.is_empty()
+    }
+
+    /// Move all pending cross-shard events into `out` (appended, in
+    /// emission order — which is cycle order per boundary link).
+    pub fn drain_boundary_out(&mut self, out: &mut Vec<BoundaryOut>) {
+        out.append(&mut self.outbox);
     }
 
     /// Flits resident anywhere in the arena (wrapper-maintained).
@@ -589,6 +764,59 @@ mod tests {
         assert_eq!(c.next_event(), Some(15), "credit still travelling");
         c.tick(15);
         assert_eq!(c.next_event(), None);
+    }
+
+    #[test]
+    fn boundary_tx_ships_instead_of_landing() {
+        let mut a = ChannelArena::new();
+        let id = a.add(Channel::new(5, 8, 1, 4));
+        a.mark_boundary_tx(id, 3);
+        a.send(id, flit(9), 0, 100);
+        // Sender-side semantics intact: credit spent, serializer busy.
+        assert!(!a.get(id).can_send(0, 101), "rate applies");
+        assert_eq!(a.get(id).words_sent, 1);
+        // But nothing lands locally and no wake is scheduled.
+        assert_eq!(a.resident(), 0);
+        assert_eq!(a.next_wake(), None);
+        let mut out = Vec::new();
+        a.drain_boundary_out(&mut out);
+        match out.as_slice() {
+            [BoundaryOut::Flit { link: 3, flit, vc: 0, at }] => {
+                assert_eq!(flit.seq, 9);
+                assert_eq!(*at, 100 + 8 + 5, "landing cycle travels with the flit");
+            }
+            other => panic!("unexpected outbox {other:?}"),
+        }
+        assert!(!a.has_boundary_out());
+        // The remote credit restores the spent one at its arrival cycle.
+        a.restore_credit(id, 0);
+        assert!(a.get(id).can_send(0, 108));
+    }
+
+    #[test]
+    fn boundary_rx_pop_emits_credit_event() {
+        let mut a = ChannelArena::new();
+        let id = a.add(Channel::new(5, 8, 1, 4));
+        a.get_mut(id).credit_lat = 8;
+        a.mark_boundary_rx(id, 7);
+        // The shard runner materializes the flit at its landing cycle.
+        a.push_rx(id, flit(4), 0);
+        assert_eq!(a.resident(), 1);
+        assert_eq!(a.get(id).rx_total(), 1);
+        let f = a.pop(id, 0, 200);
+        assert_eq!(f.seq, 4);
+        assert_eq!(a.resident(), 0);
+        // No local credit return, no wake — the credit crosses the shard
+        // boundary with the rx half's return latency.
+        assert_eq!(a.next_wake(), None);
+        let mut out = Vec::new();
+        a.drain_boundary_out(&mut out);
+        match out.as_slice() {
+            [BoundaryOut::Credit { link: 7, vc: 0, at }] => assert_eq!(*at, 208),
+            other => panic!("unexpected outbox {other:?}"),
+        }
+        // Credits on the rx half itself never moved.
+        assert!(a.get(id).can_send(0, u64::MAX - 16));
     }
 
     #[test]

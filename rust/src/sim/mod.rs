@@ -47,11 +47,27 @@
 //! A missed wake-up deadlocks the net, which is why
 //! `rust/tests/equivalence.rs` pins dense and event-driven stepping to
 //! bit-exact agreement on cycle counts, counters and per-packet traces.
+//!
+//! # Execution modes
+//!
+//! The same `Net` semantics run in three ways (see `docs/ARCHITECTURE.md`
+//! for the full map):
+//!
+//! 1. **dense** ([`Net::step_dense`]) — every channel and node ticked
+//!    every cycle; the reference semantics;
+//! 2. **event** ([`Net::step`]) — the activity-tracked scheduler above,
+//!    pinned bit-exact to dense by `rust/tests/equivalence.rs`;
+//! 3. **sharded** ([`shard::ShardedNet`]) — one `Net` per chip of a
+//!    hybrid system on worker threads, free-running between conservative
+//!    synchronization horizons; pinned bit-exact to the event scheduler
+//!    by `rust/tests/sharded_equivalence.rs`.
 
 pub mod channel;
+pub mod shard;
 pub mod wheel;
 
-pub use channel::{Channel, ChannelArena, ChannelId, LinkFx};
+pub use channel::{BoundaryOut, Channel, ChannelArena, ChannelId, LinkFx};
+pub use shard::ShardedNet;
 pub use wheel::EventWheel;
 
 use crate::dnp::{DnpNode, NodeEvent};
@@ -271,6 +287,25 @@ impl Net {
     pub fn issue(&mut self, idx: usize, cmd: Command) {
         let now = self.cycle;
         self.dnp_mut(idx).issue(cmd, now);
+    }
+
+    /// Sharded mode: land a boundary flit in channel `ch`'s receiver
+    /// buffer and re-heat the receiving node — the cross-shard equivalent
+    /// of a flit-landing channel wake. The shard runner calls this at
+    /// exactly the flit's landing cycle, *before* stepping that cycle, so
+    /// the receiver's tick sees the flit exactly as it would under the
+    /// sequential scheduler (whose phase 1 lands it and heats the node in
+    /// the same step).
+    pub fn boundary_rx(&mut self, ch: ChannelId, flit: crate::packet::Flit, vc: u8) {
+        self.chans.push_rx(ch, flit, vc);
+        let dst = self
+            .chan_dst
+            .get(ch.0 as usize)
+            .copied()
+            .unwrap_or(usize::MAX);
+        if dst != usize::MAX {
+            self.heat(dst);
+        }
     }
 
     /// Advance one clock cycle, event-driven: tick only the channels with

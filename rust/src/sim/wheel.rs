@@ -5,7 +5,7 @@
 //! amortized time: "which ids are due at cycle `now`?" ([`take_due`]) and
 //! "when is the next scheduled event?" ([`next_at`]).
 //!
-//! Near-future events (within [`WHEEL_SLOTS`] cycles) live in a circular
+//! Near-future events (within `WHEEL_SLOTS` cycles) live in a circular
 //! bucket array; far-future events overflow into a sorted map and are
 //! promoted into the buckets as the wheel turns. Duplicate registrations
 //! are allowed — consumers must treat a wake as *idempotent* ("check your

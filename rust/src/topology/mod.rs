@@ -12,9 +12,20 @@
 //! * [`hybrid_torus_mesh`] — the full SHAPES platform composition
 //!   (Fig. 2): a 3D torus of chips over off-chip SerDes links, each chip
 //!   a 2D mesh of tiles over on-chip links, one DNP per tile serving both
-//!   regimes at once.
+//!   regimes at once. [`hybrid_torus_mesh_wired`] additionally returns
+//!   the [`HybridWiring`] channel map (fault targeting), whose
+//!   [`partition`](HybridWiring::partition) exports the per-chip
+//!   node/channel split the sharded runtime is built on.
+//! * [`hybrid_chip_subnet`] — ONE chip of a hybrid system as a
+//!   self-contained [`Net`] with boundary SerDes halves: the building
+//!   block of the per-chip sharded simulation
+//!   ([`crate::sim::shard::ShardedNet`]).
 //! * [`two_tiles_offchip`] / [`ring_offchip`] — micro-benchmark fixtures
 //!   for the single/multi-hop latency experiments (Figs. 9-11).
+//!
+//! All builders produce the same [`Net`] abstraction, runnable under the
+//! dense, event-driven or (hybrid only) sharded scheduler — see
+//! `docs/ARCHITECTURE.md` for the layer map.
 
 use crate::config::{DnpConfig, RouteOrder};
 use crate::dnp::DnpNode;
@@ -387,6 +398,239 @@ impl HybridWiring {
     }
 }
 
+/// Row-major chip index of chip coordinates `c` (x fastest), shared by
+/// the full builder, the per-chip shard builder, the partition export and
+/// the fault walk — derived from the canonical layout helpers in
+/// [`crate::traffic`] (a chip index is a node index under a degenerate
+/// single-tile chip), so no copy of the mapping can drift.
+pub(crate) fn chip_index3(dims: [u32; 3], c: [u32; 3]) -> usize {
+    crate::traffic::hybrid_node_index(dims, [1, 1], c, [0, 0])
+}
+
+/// Inverse of [`chip_index3`].
+pub(crate) fn chip_coords3(dims: [u32; 3], i: usize) -> [u32; 3] {
+    let c = crate::traffic::hybrid_coords(dims, [1, 1], i);
+    [c[0], c[1], c[2]]
+}
+
+/// One directed off-chip SerDes wire of a hybrid system, as the sharded
+/// runtime sees it: the gateway of `from_chip` sends toward `to_chip`
+/// along chip dimension `dim` in the `plus` (or minus) direction.
+#[derive(Debug, Clone, Copy)]
+pub struct SerdesLinkDesc {
+    pub from_chip: usize,
+    pub to_chip: usize,
+    pub dim: usize,
+    pub plus: bool,
+    /// The directed channel realizing this wire in the sequentially-built
+    /// net ([`hybrid_torus_mesh_wired`]) — lets the sharded equivalence
+    /// suite compare per-wire flit counts against the sharded tx half
+    /// carrying the same traffic.
+    pub chan: ChannelId,
+}
+
+/// The chip → {nodes, channels} partition of a hybrid net: which nodes a
+/// per-chip simulation shard owns, and the directed SerDes wires that
+/// become explicit boundary queues between shards
+/// ([`crate::sim::shard::ShardedNet`]).
+///
+/// Node ownership is positional (the builder lays nodes out chip-major):
+/// chip `c` owns global node indices `c*T .. (c+1)*T` with
+/// `T = tiles_per_chip`. Every on-chip mesh channel (and every dangling
+/// port channel) is private to its chip; only the `links` cross.
+#[derive(Debug, Clone)]
+pub struct HybridPartition {
+    pub chip_dims: [u32; 3],
+    pub tile_dims: [u32; 2],
+    pub tiles_per_chip: usize,
+    /// Directed boundary wires in (from_chip, dim, dir) order — the
+    /// global link-id order the sharded runtime drains time-stamped
+    /// boundary messages in (its determinism tie-break).
+    pub links: Vec<SerdesLinkDesc>,
+}
+
+impl HybridPartition {
+    pub fn n_chips(&self) -> usize {
+        self.chip_dims.iter().product::<u32>() as usize
+    }
+
+    /// Global node indices owned by chip `c`.
+    pub fn chip_nodes(&self, chip: usize) -> std::ops::Range<usize> {
+        chip * self.tiles_per_chip..(chip + 1) * self.tiles_per_chip
+    }
+
+    /// Owning chip of global node index `node`.
+    pub fn chip_of_node(&self, node: usize) -> usize {
+        node / self.tiles_per_chip
+    }
+}
+
+impl HybridWiring {
+    /// Export the per-chip partition of this net (see [`HybridPartition`]).
+    pub fn partition(&self) -> HybridPartition {
+        let ntiles = (self.tile_dims[0] * self.tile_dims[1]) as usize;
+        let nchips = self.chip_dims.iter().product::<u32>() as usize;
+        let tile_idx = |t: [u32; 2]| -> usize { (t[0] + t[1] * self.tile_dims[0]) as usize };
+        let mut links = Vec::new();
+        for chip in 0..nchips {
+            let cc = chip_coords3(self.chip_dims, chip);
+            for dim in 0..3 {
+                if self.chip_dims[dim] < 2 {
+                    continue;
+                }
+                let g = tile_idx(gateway_tile(self.tile_dims, dim));
+                for (d, step) in [(0usize, 1u32), (1, self.chip_dims[dim] - 1)] {
+                    let mut nc = cc;
+                    nc[dim] = (cc[dim] + step) % self.chip_dims[dim];
+                    links.push(SerdesLinkDesc {
+                        from_chip: chip,
+                        to_chip: chip_index3(self.chip_dims, nc),
+                        dim,
+                        plus: d == 0,
+                        chan: self.off_out[chip * ntiles + g][dim * 2 + d]
+                            .expect("active dimension is wired"),
+                    });
+                }
+            }
+        }
+        HybridPartition {
+            chip_dims: self.chip_dims,
+            tile_dims: self.tile_dims,
+            tiles_per_chip: ntiles,
+            links,
+        }
+    }
+}
+
+/// Boundary channel halves of one chip's sharded sub-net, per off-chip
+/// direction `dim*2 + dir` (dir 0 = +): the (tx half, rx half) local
+/// [`ChannelId`]s, or `None` on a degenerate (k < 2) ring.
+#[derive(Debug, Clone, Copy)]
+pub struct ChipBoundary {
+    pub serdes: [Option<(ChannelId, ChannelId)>; 6],
+}
+
+/// Build ONE chip of a hybrid system as a self-contained [`Net`] — the
+/// per-shard twin of [`hybrid_torus_mesh_wired`].
+///
+/// The sub-net holds the chip's `TX*TY` tiles (local node index = tile
+/// index, DNP addresses carry the *global* chip coordinates so the
+/// two-level routers are identical to the full build), its on-chip mesh
+/// channels, and for every off-chip wire a *pair* of channel halves with
+/// the full builder's parameters: the tx half is this chip's outgoing
+/// wire (same link-error seed, so its BER RNG draws identically to the
+/// sequential build), the rx half mirrors the neighbour chip's outgoing
+/// wire (its own error model never fires — corruption is applied at send
+/// time in the owning shard). [`crate::sim::shard::ShardedNet`] marks the
+/// halves as boundary channels and carries flits and credits between
+/// them.
+pub fn hybrid_chip_subnet(
+    chip: [u32; 3],
+    chip_dims: [u32; 3],
+    tile_dims: [u32; 2],
+    cfg: &DnpConfig,
+    mem_words: usize,
+) -> (Net, ChipBoundary) {
+    assert!(
+        chip_dims.iter().all(|&d| (1..=16).contains(&d)),
+        "chip dims must be 1..=16 (4-bit coordinate fields)"
+    );
+    assert!(
+        tile_dims.iter().all(|&d| (1..=8).contains(&d)),
+        "tile dims must be 1..=8 (3-bit coordinate fields)"
+    );
+    assert!(
+        cfg.vcs >= 2,
+        "hybrid routing needs >= 2 VCs (dateline escape + delivery class)"
+    );
+    let fmt = AddrFormat::Hybrid { chip_dims, tile_dims };
+    let ntiles = (tile_dims[0] * tile_dims[1]) as usize;
+    let tile_idx = |t: [u32; 2]| -> usize { (t[0] + t[1] * tile_dims[0]) as usize };
+    let tile_coords = |i: usize| -> [u32; 2] { [i as u32 % tile_dims[0], i as u32 / tile_dims[0]] };
+    let (mesh_port_of, off_port_of) = hybrid_port_maps(chip_dims, tile_dims, cfg);
+
+    let mut net = Net::new();
+    let (mesh_in, mesh_out) = wire_mesh2d(&mut net, tile_dims, cfg);
+
+    let me = chip_index3(chip_dims, chip);
+    let mut serdes = [None::<(ChannelId, ChannelId)>; 6];
+    let mut off_in = vec![[None::<ChannelId>; 6]; ntiles];
+    let mut off_out = vec![[None::<ChannelId>; 6]; ntiles];
+    for dim in 0..3 {
+        if chip_dims[dim] < 2 {
+            continue;
+        }
+        let g = tile_idx(gateway_tile(tile_dims, dim));
+        for (d, step) in [(0usize, 1u32), (1, chip_dims[dim] - 1)] {
+            let mut nc = chip;
+            nc[dim] = (chip[dim] + step) % chip_dims[dim];
+            let neighbor = chip_index3(chip_dims, nc);
+            // Seeds exactly as in `hybrid_torus_mesh_wired`: ours for the
+            // tx half, the neighbour's reverse wire for the rx half.
+            let tx_seed = (me * 6 + dim * 2 + d) as u64 + 0x417B_5EED;
+            let rx_seed = (neighbor * 6 + dim * 2 + (1 - d)) as u64 + 0x417B_5EED;
+            let tx = net.chans.add(offchip_channel(cfg, tx_seed));
+            let rx = net.chans.add(offchip_channel(cfg, rx_seed));
+            off_out[g][dim * 2 + d] = Some(tx);
+            off_in[g][dim * 2 + d] = Some(rx);
+            serdes[dim * 2 + d] = Some((tx, rx));
+        }
+    }
+
+    for t in 0..ntiles {
+        let tc = tile_coords(t);
+        let addr = fmt.encode(&[chip[0], chip[1], chip[2], tc[0], tc[1]]);
+        let mut by_port_in = vec![None; cfg.inter_ports()];
+        let mut by_port_out = vec![None; cfg.inter_ports()];
+        for d in 0..4 {
+            if let Some(p) = mesh_port_of[t][d] {
+                by_port_in[p] = mesh_in[t][d];
+                by_port_out[p] = mesh_out[t][d];
+            }
+        }
+        for dim in 0..3 {
+            for d in 0..2 {
+                if let Some(p) = off_port_of[t][dim][d] {
+                    by_port_in[p] = off_in[t][dim * 2 + d];
+                    by_port_out[p] = off_out[t][dim * 2 + d];
+                }
+            }
+        }
+        let mut ins = Vec::with_capacity(cfg.inter_ports());
+        let mut outs = Vec::with_capacity(cfg.inter_ports());
+        for p in 0..cfg.inter_ports() {
+            ins.push(by_port_in[p].unwrap_or_else(|| dangling(&mut net, cfg)));
+            outs.push(by_port_out[p].unwrap_or_else(|| dangling(&mut net, cfg)));
+        }
+        let mesh_ports = mesh_port_of[t];
+        let off_ports = off_port_of[t];
+        let router = Box::new(HierRouter::new(
+            addr,
+            chip_dims,
+            tile_dims,
+            cfg.route_order,
+            mesh_ports,
+            off_ports,
+        ));
+        let mut node = DnpNode::new(
+            addr,
+            cfg.clone(),
+            router,
+            ins,
+            outs,
+            mem_words,
+            cq_base(cfg, mem_words),
+        );
+        node.set_router_factory(Box::new(move |order: RouteOrder| {
+            Box::new(HierRouter::new(
+                addr, chip_dims, tile_dims, order, mesh_ports, off_ports,
+            )) as Box<dyn Router>
+        }));
+        net.add_dnp(node);
+    }
+    (net, ChipBoundary { serdes })
+}
+
 /// [`hybrid_torus_mesh`] plus the [`HybridWiring`] channel map the fault
 /// subsystem needs to target individual physical links.
 pub fn hybrid_torus_mesh_wired(
@@ -412,17 +656,8 @@ pub fn hybrid_torus_mesh_wired(
     let ntiles = (tile_dims[0] * tile_dims[1]) as usize;
     let n = nchips * ntiles;
 
-    let chip_idx = |c: [u32; 3]| -> usize {
-        (c[0] + c[1] * chip_dims[0] + c[2] * chip_dims[0] * chip_dims[1]) as usize
-    };
-    let chip_coords = |i: usize| -> [u32; 3] {
-        let i = i as u32;
-        [
-            i % chip_dims[0],
-            (i / chip_dims[0]) % chip_dims[1],
-            i / (chip_dims[0] * chip_dims[1]),
-        ]
-    };
+    let chip_idx = |c: [u32; 3]| -> usize { chip_index3(chip_dims, c) };
+    let chip_coords = |i: usize| -> [u32; 3] { chip_coords3(chip_dims, i) };
     let tile_idx = |t: [u32; 2]| -> usize { (t[0] + t[1] * tile_dims[0]) as usize };
     let tile_coords = |i: usize| -> [u32; 2] { [i as u32 % tile_dims[0], i as u32 / tile_dims[0]] };
 
@@ -738,6 +973,50 @@ mod tests {
         // Single tile owning 3 dimensions with M=1 must be rejected.
         let cfg = DnpConfig::mtnoc(); // N=1, M=1
         hybrid_torus_mesh([2, 2, 2], [1, 1], &cfg, 1 << 12);
+    }
+
+    #[test]
+    fn hybrid_partition_lists_every_directed_wire() {
+        let cfg = DnpConfig::hybrid();
+        let (_, wiring) = hybrid_torus_mesh_wired([2, 2, 1], [2, 2], &cfg, 1 << 12);
+        let part = wiring.partition();
+        assert_eq!(part.n_chips(), 4);
+        assert_eq!(part.tiles_per_chip, 4);
+        // 4 chips × 2 active dimensions × 2 directions.
+        assert_eq!(part.links.len(), 16);
+        for l in &part.links {
+            assert_ne!(l.from_chip, l.to_chip, "k=2 rings have distinct endpoints");
+            // The listed channel is the from-chip gateway's outgoing wire.
+            let g = l.dim % 4;
+            let u = l.from_chip * 4 + g;
+            let d = usize::from(!l.plus);
+            assert_eq!(Some(l.chan), wiring.off_out[u][l.dim * 2 + d]);
+        }
+        assert_eq!(part.chip_nodes(2), 8..12);
+        assert_eq!(part.chip_of_node(9), 2);
+    }
+
+    #[test]
+    fn chip_subnet_matches_full_builder_slice() {
+        let cfg = DnpConfig::hybrid();
+        let full = hybrid_torus_mesh([2, 2, 1], [2, 2], &cfg, 1 << 12);
+        for chip in 0..4usize {
+            let cc = chip_coords3([2, 2, 1], chip);
+            let (sub, boundary) = hybrid_chip_subnet(cc, [2, 2, 1], [2, 2], &cfg, 1 << 12);
+            assert_eq!(sub.nodes.len(), 4);
+            for t in 0..4 {
+                assert_eq!(
+                    sub.dnp(t).addr,
+                    full.dnp(chip * 4 + t).addr,
+                    "chip {chip} tile {t}: address diverged from full build"
+                );
+            }
+            // X and Y rings are active (both halves wired); Z degenerate.
+            for slot in 0..4 {
+                assert!(boundary.serdes[slot].is_some(), "slot {slot}");
+            }
+            assert!(boundary.serdes[4].is_none() && boundary.serdes[5].is_none());
+        }
     }
 
     #[test]

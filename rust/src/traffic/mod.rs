@@ -1,15 +1,48 @@
 //! Workload generators driving the DNP-Net benchmarks.
 //!
 //! Each generator plays the role of the tile software: it registers LUT
-//! buffers, issues RDMA commands at chosen cycles and tracks completions
+//! buffers ([`setup_buffers`]), issues RDMA commands at chosen cycles
+//! ([`Planned`] plans pumped by a [`Feeder`]) and tracks completions
 //! through the traces. The patterns cover the paper's evaluation plus the
 //! standard interconnect suite: saturating streams (bandwidth tables),
-//! uniform random, nearest-neighbour halo (the LQCD pattern), hotspot and
-//! permutation traffic.
+//! [`uniform_random`], nearest-neighbour halo ([`halo_exchange_3d`], the
+//! LQCD pattern), [`hotspot`] and [`permutation`] traffic, and their
+//! hierarchical twins for the hybrid multi-chip system
+//! ([`hybrid_uniform_random`], [`hybrid_halo_exchange`],
+//! [`hybrid_all_pairs`]). [`retrying_plan`] layers CQ-driven end-to-end
+//! retry on top of any plan.
+//!
+//! A plan can be executed under all three schedulers: [`run_plan`]
+//! (event-driven), [`run_plan_dense`] (dense reference) and
+//! [`run_plan_sharded`] (per-chip parallel shards) — the equivalence
+//! suites pin all three to bit-exact agreement.
+//!
+//! # Budget contract
+//!
+//! Every run helper takes a `max_cycles` budget and shares one contract,
+//! stated here once for [`run_plan`], [`run_plan_dense`] and
+//! [`run_plan_sharded`] alike:
+//!
+//! * steps may execute at cycles `start ..= start + max_cycles - 1`, and
+//!   the drain check runs after every step — a plan whose last event
+//!   lands on the final allowed cycle reports `Some(max_cycles)`;
+//! * when the next event (channel wake, planned command or boundary
+//!   message) lies **at or beyond** `start + max_cycles`, no step inside
+//!   the budget can change anything: the run burns the remaining budget
+//!   (the clock lands on exactly `start + max_cycles`) and reports
+//!   `None` — it never clamps the jump to the edge and silently falls
+//!   out of the loop, which would conflate this case with an event
+//!   landing inside the budget;
+//! * `Some(elapsed)` always equals the post-step cycle of the final
+//!   drain, minus `start`.
+//!
+//! `rust/tests/equivalence.rs::run_plan_budget_edge_matches_dense` pins
+//! the edge for the dense and event modes; the sharded suite pins the
+//! sharded runner against the event mode on the same contract.
 
 use crate::packet::{AddrFormat, DnpAddr};
 use crate::rdma::{Command, CqReader, EventKind};
-use crate::sim::Net;
+use crate::sim::{Net, ShardedNet};
 use crate::util::SplitMix64;
 
 /// Source/destination buffer layout used by all generators: each node
@@ -88,18 +121,14 @@ impl Feeder {
 }
 
 /// Run a feeder to completion: pump + step until the plan is issued and
-/// the net drains. Returns elapsed cycles, or None on timeout.
+/// the net drains. Returns elapsed cycles, or `None` on timeout, per the
+/// [module-level budget contract](crate::traffic#budget-contract) shared
+/// bit-exactly with [`run_plan_dense`] and [`run_plan_sharded`].
 ///
 /// Event-driven: pumps through the net's scheduler, checks completion
 /// with the O(1) live counters ([`Net::idle_now`]) instead of a full
 /// `is_idle` scan per cycle, and when no node is runnable jumps straight
 /// to the earlier of the next channel wake and the next planned command.
-///
-/// Budget contract, shared bit-exactly with [`run_plan_dense`]: steps may
-/// execute at cycles `start ..= start + max_cycles - 1` and the drain
-/// check runs after every step, so a plan whose last event lands on the
-/// final allowed cycle reports `Some(max_cycles)` in both modes (the
-/// equivalence suite pins this exact budget edge).
 pub fn run_plan(net: &mut Net, feeder: &mut Feeder, max_cycles: u64) -> Option<u64> {
     net.heat_all();
     let start = net.cycle;
@@ -154,7 +183,8 @@ pub fn run_plan(net: &mut Net, feeder: &mut Feeder, max_cycles: u64) -> Option<u
 
 /// Dense-reference twin of [`run_plan`]: every channel and node ticked
 /// every cycle, full `is_idle` scan. Kept for the dense-vs-event
-/// equivalence suite (`rust/tests/equivalence.rs`).
+/// equivalence suite (`rust/tests/equivalence.rs`). Same
+/// [budget contract](crate::traffic#budget-contract).
 pub fn run_plan_dense(net: &mut Net, feeder: &mut Feeder, max_cycles: u64) -> Option<u64> {
     let start = net.cycle;
     while net.cycle - start < max_cycles {
@@ -165,6 +195,34 @@ pub fn run_plan_dense(net: &mut Net, feeder: &mut Feeder, max_cycles: u64) -> Op
         }
     }
     None
+}
+
+/// Sharded twin of [`run_plan`]: run `plan` on a per-chip
+/// [`ShardedNet`], whose worker threads free-run between conservative
+/// synchronization horizons (see [`crate::sim::shard`]). Commands are
+/// split by owning chip and issued at their exact plan cycles; the
+/// result is bit-exact with [`run_plan`] on the equivalent sequential
+/// net, under the same [budget contract](crate::traffic#budget-contract).
+pub fn run_plan_sharded(snet: &mut ShardedNet, plan: Vec<Planned>, max_cycles: u64) -> Option<u64> {
+    snet.run_plan(plan, max_cycles)
+}
+
+/// [`setup_buffers`] for a sharded hybrid net: every tile registers one
+/// RX window per potential source and fills its TX window with the same
+/// recognizable pattern (slot = global node index, exactly as
+/// [`setup_buffers`] is used on the sequentially-built hybrid net — the
+/// equivalence suite relies on the two producing identical memory).
+pub fn setup_buffers_sharded(snet: &mut ShardedNet) {
+    let n = snet.n_nodes();
+    for k in 0..n {
+        let dnp = snet.dnp_mut(k);
+        for peer in 0..n {
+            dnp.register_buffer(rx_addr(peer), RX_WINDOW, crate::rdma::LUT_SENDOK)
+                .expect("LUT capacity");
+        }
+        let pattern: Vec<u32> = (0..RX_WINDOW).map(|i| (k as u32) << 16 | i).collect();
+        dnp.mem.write_slice(TX_BASE, &pattern);
+    }
 }
 
 /// Tag base for the PUTs [`retrying_plan`] re-issues, keeping recovery
@@ -199,6 +257,29 @@ pub struct RetryReport {
 /// use [`retrying_plan_with`] to run a repair hook before each round.
 /// Returns `None` when a round times out or `max_rounds` recovery rounds
 /// were not enough (e.g. a LUT miss nobody repairs).
+///
+/// ```
+/// use dnp::config::DnpConfig;
+/// use dnp::packet::AddrFormat;
+/// use dnp::rdma::{Command, LUT_SENDOK};
+/// use dnp::{topology, traffic};
+///
+/// let cfg = DnpConfig::shapes_rdt();
+/// let mut net = topology::two_tiles_offchip(&cfg, 1 << 14);
+/// let fmt = AddrFormat::Torus3D { dims: [2, 1, 1] };
+/// net.dnp_mut(1).register_buffer(0x2000, 64, LUT_SENDOK).unwrap();
+/// net.dnp_mut(0).mem.write_slice(0x100, &[1, 2, 3]);
+/// let plan = vec![traffic::Planned {
+///     node: 0,
+///     at: 0,
+///     cmd: Command::put(0x100, fmt.encode(&[1, 0, 0]), 0x2000, 3).with_tag(1),
+/// }];
+/// // A clean link and a registered window: the plan drains with zero
+/// // recovery rounds.
+/// let report = traffic::retrying_plan(&mut net, plan, 1_000_000, 4).expect("drains");
+/// assert_eq!((report.retries, report.rounds), (0, 0));
+/// assert_eq!(net.dnp(1).mem.read_slice(0x2000, 3), &[1, 2, 3]);
+/// ```
 pub fn retrying_plan(
     net: &mut Net,
     plan: Vec<Planned>,
@@ -210,7 +291,35 @@ pub fn retrying_plan(
 
 /// [`retrying_plan`] with a software repair hook, called once before each
 /// recovery round (argument: the 1-based round number) — e.g. to register
-/// the missing LUT window a `LutMiss` reported.
+/// the missing LUT window a `LutMiss` reported:
+///
+/// ```
+/// use dnp::config::DnpConfig;
+/// use dnp::packet::AddrFormat;
+/// use dnp::rdma::{Command, LUT_SENDOK};
+/// use dnp::{topology, traffic};
+///
+/// let cfg = DnpConfig::shapes_rdt();
+/// let mut net = topology::two_tiles_offchip(&cfg, 1 << 14);
+/// let fmt = AddrFormat::Torus3D { dims: [2, 1, 1] };
+/// net.dnp_mut(0).mem.write_slice(0x100, &[7, 8, 9, 10]);
+/// // The destination window is not registered yet: the first attempt
+/// // LUT-misses, the destination CQ's LutMiss event drives a re-issue,
+/// // and the repair hook registers the window before the retry lands.
+/// let plan = vec![traffic::Planned {
+///     node: 0,
+///     at: 0,
+///     cmd: Command::put(0x100, fmt.encode(&[1, 0, 0]), 0x2000, 4).with_tag(1),
+/// }];
+/// let report = traffic::retrying_plan_with(&mut net, plan, 1_000_000, 3, |net, round| {
+///     if round == 1 {
+///         net.dnp_mut(1).register_buffer(0x2000, 64, LUT_SENDOK).unwrap();
+///     }
+/// })
+/// .expect("converges once the window exists");
+/// assert_eq!((report.retries, report.rounds), (1, 1));
+/// assert_eq!(net.dnp(1).mem.read_slice(0x2000, 4), &[7, 8, 9, 10]);
+/// ```
 pub fn retrying_plan_with(
     net: &mut Net,
     plan: Vec<Planned>,

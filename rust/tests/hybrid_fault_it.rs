@@ -21,7 +21,7 @@ fn run_scenario(faults: &[HierLinkFault], label: &str) {
     let slots: Vec<usize> = (0..N).collect();
     traffic::setup_buffers(&mut net, &slots);
     let dead = fault::inject_hybrid(&mut net, &wiring, faults, &cfg)
-        .unwrap_or_else(|| panic!("{label}: fault set must be recoverable"));
+        .unwrap_or_else(|e| panic!("{label}: fault set must be recoverable: {e}"));
     assert_eq!(dead.len(), faults.len() * 2, "{label}: two wires per fault");
 
     let plan = traffic::hybrid_all_pairs(CHIPS, TILES, LEN);
