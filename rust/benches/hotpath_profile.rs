@@ -218,6 +218,38 @@ fn shard_scenario_sharded(workers: usize) -> (u64, u64, f64) {
     (flits, cycles, r.median_s)
 }
 
+/// §Gateway scenario: the 3x3x3 hotspot (every remote tile hammering one
+/// victim chip) under a given gateway map — the funnel the multi-gateway
+/// refactor exists to relieve. Returns the usual wall numbers plus the
+/// peak per-gateway channel load (wire words on the busiest gateway
+/// cable) from `metrics::gateway_load_report`, printed after the table
+/// as the §Gateway harvest line of EXPERIMENTS.md.
+fn hotspot_scenario(gmap: &dnp::route::hier::GatewayMap) -> (u64, u64, f64, u64) {
+    let cfg = DnpConfig::hybrid();
+    let n = shard_scenario_nodes();
+    let mut flits = 0u64;
+    let mut cycles = 0u64;
+    let mut peak = 0u64;
+    let r = wall(1, 3, || {
+        let (mut net, wiring) =
+            topology::hybrid_torus_mesh_wired_with(SHARD_CHIPS, gmap, &cfg, SHARD_MEM);
+        net.traces.enabled = false;
+        let window = n as u32 * traffic::RX_WINDOW;
+        for i in 0..n {
+            net.dnp_mut(i)
+                .register_buffer(traffic::rx_addr(0), window, 0)
+                .expect("LUT capacity");
+        }
+        let plan = traffic::hybrid_hotspot(SHARD_CHIPS, SHARD_TILES, [1, 1, 1], 4, 16);
+        let mut feeder = traffic::Feeder::new(plan);
+        traffic::run_plan(&mut net, &mut feeder, 10_000_000).expect("drains");
+        flits = dnp::metrics::net_totals(&net).flits_switched;
+        cycles = net.cycle;
+        peak = dnp::metrics::gateway_load_report(&net, &wiring).peak_channel_words();
+    });
+    (flits, cycles, r.median_s, peak)
+}
+
 fn halo_phase() -> (u64, u64, f64) {
     let cfg = DnpConfig::shapes_rdt();
     let mut flits = 0u64;
@@ -259,6 +291,9 @@ fn main() {
         "EXPERIMENTS.md §Perf",
         "simulator wall throughput: flit-hops/s and simulated cycles/s",
     );
+    use dnp::route::hier::GatewayMap;
+    let (hf, hc, hs, fixed_peak) = hotspot_scenario(&GatewayMap::fixed(SHARD_TILES));
+    let (gf, gc, gs, hash_peak) = hotspot_scenario(&GatewayMap::dst_hash(SHARD_TILES, 2));
     let mut t = Table::new(&[
         "workload",
         "flit-hops",
@@ -279,6 +314,8 @@ fn main() {
         ("hybrid 3x3x3 shard w2", shard_scenario_sharded(2)),
         ("hybrid 3x3x3 shard w4", shard_scenario_sharded(4)),
         ("hybrid 3x3x3 shard w8", shard_scenario_sharded(8)),
+        ("hybrid 3x3x3 hotspot fixed", (hf, hc, hs)),
+        ("hybrid 3x3x3 hotspot dsthash", (gf, gc, gs)),
     ] {
         t.row(&[
             name.into(),
@@ -290,6 +327,14 @@ fn main() {
         ]);
     }
     t.print();
+    // §Gateway harvest line (EXPERIMENTS.md): peak per-gateway channel
+    // load on the hotspot, Fixed vs DstHash — the acceptance invariant
+    // (<= 60%) is asserted by rust/tests/gateway_it.rs in CI.
+    println!(
+        "    gateway hotspot 3x3x3: fixed peak={fixed_peak} words, dsthash peak={hash_peak} \
+         words (ratio {:.2})",
+        hash_peak as f64 / fixed_peak as f64
+    );
     println!(
         "    idle spin: {:.2} Msim-cycles/s (empty 64-node torus)",
         idle_spin() / 1e6

@@ -5,29 +5,42 @@
 //! The flat-torus machinery of the parent module covers one level; the
 //! hybrid system of [`crate::topology::hybrid_torus_mesh`] has two: chips
 //! joined by off-chip SerDes links into a 3D torus, tiles joined by
-//! on-chip links into a 2D mesh per chip, with all off-chip links of a
-//! chip dimension terminating at one *gateway* tile. A hard fault
-//! ([`HierLinkFault`]) can hit either level, and recovery must respect the
-//! hierarchy:
+//! on-chip links into a 2D mesh per chip, with each chip dimension's
+//! off-chip cables terminating at the gateway tile(s) its
+//! [`GatewayMap`] names. A hard fault ([`HierLinkFault`]) can hit either
+//! level, and recovery must respect the hierarchy:
 //!
-//! * **(a) dead SerDes link** — the chip-level survivor graph loses that
-//!   edge; chip hops detour over the surviving wires of the same ring or
-//!   over other dimensions (BFS over the chip torus, healthy-DOR-first
-//!   tie-break).
-//! * **(b) dead gateway** — when *all* off-chip wires of a gateway tile
-//!   die, its dimension is unusable from that chip: the chip-level BFS
-//!   re-homes the traffic onto another dimension's ring, i.e. onto the
-//!   gateway tile owning that dimension. (The SerDes wires physically
-//!   terminate at the gateway, so "an alternate gateway" necessarily means
-//!   an alternate *dimension*; a chip whose every gateway is dead is
-//!   simply unreachable and the recomputation reports `None`.)
+//! * **(a) dead SerDes cable** — under a multi-gateway map, a cable is
+//!   one *lane* of a chip-level edge: its death re-homes **only its own
+//!   flows** onto the first surviving lane of the same `(dim, dir)` (the
+//!   other lanes' flows keep their installed routes bit-exactly). The
+//!   chip-level survivor graph loses the edge only when *every* lane of
+//!   that direction is dead; chip hops then detour over the surviving
+//!   wires of the same ring or over other dimensions (BFS over the chip
+//!   torus, healthy-DOR-first tie-break).
+//! * **(b) dead gateway** — when all off-chip wires of every gateway of
+//!   a dimension die, the dimension is unusable from that chip: the
+//!   chip-level BFS re-homes the traffic onto another dimension's ring,
+//!   i.e. onto the gateway tile(s) owning that dimension. (The SerDes
+//!   wires physically terminate at the gateways, so "an alternate
+//!   gateway" beyond the map's own lanes necessarily means an alternate
+//!   *dimension*; a chip whose every gateway is dead is simply
+//!   unreachable and the recomputation reports an error.)
 //! * **(c) dead mesh link** — the chip's tile-mesh survivor graph loses
 //!   the edge; intra-chip walks (to a gateway, or the delivery walk to the
 //!   destination tile) detour via BFS with healthy-XY-first tie-break.
 //!   A chip whose mesh is internally partitioned would need out-and-back
 //!   transit through a neighbour chip; the two-level scheme treats that as
-//!   unrecoverable (`None`) rather than installing hierarchy-violating
-//!   routes.
+//!   unrecoverable rather than installing hierarchy-violating routes.
+//!
+//! Recovery **preserves the installed [`GatewayMap`]**:
+//! [`recompute_hybrid_tables_with`] takes the map the net was built with
+//! ([`inject_hybrid`] reads it off the [`HybridWiring`]), reproduces its
+//! lane assignment for every unaffected flow, and never collapses a
+//! multi-gateway layout back onto one tile. A structurally invalid map
+//! (out-of-bounds tile, duplicate, empty group) is rejected up front
+//! with the typed [`HierRecoveryError::BadGatewayMap`] instead of a
+//! panic.
 //!
 //! # Escape-VC discipline
 //!
@@ -58,12 +71,14 @@
 //! (e.g. `src = k-1 → dst = 1` wraps at the dateline and then continues
 //! on VC 0) and by some detours past a wrap on smaller rings. Instead of
 //! silently installing unsound tables, [`recompute_hybrid_tables`] now
-//! *walks* every ordered chip pair over the exact hops and VCs the tables
-//! install and returns [`HierRecoveryError::DatelineHazard`] when a hop
-//! after a ring's wrap would ride VC 0. Every configuration this repo
-//! ships and tests passes the walk; the rigorous fix that would *accept*
-//! k >= 4 rings (static per-channel dateline classes) stays on the
-//! ROADMAP.
+//! *walks* every (source chip, destination node) pair — destination
+//! tiles matter under `DstHash`, whose lane is keyed on them — over the
+//! exact hops and VCs the tables install and returns
+//! [`HierRecoveryError::DatelineHazard`] (naming the offending ring
+//! dimension) when a hop after a ring's wrap would ride VC 0. Every
+//! configuration this repo ships and tests passes the walk; the rigorous
+//! fix that would *accept* k >= 4 rings (static per-channel dateline
+//! classes) stays on the ROADMAP.
 //!
 //! # Known approximations
 //!
@@ -76,13 +91,13 @@
 use super::{LinkFault, SurvivorGraph};
 use crate::config::{DnpConfig, RouteOrder};
 use crate::packet::{AddrFormat, DnpAddr};
-use crate::route::hier::gateway_tile;
+use crate::route::hier::{GatewayMap, GatewayMapError, GatewayPolicy};
 use crate::route::{HierRouter, OutSel, Router, TableRouter};
 use crate::sim::channel::ChannelId;
 use crate::sim::Net;
 use crate::topology::{hybrid_port_maps, mesh_step, HybridWiring};
 use crate::traffic::hybrid_coords;
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 
 /// A hard fault on one bidirectional link of the hybrid system (kills both
 /// directed channels of the physical cable, exactly like [`LinkFault`] on
@@ -90,13 +105,27 @@ use std::collections::VecDeque;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum HierLinkFault {
     /// Off-chip SerDes cable of chip dimension `dim`, leaving `chip` in
-    /// the `plus` (or minus) direction. Both gateways keep their other
+    /// the `plus` (or minus) direction — shorthand for
+    /// [`SerdesLane`](Self::SerdesLane) with `lane: 0` (the only lane of
+    /// the default `Fixed` gateway map). The gateways keep their other
     /// wires; in a k=2 ring the ± cables are distinct.
     Serdes {
         chip: [u32; 3],
         dim: usize,
         /// true = the (+) cable out of `chip`.
         plus: bool,
+    },
+    /// One specific parallel cable of a multi-gateway map: the lane-`lane`
+    /// cable of chip dimension `dim`, leaving `chip` toward `plus`. Its
+    /// death re-homes only the flows hashed onto that lane; the sibling
+    /// lanes keep their routes (see module docs).
+    SerdesLane {
+        chip: [u32; 3],
+        dim: usize,
+        plus: bool,
+        /// Gateway group member index (see
+        /// [`GatewayMap::group`](crate::route::hier::GatewayMap::group)).
+        lane: usize,
     },
     /// On-chip mesh link inside `chip`, leaving `tile` along mesh
     /// dimension `dim` (0 = X, 1 = Y) in the `plus` direction.
@@ -201,24 +230,67 @@ fn chip_coords(dims: [u32; 3], i: usize) -> [u32; 3] {
 }
 
 /// Two-level survivor graph of the hybrid system: the chip torus over
-/// surviving SerDes cables plus one tile-mesh survivor per chip.
+/// surviving SerDes cables plus one tile-mesh survivor per chip, with
+/// per-lane cable bookkeeping for multi-gateway maps.
 pub struct HierSurvivorGraph {
     pub(crate) chips: SurvivorGraph,
     pub(crate) meshes: Vec<MeshSurvivor>,
+    /// Dead directed off-chip channels: `(chip index, dim, dir, lane)` —
+    /// both halves of every killed cable (the reverse half's lane is the
+    /// map's [`reverse_lane`](GatewayMap::reverse_lane)).
+    pub(crate) dead_lanes: HashSet<(usize, usize, usize, usize)>,
 }
 
 impl HierSurvivorGraph {
+    /// Survivor graph under the default `Fixed` gateway map.
     pub fn new(chip_dims: [u32; 3], tile_dims: [u32; 2], faults: &[HierLinkFault]) -> Self {
+        Self::new_with(chip_dims, &GatewayMap::fixed(tile_dims), faults)
+    }
+
+    /// Survivor graph under an explicit [`GatewayMap`]: a chip-level edge
+    /// survives while *any* of its lanes survives.
+    pub fn new_with(chip_dims: [u32; 3], gmap: &GatewayMap, faults: &[HierLinkFault]) -> Self {
+        let tile_dims = gmap.tile_dims();
         let nchips = chip_dims.iter().product::<u32>() as usize;
-        let serdes: Vec<LinkFault> = faults
-            .iter()
-            .filter_map(|f| match *f {
-                HierLinkFault::Serdes { chip, dim, plus } => {
-                    Some(LinkFault { from: chip, dim, plus })
+        let mut dead_lanes: HashSet<(usize, usize, usize, usize)> = HashSet::new();
+        for f in faults {
+            let (chip, dim, plus, lane) = match *f {
+                HierLinkFault::Serdes { chip, dim, plus } => (chip, dim, plus, 0),
+                HierLinkFault::SerdesLane { chip, dim, plus, lane } => (chip, dim, plus, lane),
+                HierLinkFault::Mesh { .. } => continue,
+            };
+            // The cable kills both directed halves: ours toward the
+            // neighbour, and the neighbour's reverse half back.
+            let d = usize::from(!plus);
+            let k = chip_dims[dim];
+            let mut nc = chip;
+            nc[dim] = (chip[dim] + if plus { 1 } else { k - 1 }) % k;
+            dead_lanes.insert((chip_index(chip_dims, chip), dim, d, lane));
+            dead_lanes.insert((
+                chip_index(chip_dims, nc),
+                dim,
+                1 - d,
+                gmap.reverse_lane(dim, d, lane),
+            ));
+        }
+        // Chip-level edge faults: only directions whose every lane died.
+        let mut serdes: Vec<LinkFault> = Vec::new();
+        for c in 0..nchips {
+            let cc = chip_coords(chip_dims, c);
+            for dim in 0..3 {
+                if chip_dims[dim] < 2 {
+                    continue;
                 }
-                HierLinkFault::Mesh { .. } => None,
-            })
-            .collect();
+                for d in 0..2 {
+                    let any_alive = (0..gmap.group(dim).len()).any(|l| {
+                        gmap.owns(dim, l, d) && !dead_lanes.contains(&(c, dim, d, l))
+                    });
+                    if !any_alive {
+                        serdes.push(LinkFault { from: cc, dim, plus: d == 0 });
+                    }
+                }
+            }
+        }
         let chips = SurvivorGraph::new(chip_dims, &serdes);
         let mut per_chip: Vec<Vec<([u32; 2], usize, bool)>> = vec![Vec::new(); nchips];
         for f in faults {
@@ -230,7 +302,7 @@ impl HierSurvivorGraph {
             .iter()
             .map(|fs| MeshSurvivor::new(tile_dims, fs))
             .collect();
-        Self { chips, meshes }
+        Self { chips, meshes, dead_lanes }
     }
 
     /// Recovery is possible iff the chip torus stays connected over the
@@ -304,6 +376,14 @@ pub enum HierRecoveryError {
     /// Chip `chip`'s tile mesh is internally partitioned (out-and-back
     /// transit through a neighbour chip would violate the hierarchy).
     MeshPartitioned { chip: usize },
+    /// A SerDes fault names a cable the installed [`GatewayMap`] does not
+    /// wire: the lane index is beyond the dimension's group, or the lane
+    /// does not carry the named direction (e.g. the `Serdes` lane-0
+    /// shorthand for a `-` cable under `DimPair`, where lane 0 owns only
+    /// `+`). Silently ignoring such a fault would return tables that
+    /// still route over whatever the caller actually meant to kill, so
+    /// it is rejected up front.
+    UnknownCable { dim: usize, plus: bool, lane: usize },
     /// The recovered route set would hand a post-dateline packet back to
     /// VC 0 on chip ring `dim`: the chip-level walk from `src_chip` to
     /// `dst_chip` crosses the ring's wrap link and later takes an
@@ -318,6 +398,10 @@ pub enum HierRecoveryError {
         src_chip: usize,
         dst_chip: usize,
     },
+    /// The supplied [`GatewayMap`] is structurally invalid (out-of-bounds
+    /// tile, duplicate group member, empty group) — rejected up front
+    /// with a typed error instead of a builder panic.
+    BadGatewayMap(GatewayMapError),
 }
 
 impl std::fmt::Display for HierRecoveryError {
@@ -331,8 +415,18 @@ impl std::fmt::Display for HierRecoveryError {
             }
             HierRecoveryError::DatelineHazard { dim, src_chip, dst_chip } => write!(
                 f,
-                "recovered routes violate the dateline discipline on chip ring {dim} \
-                 (chip {src_chip} -> chip {dst_chip} takes a post-wrap hop on VC 0)"
+                "recovered routes violate the dateline discipline on the {} chip ring (dim {dim}: \
+                 chip {src_chip} -> chip {dst_chip} takes a post-wrap hop on VC 0)",
+                ["X", "Y", "Z"][dim]
+            ),
+            HierRecoveryError::BadGatewayMap(e) => {
+                write!(f, "cannot recover under an invalid gateway map: {e}")
+            }
+            HierRecoveryError::UnknownCable { dim, plus, lane } => write!(
+                f,
+                "fault names lane {lane} of dim {dim} toward '{}', which the installed \
+                 gateway map does not wire",
+                if plus { '+' } else { '-' }
             ),
         }
     }
@@ -374,7 +468,37 @@ pub fn recompute_hybrid_tables(
     faults: &[HierLinkFault],
     cfg: &DnpConfig,
 ) -> Result<Vec<TableRouter>, HierRecoveryError> {
-    let g = HierSurvivorGraph::new(chip_dims, tile_dims, faults);
+    recompute_hybrid_tables_with(chip_dims, &GatewayMap::fixed(tile_dims), faults, cfg)
+}
+
+/// [`recompute_hybrid_tables`] under an explicit [`GatewayMap`]: the
+/// recovered tables preserve the installed map's lane assignment — a
+/// dead cable re-homes *only its own lane's flows* onto the first
+/// surviving lane of the same `(dim, dir)`, every other flow keeps its
+/// healthy route bit-exactly. Rejects structurally invalid maps with
+/// [`HierRecoveryError::BadGatewayMap`].
+pub fn recompute_hybrid_tables_with(
+    chip_dims: [u32; 3],
+    gmap: &GatewayMap,
+    faults: &[HierLinkFault],
+    cfg: &DnpConfig,
+) -> Result<Vec<TableRouter>, HierRecoveryError> {
+    gmap.check().map_err(HierRecoveryError::BadGatewayMap)?;
+    // Every SerDes fault must name a cable the map actually wires —
+    // silently dropping an unowned (lane, dir) would return tables that
+    // still route over the wire the caller meant to kill.
+    for f in faults {
+        let (dim, plus, lane) = match *f {
+            HierLinkFault::Serdes { dim, plus, .. } => (dim, plus, 0),
+            HierLinkFault::SerdesLane { dim, plus, lane, .. } => (dim, plus, lane),
+            HierLinkFault::Mesh { .. } => continue,
+        };
+        if lane >= gmap.group(dim).len() || !gmap.owns(dim, lane, usize::from(!plus)) {
+            return Err(HierRecoveryError::UnknownCable { dim, plus, lane });
+        }
+    }
+    let tile_dims = gmap.tile_dims();
+    let g = HierSurvivorGraph::new_with(chip_dims, gmap, faults);
     if !g.chips.connected() {
         return Err(HierRecoveryError::ChipTorusDisconnected);
     }
@@ -385,7 +509,7 @@ pub fn recompute_hybrid_tables(
     let nchips = chip_dims.iter().product::<u32>() as usize;
     let ntiles = (tile_dims[0] * tile_dims[1]) as usize;
     let n = nchips * ntiles;
-    let (mesh_port_of, off_port_of) = hybrid_port_maps(chip_dims, tile_dims, cfg);
+    let (mesh_port_of, off_port_of) = hybrid_port_maps(chip_dims, gmap, cfg);
     let addrs: Vec<DnpAddr> = (0..n)
         .map(|i| fmt.encode(&hybrid_coords(chip_dims, tile_dims, i)))
         .collect();
@@ -393,10 +517,10 @@ pub fn recompute_hybrid_tables(
     let healthy: Vec<HierRouter> = (0..n)
         .map(|i| {
             let t = i % ntiles;
-            HierRouter::new(
+            HierRouter::new_with(
                 addrs[i],
                 chip_dims,
-                tile_dims,
+                gmap.clone(),
                 cfg.route_order,
                 mesh_port_of[t],
                 off_port_of[t],
@@ -413,103 +537,134 @@ pub fn recompute_hybrid_tables(
         .collect();
     let chip_dists: Vec<Vec<u32>> = (0..nchips).map(|b| g.chips.dists_to(b)).collect();
 
+    /// The off-chip decision a transit chip installs for one destination
+    /// node — identical for every tile of the chip (the lane is keyed on
+    /// the destination, never on the current tile).
+    struct OffDec {
+        dim: usize,
+        dir: usize,
+        /// Row-major tile index of the gateway the flow exits through.
+        gw: usize,
+        port: usize,
+        vc: u8,
+    }
+    // Shared between the table build and the dateline walk below, so the
+    // walk sees precisely the installed decisions.
+    let offchip_decision = |achip: usize, dst: usize| -> Result<OffDec, HierRecoveryError> {
+        let (bchip, btile) = (dst / ntiles, dst % ntiles);
+        let (dim, dir) = chip_next_hop(
+            &g.chips,
+            &chip_dists[bchip],
+            achip,
+            chip_coords(chip_dims, achip),
+            chip_coords(chip_dims, bchip),
+            chip_dims,
+            cfg.route_order,
+        )
+        .ok_or(HierRecoveryError::ChipTorusDisconnected)?;
+        // The installed map's lane first; a dead cable re-homes only ITS
+        // flows, onto the first surviving lane of the same direction (the
+        // chip-level edge is alive, so one exists).
+        let alive =
+            |l: usize| gmap.owns(dim, l, dir) && !g.dead_lanes.contains(&(achip, dim, dir, l));
+        let want = gmap.lane(dim, dir, bchip, btile);
+        let pick = if alive(want) {
+            want
+        } else {
+            (0..gmap.group(dim).len())
+                .find(|&l| alive(l))
+                .ok_or(HierRecoveryError::ChipTorusDisconnected)?
+        };
+        let gw = tile_idx(gmap.group(dim)[pick]);
+        let port = off_port_of[gw][dim][dir].expect("lane carries this direction's cable");
+        // Healthy-consistent off-chip hops keep their healthy dateline
+        // VC; deviating hops (detours, re-homed rings, lane fallbacks)
+        // ride escape VC 1 (flat-module convention).
+        let u = achip * ntiles + gw;
+        let hd = healthy[u].decide(addrs[u], addrs[dst], 0);
+        let vc = if hd.out == OutSel::Port(port) { hd.vc } else { 1 };
+        Ok(OffDec { dim, dir, gw, port, vc })
+    };
+
     let mut tables: Vec<TableRouter> = addrs.iter().map(|&a| TableRouter::new(a)).collect();
     for dst in 0..n {
         let (bchip, stile) = (dst / ntiles, dst % ntiles);
-        let b_c = chip_coords(chip_dims, bchip);
-        for u in 0..n {
-            if u == dst {
-                continue;
-            }
-            let (achip, t) = (u / ntiles, u % ntiles);
-            let (port, vc) = if achip == bchip {
+        for achip in 0..nchips {
+            if achip == bchip {
                 // Delivery phase: mesh toward the destination tile on the
                 // VC-1 delivery class (terminates inside this chip).
-                let d = g.meshes[achip]
-                    .next_hop(&mesh_dists[achip][stile], t, stile)
-                    .ok_or(HierRecoveryError::MeshPartitioned { chip: achip })?;
-                let port = mesh_port_of[t][d].expect("mesh hop uses an existing link");
-                (port, 1)
-            } else {
-                let (dim, dir) = chip_next_hop(
-                    &g.chips,
-                    &chip_dists[bchip],
-                    achip,
-                    chip_coords(chip_dims, achip),
-                    b_c,
-                    chip_dims,
-                    cfg.route_order,
-                )
-                .ok_or(HierRecoveryError::ChipTorusDisconnected)?;
-                let gw = tile_idx(gateway_tile(tile_dims, dim));
-                if t == gw {
-                    let port =
-                        off_port_of[t][dim][dir].expect("gateway owns this dimension's ports");
-                    // Healthy-consistent off-chip hops keep their healthy
-                    // dateline VC; deviating hops (detours, re-homed
-                    // rings) ride escape VC 1 (flat-module convention).
-                    let hd = healthy[u].decide(addrs[u], addrs[dst], 0);
-                    let vc = if hd.out == OutSel::Port(port) { hd.vc } else { 1 };
-                    (port, vc)
+                for t in 0..ntiles {
+                    let u = achip * ntiles + t;
+                    if u == dst {
+                        continue;
+                    }
+                    let d = g.meshes[achip]
+                        .next_hop(&mesh_dists[achip][stile], t, stile)
+                        .ok_or(HierRecoveryError::MeshPartitioned { chip: achip })?;
+                    let port = mesh_port_of[t][d].expect("mesh hop uses an existing link");
+                    tables[u].install(addrs[dst], port, 1);
+                }
+                continue;
+            }
+            let dec = offchip_decision(achip, dst)?;
+            for t in 0..ntiles {
+                let u = achip * ntiles + t;
+                let (port, vc) = if t == dec.gw {
+                    (dec.port, dec.vc)
                 } else {
                     // Outbound/transit mesh walk toward the gateway: VC 0
                     // always, detoured or not — putting it on VC 1 would
                     // let the delivery class wait on off-chip credits and
                     // void the route/hier.rs deadlock argument.
                     let d = g.meshes[achip]
-                        .next_hop(&mesh_dists[achip][gw], t, gw)
+                        .next_hop(&mesh_dists[achip][dec.gw], t, dec.gw)
                         .ok_or(HierRecoveryError::MeshPartitioned { chip: achip })?;
                     (mesh_port_of[t][d].expect("mesh hop uses an existing link"), 0)
-                }
-            };
-            tables[u].install(addrs[dst], port, vc);
+                };
+                tables[u].install(addrs[dst], port, vc);
+            }
         }
     }
 
-    // §Dateline verification (module docs): walk every ordered chip pair
-    // over the exact chip-level hops and VCs the tables install, and
-    // refuse table sets that hand a post-dateline packet back to VC 0.
-    // Uses the same `chip_next_hop` / healthy-decide computation as the
-    // builder above, so the walk sees precisely the installed decisions
-    // (they depend only on the chips, not on the tiles involved).
+    // §Dateline verification (module docs): walk every (source chip,
+    // destination node) pair over the exact chip-level hops and VCs the
+    // tables install — destination *tiles* matter under `DstHash`, whose
+    // lane (and with it the healthy-VC comparison) is keyed on them —
+    // and refuse table sets that hand a post-dateline packet back to
+    // VC 0. Reuses `offchip_decision`, so the walk sees precisely the
+    // installed decisions.
+    // Only `DstHash` keys the lane on the destination tile; under every
+    // other policy all tiles of a chip share one decision chain, so one
+    // representative tile per destination chip suffices.
+    let walk_all_tiles = gmap.policy() == GatewayPolicy::DstHash;
     for src in 0..nchips {
-        for dstc in 0..nchips {
-            if src == dstc {
+        for dst in 0..n {
+            let bchip = dst / ntiles;
+            if src == bchip || (!walk_all_tiles && dst % ntiles != 0) {
                 continue;
             }
-            let b_c = chip_coords(chip_dims, dstc);
             let mut cur = src;
             let mut wrapped = [false; 3];
             let mut hops = 0usize;
-            while cur != dstc {
-                let cur_c = chip_coords(chip_dims, cur);
-                let (dim, dir) = chip_next_hop(
-                    &g.chips,
-                    &chip_dists[dstc],
-                    cur,
-                    cur_c,
-                    b_c,
-                    chip_dims,
-                    cfg.route_order,
-                )
-                .ok_or(HierRecoveryError::ChipTorusDisconnected)?;
-                let gw = tile_idx(gateway_tile(tile_dims, dim));
-                let u = cur * ntiles + gw;
-                let port = off_port_of[gw][dim][dir].expect("gateway owns this dimension's ports");
-                let hd = healthy[u].decide(addrs[u], addrs[dstc * ntiles], 0);
-                let vc = if hd.out == OutSel::Port(port) { hd.vc } else { 1 };
-                if wrapped[dim] && vc == 0 {
+            while cur != bchip {
+                let dec = offchip_decision(cur, dst)?;
+                if wrapped[dec.dim] && dec.vc == 0 {
                     return Err(HierRecoveryError::DatelineHazard {
-                        dim,
+                        dim: dec.dim,
                         src_chip: src,
-                        dst_chip: dstc,
+                        dst_chip: bchip,
                     });
                 }
-                let k = chip_dims[dim];
-                let crossed = if dir == 0 { cur_c[dim] == k - 1 } else { cur_c[dim] == 0 };
-                wrapped[dim] |= crossed;
+                let cur_c = chip_coords(chip_dims, cur);
+                let k = chip_dims[dec.dim];
+                let crossed = if dec.dir == 0 {
+                    cur_c[dec.dim] == k - 1
+                } else {
+                    cur_c[dec.dim] == 0
+                };
+                wrapped[dec.dim] |= crossed;
                 let mut nc = cur_c;
-                nc[dim] = (cur_c[dim] + if dir == 0 { 1 } else { k - 1 }) % k;
+                nc[dec.dim] = (cur_c[dec.dim] + if dec.dir == 0 { 1 } else { k - 1 }) % k;
                 cur = chip_index(chip_dims, nc);
                 hops += 1;
                 assert!(hops <= 3 * nchips, "chip-level walk did not converge");
@@ -547,7 +702,10 @@ pub fn inject_hybrid(
     faults: &[HierLinkFault],
     cfg: &DnpConfig,
 ) -> Result<Vec<ChannelId>, HierRecoveryError> {
-    let tables = recompute_hybrid_tables(wiring.chip_dims, wiring.tile_dims, faults, cfg)?;
+    // Recovery preserves the gateway map the net was built with (module
+    // docs) — and rejects a structurally invalid one with the typed
+    // `BadGatewayMap` error instead of panicking mid-recomputation.
+    let tables = recompute_hybrid_tables_with(wiring.chip_dims, &wiring.gmap, faults, cfg)?;
     super::apply_tables(net, tables);
     Ok(faults.iter().flat_map(|f| wiring.channels_of(f)).collect())
 }
@@ -555,6 +713,7 @@ pub fn inject_hybrid(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::route::hier::{gateway_tile, GatewayPolicy};
     use crate::route::testutil::walk;
     use crate::traffic::hybrid_node_index;
 
@@ -709,7 +868,7 @@ mod tests {
     fn no_fault_tables_reproduce_healthy_hier_router() {
         let cfg = DnpConfig::hybrid();
         let tables = recompute_hybrid_tables(CHIPS, TILES, &[], &cfg).unwrap();
-        let (mesh_ports, off_ports) = hybrid_port_maps(CHIPS, TILES, &cfg);
+        let (mesh_ports, off_ports) = hybrid_port_maps(CHIPS, &GatewayMap::fixed(TILES), &cfg);
         let n = 16usize;
         for u in 0..n {
             let uc = hybrid_coords(CHIPS, TILES, u);
@@ -742,13 +901,147 @@ mod tests {
         }
     }
 
+    #[test]
+    fn dst_hash_no_fault_tables_reproduce_the_installed_map() {
+        // Recovery must PRESERVE the installed GatewayMap: with zero
+        // faults, the recomputed tables reproduce the map-aware healthy
+        // router exactly (no collapse back onto one gateway tile).
+        let cfg = DnpConfig::hybrid();
+        let gmap = GatewayMap::dst_hash(TILES, 2);
+        let tables = recompute_hybrid_tables_with(CHIPS, &gmap, &[], &cfg).unwrap();
+        let (mesh_ports, off_ports) = hybrid_port_maps(CHIPS, &gmap, &cfg);
+        for u in 0..16usize {
+            let uc = hybrid_coords(CHIPS, TILES, u);
+            let me = fmt().encode(&uc);
+            let healthy = HierRouter::new_with(
+                me,
+                CHIPS,
+                gmap.clone(),
+                cfg.route_order,
+                mesh_ports[u % 4],
+                off_ports[u % 4],
+            );
+            for d in 0..16usize {
+                if d == u {
+                    continue;
+                }
+                let dc = hybrid_coords(CHIPS, TILES, d);
+                let dst = fmt().encode(&dc);
+                let td = tables[u].decide(me, dst, 0);
+                let hd = healthy.decide(me, dst, 0);
+                assert_eq!(td.out, hd.out, "{u} -> {d}: port diverged from the map");
+                if uc[..3] != dc[..3] {
+                    assert_eq!(td.vc, hd.vc, "{u} -> {d}: VC diverged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dead_lane_rehomes_only_its_own_flows() {
+        // DstHash with 2 lanes on dim 0: dst chip (1,0,0)'s tiles hash to
+        // lanes [1, 1, 1, 0] (pinned snapshot). Killing the lane-1 '+'
+        // cable of chip (0,0,0) must re-home ONLY the lane-1 flows (dst
+        // tiles 0..3 except 3) onto lane 0 with the escape VC; the
+        // lane-0 flow (dst tile 3) keeps its healthy route bit-exactly.
+        let cfg = DnpConfig::hybrid();
+        let gmap = GatewayMap::dst_hash(TILES, 2);
+        let dead = HierLinkFault::SerdesLane { chip: [0, 0, 0], dim: 0, plus: true, lane: 1 };
+        let tables = recompute_hybrid_tables_with(CHIPS, &gmap, &[dead], &cfg).unwrap();
+        let (mesh_ports, off_ports) = hybrid_port_maps(CHIPS, &gmap, &cfg);
+        // Lane-0 gateway is tile (0,0); lane-1 gateway is tile (1,0).
+        assert_eq!(gmap.group(0), &[[0, 0], [1, 0]]);
+        let lane0 = node([0, 0, 0], [0, 0]);
+        let lane0_port = off_ports[0][0][0].expect("lane 0 owns the + cable");
+        // Unaffected lane-0 flow (dst tile (1,1) = index 3): healthy route.
+        let healthy = HierRouter::new_with(
+            addr([0, 0, 0], [0, 0]),
+            CHIPS,
+            gmap.clone(),
+            cfg.route_order,
+            mesh_ports[0],
+            off_ports[0],
+        );
+        let dst = addr([1, 0, 0], [1, 1]);
+        let td = tables[lane0].decide(addr([0, 0, 0], [0, 0]), dst, 0);
+        let hd = healthy.decide(addr([0, 0, 0], [0, 0]), dst, 0);
+        assert_eq!((td.out, td.vc), (hd.out, hd.vc), "lane-0 flow must be untouched");
+        assert_eq!(td.out, OutSel::Port(lane0_port));
+        // Re-homed lane-1 flow (dst tile (0,0) = index 0): exits through
+        // the surviving lane-0 gateway on the escape VC.
+        let dst = addr([1, 0, 0], [0, 0]);
+        let td = tables[lane0].decide(addr([0, 0, 0], [0, 0]), dst, 0);
+        assert_eq!(td.out, OutSel::Port(lane0_port), "must fall back to lane 0");
+        assert_eq!(td.vc, 1, "lane fallback is a deviating hop: escape VC");
+        // The dead lane's own gateway (tile (1,0)) routes its re-homed
+        // flows as a mesh walk toward lane 0, on VC 0.
+        let lane1 = node([0, 0, 0], [1, 0]);
+        let td = tables[lane1].decide(addr([0, 0, 0], [1, 0]), dst, 0);
+        // Tile (1,0): X- is its first mesh port (port 0).
+        assert_eq!(td.out, OutSel::Port(0), "mesh walk toward the surviving gateway");
+        assert_eq!(td.vc, 0, "outbound mesh walks stay VC 0");
+    }
+
+    #[test]
+    fn fault_naming_an_unwired_cable_is_a_typed_error() {
+        // Under DimPair lane 0 owns only the '+' cable: the lane-0
+        // `Serdes` shorthand for a '-' cable names nothing, and silently
+        // ignoring it would return tables that still route over whatever
+        // the caller meant to kill.
+        let cfg = DnpConfig::hybrid();
+        let pair = GatewayMap::dim_pair(TILES);
+        let minus = HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: false };
+        assert_eq!(
+            recompute_hybrid_tables_with(CHIPS, &pair, &[minus], &cfg).unwrap_err(),
+            HierRecoveryError::UnknownCable { dim: 0, plus: false, lane: 0 }
+        );
+        // The same cable named correctly (lane 1 owns '-') is accepted.
+        let named = HierLinkFault::SerdesLane { chip: [0, 0, 0], dim: 0, plus: false, lane: 1 };
+        assert!(recompute_hybrid_tables_with(CHIPS, &pair, &[named], &cfg).is_ok());
+        // A lane beyond the group is rejected on any policy.
+        let wide = HierLinkFault::SerdesLane { chip: [0, 0, 0], dim: 0, plus: true, lane: 7 };
+        let hash = GatewayMap::dst_hash(TILES, 2);
+        assert_eq!(
+            recompute_hybrid_tables_with(CHIPS, &hash, &[wide], &cfg).unwrap_err(),
+            HierRecoveryError::UnknownCable { dim: 0, plus: true, lane: 7 }
+        );
+    }
+
+    #[test]
+    fn invalid_gateway_map_is_a_typed_error() {
+        let cfg = DnpConfig::hybrid();
+        let bad = GatewayMap::custom(
+            TILES,
+            GatewayPolicy::Fixed,
+            [vec![[7, 7]], vec![[1, 0]], vec![[0, 1]]],
+        );
+        assert_eq!(
+            recompute_hybrid_tables_with(CHIPS, &bad, &[], &cfg).unwrap_err(),
+            HierRecoveryError::BadGatewayMap(GatewayMapError::OutOfBounds {
+                dim: 0,
+                tile: [7, 7]
+            })
+        );
+    }
+
+    #[test]
+    fn dateline_hazard_message_names_the_ring_axis() {
+        let cfg = DnpConfig::hybrid();
+        let err = recompute_hybrid_tables([4, 1, 1], TILES, &[], &cfg).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("the X chip ring") && msg.contains("dim 0"),
+            "message must name the offending ring dimension: {msg}"
+        );
+    }
+
     /// Static all-pairs walk over the recovered tables for each acceptance
     /// fault scenario: every pair must deliver within a hop bound and the
     /// walk must never traverse a dead (node, port).
     #[test]
     fn all_pairs_walk_avoids_dead_links() {
         let cfg = DnpConfig::hybrid();
-        let (mesh_ports, off_ports) = hybrid_port_maps(CHIPS, TILES, &cfg);
+        let (mesh_ports, off_ports) = hybrid_port_maps(CHIPS, &GatewayMap::fixed(TILES), &cfg);
         let ntiles = 4usize;
         // (node, physical out-port) -> next node, from the builder wiring.
         let next = |u: usize, port: usize| -> usize {
@@ -794,6 +1087,9 @@ mod tests {
                         let g = (gw[0] + gw[1] * TILES[0]) as usize;
                         dead.push((node(chip, gw), off_ports[g][dim][d].unwrap()));
                         dead.push((node(nc, gw), off_ports[g][dim][1 - d].unwrap()));
+                    }
+                    HierLinkFault::SerdesLane { .. } => {
+                        unreachable!("Fixed-map scenarios name lane-0 cables via Serdes")
                     }
                     HierLinkFault::Mesh { chip, tile, dim, plus } => {
                         let d = dim * 2 + usize::from(!plus);

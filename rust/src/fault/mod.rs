@@ -19,7 +19,11 @@
 //!    [`hier::HierSurvivorGraph`] (chip torus × per-chip tile meshes) for
 //!    the hybrid system of `topology::hybrid_torus_mesh`.
 //! 3. **Recomputation** — per-destination shortest-path next hops over the
-//!    survivors ([`recompute_tables`] / [`hier::recompute_hybrid_tables`]).
+//!    survivors ([`recompute_tables`] / [`hier::recompute_hybrid_tables`];
+//!    [`hier::recompute_hybrid_tables_with`] additionally *preserves* the
+//!    installed multi-gateway
+//!    [`GatewayMap`](crate::route::hier::GatewayMap) — a dead cable
+//!    re-homes only its own lane's flows).
 //!    Recovered routes that coincide with the healthy deterministic route
 //!    keep their healthy VC; deviating hops ride the escape VC 1, which
 //!    breaks the dependency cycles a detour could introduce
@@ -47,7 +51,8 @@
 pub mod hier;
 
 pub use hier::{
-    inject_hybrid, recompute_hybrid_tables, HierLinkFault, HierRecoveryError, HierSurvivorGraph,
+    inject_hybrid, recompute_hybrid_tables, recompute_hybrid_tables_with, HierLinkFault,
+    HierRecoveryError, HierSurvivorGraph,
 };
 
 use crate::config::DnpConfig;

@@ -8,10 +8,12 @@
 //! * **L3 (this crate)** — the DNP itself: RDMA engine (LOOPBACK / PUT /
 //!   SEND / GET over CMD FIFO + CQ + LUT), wormhole crossbar switch with
 //!   virtual channels, deterministic torus/mesh/Spidergon/hierarchical
-//!   routing with fault-recovery table recomputation, SerDes and NoC link
-//!   models, topology builders, traffic generators, metrics and the full
-//!   experiment harness for every table and figure of the paper's
-//!   Section IV.
+//!   routing with a pluggable multi-gateway policy
+//!   ([`route::hier::GatewayMap`]) and fault-recovery table
+//!   recomputation, SerDes and NoC link models, topology builders,
+//!   traffic generators, metrics (including per-gateway congestion
+//!   reports) and the full experiment harness for every table and figure
+//!   of the paper's Section IV.
 //! * **L2/L1 (python/, build-time only)** — the SHAPES benchmark kernel
 //!   (Lattice QCD Wilson-Dslash) in JAX with its SU(3) hot-spot as a
 //!   Pallas kernel, AOT-lowered to HLO text.

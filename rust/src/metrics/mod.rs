@@ -15,9 +15,16 @@
 //!   and [`sharded_totals`] merges it across the per-chip shards of a
 //!   [`ShardedNet`] (the shards count disjoint node/channel sets, so the
 //!   merge is a plain sum — a cross-chip delivery is counted once, by
-//!   the destination shard).
+//!   the destination shard);
+//! * **gateway congestion** — [`gateway_load_report`] folds the per-cable
+//!   counters of a hybrid net (words, peak receiver occupancy,
+//!   backpressure events) into per-gateway-lane loads, grouped by the
+//!   installed [`GatewayMap`](crate::route::hier::GatewayMap) — the
+//!   measurement behind the hotspot-spreading acceptance numbers in
+//!   EXPERIMENTS.md §Gateway.
 
 use crate::sim::{CmdTrace, Net, PktTrace, ShardedNet};
+use crate::topology::{cable_slots, HybridWiring};
 use crate::util::{bits_per_cycle_to_gbs, cycles_to_ns};
 
 /// Latency breakdown of one command/packet pair, following the paper's
@@ -195,6 +202,112 @@ pub fn sharded_delivered_gbs(snet: &ShardedNet, elapsed: u64, freq_mhz: f64) -> 
     bits_per_cycle_to_gbs(bits, freq_mhz)
 }
 
+/// Aggregate load of one gateway lane (one member of a dimension's
+/// gateway group), summed over that lane's off-chip cables in every chip
+/// of a hybrid net.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GatewayLaneLoad {
+    pub dim: usize,
+    pub lane: usize,
+    /// Gateway tile carrying this lane's cables.
+    pub tile: [u32; 2],
+    /// Directed channels aggregated (chips × directions the lane owns).
+    pub channels: usize,
+    /// Total wire words over all of the lane's channels.
+    pub words: u64,
+    /// Payload subset of `words`.
+    pub payload_words: u64,
+    /// The busiest single channel of the lane, in wire words — the
+    /// hotspot figure (`Fixed` funnels everything through one lane; a
+    /// spreading policy must push this down).
+    pub peak_channel_words: u64,
+    /// Highest receiver-buffer occupancy any of the lane's channels ever
+    /// reached (flits).
+    pub peak_occupancy: usize,
+    /// Backpressure events summed over the lane's channels (ready flits
+    /// refused by a busy serializer or exhausted credits).
+    pub backpressure_events: u64,
+}
+
+/// Per-gateway-lane load summary of a hybrid net — see
+/// [`gateway_load_report`].
+#[derive(Debug, Clone, Default)]
+pub struct GatewayLoadReport {
+    /// One entry per (dimension, lane), in gateway-group order.
+    pub lanes: Vec<GatewayLaneLoad>,
+}
+
+impl GatewayLoadReport {
+    /// The busiest single gateway channel anywhere, in wire words — the
+    /// headline hotspot number (EXPERIMENTS.md §Gateway compares it
+    /// across gateway policies).
+    pub fn peak_channel_words(&self) -> u64 {
+        self.lanes.iter().map(|l| l.peak_channel_words).max().unwrap_or(0)
+    }
+
+    /// `(max, mean)` lane load of chip dimension `dim`, in total wire
+    /// words — the imbalance signal (max/mean ≈ 1 means the group's
+    /// lanes share the dimension's traffic evenly). `None` when the
+    /// dimension has no active lanes (degenerate ring).
+    pub fn group_max_mean(&self, dim: usize) -> Option<(u64, f64)> {
+        let words: Vec<u64> =
+            self.lanes.iter().filter(|l| l.dim == dim).map(|l| l.words).collect();
+        if words.is_empty() {
+            return None;
+        }
+        let max = *words.iter().max().unwrap();
+        let mean = words.iter().sum::<u64>() as f64 / words.len() as f64;
+        Some((max, mean))
+    }
+}
+
+/// Fold the off-chip SerDes counters of a hybrid net into per-gateway
+/// lane loads, grouped by the [`GatewayMap`](crate::route::hier::GatewayMap)
+/// the net was built with (read off the [`HybridWiring`]). Makes gateway
+/// congestion *measurable*: under the default single-gateway map a
+/// hotspot destination funnels all its traffic through one lane's
+/// cables; the report's [`peak_channel_words`](GatewayLoadReport::peak_channel_words)
+/// and per-lane [`backpressure_events`](GatewayLaneLoad::backpressure_events)
+/// quantify exactly how much a spreading policy relieves.
+pub fn gateway_load_report(net: &Net, wiring: &HybridWiring) -> GatewayLoadReport {
+    let ntiles = (wiring.tile_dims[0] * wiring.tile_dims[1]) as usize;
+    let nchips = wiring.chip_dims.iter().product::<u32>() as usize;
+    let tile_idx = |t: [u32; 2]| -> usize { (t[0] + t[1] * wiring.tile_dims[0]) as usize };
+    let mut lanes: Vec<GatewayLaneLoad> = Vec::new();
+    for s in cable_slots(wiring.chip_dims, &wiring.gmap) {
+        let idx = match lanes.iter().position(|l| l.dim == s.dim && l.lane == s.lane) {
+            Some(i) => i,
+            None => {
+                lanes.push(GatewayLaneLoad {
+                    dim: s.dim,
+                    lane: s.lane,
+                    tile: s.tile,
+                    channels: 0,
+                    words: 0,
+                    payload_words: 0,
+                    peak_channel_words: 0,
+                    peak_occupancy: 0,
+                    backpressure_events: 0,
+                });
+                lanes.len() - 1
+            }
+        };
+        let entry = &mut lanes[idx];
+        for chip in 0..nchips {
+            let ch = wiring.off_out[chip * ntiles + tile_idx(s.tile)][s.dim * 2 + s.dir]
+                .expect("cable slot is wired");
+            let c = net.chans.get(ch);
+            entry.channels += 1;
+            entry.words += c.words_sent;
+            entry.payload_words += c.payload_words_sent;
+            entry.peak_channel_words = entry.peak_channel_words.max(c.words_sent);
+            entry.peak_occupancy = entry.peak_occupancy.max(c.peak_rx_occupancy);
+            entry.backpressure_events += c.backpressure_events;
+        }
+    }
+    GatewayLoadReport { lanes }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -282,6 +395,38 @@ mod tests {
         // 4 payload + 6 envelope words crossed the one active wire.
         assert_eq!(t.words_on_wires, 10);
         assert!(t.flits_switched >= 10);
+    }
+
+    #[test]
+    fn gateway_load_report_attributes_cross_chip_words() {
+        use crate::traffic;
+        let cfg = DnpConfig::hybrid();
+        let (mut net, wiring) =
+            topology::hybrid_torus_mesh_wired([2, 1, 1], [2, 2], &cfg, 1 << 14);
+        // One cross-chip PUT along X: only the dim-0 lane carries words.
+        let fmt = AddrFormat::Hybrid { chip_dims: [2, 1, 1], tile_dims: [2, 2] };
+        net.dnp_mut(4).register_buffer(traffic::rx_addr(0), 256, 0).unwrap();
+        net.dnp_mut(0).mem.write_slice(0x40, &[9; 8]);
+        net.issue(
+            0,
+            crate::rdma::Command::put(0x40, fmt.encode(&[1, 0, 0, 0, 0]), traffic::rx_addr(0), 8)
+                .with_tag(1),
+        );
+        net.run_until_idle(100_000).expect("PUT completes");
+        let report = gateway_load_report(&net, &wiring);
+        // Fixed map, one active dimension: exactly one lane entry, with
+        // 2 chips × 2 directions = 4 channels.
+        assert_eq!(report.lanes.len(), 1);
+        let l = &report.lanes[0];
+        assert_eq!((l.dim, l.lane, l.tile, l.channels), (0, 0, [0, 0], 4));
+        // 8 payload + 6 envelope words crossed one wire exactly once.
+        assert_eq!(l.words, 14);
+        assert_eq!(l.payload_words, 8);
+        assert_eq!(l.peak_channel_words, 14);
+        assert!(l.peak_occupancy > 0, "flits buffered at the receiver");
+        assert_eq!(report.peak_channel_words(), 14);
+        assert_eq!(report.group_max_mean(0), Some((14, 14.0)));
+        assert_eq!(report.group_max_mean(1), None, "degenerate ring has no lanes");
     }
 
     #[test]

@@ -7,38 +7,324 @@
 //! 1. **source / transit chip, chip coordinates differ** — the chip
 //!    coordinates are consumed first, in the configured priority order,
 //!    exactly like [`TorusRouter`](super::TorusRouter): the packet mesh-
-//!    routes (XY, VC 0) to the gateway tile owning the next dimension's
-//!    off-chip ports, then crosses the SerDes link with the stateless
-//!    dateline VC scheme (VC 1 escape on and after the wrap link);
+//!    routes (XY, VC 0) to the gateway tile carrying the chosen off-chip
+//!    cable of the next dimension (see [`GatewayMap`]), then crosses the
+//!    SerDes link with the stateless dateline VC scheme (VC 1 escape on
+//!    and after the wrap link);
 //! 2. **destination chip** — the packet arrived off-chip at a gateway and
 //!    mesh-routes (XY) to the destination tile on VC 1.
 //!
-//! Deadlock freedom: the chip-level rings are broken by the dateline
-//! scheme, the dimension order makes inter-ring dependencies acyclic
-//! (mesh segments between gateways only ever connect a ring to a
-//! *later*-priority ring), and the delivery-phase mesh hops ride VC 1, so
-//! a packet draining into its destination chip never waits on an off-chip
-//! credit — the classic hierarchical-network cycle through a shared
-//! intra-group network (cf. Dragonfly VC escalation) cannot close.
+//! # Gateway mapping
+//!
+//! Which tile carries a chip dimension's off-chip SerDes cables — and
+//! which of several parallel cables a given flow uses — is the system's
+//! first routing *policy* axis, captured by [`GatewayMap`]:
+//!
+//! * [`GatewayPolicy::Fixed`] — the historical single-gateway layout:
+//!   chip dimension `d` is owned by the tile with row-major index
+//!   `d % (TX*TY)` ([`gateway_tile`]), which owns both its `+` and `-`
+//!   cables. The default everywhere; routes are bit-identical to the
+//!   pre-`GatewayMap` code.
+//! * [`GatewayPolicy::DimPair`] — the `+` and `-` cables of a dimension
+//!   terminate at two *different* tiles, halving per-tile SerDes load at
+//!   the same cable count.
+//! * [`GatewayPolicy::DstHash`] — `lanes` parallel cable pairs per
+//!   dimension, one per gateway tile of the group; a flow picks its lane
+//!   by a stateless [`mix64`] hash of `(dim, destination chip,
+//!   destination tile)`. Deterministic and identical in every run and on
+//!   every shard worker (no `Math.random`-style state); the assignment is
+//!   pinned by snapshot tests so recorded experiments cannot silently
+//!   reshuffle.
+//!
+//! Because the lane is a pure function of the *destination* (never of
+//! the current chip), a packet transiting a ring arrives and departs on
+//! the same gateway tile under `Fixed`/`DstHash` — ring transit costs no
+//! mesh hops. Under `DimPair` a transit packet arrives on the tile owning
+//! the cable it came in on (the `1-dir` side) and mesh-walks to the
+//! `dir`-side tile; that within-ring mesh segment is covered by the
+//! deadlock argument below.
+//!
+//! # Deadlock freedom (multi-gateway re-derivation)
+//!
+//! The original single-gateway argument ordered resources as: chip-level
+//! rings broken individually by the dateline VC scheme, mesh segments
+//! only ever connecting a ring to a *later*-priority ring (DOR), and the
+//! delivery phase on the dedicated VC-1 mesh class so a packet draining
+//! into its destination chip never waits on an off-chip credit. With a
+//! [`GatewayMap`] installed the same argument goes through with two
+//! refinements:
+//!
+//! * **Parallel lanes are parallel rings.** Each lane's cables form their
+//!   own physical cycle around a chip ring, and each such cycle is broken
+//!   by the same dateline VC discipline (the VC is computed statelessly
+//!   from the packet's source coordinate, so it survives any mesh
+//!   segment). A packet never switches lanes mid-ring — the lane is a
+//!   function of `(dim, dir, dst)`, all constant while the ring is being
+//!   consumed — so no dependency ever crosses from one lane's cycle into
+//!   another's on the same ring.
+//! * **Within-ring mesh segments (DimPair) do not close cycles.** All
+//!   outbound/transit mesh walks (to the first gateway, between
+//!   consecutive rings, and — new — between the arrival and departure
+//!   tiles of one ring) ride mesh VC 0, and XY routing is cycle-free
+//!   among the mesh channels themselves. A combined cycle would have to
+//!   thread mesh VC 0 *and* come back to an earlier off-chip channel of
+//!   the same ring, i.e. traverse the ring's wrap link — exactly where
+//!   the dateline scheme forces the escape VC, breaking the cycle. Rings
+//!   of different dimensions remain ordered by DOR priority as before
+//!   (a packet leaves ring `d` for ring `d' > d` only), and the VC-1
+//!   delivery class still terminates locally.
+//!
 //! Intra-chip traffic stays on VC 0 and terminates locally.
 //!
-//! Gateway assignment: chip dimension `d` is owned by the tile with
-//! row-major index `d % (TX*TY)`, which owns both its `+` and `-`
-//! off-chip ports. Physical ports are compacted per tile: on-chip mesh
-//! links occupy ports `0..degree` in direction order `[X+, X-, Y+, Y-]`
-//! (as in [`mesh2d_chip`](crate::topology::mesh2d_chip)); off-chip links
-//! occupy `N + 2*k + dir` for the `k`-th owned dimension.
+//! # Physical ports
+//!
+//! Physical ports are compacted per tile: on-chip mesh links occupy ports
+//! `0..degree` in direction order `[X+, X-, Y+, Y-]` (as in
+//! [`mesh2d_chip`](crate::topology::mesh2d_chip)); each off-chip cable a
+//! tile carries occupies the next port of the off-chip block `N..N+M`,
+//! in `(dim, dir)` order over the cables it owns — identical to the old
+//! per-dimension `N + 2k`/`N + 2k + 1` pairs under `Fixed`.
 
 use super::torus::Dir;
 use super::{Decision, OutSel, Router};
 use crate::config::RouteOrder;
 use crate::packet::{hybrid_split, DnpAddr};
+use crate::util::mix64;
 
-/// Row-major tile index of the gateway owning chip dimension `dim`.
+/// Row-major tile index of the single gateway owning chip dimension
+/// `dim` under the historical [`GatewayPolicy::Fixed`] layout.
 pub fn gateway_tile(tile_dims: [u32; 2], dim: usize) -> [u32; 2] {
     let n = tile_dims[0] * tile_dims[1];
     let g = dim as u32 % n;
     [g % tile_dims[0], g / tile_dims[0]]
+}
+
+/// How a [`GatewayMap`] picks the lane (group member) of a cross-chip
+/// flow. See the [module docs](self) for the three shipped policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GatewayPolicy {
+    /// One gateway tile per dimension, owning both cables (the historical
+    /// layout; bit-identical routes).
+    Fixed,
+    /// The `+` and `-` cables of a dimension live on two different tiles
+    /// (lane 0 carries `+`, lane 1 carries `-`).
+    DimPair,
+    /// Per-destination hashing over `lanes` parallel cable pairs:
+    /// `lane = mix64((dim, dst chip, dst tile)) % lanes`, stable across
+    /// runs and pinned by snapshot tests.
+    DstHash,
+}
+
+/// A structurally invalid [`GatewayMap`], reported by
+/// [`GatewayMap::check`] (and surfaced as a typed
+/// [`HierRecoveryError`](crate::fault::HierRecoveryError) by the fault
+/// layer instead of a panic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GatewayMapError {
+    /// A group references a tile outside the chip's tile mesh.
+    OutOfBounds { dim: usize, tile: [u32; 2] },
+    /// The same tile appears twice in one dimension's group (it would
+    /// need two cable pairs of the same dimension on one tile).
+    DuplicateTile { dim: usize, tile: [u32; 2] },
+    /// A dimension's group is empty — no tile could carry its cables.
+    EmptyGroup { dim: usize },
+}
+
+impl std::fmt::Display for GatewayMapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            GatewayMapError::OutOfBounds { dim, tile } => write!(
+                f,
+                "gateway group of dim {dim} references tile ({}, {}) outside the mesh",
+                tile[0], tile[1]
+            ),
+            GatewayMapError::DuplicateTile { dim, tile } => write!(
+                f,
+                "gateway group of dim {dim} lists tile ({}, {}) twice",
+                tile[0], tile[1]
+            ),
+            GatewayMapError::EmptyGroup { dim } => {
+                write!(f, "gateway group of dim {dim} is empty")
+            }
+        }
+    }
+}
+
+/// Pluggable gateway mapping for the hybrid torus-of-meshes: per chip
+/// dimension, an ordered *group* of gateway tiles (each carrying its own
+/// off-chip SerDes cables) plus the [`GatewayPolicy`] assigning each
+/// cross-chip flow to one group member (its *lane*).
+///
+/// The map is consumed by every layer that touches a chip crossing: the
+/// [`HierRouter`] (lane selection per hop), the topology builders (cable
+/// wiring and port assignment —
+/// [`hybrid_torus_mesh_with`](crate::topology::hybrid_torus_mesh_with)),
+/// the fault layer (per-lane survivor bookkeeping,
+/// [`recompute_hybrid_tables_with`](crate::fault::recompute_hybrid_tables_with)
+/// — recovery *preserves* the installed map) and the metrics layer
+/// ([`gateway_load_report`](crate::metrics::gateway_load_report)).
+///
+/// ```
+/// use dnp::route::hier::{GatewayMap, GatewayPolicy};
+///
+/// // Two parallel cable pairs per dimension on a 2x2 tile mesh.
+/// let m = GatewayMap::dst_hash([2, 2], 2);
+/// assert_eq!(m.policy(), GatewayPolicy::DstHash);
+/// assert_eq!(m.group(0), &[[0, 0], [1, 0]]);
+/// // Lane selection is a pure function of (dim, destination): the same
+/// // flow maps to the same cable in every run, on every worker.
+/// let lane = m.lane(0, 0, 13, 2);
+/// assert_eq!(m.lane(0, 0, 13, 2), lane);
+/// assert_eq!(m.gateway(0, 0, 13, 2), m.group(0)[lane]);
+/// // The default map reproduces the historical single-gateway layout.
+/// let fixed = GatewayMap::fixed([2, 2]);
+/// assert_eq!(fixed.group(1), &[[1, 0]]);
+/// assert!(fixed.check().is_ok());
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GatewayMap {
+    tile_dims: [u32; 2],
+    policy: GatewayPolicy,
+    groups: [Vec<[u32; 2]>; 3],
+}
+
+impl GatewayMap {
+    /// The historical single-gateway layout ([`gateway_tile`]); the
+    /// default of every builder that does not take an explicit map.
+    pub fn fixed(tile_dims: [u32; 2]) -> Self {
+        Self {
+            tile_dims,
+            policy: GatewayPolicy::Fixed,
+            groups: [
+                vec![gateway_tile(tile_dims, 0)],
+                vec![gateway_tile(tile_dims, 1)],
+                vec![gateway_tile(tile_dims, 2)],
+            ],
+        }
+    }
+
+    fn window_groups(tile_dims: [u32; 2], lanes: usize) -> [Vec<[u32; 2]>; 3] {
+        let n = (tile_dims[0] * tile_dims[1]) as usize;
+        assert!(
+            (1..=n).contains(&lanes),
+            "gateway group needs 1..=tiles ({n}) distinct members, got {lanes}"
+        );
+        let tile = |i: usize| {
+            let i = (i % n) as u32;
+            [i % tile_dims[0], i / tile_dims[0]]
+        };
+        [0usize, 1, 2].map(|d| (0..lanes).map(|i| tile(d + i)).collect())
+    }
+
+    /// Direction-split layout: dimension `d`'s `+` cable lives on tile
+    /// `d % T` (lane 0) and its `-` cable on tile `(d+1) % T` (lane 1).
+    /// Needs a mesh of at least 2 tiles.
+    pub fn dim_pair(tile_dims: [u32; 2]) -> Self {
+        Self {
+            tile_dims,
+            policy: GatewayPolicy::DimPair,
+            groups: Self::window_groups(tile_dims, 2),
+        }
+    }
+
+    /// `lanes` parallel cable pairs per dimension on the tile window
+    /// `d % T, (d+1) % T, ..` with per-destination lane hashing.
+    pub fn dst_hash(tile_dims: [u32; 2], lanes: usize) -> Self {
+        Self {
+            tile_dims,
+            policy: GatewayPolicy::DstHash,
+            groups: Self::window_groups(tile_dims, lanes),
+        }
+    }
+
+    /// An arbitrary (unvalidated) map: callers that accept external maps
+    /// must run [`check`](Self::check) — the fault layer surfaces its
+    /// errors as typed [`HierRecoveryError`]s, the topology builders
+    /// assert.
+    ///
+    /// [`HierRecoveryError`]: crate::fault::HierRecoveryError
+    pub fn custom(tile_dims: [u32; 2], policy: GatewayPolicy, groups: [Vec<[u32; 2]>; 3]) -> Self {
+        Self { tile_dims, policy, groups }
+    }
+
+    pub fn tile_dims(&self) -> [u32; 2] {
+        self.tile_dims
+    }
+
+    pub fn policy(&self) -> GatewayPolicy {
+        self.policy
+    }
+
+    /// The ordered gateway group of chip dimension `dim`.
+    pub fn group(&self, dim: usize) -> &[[u32; 2]] {
+        &self.groups[dim]
+    }
+
+    /// Structural validation: every group non-empty, in-bounds and
+    /// duplicate-free.
+    pub fn check(&self) -> Result<(), GatewayMapError> {
+        for (dim, group) in self.groups.iter().enumerate() {
+            if group.is_empty() {
+                return Err(GatewayMapError::EmptyGroup { dim });
+            }
+            for (i, &tile) in group.iter().enumerate() {
+                if tile[0] >= self.tile_dims[0] || tile[1] >= self.tile_dims[1] {
+                    return Err(GatewayMapError::OutOfBounds { dim, tile });
+                }
+                if group[..i].contains(&tile) {
+                    return Err(GatewayMapError::DuplicateTile { dim, tile });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Does lane `lane` of dimension `dim` carry the cable toward
+    /// direction `dir` (0 = `+`, 1 = `-`)? Under `Fixed`/`DstHash` every
+    /// lane owns a full cable pair; under `DimPair` lane `dir` owns only
+    /// its direction.
+    pub fn owns(&self, dim: usize, lane: usize, dir: usize) -> bool {
+        match self.policy {
+            GatewayPolicy::Fixed | GatewayPolicy::DstHash => true,
+            GatewayPolicy::DimPair => dir % self.groups[dim].len() == lane,
+        }
+    }
+
+    /// Lane carrying the *reverse* directed channel of the physical
+    /// cable whose forward half is `(dim, dir, lane)`: the cable from a
+    /// chip's `dir`-neighbour back. Same lane when it owns both
+    /// directions; the unique `1-dir` owner otherwise (`DimPair`).
+    pub fn reverse_lane(&self, dim: usize, dir: usize, lane: usize) -> usize {
+        if self.owns(dim, lane, 1 - dir) {
+            lane
+        } else {
+            (0..self.groups[dim].len())
+                .find(|&m| self.owns(dim, m, 1 - dir))
+                .expect("some lane owns every direction")
+        }
+    }
+
+    /// Lane index a flow to `(dst_chip, dst_tile)` uses on a `(dim,
+    /// dir)` hop. `dst_chip`/`dst_tile` are row-major indices. Pure and
+    /// destination-keyed: the same flow picks the same lane at every
+    /// chip along its path.
+    pub fn lane(&self, dim: usize, dir: usize, dst_chip: usize, dst_tile: usize) -> usize {
+        let n = self.groups[dim].len();
+        match self.policy {
+            GatewayPolicy::Fixed => 0,
+            GatewayPolicy::DimPair => dir % n,
+            GatewayPolicy::DstHash => {
+                let key = ((dim as u64) << 40) | ((dst_chip as u64) << 16) | dst_tile as u64;
+                (mix64(key) % n as u64) as usize
+            }
+        }
+    }
+
+    /// Gateway tile a flow to `(dst_chip, dst_tile)` crosses `(dim,
+    /// dir)` at: `group(dim)[lane(..)]`.
+    pub fn gateway(&self, dim: usize, dir: usize, dst_chip: usize, dst_tile: usize) -> [u32; 2] {
+        self.groups[dim][self.lane(dim, dir, dst_chip, dst_tile)]
+    }
 }
 
 /// Per-node hierarchical router for the hybrid torus-of-meshes.
@@ -51,18 +337,38 @@ pub struct HierRouter {
     /// Mesh direction (0:X+, 1:X-, 2:Y+, 3:Y-) → physical on-chip port of
     /// this tile (`None` where the mesh border leaves the link unwired).
     mesh_ports: [Option<usize>; 4],
-    /// `(dim, ±)` → physical off-chip port; `Some` only on the gateway
-    /// tile owning that dimension.
+    /// `(dim, ±)` → physical off-chip port; `Some` only on a gateway
+    /// tile carrying that dimension's cable in that direction.
     offchip_ports: [[Option<usize>; 2]; 3],
-    /// Chip dimension → tile coordinates of its gateway.
-    gateways: [[u32; 2]; 3],
+    /// Gateway policy: which tile a cross-chip flow exits through.
+    gmap: GatewayMap,
 }
 
 impl HierRouter {
+    /// Single-gateway (historical) router: [`GatewayMap::fixed`].
     pub fn new(
         me: DnpAddr,
         chip_dims: [u32; 3],
         tile_dims: [u32; 2],
+        order: RouteOrder,
+        mesh_ports: [Option<usize>; 4],
+        offchip_ports: [[Option<usize>; 2]; 3],
+    ) -> Self {
+        Self::new_with(
+            me,
+            chip_dims,
+            GatewayMap::fixed(tile_dims),
+            order,
+            mesh_ports,
+            offchip_ports,
+        )
+    }
+
+    /// Router consulting an explicit [`GatewayMap`].
+    pub fn new_with(
+        me: DnpAddr,
+        chip_dims: [u32; 3],
+        gmap: GatewayMap,
         order: RouteOrder,
         mesh_ports: [Option<usize>; 4],
         offchip_ports: [[Option<usize>; 2]; 3],
@@ -75,11 +381,7 @@ impl HierRouter {
             order,
             mesh_ports,
             offchip_ports,
-            gateways: [
-                gateway_tile(tile_dims, 0),
-                gateway_tile(tile_dims, 1),
-                gateway_tile(tile_dims, 2),
-            ],
+            gmap,
         }
     }
 
@@ -136,14 +438,21 @@ impl Router for HierRouter {
             let vc = u8::from([s[0], s[1], s[2]] != self.my_chip);
             return self.mesh_toward([d[3], d[4]], vc);
         }
+        // Destination-keyed gateway lane selection (see module docs):
+        // row-major chip and tile indices of the destination.
+        let cd = self.chip_dims;
+        let dchip_idx = (d[0] + d[1] * cd[0] + d[2] * cd[0] * cd[1]) as usize;
+        let td = self.gmap.tile_dims();
+        let dtile_idx = (d[3] + d[4] * td[0]) as usize;
         // Chip coordinates first, in priority order (Sec. III-A).
         for &dim in &self.order.0 {
             let Some(dir) = self.ring_step(dim, dchip[dim]) else {
                 continue;
             };
-            let gw = self.gateways[dim];
+            let di = usize::from(dir == Dir::Minus);
+            let gw = self.gmap.gateway(dim, di, dchip_idx, dtile_idx);
             if gw != self.my_tile {
-                // Walk to the gateway owning this dimension (VC 0).
+                // Walk to the gateway carrying this flow's cable (VC 0).
                 return self.mesh_toward(gw, 0);
             }
             // At the gateway: cross the SerDes link. Dateline scheme,
@@ -157,8 +466,8 @@ impl Router for HierRouter {
                 Dir::Minus => self.my_chip[dim] > s[dim],
             };
             let vc = u8::from(wrapped_already || self.crosses_dateline(dim, dir));
-            let p = self.offchip_ports[dim][usize::from(dir == Dir::Minus)]
-                .expect("gateway tile owns this dimension's off-chip ports");
+            let p = self.offchip_ports[dim][di]
+                .expect("gateway tile carries this flow's off-chip cable");
             return Decision { out: OutSel::Port(p), vc };
         }
         unreachable!("all chip coordinates equal was handled above")
@@ -188,8 +497,9 @@ mod tests {
 
     /// Build the router of one tile with the canonical compact port maps
     /// the `hybrid_torus_mesh` builder produces (N=4 mesh slots in
-    /// direction order over existing links, off-chip block after them).
-    fn router_at(chip: [u32; 3], tile: [u32; 2]) -> HierRouter {
+    /// direction order over existing links, off-chip block after them),
+    /// under an arbitrary gateway map.
+    fn router_with(gmap: GatewayMap, chip: [u32; 3], tile: [u32; 2]) -> HierRouter {
         let mut mesh_ports = [None; 4];
         let mut deg = 0;
         let exists = |d: usize| match d {
@@ -208,19 +518,33 @@ mod tests {
         let mut offchip_ports = [[None; 2]; 3];
         let mut owned = 0;
         for dim in 0..3 {
-            if CHIPS[dim] >= 2 && gateway_tile(TILES, dim) == tile {
-                offchip_ports[dim] = [Some(n_ports + 2 * owned), Some(n_ports + 2 * owned + 1)];
-                owned += 1;
+            if CHIPS[dim] < 2 {
+                continue;
+            }
+            for (lane, &g) in gmap.group(dim).iter().enumerate() {
+                if g != tile {
+                    continue;
+                }
+                for dir in 0..2 {
+                    if gmap.owns(dim, lane, dir) {
+                        offchip_ports[dim][dir] = Some(n_ports + owned);
+                        owned += 1;
+                    }
+                }
             }
         }
-        HierRouter::new(
+        HierRouter::new_with(
             fmt().encode(&[chip[0], chip[1], chip[2], tile[0], tile[1]]),
             CHIPS,
-            TILES,
+            gmap,
             RouteOrder::XYZ,
             mesh_ports,
             offchip_ports,
         )
+    }
+
+    fn router_at(chip: [u32; 3], tile: [u32; 2]) -> HierRouter {
+        router_with(GatewayMap::fixed(TILES), chip, tile)
     }
 
     #[test]
@@ -297,5 +621,157 @@ mod tests {
     #[test]
     fn min_vcs_two_with_chip_rings() {
         assert_eq!(router_at([0, 0, 0], [0, 0]).min_vcs(), 2);
+    }
+
+    #[test]
+    fn fixed_map_matches_historical_gateway_layout() {
+        let m = GatewayMap::fixed([2, 2]);
+        for dim in 0..3 {
+            assert_eq!(m.group(dim), &[gateway_tile([2, 2], dim)]);
+            assert!(m.owns(dim, 0, 0) && m.owns(dim, 0, 1));
+            assert_eq!(m.lane(dim, 0, 7, 3), 0);
+            assert_eq!(m.reverse_lane(dim, 0, 0), 0);
+        }
+        assert!(m.check().is_ok());
+    }
+
+    #[test]
+    fn dim_pair_splits_directions_across_a_tile_pair() {
+        let m = GatewayMap::dim_pair([2, 2]);
+        // Dim 0: + on tile 0, - on tile 1.
+        assert_eq!(m.group(0), &[[0, 0], [1, 0]]);
+        assert!(m.owns(0, 0, 0) && !m.owns(0, 0, 1));
+        assert!(!m.owns(0, 1, 0) && m.owns(0, 1, 1));
+        assert_eq!(m.lane(0, 0, 5, 2), 0);
+        assert_eq!(m.lane(0, 1, 5, 2), 1);
+        // The reverse half of the + cable is carried by the - owner.
+        assert_eq!(m.reverse_lane(0, 0, 0), 1);
+        assert_eq!(m.reverse_lane(0, 1, 1), 0);
+        assert!(m.check().is_ok());
+    }
+
+    #[test]
+    fn dim_pair_routing_picks_the_direction_tile() {
+        let m = GatewayMap::dim_pair(TILES);
+        // Chip x=0 → x=1: Plus → lane 0 → tile (0,0) carries the cable.
+        let r = router_with(m.clone(), [0, 0, 0], [0, 0]);
+        let src = fmt().encode(&[0, 0, 0, 0, 0]);
+        let dst = fmt().encode(&[1, 0, 0, 0, 0]);
+        let d = r.decide(src, dst, 0);
+        // Tile (0,0) owns only the dim-0 + cable: first off-chip port.
+        assert_eq!(d.out, OutSel::Port(4));
+        // Chip x=0 → x=3: Minus → lane 1 → tile (1,0); a packet at
+        // (0,0) must mesh-walk X+ toward it.
+        let dst = fmt().encode(&[3, 0, 0, 0, 0]);
+        let d = r.decide(src, dst, 0);
+        assert_eq!(d.out, OutSel::Port(0), "X+ mesh hop toward tile (1,0)");
+        assert_eq!(d.vc, 0);
+        // And tile (1,0) itself emits on its own off-chip port: its owned
+        // cables in (dim, dir) order are dim-0 '-' then dim-1 '+', so the
+        // dim-0 '-' cable sits on the first off-chip port (4).
+        let r = router_with(m, [0, 0, 0], [1, 0]);
+        let src = fmt().encode(&[0, 0, 0, 1, 0]);
+        let d = r.decide(src, dst, 0);
+        assert_eq!(d.out, OutSel::Port(4));
+        assert_eq!(d.vc, 1, "x=0 going Minus crosses the dateline");
+    }
+
+    #[test]
+    fn dst_hash_lane_is_destination_keyed_and_chip_invariant() {
+        let m = GatewayMap::dst_hash(TILES, 2);
+        // Pinned assignment (see util::rng::mix64 vectors): dst chip 1,
+        // tiles 0..4 on dim 0 map to lanes [1, 1, 1, 0].
+        let lanes: Vec<usize> = (0..4).map(|t| m.lane(0, 0, 1, t)).collect();
+        assert_eq!(lanes, vec![1, 1, 1, 0]);
+        // Direction does not enter the hash: a detour that flips the
+        // ring direction keeps the lane (and the tile).
+        assert_eq!(m.lane(0, 0, 1, 2), m.lane(0, 1, 1, 2));
+        // Routers of different chips agree on the gateway of one flow —
+        // ring transit never needs a corrective mesh hop. Flow: chip 3 →
+        // chip 1, dst tile 3 (lane 0 → gateway tile (0,0), which owns the
+        // dim-0 pair on ports 4/5). Ring distance ties at 2 → Plus, so the
+        // walk is 3 → 0 → 1; both the source chip and the transit chip
+        // emit on the gateway's dim-0 Plus port.
+        let src = fmt().encode(&[3, 0, 0, 0, 0]);
+        let dst = fmt().encode(&[1, 0, 0, 3 % TILES[0], 3 / TILES[0]]);
+        let d3 = router_with(m.clone(), [3, 0, 0], [0, 0]).decide(src, dst, 0);
+        let d0 = router_with(m.clone(), [0, 0, 0], [0, 0]).decide(src, dst, 0);
+        assert_eq!(d3.out, OutSel::Port(4));
+        assert_eq!(d3.vc, 1, "x=3 going Plus crosses the dateline");
+        assert_eq!(d0.out, OutSel::Port(4));
+        assert_eq!(d0.vc, 1, "post-wrap transit stays on the escape VC");
+    }
+
+    /// Snapshot: `DstHash` lane assignments for a 4x4x4-chip system of
+    /// 2x2-tile chips are pinned — a refactor of the mixing (or of the
+    /// key layout) reshuffles recorded EXPERIMENTS rows and must fail
+    /// loudly here.
+    #[test]
+    fn dst_hash_4x4x4_assignment_snapshot() {
+        let m = GatewayMap::dst_hash([2, 2], 2);
+        // Per-dimension lane strings over all 64 destination chips, tile 0.
+        let s = |dim: usize| -> String {
+            (0..64).map(|c| char::from(b'0' + m.lane(dim, 0, c, 0) as u8)).collect()
+        };
+        assert_eq!(
+            s(0),
+            "1101011000001111100110011010010011111101001111111100100010100011"
+        );
+        assert_eq!(
+            s(1),
+            "1111010001001010001010001110001000001110001101110000000101101010"
+        );
+        assert_eq!(
+            s(2),
+            "1000110001110001010000100001000001100001100011110100100001110011"
+        );
+        // Aggregate balance + order-sensitive fold over every
+        // (dim, chip, tile) cell.
+        let mut counts = [0u32; 2];
+        let mut fold = 0u32;
+        for dim in 0..3 {
+            for chip in 0..64 {
+                for tile in 0..4 {
+                    let l = m.lane(dim, 0, chip, tile);
+                    counts[l] += 1;
+                    fold = fold.wrapping_mul(31).wrapping_add(l as u32);
+                }
+            }
+        }
+        assert_eq!(counts, [374, 394]);
+        assert_eq!(fold, 0x459D_1A8A);
+        // Spot values.
+        assert_eq!(m.lane(0, 0, 0, 0), 1);
+        assert_eq!(m.lane(1, 0, 17, 3), 0);
+        assert_eq!(m.lane(2, 0, 63, 2), 1);
+        assert_eq!(m.lane(0, 0, 42, 1), 0);
+    }
+
+    #[test]
+    fn map_check_catches_structural_errors() {
+        let oob = GatewayMap::custom(
+            [2, 2],
+            GatewayPolicy::Fixed,
+            [vec![[5, 0]], vec![[0, 0]], vec![[0, 0]]],
+        );
+        assert_eq!(
+            oob.check(),
+            Err(GatewayMapError::OutOfBounds { dim: 0, tile: [5, 0] })
+        );
+        let dup = GatewayMap::custom(
+            [2, 2],
+            GatewayPolicy::DstHash,
+            [vec![[0, 0], [0, 0]], vec![[1, 0]], vec![[0, 1]]],
+        );
+        assert_eq!(
+            dup.check(),
+            Err(GatewayMapError::DuplicateTile { dim: 0, tile: [0, 0] })
+        );
+        let empty = GatewayMap::custom(
+            [2, 2],
+            GatewayPolicy::Fixed,
+            [vec![], vec![[0, 0]], vec![[0, 0]]],
+        );
+        assert_eq!(empty.check(), Err(GatewayMapError::EmptyGroup { dim: 0 }));
     }
 }

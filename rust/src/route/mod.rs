@@ -14,7 +14,9 @@
 //!   ST-Spidergon NoC topology.
 //! * [`hier::HierRouter`] — two-level routing for the hybrid multi-chip
 //!   system (chip-torus DOR over off-chip ports, then mesh XY inside the
-//!   destination chip — paper Fig. 2).
+//!   destination chip — paper Fig. 2), parameterized by the pluggable
+//!   [`hier::GatewayMap`] gateway policy (`Fixed` / `DimPair` /
+//!   `DstHash` — which tile a cross-chip flow exits the chip through).
 //! * [`table::TableRouter`] — fully general table-driven routing (used by
 //!   the fault-tolerance extension to install recomputed routes).
 
@@ -24,7 +26,7 @@ pub mod spidergon;
 pub mod table;
 pub mod torus;
 
-pub use hier::HierRouter;
+pub use hier::{GatewayMap, GatewayMapError, GatewayPolicy, HierRouter};
 pub use mesh::MeshRouter;
 pub use spidergon::{spidergon_neighbor, SpidergonRouter};
 pub use table::TableRouter;

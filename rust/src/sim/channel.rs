@@ -148,6 +148,15 @@ pub struct Channel {
     /// metrics, which must not count header/footer words.
     pub payload_words_sent: u64,
     pub busy_cycles: u64,
+    /// High-water mark of `rx_total`: the most flits ever buffered at
+    /// the receiver across all VCs — the congestion-depth signal of
+    /// [`gateway_load_report`](crate::metrics::gateway_load_report).
+    pub peak_rx_occupancy: usize,
+    /// Backpressure events: times a ready flit of a locked wormhole
+    /// stream found this channel unsendable (no credit for its VC, or
+    /// the serializer still busy). Counted by the switch per (output VC,
+    /// cycle) via [`ChannelArena::note_backpressure`].
+    pub backpressure_events: u64,
 }
 
 impl Channel {
@@ -168,6 +177,8 @@ impl Channel {
             words_sent: 0,
             payload_words_sent: 0,
             busy_cycles: 0,
+            peak_rx_occupancy: 0,
+            backpressure_events: 0,
         }
     }
 
@@ -216,6 +227,7 @@ impl Channel {
                 let f = self.in_flight.pop_front().unwrap();
                 self.rx_bufs[f.vc as usize].push_back(f.flit);
                 self.rx_total += 1;
+                self.peak_rx_occupancy = self.peak_rx_occupancy.max(self.rx_total);
             } else {
                 break;
             }
@@ -282,6 +294,7 @@ impl Channel {
     pub(crate) fn push_rx(&mut self, flit: Flit, vc: u8) {
         self.rx_bufs[vc as usize].push_back(flit);
         self.rx_total += 1;
+        self.peak_rx_occupancy = self.peak_rx_occupancy.max(self.rx_total);
     }
 
     /// Boundary tx half: restore one credit on `vc` — a remote pop's
@@ -471,6 +484,16 @@ impl ChannelArena {
     /// at exactly the credit's arrival cycle).
     pub fn restore_credit(&mut self, id: ChannelId, vc: u8) {
         self.chans[id.0 as usize].restore_credit(vc);
+    }
+
+    /// Record one backpressure event on `id`: a ready flit could not be
+    /// pushed because `can_send` was false (credit exhausted or the
+    /// serializer busy). Called by the switch's locked-stream pass;
+    /// identical across the dense, event and sharded schedulers (a
+    /// blocked stream keeps its node hot, so it is ticked — and counted
+    /// — every cycle in all three).
+    pub fn note_backpressure(&mut self, id: ChannelId) {
+        self.chans[id.0 as usize].backpressure_events += 1;
     }
 
     /// Any cross-shard events pending in the outbox?
@@ -737,6 +760,37 @@ mod tests {
         assert!(woken.is_empty(), "credit wake ticks but wakes no receiver");
         assert!(a.get(id).can_send(0, 6));
         assert_eq!(a.next_wake(), None);
+    }
+
+    #[test]
+    fn peak_rx_occupancy_tracks_high_water_mark() {
+        let mut c = Channel::new(0, 1, 2, 4);
+        assert_eq!(c.peak_rx_occupancy, 0);
+        c.send(flit(0), 0, 0);
+        c.send(flit(1), 1, 1);
+        c.tick(2);
+        assert_eq!(c.peak_rx_occupancy, 2);
+        c.pop(0, 2);
+        c.pop(1, 2);
+        assert_eq!(c.rx_total(), 0);
+        assert_eq!(c.peak_rx_occupancy, 2, "high-water mark must not decay");
+        c.send(flit(2), 0, 3);
+        c.tick(4);
+        assert_eq!(c.peak_rx_occupancy, 2, "refilling below the peak keeps it");
+        // The boundary rx path counts into the same peak.
+        c.push_rx(flit(3), 1);
+        c.push_rx(flit(4), 1);
+        assert_eq!(c.peak_rx_occupancy, 3);
+    }
+
+    #[test]
+    fn note_backpressure_accumulates_on_the_channel() {
+        let mut a = ChannelArena::new();
+        let id = a.add(Channel::new(0, 1, 1, 1));
+        assert_eq!(a.get(id).backpressure_events, 0);
+        a.note_backpressure(id);
+        a.note_backpressure(id);
+        assert_eq!(a.get(id).backpressure_events, 2);
     }
 
     #[test]

@@ -92,9 +92,10 @@ use crate::config::DnpConfig;
 use crate::dnp::DnpNode;
 use crate::fault::hier::HierLinkFault;
 use crate::packet::{hybrid_split, DnpAddr, Flit, FlitKind, Packet, PacketId};
+use crate::route::GatewayMap;
 use crate::sim::channel::{BoundaryOut, ChannelId};
 use crate::sim::Net;
-use crate::topology::{chip_coords3, chip_index3, hybrid_chip_subnet};
+use crate::topology::{cable_slots, chip_coords3, chip_index3, hybrid_chip_subnet_with};
 use crate::traffic::{hybrid_node_index, Feeder, Planned};
 use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -156,6 +157,9 @@ pub struct ShardLink {
     pub to_chip: usize,
     pub dim: usize,
     pub plus: bool,
+    /// Gateway lane (group member index of the sending side's
+    /// [`GatewayMap`]) carrying this wire.
+    pub lane: usize,
     /// Tx half, in `shards[from_chip]`'s arena (carries the wire's
     /// sender-side statistics: `words_sent`, `busy_cycles`, BER counters).
     pub tx_chan: ChannelId,
@@ -171,6 +175,9 @@ pub struct ShardedNet {
     links: Vec<ShardLink>,
     pub chip_dims: [u32; 3],
     pub tile_dims: [u32; 2],
+    /// Gateway map the shards were built with (lane bookkeeping for
+    /// [`links_of`](Self::links_of); `Fixed` under [`hybrid`](Self::hybrid)).
+    pub gmap: GatewayMap,
     tiles: usize,
     horizon: u64,
     workers: usize,
@@ -189,13 +196,30 @@ impl ShardedNet {
         mem_words: usize,
         workers: usize,
     ) -> Self {
+        Self::hybrid_with(chip_dims, &GatewayMap::fixed(tile_dims), cfg, mem_words, workers)
+    }
+
+    /// [`hybrid`](Self::hybrid) under an explicit
+    /// [`GatewayMap`](crate::route::hier::GatewayMap): every gateway lane
+    /// becomes its own pair of boundary halves, in the same canonical
+    /// [`cable_slots`](crate::topology::cable_slots) order the sequential
+    /// [`partition`](crate::topology::HybridWiring::partition) lists its
+    /// links in, so link ids line up between the two builds.
+    pub fn hybrid_with(
+        chip_dims: [u32; 3],
+        gmap: &GatewayMap,
+        cfg: &DnpConfig,
+        mem_words: usize,
+        workers: usize,
+    ) -> Self {
+        let tile_dims = gmap.tile_dims();
         let nchips = chip_dims.iter().product::<u32>() as usize;
         let tiles = (tile_dims[0] * tile_dims[1]) as usize;
         let mut shards: Vec<Shard> = Vec::with_capacity(nchips);
         let mut bounds = Vec::with_capacity(nchips);
         for c in 0..nchips {
             let cc = chip_coords3(chip_dims, c);
-            let (net, b) = hybrid_chip_subnet(cc, chip_dims, tile_dims, cfg, mem_words);
+            let (net, b) = hybrid_chip_subnet_with(cc, chip_dims, gmap, cfg, mem_words);
             shards.push(Shard {
                 net,
                 feeder: None,
@@ -210,50 +234,55 @@ impl ShardedNet {
             });
             bounds.push(b);
         }
-        // Wire the directed boundary links in (from_chip, dim, dir) order
-        // — the same order `HybridWiring::partition` lists them in, so
-        // link ids line up between the sequential and sharded builds.
+        // Wire the directed boundary links in (from_chip, cable-slot)
+        // order — `bounds[c].cables` is index-aligned with `slots` (both
+        // enumerate the same canonical list).
+        let slots = cable_slots(chip_dims, gmap);
         let mut links: Vec<ShardLink> = Vec::new();
         let mut horizon = u64::MAX;
         for c in 0..nchips {
             let cc = chip_coords3(chip_dims, c);
-            for dim in 0..3 {
-                if chip_dims[dim] < 2 {
-                    continue;
+            for (j, s) in slots.iter().enumerate() {
+                let k = chip_dims[s.dim];
+                let step = if s.dir == 0 { 1 } else { k - 1 };
+                let mut ncc = cc;
+                ncc[s.dim] = (cc[s.dim] + step) % k;
+                let nc = chip_index3(chip_dims, ncc);
+                let id = links.len() as u32;
+                let tx = bounds[c].cables[j].tx;
+                // The neighbour's rx half receiving *our* wire sits on its
+                // (dim, 1-dir) slot of the reverse lane (the same lane
+                // when it owns both directions, the partner under
+                // DimPair).
+                let rl = gmap.reverse_lane(s.dim, s.dir, s.lane);
+                let rj = slots
+                    .iter()
+                    .position(|t| (t.dim, t.lane, t.dir) == (s.dim, rl, 1 - s.dir))
+                    .expect("the reverse lane owns the opposite direction");
+                let rx = bounds[nc].cables[rj].rx;
+                shards[c].net.chans.mark_boundary_tx(tx, id);
+                shards[c].link_tx.insert(id, tx);
+                shards[nc].net.chans.mark_boundary_rx(rx, id);
+                shards[nc].link_rx.insert(id, rx);
+                {
+                    let ch = shards[c].net.chans.get(tx);
+                    assert!(
+                        ch.credit_lat >= 1,
+                        "sharded execution needs credit_lat >= 1 on off-chip links \
+                         (a combinational cross-chip credit would force a zero horizon)"
+                    );
+                    let flight = ch.latency + ch.cycles_per_word;
+                    horizon = horizon.min(flight).min(ch.credit_lat);
                 }
-                for (d, step) in [(0usize, 1u32), (1, chip_dims[dim] - 1)] {
-                    let mut ncc = cc;
-                    ncc[dim] = (cc[dim] + step) % chip_dims[dim];
-                    let nc = chip_index3(chip_dims, ncc);
-                    let id = links.len() as u32;
-                    let (tx, _) = bounds[c].serdes[dim * 2 + d].expect("active ring is wired");
-                    // The neighbour's rx half in slot (dim, 1-d) receives
-                    // from *us* (its neighbour in direction 1-d).
-                    let (_, rx) =
-                        bounds[nc].serdes[dim * 2 + (1 - d)].expect("active ring is wired");
-                    shards[c].net.chans.mark_boundary_tx(tx, id);
-                    shards[c].link_tx.insert(id, tx);
-                    shards[nc].net.chans.mark_boundary_rx(rx, id);
-                    shards[nc].link_rx.insert(id, rx);
-                    {
-                        let ch = shards[c].net.chans.get(tx);
-                        assert!(
-                            ch.credit_lat >= 1,
-                            "sharded execution needs credit_lat >= 1 on off-chip links \
-                             (a combinational cross-chip credit would force a zero horizon)"
-                        );
-                        let flight = ch.latency + ch.cycles_per_word;
-                        horizon = horizon.min(flight).min(ch.credit_lat);
-                    }
-                    links.push(ShardLink {
-                        from_chip: c,
-                        to_chip: nc,
-                        dim,
-                        plus: d == 0,
-                        tx_chan: tx,
-                        rx_chan: rx,
-                    });
-                }
+                links.push(ShardLink {
+                    from_chip: c,
+                    to_chip: nc,
+                    dim: s.dim,
+                    plus: s.dir == 0,
+                    lane: s.lane,
+                    tx_chan: tx,
+                    rx_chan: rx,
+                });
             }
         }
         if links.is_empty() {
@@ -266,6 +295,7 @@ impl ShardedNet {
             links,
             chip_dims,
             tile_dims,
+            gmap: gmap.clone(),
             tiles,
             horizon,
             workers: workers.max(1),
@@ -366,25 +396,30 @@ impl ShardedNet {
     }
 
     /// The two directed boundary links realizing the cable a
-    /// [`HierLinkFault::Serdes`] kills (forward, reverse) — the sharded
-    /// twin of
+    /// [`HierLinkFault::Serdes`]/[`HierLinkFault::SerdesLane`] kills
+    /// (forward, reverse) — the sharded twin of
     /// [`HybridWiring::channels_of`](crate::topology::HybridWiring::channels_of).
     /// Panics on mesh faults (they never cross a shard boundary).
     pub fn links_of(&self, f: &HierLinkFault) -> [usize; 2] {
-        let HierLinkFault::Serdes { chip, dim, plus } = *f else {
-            panic!("only SerDes faults map to boundary links");
+        let (chip, dim, plus, lane) = match *f {
+            HierLinkFault::Serdes { chip, dim, plus } => (chip, dim, plus, 0),
+            HierLinkFault::SerdesLane { chip, dim, plus, lane } => (chip, dim, plus, lane),
+            HierLinkFault::Mesh { .. } => panic!("only SerDes faults map to boundary links"),
         };
         let from = chip_index3(self.chip_dims, chip);
         let fwd = self
             .links
             .iter()
-            .position(|l| l.from_chip == from && l.dim == dim && l.plus == plus)
+            .position(|l| l.from_chip == from && l.dim == dim && l.plus == plus && l.lane == lane)
             .expect("SerDes link wired");
         let back_from = self.links[fwd].to_chip;
+        let rlane = self.gmap.reverse_lane(dim, usize::from(!plus), lane);
         let rev = self
             .links
             .iter()
-            .position(|l| l.from_chip == back_from && l.dim == dim && l.plus == !plus)
+            .position(|l| {
+                l.from_chip == back_from && l.dim == dim && l.plus == !plus && l.lane == rlane
+            })
             .expect("SerDes link wired");
         [fwd, rev]
     }

@@ -318,6 +318,10 @@ impl SwitchFabric {
                 if !chans.get(out_ch).can_send(ov as u8, now) {
                     // The physical serializer is busy (or this VC has no
                     // credit): per-cycle rate applies to the whole port.
+                    // A flit was ready and the channel refused it — the
+                    // per-channel backpressure signal the gateway-load
+                    // metrics aggregate.
+                    chans.note_backpressure(out_ch);
                     continue;
                 }
                 let flit = Self::pop_input(&mut self.inputs[ii], chans, ivc, now);
@@ -522,7 +526,12 @@ mod tests {
         ))
     }
 
-    fn inject_packet(fab: &mut SwitchFabric, store: &PacketStore, lane: usize, id: crate::packet::PacketId) {
+    fn inject_packet(
+        fab: &mut SwitchFabric,
+        store: &PacketStore,
+        lane: usize,
+        id: crate::packet::PacketId,
+    ) {
         for seq in 0..store.wire_flits(id) {
             fab.inject(lane, store.flit(id, seq));
         }

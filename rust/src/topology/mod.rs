@@ -15,7 +15,13 @@
 //!   regimes at once. [`hybrid_torus_mesh_wired`] additionally returns
 //!   the [`HybridWiring`] channel map (fault targeting), whose
 //!   [`partition`](HybridWiring::partition) exports the per-chip
-//!   node/channel split the sharded runtime is built on.
+//!   node/channel split the sharded runtime is built on. The `_with`
+//!   variants ([`hybrid_torus_mesh_with`], [`hybrid_torus_mesh_wired_with`],
+//!   [`hybrid_chip_subnet_with`]) accept an explicit
+//!   [`GatewayMap`](crate::route::hier::GatewayMap) — the pluggable
+//!   gateway policy deciding which tile(s) carry each chip dimension's
+//!   off-chip cables and which parallel cable a flow uses; the plain
+//!   builders default to the historical single-gateway `Fixed` map.
 //! * [`hybrid_chip_subnet`] — ONE chip of a hybrid system as a
 //!   self-contained [`Net`] with boundary SerDes halves: the building
 //!   block of the per-chip sharded simulation
@@ -35,8 +41,8 @@ use crate::packet::{AddrFormat, DnpAddr};
 use crate::phy::{dni_channel, noc_channel, offchip_channel, onchip_channel};
 use crate::rdma::EVENT_WORDS;
 use crate::route::{
-    hier::gateway_tile, mesh::mesh_port, spidergon_neighbor, Decision, HierRouter, MeshRouter,
-    OutSel, Router, TableRouter, TorusRouter,
+    mesh::mesh_port, spidergon_neighbor, Decision, GatewayMap, HierRouter, MeshRouter, OutSel,
+    Router, TableRouter, TorusRouter,
 };
 use crate::sim::channel::{Channel, ChannelId};
 use crate::sim::Net;
@@ -306,37 +312,96 @@ pub fn hybrid_torus_mesh(
     hybrid_torus_mesh_wired(chip_dims, tile_dims, cfg, mem_words).0
 }
 
-/// Per-tile physical port maps of the hybrid render (identical in every
-/// chip): mesh direction → on-chip port (`mesh2d_chip` compaction), and
-/// owned chip dimension → off-chip ± port pair on the gateway tile.
-/// Shared between [`hybrid_torus_mesh`] and the fault-recovery table
-/// recomputation ([`crate::fault::hier`]), which must agree on the wiring.
-#[allow(clippy::type_complexity)]
-pub(crate) fn hybrid_port_maps(
+/// [`hybrid_torus_mesh`] under an explicit
+/// [`GatewayMap`](crate::route::hier::GatewayMap) (multi-gateway
+/// layouts; `GatewayMap::fixed` reproduces the plain builder exactly).
+pub fn hybrid_torus_mesh_with(
     chip_dims: [u32; 3],
-    tile_dims: [u32; 2],
+    gmap: &GatewayMap,
     cfg: &DnpConfig,
-) -> (Vec<[Option<usize>; 4]>, Vec<[[Option<usize>; 2]; 3]>) {
-    let ntiles = (tile_dims[0] * tile_dims[1]) as usize;
-    let base = cfg.n_ports; // off-chip port block starts after on-chip
-    // Mesh links: the same [X+, X-, Y+, Y-] compaction as `mesh2d_chip`.
-    let mesh_port_of = mesh_port_map(tile_dims, cfg.n_ports);
-    // Off-chip links: the gateway of chip dimension `dim` owns its ± port
-    // pair, compacted onto the off-chip block after any dimensions it
-    // already owns.
-    let tile_idx = |t: [u32; 2]| -> usize { (t[0] + t[1] * tile_dims[0]) as usize };
-    let mut off_port_of = vec![[[None::<usize>; 2]; 3]; ntiles];
-    let mut owned = vec![0usize; ntiles];
+    mem_words: usize,
+) -> Net {
+    hybrid_torus_mesh_wired_with(chip_dims, gmap, cfg, mem_words).0
+}
+
+/// One off-chip cable slot of a chip under a
+/// [`GatewayMap`](crate::route::hier::GatewayMap): the chip dimension,
+/// the lane (group member index), the gateway tile carrying the cable
+/// and its direction (0 = `+`, 1 = `-`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CableSlot {
+    pub dim: usize,
+    pub lane: usize,
+    pub tile: [u32; 2],
+    pub dir: usize,
+}
+
+/// Enumerate the off-chip cable slots of one chip under `gmap`, in the
+/// canonical `(dim, lane, dir)` order. This single enumeration drives
+/// channel creation ([`hybrid_torus_mesh_wired_with`]), per-tile port
+/// assignment, the per-chip boundary build ([`hybrid_chip_subnet_with`]),
+/// the partition's link-id order ([`HybridWiring::partition`]) and the
+/// sharded runtime's boundary wiring — so none of them can drift apart.
+/// Degenerate (k < 2) dimensions contribute no slots. Under the `Fixed`
+/// map this reduces to the historical one-±-pair-per-dimension layout.
+pub fn cable_slots(chip_dims: [u32; 3], gmap: &GatewayMap) -> Vec<CableSlot> {
+    let mut slots = Vec::new();
     for dim in 0..3 {
         if chip_dims[dim] < 2 {
             continue; // degenerate ring: no links, no gateway
         }
-        let g = tile_idx(gateway_tile(tile_dims, dim));
-        off_port_of[g][dim] = [Some(base + 2 * owned[g]), Some(base + 2 * owned[g] + 1)];
+        for (lane, &tile) in gmap.group(dim).iter().enumerate() {
+            for dir in 0..2 {
+                if gmap.owns(dim, lane, dir) {
+                    slots.push(CableSlot { dim, lane, tile, dir });
+                }
+            }
+        }
+    }
+    slots
+}
+
+/// Link-error RNG seed of the directed off-chip channel `slot` leaving
+/// `chip` — shared between the full builder and the per-chip shard
+/// builder so their BER streams draw identically. Reduces to the
+/// historical `chip*6 + dim*2 + dir` formula on lane 0 (the `Fixed`
+/// map's only lane).
+fn serdes_seed(chip: usize, s: &CableSlot) -> u64 {
+    (chip * 6 + s.dim * 2 + s.dir) as u64 + 0x417B_5EED + ((s.lane as u64) << 32)
+}
+
+/// Per-tile physical port maps of the hybrid render (identical in every
+/// chip): mesh direction → on-chip port (`mesh2d_chip` compaction), and
+/// `(dim, dir)` → off-chip port for every cable the tile carries under
+/// `gmap` (sequential over the off-chip block, in [`cable_slots`]
+/// order). Shared between [`hybrid_torus_mesh_with`] and the
+/// fault-recovery table recomputation ([`crate::fault::hier`]), which
+/// must agree on the wiring. Panics on a structurally invalid map (the
+/// fault layer validates first and returns a typed error instead).
+#[allow(clippy::type_complexity)]
+pub(crate) fn hybrid_port_maps(
+    chip_dims: [u32; 3],
+    gmap: &GatewayMap,
+    cfg: &DnpConfig,
+) -> (Vec<[Option<usize>; 4]>, Vec<[[Option<usize>; 2]; 3]>) {
+    let tile_dims = gmap.tile_dims();
+    let ntiles = (tile_dims[0] * tile_dims[1]) as usize;
+    let base = cfg.n_ports; // off-chip port block starts after on-chip
+    if let Err(e) = gmap.check() {
+        panic!("invalid gateway map: {e}");
+    }
+    // Mesh links: the same [X+, X-, Y+, Y-] compaction as `mesh2d_chip`.
+    let mesh_port_of = mesh_port_map(tile_dims, cfg.n_ports);
+    let tile_idx = |t: [u32; 2]| -> usize { (t[0] + t[1] * tile_dims[0]) as usize };
+    let mut off_port_of = vec![[[None::<usize>; 2]; 3]; ntiles];
+    let mut owned = vec![0usize; ntiles];
+    for s in cable_slots(chip_dims, gmap) {
+        let g = tile_idx(s.tile);
+        off_port_of[g][s.dim][s.dir] = Some(base + owned[g]);
         owned[g] += 1;
         assert!(
-            2 * owned[g] <= cfg.m_ports,
-            "gateway tile {} owns {} torus dimensions but M={} off-chip ports",
+            owned[g] <= cfg.m_ports,
+            "gateway tile {} carries {} cables but M={} off-chip ports",
             g,
             owned[g],
             cfg.m_ports
@@ -353,6 +418,12 @@ pub(crate) fn hybrid_port_maps(
 pub struct HybridWiring {
     pub chip_dims: [u32; 3],
     pub tile_dims: [u32; 2],
+    /// The gateway map the net was built with — fault recovery reads it
+    /// back so recomputed tables *preserve* the installed policy instead
+    /// of collapsing to one tile, and the metrics layer groups channels
+    /// by gateway lane
+    /// ([`gateway_load_report`](crate::metrics::gateway_load_report)).
+    pub gmap: GatewayMap,
     /// node → mesh direction (0:X+, 1:X-, 2:Y+, 3:Y-) → outgoing channel.
     pub mesh_out: Vec<[Option<ChannelId>; 4]>,
     /// node → off-chip `dim*2 + dir` (dir 0 = +, 1 = −) → outgoing channel.
@@ -364,24 +435,45 @@ impl HybridWiring {
         crate::traffic::hybrid_node_index(self.chip_dims, self.tile_dims, chip, tile)
     }
 
+    /// The two directed channels of the lane-`lane` SerDes cable leaving
+    /// `chip` toward `plus` of `dim`: forward (ours) and reverse (the
+    /// neighbour's — carried by the same lane when it owns both
+    /// directions, by the partner lane under `DimPair`).
+    fn serdes_channels(
+        &self,
+        chip: [u32; 3],
+        dim: usize,
+        plus: bool,
+        lane: usize,
+    ) -> [ChannelId; 2] {
+        let k = self.chip_dims[dim];
+        assert!(k >= 2, "dimension {dim} has no SerDes links");
+        let d = usize::from(!plus);
+        assert!(
+            self.gmap.owns(dim, lane, d),
+            "lane {lane} does not carry the dim-{dim} cable in that direction"
+        );
+        let gw = self.gmap.group(dim)[lane];
+        let rt = self.gmap.group(dim)[self.gmap.reverse_lane(dim, d, lane)];
+        let mut nc = chip;
+        nc[dim] = (chip[dim] + if plus { 1 } else { k - 1 }) % k;
+        let u = self.node(chip, gw);
+        let v = self.node(nc, rt);
+        [
+            self.off_out[u][dim * 2 + d].expect("SerDes link wired"),
+            self.off_out[v][dim * 2 + (1 - d)].expect("SerDes link wired"),
+        ]
+    }
+
     /// The two directed channels (forward, reverse) realizing the logical
     /// bidirectional link a fault kills. Panics when the link does not
-    /// exist in this net (degenerate ring or off-mesh step).
+    /// exist in this net (degenerate ring, off-mesh step, or a lane that
+    /// does not carry the named direction).
     pub fn channels_of(&self, f: &HierLinkFault) -> [ChannelId; 2] {
         match *f {
-            HierLinkFault::Serdes { chip, dim, plus } => {
-                let k = self.chip_dims[dim];
-                assert!(k >= 2, "dimension {dim} has no SerDes links");
-                let gw = gateway_tile(self.tile_dims, dim);
-                let mut nc = chip;
-                nc[dim] = (chip[dim] + if plus { 1 } else { k - 1 }) % k;
-                let u = self.node(chip, gw);
-                let v = self.node(nc, gw);
-                let d = usize::from(!plus);
-                [
-                    self.off_out[u][dim * 2 + d].expect("SerDes link wired"),
-                    self.off_out[v][dim * 2 + (1 - d)].expect("SerDes link wired"),
-                ]
+            HierLinkFault::Serdes { chip, dim, plus } => self.serdes_channels(chip, dim, plus, 0),
+            HierLinkFault::SerdesLane { chip, dim, plus, lane } => {
+                self.serdes_channels(chip, dim, plus, lane)
             }
             HierLinkFault::Mesh { chip, tile, dim, plus } => {
                 let d = dim * 2 + usize::from(!plus);
@@ -422,6 +514,8 @@ pub struct SerdesLinkDesc {
     pub to_chip: usize,
     pub dim: usize,
     pub plus: bool,
+    /// Gateway lane (group member index) carrying this wire.
+    pub lane: usize,
     /// The directed channel realizing this wire in the sequentially-built
     /// net ([`hybrid_torus_mesh_wired`]) — lets the sharded equivalence
     /// suite compare per-wire flit counts against the sharded tx half
@@ -443,8 +537,8 @@ pub struct HybridPartition {
     pub chip_dims: [u32; 3],
     pub tile_dims: [u32; 2],
     pub tiles_per_chip: usize,
-    /// Directed boundary wires in (from_chip, dim, dir) order — the
-    /// global link-id order the sharded runtime drains time-stamped
+    /// Directed boundary wires in (from_chip, [`cable_slots`]) order —
+    /// the global link-id order the sharded runtime drains time-stamped
     /// boundary messages in (its determinism tie-break).
     pub links: Vec<SerdesLinkDesc>,
 }
@@ -471,26 +565,24 @@ impl HybridWiring {
         let ntiles = (self.tile_dims[0] * self.tile_dims[1]) as usize;
         let nchips = self.chip_dims.iter().product::<u32>() as usize;
         let tile_idx = |t: [u32; 2]| -> usize { (t[0] + t[1] * self.tile_dims[0]) as usize };
+        let slots = cable_slots(self.chip_dims, &self.gmap);
         let mut links = Vec::new();
         for chip in 0..nchips {
             let cc = chip_coords3(self.chip_dims, chip);
-            for dim in 0..3 {
-                if self.chip_dims[dim] < 2 {
-                    continue;
-                }
-                let g = tile_idx(gateway_tile(self.tile_dims, dim));
-                for (d, step) in [(0usize, 1u32), (1, self.chip_dims[dim] - 1)] {
-                    let mut nc = cc;
-                    nc[dim] = (cc[dim] + step) % self.chip_dims[dim];
-                    links.push(SerdesLinkDesc {
-                        from_chip: chip,
-                        to_chip: chip_index3(self.chip_dims, nc),
-                        dim,
-                        plus: d == 0,
-                        chan: self.off_out[chip * ntiles + g][dim * 2 + d]
-                            .expect("active dimension is wired"),
-                    });
-                }
+            for s in &slots {
+                let k = self.chip_dims[s.dim];
+                let step = if s.dir == 0 { 1 } else { k - 1 };
+                let mut nc = cc;
+                nc[s.dim] = (cc[s.dim] + step) % k;
+                links.push(SerdesLinkDesc {
+                    from_chip: chip,
+                    to_chip: chip_index3(self.chip_dims, nc),
+                    dim: s.dim,
+                    plus: s.dir == 0,
+                    lane: s.lane,
+                    chan: self.off_out[chip * ntiles + tile_idx(s.tile)][s.dim * 2 + s.dir]
+                        .expect("active dimension is wired"),
+                });
             }
         }
         HybridPartition {
@@ -502,12 +594,26 @@ impl HybridWiring {
     }
 }
 
-/// Boundary channel halves of one chip's sharded sub-net, per off-chip
-/// direction `dim*2 + dir` (dir 0 = +): the (tx half, rx half) local
-/// [`ChannelId`]s, or `None` on a degenerate (k < 2) ring.
+/// One off-chip cable of a chip's sharded sub-net: its [`CableSlot`]
+/// plus the local (tx half, rx half) [`ChannelId`]s.
 #[derive(Debug, Clone, Copy)]
+pub struct BoundaryCable {
+    pub slot: CableSlot,
+    /// This chip's outgoing directed wire (full sender-side semantics:
+    /// credits, serialization, BER injection, statistics).
+    pub tx: ChannelId,
+    /// Local mirror of the incoming wire on the same port (the
+    /// neighbour's reverse half; its own error model never fires).
+    pub rx: ChannelId,
+}
+
+/// Boundary channel halves of one chip's sharded sub-net, one entry per
+/// off-chip cable in canonical [`cable_slots`] order — index-aligned
+/// with the slot list every other builder derives from the same
+/// [`GatewayMap`](crate::route::hier::GatewayMap).
+#[derive(Debug, Clone)]
 pub struct ChipBoundary {
-    pub serdes: [Option<(ChannelId, ChannelId)>; 6],
+    pub cables: Vec<BoundaryCable>,
 }
 
 /// Build ONE chip of a hybrid system as a self-contained [`Net`] — the
@@ -531,6 +637,19 @@ pub fn hybrid_chip_subnet(
     cfg: &DnpConfig,
     mem_words: usize,
 ) -> (Net, ChipBoundary) {
+    hybrid_chip_subnet_with(chip, chip_dims, &GatewayMap::fixed(tile_dims), cfg, mem_words)
+}
+
+/// [`hybrid_chip_subnet`] under an explicit
+/// [`GatewayMap`](crate::route::hier::GatewayMap).
+pub fn hybrid_chip_subnet_with(
+    chip: [u32; 3],
+    chip_dims: [u32; 3],
+    gmap: &GatewayMap,
+    cfg: &DnpConfig,
+    mem_words: usize,
+) -> (Net, ChipBoundary) {
+    let tile_dims = gmap.tile_dims();
     assert!(
         chip_dims.iter().all(|&d| (1..=16).contains(&d)),
         "chip dims must be 1..=16 (4-bit coordinate fields)"
@@ -547,34 +666,38 @@ pub fn hybrid_chip_subnet(
     let ntiles = (tile_dims[0] * tile_dims[1]) as usize;
     let tile_idx = |t: [u32; 2]| -> usize { (t[0] + t[1] * tile_dims[0]) as usize };
     let tile_coords = |i: usize| -> [u32; 2] { [i as u32 % tile_dims[0], i as u32 / tile_dims[0]] };
-    let (mesh_port_of, off_port_of) = hybrid_port_maps(chip_dims, tile_dims, cfg);
+    let (mesh_port_of, off_port_of) = hybrid_port_maps(chip_dims, gmap, cfg);
 
     let mut net = Net::new();
     let (mesh_in, mesh_out) = wire_mesh2d(&mut net, tile_dims, cfg);
 
     let me = chip_index3(chip_dims, chip);
-    let mut serdes = [None::<(ChannelId, ChannelId)>; 6];
+    let mut cables = Vec::new();
     let mut off_in = vec![[None::<ChannelId>; 6]; ntiles];
     let mut off_out = vec![[None::<ChannelId>; 6]; ntiles];
-    for dim in 0..3 {
-        if chip_dims[dim] < 2 {
-            continue;
-        }
-        let g = tile_idx(gateway_tile(tile_dims, dim));
-        for (d, step) in [(0usize, 1u32), (1, chip_dims[dim] - 1)] {
-            let mut nc = chip;
-            nc[dim] = (chip[dim] + step) % chip_dims[dim];
-            let neighbor = chip_index3(chip_dims, nc);
-            // Seeds exactly as in `hybrid_torus_mesh_wired`: ours for the
-            // tx half, the neighbour's reverse wire for the rx half.
-            let tx_seed = (me * 6 + dim * 2 + d) as u64 + 0x417B_5EED;
-            let rx_seed = (neighbor * 6 + dim * 2 + (1 - d)) as u64 + 0x417B_5EED;
-            let tx = net.chans.add(offchip_channel(cfg, tx_seed));
-            let rx = net.chans.add(offchip_channel(cfg, rx_seed));
-            off_out[g][dim * 2 + d] = Some(tx);
-            off_in[g][dim * 2 + d] = Some(rx);
-            serdes[dim * 2 + d] = Some((tx, rx));
-        }
+    for s in cable_slots(chip_dims, gmap) {
+        let k = chip_dims[s.dim];
+        let step = if s.dir == 0 { 1 } else { k - 1 };
+        let mut nc = chip;
+        nc[s.dim] = (chip[s.dim] + step) % k;
+        let neighbor = chip_index3(chip_dims, nc);
+        let g = tile_idx(s.tile);
+        // Seeds exactly as in `hybrid_torus_mesh_wired_with`: ours for
+        // the tx half, the neighbour's reverse wire for the rx half (the
+        // incoming cable on this port is the `dir`-neighbour's `1-dir`
+        // cable of the lane whose reverse half lands here).
+        let rl = gmap.reverse_lane(s.dim, s.dir, s.lane);
+        let rs = CableSlot {
+            dim: s.dim,
+            lane: rl,
+            tile: gmap.group(s.dim)[rl],
+            dir: 1 - s.dir,
+        };
+        let tx = net.chans.add(offchip_channel(cfg, serdes_seed(me, &s)));
+        let rx = net.chans.add(offchip_channel(cfg, serdes_seed(neighbor, &rs)));
+        off_out[g][s.dim * 2 + s.dir] = Some(tx);
+        off_in[g][s.dim * 2 + s.dir] = Some(rx);
+        cables.push(BoundaryCable { slot: s, tx, rx });
     }
 
     for t in 0..ntiles {
@@ -604,10 +727,10 @@ pub fn hybrid_chip_subnet(
         }
         let mesh_ports = mesh_port_of[t];
         let off_ports = off_port_of[t];
-        let router = Box::new(HierRouter::new(
+        let router = Box::new(HierRouter::new_with(
             addr,
             chip_dims,
-            tile_dims,
+            gmap.clone(),
             cfg.route_order,
             mesh_ports,
             off_ports,
@@ -621,14 +744,20 @@ pub fn hybrid_chip_subnet(
             mem_words,
             cq_base(cfg, mem_words),
         );
+        let fac_map = gmap.clone();
         node.set_router_factory(Box::new(move |order: RouteOrder| {
-            Box::new(HierRouter::new(
-                addr, chip_dims, tile_dims, order, mesh_ports, off_ports,
+            Box::new(HierRouter::new_with(
+                addr,
+                chip_dims,
+                fac_map.clone(),
+                order,
+                mesh_ports,
+                off_ports,
             )) as Box<dyn Router>
         }));
         net.add_dnp(node);
     }
-    (net, ChipBoundary { serdes })
+    (net, ChipBoundary { cables })
 }
 
 /// [`hybrid_torus_mesh`] plus the [`HybridWiring`] channel map the fault
@@ -639,6 +768,21 @@ pub fn hybrid_torus_mesh_wired(
     cfg: &DnpConfig,
     mem_words: usize,
 ) -> (Net, HybridWiring) {
+    hybrid_torus_mesh_wired_with(chip_dims, &GatewayMap::fixed(tile_dims), cfg, mem_words)
+}
+
+/// [`hybrid_torus_mesh_wired`] under an explicit
+/// [`GatewayMap`](crate::route::hier::GatewayMap): every gateway group
+/// member carries its own off-chip cables, the per-tile ports and the
+/// [`HybridWiring`]/[`HybridPartition`] channel maps expose the
+/// per-gateway channel groups, and every router consults the map.
+pub fn hybrid_torus_mesh_wired_with(
+    chip_dims: [u32; 3],
+    gmap: &GatewayMap,
+    cfg: &DnpConfig,
+    mem_words: usize,
+) -> (Net, HybridWiring) {
+    let tile_dims = gmap.tile_dims();
     assert!(
         chip_dims.iter().all(|&d| (1..=16).contains(&d)),
         "chip dims must be 1..=16 (4-bit coordinate fields)"
@@ -662,7 +806,7 @@ pub fn hybrid_torus_mesh_wired(
     let tile_coords = |i: usize| -> [u32; 2] { [i as u32 % tile_dims[0], i as u32 / tile_dims[0]] };
 
     // --- Per-tile physical port maps (identical in every chip).
-    let (mesh_port_of, off_port_of) = hybrid_port_maps(chip_dims, tile_dims, cfg);
+    let (mesh_port_of, off_port_of) = hybrid_port_maps(chip_dims, gmap, cfg);
 
     let mut net = Net::new();
 
@@ -677,27 +821,26 @@ pub fn hybrid_torus_mesh_wired(
         }
     }
 
-    // --- Off-chip SerDes channels: gateway tile of `dim` in chip u to the
-    // gateway tile of `dim` in the ±neighbour chip.
+    // --- Off-chip SerDes channels: one directed wire per cable slot of
+    // the gateway map, from the carrying tile of chip u to the tile of
+    // the ±neighbour chip carrying the reverse half (the same tile under
+    // `Fixed`/`DstHash`, the partner tile under `DimPair`).
+    let slots = cable_slots(chip_dims, gmap);
     let mut off_out = vec![[None::<ChannelId>; 6]; n];
     let mut off_in = vec![[None::<ChannelId>; 6]; n];
     for chip in 0..nchips {
         let cc = chip_coords(chip);
-        for dim in 0..3 {
-            if chip_dims[dim] < 2 {
-                continue;
-            }
-            let g = tile_idx(gateway_tile(tile_dims, dim));
-            for (d, step) in [(0usize, 1u32), (1, chip_dims[dim] - 1)] {
-                let mut nc = cc;
-                nc[dim] = (cc[dim] + step) % chip_dims[dim];
-                let u = chip * ntiles + g;
-                let v = chip_idx(nc) * ntiles + g;
-                let seed = (chip * 6 + dim * 2 + d) as u64 + 0x417B_5EED;
-                let ch = net.chans.add(offchip_channel(cfg, seed));
-                off_out[u][dim * 2 + d] = Some(ch);
-                off_in[v][dim * 2 + (1 - d)] = Some(ch);
-            }
+        for s in &slots {
+            let k = chip_dims[s.dim];
+            let step = if s.dir == 0 { 1 } else { k - 1 };
+            let mut nc = cc;
+            nc[s.dim] = (cc[s.dim] + step) % k;
+            let rt = gmap.group(s.dim)[gmap.reverse_lane(s.dim, s.dir, s.lane)];
+            let u = chip * ntiles + tile_idx(s.tile);
+            let v = chip_idx(nc) * ntiles + tile_idx(rt);
+            let ch = net.chans.add(offchip_channel(cfg, serdes_seed(chip, s)));
+            off_out[u][s.dim * 2 + s.dir] = Some(ch);
+            off_in[v][s.dim * 2 + (1 - s.dir)] = Some(ch);
         }
     }
 
@@ -732,10 +875,10 @@ pub fn hybrid_torus_mesh_wired(
             }
             let mesh_ports = mesh_port_of[t];
             let off_ports = off_port_of[t];
-            let router = Box::new(HierRouter::new(
+            let router = Box::new(HierRouter::new_with(
                 addr,
                 chip_dims,
-                tile_dims,
+                gmap.clone(),
                 cfg.route_order,
                 mesh_ports,
                 off_ports,
@@ -750,9 +893,15 @@ pub fn hybrid_torus_mesh_wired(
                 cq_base(cfg, mem_words),
             );
             // Run-time route-priority rewrites reorder the chip DOR.
+            let fac_map = gmap.clone();
             node.set_router_factory(Box::new(move |order: RouteOrder| {
-                Box::new(HierRouter::new(
-                    addr, chip_dims, tile_dims, order, mesh_ports, off_ports,
+                Box::new(HierRouter::new_with(
+                    addr,
+                    chip_dims,
+                    fac_map.clone(),
+                    order,
+                    mesh_ports,
+                    off_ports,
                 )) as Box<dyn Router>
             }));
             net.add_dnp(node);
@@ -761,6 +910,7 @@ pub fn hybrid_torus_mesh_wired(
     let wiring = HybridWiring {
         chip_dims,
         tile_dims,
+        gmap: gmap.clone(),
         mesh_out,
         off_out,
     };
@@ -986,6 +1136,7 @@ mod tests {
         assert_eq!(part.links.len(), 16);
         for l in &part.links {
             assert_ne!(l.from_chip, l.to_chip, "k=2 rings have distinct endpoints");
+            assert_eq!(l.lane, 0, "the Fixed map has a single lane");
             // The listed channel is the from-chip gateway's outgoing wire.
             let g = l.dim % 4;
             let u = l.from_chip * 4 + g;
@@ -994,6 +1145,38 @@ mod tests {
         }
         assert_eq!(part.chip_nodes(2), 8..12);
         assert_eq!(part.chip_of_node(9), 2);
+    }
+
+    #[test]
+    fn dst_hash_map_wires_one_cable_pair_per_lane() {
+        use crate::route::hier::{GatewayMap, GatewayPolicy};
+        let cfg = DnpConfig::hybrid();
+        let gmap = GatewayMap::dst_hash([2, 2], 2);
+        let (_, wiring) = hybrid_torus_mesh_wired_with([2, 2, 1], &gmap, &cfg, 1 << 12);
+        let part = wiring.partition();
+        // 4 chips × 2 active dimensions × 2 lanes × 2 directions.
+        assert_eq!(part.links.len(), 32);
+        for l in &part.links {
+            let tile = wiring.gmap.group(l.dim)[l.lane];
+            let u = l.from_chip * 4 + (tile[0] + tile[1] * 2) as usize;
+            let d = usize::from(!l.plus);
+            assert_eq!(Some(l.chan), wiring.off_out[u][l.dim * 2 + d]);
+        }
+        // Distinct lanes of one (chip, dim, dir) are distinct channels.
+        for a in &part.links {
+            for b in &part.links {
+                if (a.from_chip, a.dim, a.plus) == (b.from_chip, b.dim, b.plus) && a.lane != b.lane
+                {
+                    assert_ne!(a.chan, b.chan, "lanes must be parallel physical cables");
+                }
+            }
+        }
+        // DimPair wires one cable per direction, on different tiles.
+        let pair = GatewayMap::dim_pair([2, 2]);
+        assert_eq!(pair.policy(), GatewayPolicy::DimPair);
+        let (_, w2) = hybrid_torus_mesh_wired_with([2, 2, 1], &pair, &cfg, 1 << 12);
+        // 4 chips × 2 active dimensions × 2 directions (1 lane each).
+        assert_eq!(w2.partition().links.len(), 16);
     }
 
     #[test]
@@ -1011,11 +1194,36 @@ mod tests {
                     "chip {chip} tile {t}: address diverged from full build"
                 );
             }
-            // X and Y rings are active (both halves wired); Z degenerate.
-            for slot in 0..4 {
-                assert!(boundary.serdes[slot].is_some(), "slot {slot}");
+            // X and Y rings are active (one ± cable pair each under the
+            // Fixed map); the degenerate Z ring contributes no cables.
+            assert_eq!(boundary.cables.len(), 4);
+            for (c, dim) in boundary.cables.iter().zip([0usize, 0, 1, 1]) {
+                assert_eq!(c.slot.dim, dim);
+                assert_eq!(c.slot.lane, 0);
             }
-            assert!(boundary.serdes[4].is_none() && boundary.serdes[5].is_none());
+        }
+    }
+
+    #[test]
+    fn chip_subnet_matches_full_builder_under_dst_hash() {
+        use crate::route::hier::GatewayMap;
+        let cfg = DnpConfig::hybrid();
+        let gmap = GatewayMap::dst_hash([2, 2], 2);
+        let full = hybrid_torus_mesh_with([2, 2, 1], &gmap, &cfg, 1 << 12);
+        for chip in 0..4usize {
+            let cc = chip_coords3([2, 2, 1], chip);
+            let (sub, boundary) =
+                hybrid_chip_subnet_with(cc, [2, 2, 1], &gmap, &cfg, 1 << 12);
+            assert_eq!(sub.nodes.len(), 4);
+            for t in 0..4 {
+                assert_eq!(
+                    sub.dnp(t).addr,
+                    full.dnp(chip * 4 + t).addr,
+                    "chip {chip} tile {t}: address diverged from full build"
+                );
+            }
+            // 2 active dims × 2 lanes × 2 dirs.
+            assert_eq!(boundary.cables.len(), 8);
         }
     }
 

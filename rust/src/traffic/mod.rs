@@ -9,8 +9,9 @@
 //! LQCD pattern), [`hotspot`] and [`permutation`] traffic, and their
 //! hierarchical twins for the hybrid multi-chip system
 //! ([`hybrid_uniform_random`], [`hybrid_halo_exchange`],
-//! [`hybrid_all_pairs`]). [`retrying_plan`] layers CQ-driven end-to-end
-//! retry on top of any plan.
+//! [`hybrid_all_pairs`], [`hybrid_hotspot`] — the gateway-congestion
+//! stress). [`retrying_plan`] layers CQ-driven end-to-end retry on top
+//! of any plan.
 //!
 //! A plan can be executed under all three schedulers: [`run_plan`]
 //! (event-driven), [`run_plan_dense`] (dense reference) and
@@ -622,6 +623,50 @@ pub fn hybrid_halo_exchange(chip_dims: [u32; 3], tile_dims: [u32; 2], len: u32) 
     plan
 }
 
+/// Hotspot traffic on the hybrid system: every tile of every chip other
+/// than `victim_chip` sends `count` PUTs to the victim chip's tile with
+/// the *same* tile index — all traffic funnels into one destination
+/// chip, while the per-victim-tile totals stay exactly balanced (each
+/// victim tile receives one flow per remote chip). This is the
+/// gateway-congestion stress pattern: under the default single-gateway
+/// map the victim's last-hop SerDes cables serialize everything, and the
+/// per-destination spreading of a multi-gateway
+/// [`DstHash`](crate::route::hier::GatewayPolicy::DstHash) map is
+/// directly measurable via
+/// [`gateway_load_report`](crate::metrics::gateway_load_report).
+/// Issue cycles are staggered `i*4` per flow as in [`hotspot`]; windows
+/// and tags follow the [`rx_addr`]/`slot*count+i` conventions. Other
+/// plans are unchanged by the gateway layer.
+pub fn hybrid_hotspot(
+    chip_dims: [u32; 3],
+    tile_dims: [u32; 2],
+    victim_chip: [u32; 3],
+    count: usize,
+    len: u32,
+) -> Vec<Planned> {
+    let fmt = AddrFormat::Hybrid { chip_dims, tile_dims };
+    let n = fmt.node_count() as usize;
+    let tiles = (tile_dims[0] * tile_dims[1]) as usize;
+    let victim_base = hybrid_node_index(chip_dims, tile_dims, victim_chip, [0, 0]);
+    let mut plan = Vec::new();
+    for slot in 0..n {
+        if slot / tiles == victim_base / tiles {
+            continue; // the victim chip's own tiles stay quiet
+        }
+        let t = slot % tiles;
+        let dst = fmt.encode(&hybrid_coords(chip_dims, tile_dims, victim_base + t));
+        for i in 0..count {
+            plan.push(Planned {
+                node: slot,
+                at: (i as u64) * 4,
+                cmd: Command::put(TX_BASE, dst, rx_addr(slot), len)
+                    .with_tag((slot * count + i) as u32),
+            });
+        }
+    }
+    plan
+}
+
 /// Hotspot traffic: every node hammers one victim.
 pub fn hotspot(
     nodes: &[(usize, DnpAddr)],
@@ -858,6 +903,26 @@ mod tests {
             cross |= dst / 4 != p.node / 4;
         }
         assert!(cross, "16 draws per tile must hit the other chip");
+    }
+
+    #[test]
+    fn hybrid_hotspot_targets_one_chip_with_balanced_tiles() {
+        let plan = hybrid_hotspot([3, 3, 3], [2, 2], [1, 1, 1], 2, 8);
+        // 26 remote chips × 4 tiles × 2 PUTs.
+        assert_eq!(plan.len(), 26 * 4 * 2);
+        let fmt = AddrFormat::Hybrid { chip_dims: [3, 3, 3], tile_dims: [2, 2] };
+        let victim_base = hybrid_node_index([3, 3, 3], [2, 2], [1, 1, 1], [0, 0]);
+        let mut per_tile = [0u32; 4];
+        for p in &plan {
+            let d = fmt.decode(p.cmd.dst_dnp);
+            assert_eq!([d[0], d[1], d[2]], [1, 1, 1], "all traffic hits the victim chip");
+            let dst = hybrid_node_index([3, 3, 3], [2, 2], [d[0], d[1], d[2]], [d[3], d[4]]);
+            assert_ne!(p.node / 4, victim_base / 4, "victim tiles stay quiet");
+            assert_eq!(dst % 4, p.node % 4, "same-tile-index targeting");
+            per_tile[dst % 4] += 1;
+            assert_eq!(p.cmd.dst_addr, rx_addr(p.node), "lands in the sender's window");
+        }
+        assert_eq!(per_tile, [52; 4], "per-victim-tile totals must be balanced");
     }
 
     #[test]

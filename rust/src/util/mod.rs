@@ -5,7 +5,7 @@ pub mod error;
 pub mod rng;
 pub mod stats;
 
-pub use rng::SplitMix64;
+pub use rng::{mix64, SplitMix64};
 pub use stats::{mad, median, percentile, Accum, Histogram};
 
 /// Integer ceiling division.

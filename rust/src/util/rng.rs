@@ -5,6 +5,23 @@
 //! shuffles and floats. Deterministic by construction — every experiment in
 //! EXPERIMENTS.md quotes its seed.
 
+/// The SplitMix64 output function as a *stateless* 64-bit mixer: one
+/// round of the same finalizer [`SplitMix64`] steps with, applied to an
+/// arbitrary key. Used wherever a deterministic, run-stable hash of a
+/// small integer key is needed (e.g. the `DstHash` gateway policy of
+/// [`crate::route::hier::GatewayMap`]) — never `Math.random`-style state,
+/// so the same key maps to the same value in every run and on every
+/// worker. The exact output is pinned by unit test (and, transitively,
+/// by the gateway-assignment snapshot tests): changing this function
+/// reshuffles recorded experiment flows.
+#[inline]
+pub fn mix64(z: u64) -> u64 {
+    let mut z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 /// SplitMix64 (Steele, Lea, Flood 2014). Passes BigCrush when used as a
 /// 64-bit stream; more than adequate for traffic generation.
 #[derive(Debug, Clone)]
@@ -75,6 +92,22 @@ impl SplitMix64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn mix64_pinned_vectors() {
+        // Pinned: flows recorded in EXPERIMENTS.md §Gateway depend on
+        // these exact outputs (DstHash lane selection).
+        assert_eq!(mix64(0), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(mix64(1), 0x910A_2DEC_8902_5CC1);
+        assert_eq!(mix64(0xDEAD_BEEF), 0x4ADF_B90F_68C9_EB9B);
+    }
+
+    #[test]
+    fn mix64_matches_splitmix_stream() {
+        // One mixer application == one generator step from the same seed.
+        let mut r = SplitMix64::new(0x1234_5678);
+        assert_eq!(mix64(0x1234_5678), r.next_u64());
+    }
 
     #[test]
     fn deterministic() {

@@ -14,6 +14,7 @@
 use dnp::config::DnpConfig;
 use dnp::fault::{self, HierLinkFault};
 use dnp::metrics::{net_totals, sharded_totals, NetTotals};
+use dnp::route::hier::GatewayMap;
 use dnp::sim::ShardedNet;
 use dnp::{topology, traffic, Net};
 
@@ -57,8 +58,9 @@ fn snapshot_event(
     wiring: &topology::HybridWiring,
     elapsed: Option<u64>,
 ) -> Snapshot {
-    let nodes = (0..N).map(|i| node_snap(net.dnp(i))).collect();
-    let mems = (0..N)
+    let n = net.nodes.len();
+    let nodes = (0..n).map(|i| node_snap(net.dnp(i))).collect();
+    let mems = (0..n)
         .map(|i| {
             let m = &net.dnp(i).mem;
             m.read_slice(0, m.len() as u32).to_vec()
@@ -84,8 +86,9 @@ fn snapshot_event(
 
 fn snapshot_sharded(snet: &mut ShardedNet, elapsed: Option<u64>) -> Snapshot {
     let totals = sharded_totals(snet);
-    let nodes = (0..N).map(|i| node_snap(snet.dnp(i))).collect();
-    let mems = (0..N)
+    let n = snet.n_nodes();
+    let nodes = (0..n).map(|i| node_snap(snet.dnp(i))).collect();
+    let mems = (0..n)
         .map(|i| {
             let m = &snet.dnp(i).mem;
             m.read_slice(0, m.len() as u32).to_vec()
@@ -109,10 +112,13 @@ fn snapshot_sharded(snet: &mut ShardedNet, elapsed: Option<u64>) -> Snapshot {
 }
 
 /// Run `plan` sequentially (event scheduler) and sharded with `workers`
-/// threads, optionally after installing recovery tables for `faults`,
-/// and assert snapshot equality.
-fn assert_sharded_equivalent(
+/// threads on a `chips` system under `gmap`, optionally after installing
+/// recovery tables for `faults`, and assert snapshot equality.
+#[allow(clippy::too_many_arguments)]
+fn assert_sharded_equivalent_with(
     cfg: &DnpConfig,
+    chips: [u32; 3],
+    gmap: &GatewayMap,
     plan: Vec<traffic::Planned>,
     workers: usize,
     faults: &[HierLinkFault],
@@ -120,8 +126,9 @@ fn assert_sharded_equivalent(
     label: &str,
 ) {
     // Sequential event run.
-    let (mut net, wiring) = topology::hybrid_torus_mesh_wired(CHIPS, TILES, cfg, MEM);
-    let slots: Vec<usize> = (0..N).collect();
+    let (mut net, wiring) = topology::hybrid_torus_mesh_wired_with(chips, gmap, cfg, MEM);
+    let n = net.nodes.len();
+    let slots: Vec<usize> = (0..n).collect();
     traffic::setup_buffers(&mut net, &slots);
     if !faults.is_empty() {
         fault::inject_hybrid(&mut net, &wiring, faults, cfg).expect("recoverable fault set");
@@ -132,10 +139,10 @@ fn assert_sharded_equivalent(
     let seq = snapshot_event(&net, &wiring, seq_elapsed);
 
     // Sharded run.
-    let mut snet = ShardedNet::hybrid(CHIPS, TILES, cfg, MEM, workers);
+    let mut snet = ShardedNet::hybrid_with(chips, gmap, cfg, MEM, workers);
     traffic::setup_buffers_sharded(&mut snet);
     if !faults.is_empty() {
-        let tables = fault::recompute_hybrid_tables(CHIPS, TILES, faults, cfg)
+        let tables = fault::recompute_hybrid_tables_with(chips, gmap, faults, cfg)
             .expect("recoverable fault set");
         snet.apply_tables(tables);
     }
@@ -145,7 +152,7 @@ fn assert_sharded_equivalent(
     assert_eq!(seq.elapsed, shd.elapsed, "{label} (w{workers}): drain cycle diverged");
     assert_eq!(seq.totals, shd.totals, "{label} (w{workers}): totals diverged");
     assert_eq!(seq.wires, shd.wires, "{label} (w{workers}): per-wire counters diverged");
-    for i in 0..N {
+    for i in 0..n {
         assert_eq!(seq.nodes[i], shd.nodes[i], "{label} (w{workers}): node {i} counters");
         assert_eq!(
             seq.mems[i], shd.mems[i],
@@ -153,6 +160,27 @@ fn assert_sharded_equivalent(
         );
     }
     assert_eq!(seq, shd, "{label} (w{workers}): snapshots diverged");
+}
+
+/// The historical Fixed-map harness on the 2x2x1 system.
+fn assert_sharded_equivalent(
+    cfg: &DnpConfig,
+    plan: Vec<traffic::Planned>,
+    workers: usize,
+    faults: &[HierLinkFault],
+    max_cycles: u64,
+    label: &str,
+) {
+    assert_sharded_equivalent_with(
+        cfg,
+        CHIPS,
+        &GatewayMap::fixed(TILES),
+        plan,
+        workers,
+        faults,
+        max_cycles,
+        label,
+    );
 }
 
 #[test]
@@ -212,6 +240,84 @@ fn ber_afflicted_serdes_matches_event() {
     for workers in [1usize, 2] {
         let plan = traffic::hybrid_uniform_random(CHIPS, TILES, 6, 48, 12, 0xFEED_1002);
         assert_sharded_equivalent(&cfg, plan, workers, &[], 2_000_000, "BER uniform");
+    }
+}
+
+#[test]
+fn dsthash_multi_gateway_2x2x2_three_way_equivalence() {
+    // Multi-gateway boundary bookkeeping must not assume one gateway per
+    // dimension: under a 2-lane DstHash map every chip has 12 boundary
+    // cables (3 dims × 2 lanes × 2 dirs), and the sharded runtime must
+    // stay bit-exact with the sequential event scheduler for 1/2/4
+    // workers — which, together with the dense run below, closes the
+    // dense ≡ event ≡ sharded argument for the multi-gateway fabric.
+    let cfg = DnpConfig::hybrid();
+    let chips = [2u32, 2, 2];
+    let gmap = GatewayMap::dst_hash(TILES, 2);
+    let plan = traffic::hybrid_uniform_random(chips, TILES, 6, 24, 10, 0xFEED_1003);
+    for workers in [1usize, 2, 4] {
+        assert_sharded_equivalent_with(
+            &cfg,
+            chips,
+            &gmap,
+            plan.clone(),
+            workers,
+            &[],
+            2_000_000,
+            "DstHash 2x2x2 uniform",
+        );
+    }
+    // Dense reference leg: the dense loop on the same multi-gateway net
+    // must agree with the event scheduler on drain cycle, totals and
+    // every tile memory.
+    let run = |dense: bool| -> (Option<u64>, NetTotals, Vec<Vec<u32>>) {
+        let mut net = topology::hybrid_torus_mesh_with(chips, &gmap, &cfg, MEM);
+        let n = net.nodes.len();
+        let slots: Vec<usize> = (0..n).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        let mut feeder = traffic::Feeder::new(plan.clone());
+        let elapsed = if dense {
+            traffic::run_plan_dense(&mut net, &mut feeder, 2_000_000)
+        } else {
+            traffic::run_plan(&mut net, &mut feeder, 2_000_000)
+        };
+        let mems = (0..n)
+            .map(|i| {
+                let m = &net.dnp(i).mem;
+                m.read_slice(0, m.len() as u32).to_vec()
+            })
+            .collect();
+        (elapsed, net_totals(&net), mems)
+    };
+    let dense = run(true);
+    let event = run(false);
+    assert_eq!(dense.0, event.0, "DstHash 2x2x2: dense vs event drain cycle");
+    assert_eq!(dense.1, event.1, "DstHash 2x2x2: dense vs event totals");
+    assert_eq!(dense.2, event.2, "DstHash 2x2x2: dense vs event tile memories");
+}
+
+#[test]
+fn dim_pair_3x3x1_sharded_matches_event() {
+    // DimPair is the one policy where a cable's reverse half is carried
+    // by the *partner* lane — the only case where the shard boundary
+    // pairing, the rx-mirror seeds and `links_of`'s reverse-lane lookup
+    // differ from the identity path of Fixed/DstHash. 3x3x1 chips make
+    // k=3 rings take BOTH directions, so both split tiles carry traffic.
+    let cfg = DnpConfig::hybrid();
+    let chips = [3u32, 3, 1];
+    let gmap = GatewayMap::dim_pair(TILES);
+    let plan = traffic::hybrid_uniform_random(chips, TILES, 4, 16, 8, 0xFEED_1004);
+    for workers in [1usize, 2, 4] {
+        assert_sharded_equivalent_with(
+            &cfg,
+            chips,
+            &gmap,
+            plan.clone(),
+            workers,
+            &[],
+            2_000_000,
+            "DimPair 3x3x1 uniform",
+        );
     }
 }
 
