@@ -1,0 +1,99 @@
+//! The 4x4x4 fault matrix at a glance (ISSUE 6 acceptance; paper Sec. V
+//! roadmap, cf. the APEnet+ fault-management follow-up, arXiv:1307.1270).
+//!
+//! Runs chip-granular all-pairs traffic on a 4×4×4 chip torus of 2×2
+//! tile meshes — k=4 rings, routable only since the per-channel dateline
+//! class rework — under each hard-fault scenario of the recovery matrix,
+//! plus a BER + retry leg, and prints one `[fault-matrix]` row per
+//! scenario for the CI experiments-summary artifact (EXPERIMENTS.md
+//! §Fault documents the harvest line).
+//!
+//! Run: `cargo run --release --example hybrid_fault_matrix`
+
+use dnp::config::DnpConfig;
+use dnp::fault::{self, HierLinkFault};
+use dnp::{topology, traffic};
+
+const CHIPS: [u32; 3] = [4, 4, 4];
+const TILES: [u32; 2] = [2, 2];
+const NCHIPS: usize = 64;
+const MEM: usize = 1 << 17;
+const LEN: u32 = 8;
+const BUDGET: u64 = 20_000_000;
+
+fn run_hard(faults: &[HierLinkFault], label: &str, healthy: Option<u64>) -> u64 {
+    let cfg = DnpConfig::hybrid();
+    let (mut net, wiring) = topology::hybrid_torus_mesh_wired(CHIPS, TILES, &cfg, MEM);
+    traffic::setup_chip_buffers(&mut net, NCHIPS);
+    let dead = fault::inject_hybrid(&mut net, &wiring, faults, &cfg)
+        .expect("matrix scenarios are recoverable at k=4");
+    let plan = traffic::hybrid_chip_all_pairs(CHIPS, TILES, LEN);
+    let total = plan.len() as u64;
+    let mut feeder = traffic::Feeder::new(plan);
+    let cycles = traffic::run_plan(&mut net, &mut feeder, BUDGET)
+        .expect("recovered tables must drain chip all-pairs");
+    let dead_words: u64 = dead.iter().map(|&c| net.chans.get(c).words_sent).sum();
+    assert_eq!(net.traces.delivered, total);
+    assert_eq!(dead_words, 0, "a dead wire carried traffic");
+    let delta = healthy.map(|h| cycles as i64 - h as i64);
+    println!(
+        "[fault-matrix] scenario={label} chips=4x4x4 puts={total} cycles={cycles} \
+         delta_vs_healthy={} delivered={} dead_wire_words={dead_words}",
+        delta.map_or_else(|| "n/a".into(), |d| format!("{d:+}")),
+        net.traces.delivered,
+    );
+    cycles
+}
+
+fn main() {
+    let cfg = DnpConfig::hybrid();
+    println!(
+        "hybrid system: {}x{}x{} chips of {}x{} tiles, L={} N={} M={}",
+        CHIPS[0], CHIPS[1], CHIPS[2], TILES[0], TILES[1], cfg.l_ports, cfg.n_ports, cfg.m_ports
+    );
+
+    let healthy = run_hard(&[], "healthy", None);
+
+    run_hard(
+        &[HierLinkFault::Serdes { chip: [1, 2, 3], dim: 2, plus: true }],
+        "dead-cable",
+        Some(healthy),
+    );
+    run_hard(
+        &[
+            HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: true },
+            HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: false },
+        ],
+        "isolated-gateway",
+        Some(healthy),
+    );
+    run_hard(
+        &[HierLinkFault::Mesh { chip: [2, 1, 0], tile: [0, 0], dim: 0, plus: true }],
+        "dead-mesh-link",
+        Some(healthy),
+    );
+    run_hard(
+        &[
+            HierLinkFault::Serdes { chip: [3, 0, 1], dim: 1, plus: true },
+            HierLinkFault::Mesh { chip: [1, 3, 2], tile: [1, 0], dim: 1, plus: true },
+        ],
+        "combined",
+        Some(healthy),
+    );
+
+    // BER + CQ-driven end-to-end retry on the k=4 rings.
+    let mut cfg_ber = cfg.clone();
+    cfg_ber.serdes.ber_per_word = 1e-3;
+    let mut net = topology::hybrid_torus_mesh(CHIPS, TILES, &cfg_ber, MEM);
+    traffic::setup_chip_buffers(&mut net, NCHIPS);
+    let plan = traffic::hybrid_chip_all_pairs(CHIPS, TILES, LEN);
+    let msgs = plan.len();
+    let report = traffic::retrying_plan(&mut net, plan, BUDGET, 40)
+        .expect("retry loop converges at 4x4x4");
+    assert_eq!(report.retries, net.traces.corrupt_packets);
+    println!(
+        "[fault-matrix] scenario=ber-retry chips=4x4x4 puts={msgs} cycles={} \
+         corrupted={} retries={} rounds={}",
+        report.elapsed, net.traces.corrupt_packets, report.retries, report.rounds
+    );
+}

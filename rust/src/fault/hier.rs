@@ -56,37 +56,47 @@
 //!   detoured (per-destination BFS trees with XY preference keep the VC-0
 //!   mesh dependencies tree-shaped per target);
 //! * off-chip hops that coincide with the healthy chip-DOR decision keep
-//!   the healthy stateless dateline VC; hops that deviate (detours and
-//!   re-homed rings) ride the **escape VC 1**, the Boppana-Chalasani
-//!   extra-VC convention the flat module already uses.
+//!   the healthy per-channel dateline class
+//!   ([`ring_class_vc`](crate::route::hier::ring_class_vc)); hops that
+//!   deviate (detours and re-homed rings) ride the **escape VC 1**, the
+//!   Boppana-Chalasani extra-VC convention the flat module already uses.
 //!
 //! # Dateline verification
 //!
-//! A per-(node, dst) table cannot carry per-packet wrap state, so the
-//! dateline VC is evaluated as if each node were the packet's source
-//! (the same convention as [`recompute_tables`](super::recompute_tables)).
-//! That convention is sound only while no chip-level route takes a
-//! *post-wrap* hop on the same ring — true for minimal routes on rings of
-//! k <= 3 (ring distance <= 1), but violated by **every** k >= 4 ring
-//! (e.g. `src = k-1 → dst = 1` wraps at the dateline and then continues
-//! on VC 0) and by some detours past a wrap on smaller rings. Instead of
-//! silently installing unsound tables, [`recompute_hybrid_tables`] now
-//! *walks* every (source chip, destination node) pair — destination
-//! tiles matter under `DstHash`, whose lane is keyed on them — over the
-//! exact hops and VCs the tables install and returns
-//! [`HierRecoveryError::DatelineHazard`] (naming the offending ring
-//! dimension) when a hop after a ring's wrap would ride VC 0. Every
-//! configuration this repo ships and tests passes the walk; the rigorous
-//! fix that would *accept* k >= 4 rings (static per-channel dateline
-//! classes) stays on the ROADMAP.
+//! Healthy routes follow the static per-channel dateline classes of
+//! `route/hier.rs`: the VC of an off-chip hop is a pure function of the
+//! directed channel and the destination ring coordinate — never of the
+//! packet's source — which is exactly what a per-(node, dst) table can
+//! encode, so k >= 4 chip rings install without approximation (the old
+//! source-relative wrap-state convention had to refuse them wholesale).
+//! Detours complicate the picture: a deviating hop rides escape VC 1
+//! wherever it sits, and the healthy-first, route-order tie-breaks above
+//! act as the constructive turn restriction keeping detoured chains
+//! class-ascending in practice. The exact gate is a
+//! **channel-dependence-graph acyclicity check** (Dally–Seitz):
+//! [`recompute_hybrid_tables`] re-walks every (source chip, destination
+//! node) chain over the exact hops and VCs the tables install —
+//! destination *tiles* matter under `DstHash`, whose lane is keyed on
+//! them — collecting a dependence edge for each consecutive pair of
+//! off-chip channels `(chip, dim, dir, lane, VC)`, and refuses the
+//! table set with [`HierRecoveryError::DatelineHazard`] (naming a
+//! channel on the cycle) unless the graph is acyclic. Contracting the
+//! mesh segments of any would-be waiting cycle yields exactly such a
+//! SerDes-only cycle over consecutive-pair edges, so acyclicity of this
+//! graph plus the per-chip mesh check below is sufficient for deadlock
+//! freedom of the installed tables.
 //!
-//! # Known approximations
-//!
-//! The per-target BFS mesh detours are acyclic per destination but their
-//! *union* is not turn-model-checked; on tile meshes >= 3x3 an
-//! adversarial fault set could in principle close a mesh VC cycle under
-//! saturation. ROADMAP tracks the rigorous fix (turn-restricted detour
-//! selection).
+//! Purely mesh-level cycles cannot span chips (every cross-chip
+//! dependence traverses a SerDes channel), so each chip is checked
+//! separately: the union of installed BFS detour trees — delivery walks
+//! on VC 1 toward every tile, outbound walks on VC 0 toward exactly the
+//! gateway tiles the installed decisions target — must be acyclic over
+//! the directed mesh channels `(tile, direction, VC)`, or the set is
+//! refused with [`HierRecoveryError::MeshCycle`]. This closes the former
+//! "known approximation" where >= 3x3 tile meshes trusted the
+//! per-destination trees' union unchecked. Fault-free XY and every
+//! shipped scenario pass both checks; adversarial multi-fault sets may
+//! be refused with a typed error, never installed unsound.
 
 use super::{LinkFault, SurvivorGraph};
 use crate::config::{DnpConfig, RouteOrder};
@@ -97,7 +107,8 @@ use crate::sim::channel::ChannelId;
 use crate::sim::Net;
 use crate::topology::{hybrid_port_maps, mesh_step, HybridWiring};
 use crate::traffic::hybrid_coords;
-use std::collections::{HashSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, HashSet, VecDeque};
+use std::sync::Arc;
 
 /// A hard fault on one bidirectional link of the hybrid system (kills both
 /// directed channels of the physical cable, exactly like [`LinkFault`] on
@@ -384,20 +395,26 @@ pub enum HierRecoveryError {
     /// still route over whatever the caller actually meant to kill, so
     /// it is rejected up front.
     UnknownCable { dim: usize, plus: bool, lane: usize },
-    /// The recovered route set would hand a post-dateline packet back to
-    /// VC 0 on chip ring `dim`: the chip-level walk from `src_chip` to
-    /// `dst_chip` crosses the ring's wrap link and later takes an
-    /// off-chip hop on the same ring whose installed VC is 0 (the
-    /// per-(node, dst) table evaluated the dateline as if that node were
-    /// the source). Installing such tables would silently void the
-    /// Dally-Seitz deadlock argument — see the module docs §Dateline
-    /// verification. This fires for *every* k >= 4 chip ring, faulted or
-    /// not, and for adversarial detours past a wrap on smaller rings.
+    /// The recovered route set closes a cycle in the off-chip
+    /// channel-dependence graph: some set of installed chip-level chains
+    /// waits on each other around a ring without an escape — installing
+    /// such tables would silently void the Dally-Seitz deadlock argument
+    /// (module docs §Dateline verification). `dim`/`src_chip`/`dst_chip`
+    /// name one directed SerDes channel on the cycle: the ring dimension
+    /// and the cable's tail and head chips. Fault-free systems of any
+    /// ring size pass (healthy routes follow the static dateline
+    /// classes); only adversarial detour combinations can trip this.
     DatelineHazard {
         dim: usize,
         src_chip: usize,
         dst_chip: usize,
     },
+    /// The union of chip `chip`'s installed mesh detour trees (delivery
+    /// VC 1 / outbound VC 0) closes a cycle over its directed mesh
+    /// channels — possible only under adversarial multi-fault sets on
+    /// meshes >= 3x3; refused instead of installed unsound (module docs
+    /// §Dateline verification).
+    MeshCycle { chip: usize },
     /// The supplied [`GatewayMap`] is structurally invalid (out-of-bounds
     /// tile, duplicate group member, empty group) — rejected up front
     /// with a typed error instead of a builder panic.
@@ -416,8 +433,12 @@ impl std::fmt::Display for HierRecoveryError {
             HierRecoveryError::DatelineHazard { dim, src_chip, dst_chip } => write!(
                 f,
                 "recovered routes violate the dateline discipline on the {} chip ring (dim {dim}: \
-                 chip {src_chip} -> chip {dst_chip} takes a post-wrap hop on VC 0)",
+                 the channel chip {src_chip} -> chip {dst_chip} lies on a dependence cycle)",
                 ["X", "Y", "Z"][dim]
+            ),
+            HierRecoveryError::MeshCycle { chip } => write!(
+                f,
+                "recovered mesh detours close a channel-dependence cycle inside chip {chip}"
             ),
             HierRecoveryError::BadGatewayMap(e) => {
                 write!(f, "cannot recover under an invalid gateway map: {e}")
@@ -438,10 +459,11 @@ impl std::fmt::Display for HierRecoveryError {
 /// the detour and escape-VC discipline.
 ///
 /// Errors ([`HierRecoveryError`]) when the fault set disconnects the chip
-/// torus, partitions a chip's tile mesh, or — new — when the recovered
-/// VC assignment would violate the dateline discipline (the k >= 4-ring
-/// hazard the module docs §Dateline verification describes, previously a
-/// silently-unsound case).
+/// torus, partitions a chip's tile mesh, or when the installed routes
+/// would close a channel-dependence cycle off-chip (`DatelineHazard`) or
+/// on-chip (`MeshCycle`) — see the module docs §Dateline verification.
+/// Fault-free systems of any ring size pass: healthy routes follow the
+/// static per-channel dateline classes of `route/hier.rs`.
 ///
 /// ```
 /// use dnp::config::DnpConfig;
@@ -513,14 +535,16 @@ pub fn recompute_hybrid_tables_with(
     let addrs: Vec<DnpAddr> = (0..n)
         .map(|i| fmt.encode(&hybrid_coords(chip_dims, tile_dims, i)))
         .collect();
-    // Reference healthy router per node, to detect "deviating" hops.
+    // Reference healthy router per node, to detect "deviating" hops —
+    // one shared `Arc<GatewayMap>` across all n of them (§Perf).
+    let agmap = Arc::new(gmap.clone());
     let healthy: Vec<HierRouter> = (0..n)
         .map(|i| {
             let t = i % ntiles;
             HierRouter::new_with(
                 addrs[i],
                 chip_dims,
-                gmap.clone(),
+                agmap.clone(),
                 cfg.route_order,
                 mesh_port_of[t],
                 off_port_of[t],
@@ -543,6 +567,10 @@ pub fn recompute_hybrid_tables_with(
     struct OffDec {
         dim: usize,
         dir: usize,
+        /// Lane (gateway group member) actually taken — the installed
+        /// lane or its survivor fallback; part of the channel identity
+        /// in the dependence graph below.
+        lane: usize,
         /// Row-major tile index of the gateway the flow exits through.
         gw: usize,
         port: usize,
@@ -583,10 +611,14 @@ pub fn recompute_hybrid_tables_with(
         let u = achip * ntiles + gw;
         let hd = healthy[u].decide(addrs[u], addrs[dst], 0);
         let vc = if hd.out == OutSel::Port(port) { hd.vc } else { 1 };
-        Ok(OffDec { dim, dir, gw, port, vc })
+        Ok(OffDec { dim, dir, lane: pick, gw, port, vc })
     };
 
     let mut tables: Vec<TableRouter> = addrs.iter().map(|&a| TableRouter::new(a)).collect();
+    // Gateway tiles each chip's installed decisions actually target —
+    // the exact (not over-approximated) VC-0 mesh walk targets for the
+    // per-chip dependence check below.
+    let mut used_gw: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); nchips];
     for dst in 0..n {
         let (bchip, stile) = (dst / ntiles, dst % ntiles);
         for achip in 0..nchips {
@@ -607,6 +639,7 @@ pub fn recompute_hybrid_tables_with(
                 continue;
             }
             let dec = offchip_decision(achip, dst)?;
+            used_gw[achip].insert(dec.gw);
             for t in 0..ntiles {
                 let u = achip * ntiles + t;
                 let (port, vc) = if t == dec.gw {
@@ -626,17 +659,22 @@ pub fn recompute_hybrid_tables_with(
         }
     }
 
-    // §Dateline verification (module docs): walk every (source chip,
-    // destination node) pair over the exact chip-level hops and VCs the
+    // §Dateline verification (module docs): re-walk every (source chip,
+    // destination node) chain over the exact chip-level hops and VCs the
     // tables install — destination *tiles* matter under `DstHash`, whose
-    // lane (and with it the healthy-VC comparison) is keyed on them —
-    // and refuse table sets that hand a post-dateline packet back to
-    // VC 0. Reuses `offchip_decision`, so the walk sees precisely the
-    // installed decisions.
-    // Only `DstHash` keys the lane on the destination tile; under every
-    // other policy all tiles of a chip share one decision chain, so one
-    // representative tile per destination chip suffices.
+    // lane is keyed on them; under every other policy all tiles of a
+    // chip share one decision chain, so one representative tile per
+    // destination chip suffices — and collect the channel-dependence
+    // graph over the directed SerDes channels `(chip, dim, dir, lane)`
+    // per VC. A packet holding channel `p` while requesting the chain's
+    // next channel `c` induces the dependence `p -> c` (the mesh segment
+    // between them belongs to the same packet, so mixed mesh/SerDes
+    // waiting cycles contract onto exactly these edges). Reuses
+    // `offchip_decision`, so the graph sees precisely the installed
+    // decisions.
     let walk_all_tiles = gmap.policy() == GatewayPolicy::DstHash;
+    let mut schans: BTreeSet<SerdesCh> = BTreeSet::new();
+    let mut sedges: BTreeSet<(SerdesCh, SerdesCh)> = BTreeSet::new();
     for src in 0..nchips {
         for dst in 0..n {
             let bchip = dst / ntiles;
@@ -644,25 +682,18 @@ pub fn recompute_hybrid_tables_with(
                 continue;
             }
             let mut cur = src;
-            let mut wrapped = [false; 3];
+            let mut prev: Option<SerdesCh> = None;
             let mut hops = 0usize;
             while cur != bchip {
                 let dec = offchip_decision(cur, dst)?;
-                if wrapped[dec.dim] && dec.vc == 0 {
-                    return Err(HierRecoveryError::DatelineHazard {
-                        dim: dec.dim,
-                        src_chip: src,
-                        dst_chip: bchip,
-                    });
+                let ch = (cur, dec.dim, dec.dir, dec.lane, dec.vc);
+                schans.insert(ch);
+                if let Some(p) = prev {
+                    sedges.insert((p, ch));
                 }
+                prev = Some(ch);
                 let cur_c = chip_coords(chip_dims, cur);
                 let k = chip_dims[dec.dim];
-                let crossed = if dec.dir == 0 {
-                    cur_c[dec.dim] == k - 1
-                } else {
-                    cur_c[dec.dim] == 0
-                };
-                wrapped[dec.dim] |= crossed;
                 let mut nc = cur_c;
                 nc[dec.dim] = (cur_c[dec.dim] + if dec.dir == 0 { 1 } else { k - 1 }) % k;
                 cur = chip_index(chip_dims, nc);
@@ -671,7 +702,108 @@ pub fn recompute_hybrid_tables_with(
             }
         }
     }
+    if let Some((chip, dim, dir, _lane, _vc)) = find_cycle(&schans, &sedges) {
+        let cc = chip_coords(chip_dims, chip);
+        let k = chip_dims[dim];
+        let mut nc = cc;
+        nc[dim] = (cc[dim] + if dir == 0 { 1 } else { k - 1 }) % k;
+        return Err(HierRecoveryError::DatelineHazard {
+            dim,
+            src_chip: chip,
+            dst_chip: chip_index(chip_dims, nc),
+        });
+    }
+
+    // Per-chip mesh dependence check on the installed BFS detour trees:
+    // delivery walks (VC 1, every tile a target) and outbound walks
+    // (VC 0, exactly the gateway tiles the installed decisions target —
+    // over-approximating the targets could refuse sound table sets).
+    // Purely mesh-level cycles cannot span chips, so each chip's graph
+    // over `(tile, direction, VC)` is checked in isolation.
+    for (chip, m) in g.meshes.iter().enumerate() {
+        let mut mchans: BTreeSet<MeshCh> = BTreeSet::new();
+        let mut medges: BTreeSet<(MeshCh, MeshCh)> = BTreeSet::new();
+        let mut record = |target: usize,
+                          vc: u8,
+                          mchans: &mut BTreeSet<MeshCh>,
+                          medges: &mut BTreeSet<(MeshCh, MeshCh)>| {
+            let dist = &mesh_dists[chip][target];
+            for t in 0..ntiles {
+                if t == target {
+                    continue;
+                }
+                let d = m.next_hop(dist, t, target).expect("mesh connectivity was checked");
+                let ch = (t, d, vc);
+                mchans.insert(ch);
+                let v = m.adj[t][d].expect("next_hop follows a live link");
+                if v != target {
+                    let dn = m.next_hop(dist, v, target).expect("mesh connectivity was checked");
+                    medges.insert((ch, (v, dn, vc)));
+                }
+            }
+        };
+        for stile in 0..ntiles {
+            record(stile, 1, &mut mchans, &mut medges);
+        }
+        for &gw in &used_gw[chip] {
+            record(gw, 0, &mut mchans, &mut medges);
+        }
+        if find_cycle(&mchans, &medges).is_some() {
+            return Err(HierRecoveryError::MeshCycle { chip });
+        }
+    }
     Ok(tables)
+}
+
+/// Directed off-chip channel identity in the dependence graph:
+/// `(tail chip index, ring dim, dir, lane, VC)`.
+type SerdesCh = (usize, usize, usize, usize, u8);
+/// Directed on-chip channel identity: `(tail tile index, mesh direction
+/// 0:X+ 1:X- 2:Y+ 3:Y-, VC)`.
+type MeshCh = (usize, usize, u8);
+
+/// Kahn topological check over a channel-dependence graph; returns a
+/// node lying on a dependence cycle when one exists. Deterministic
+/// (`BTree` collections), so a refusal reproduces bit-identically.
+fn find_cycle<N: Copy + Ord>(nodes: &BTreeSet<N>, edges: &BTreeSet<(N, N)>) -> Option<N> {
+    let mut indeg: BTreeMap<N, usize> = nodes.iter().map(|&v| (v, 0)).collect();
+    let mut succ: BTreeMap<N, Vec<N>> = BTreeMap::new();
+    for &(a, b) in edges {
+        *indeg.get_mut(&b).expect("edge endpoints are nodes") += 1;
+        succ.entry(a).or_default().push(b);
+    }
+    let mut q: VecDeque<N> = indeg
+        .iter()
+        .filter(|&(_, &d)| d == 0)
+        .map(|(&v, _)| v)
+        .collect();
+    let mut left: BTreeSet<N> = nodes.clone();
+    while let Some(u) = q.pop_front() {
+        left.remove(&u);
+        for &v in succ.get(&u).into_iter().flatten() {
+            let d = indeg.get_mut(&v).expect("edge endpoints are nodes");
+            *d -= 1;
+            if *d == 0 {
+                q.push_back(v);
+            }
+        }
+    }
+    // Kahn leftovers each keep >= 1 predecessor inside the leftover set,
+    // so walking predecessors from any of them must revisit a node —
+    // which then lies on a cycle.
+    let &start = left.iter().next()?;
+    let mut pred: BTreeMap<N, N> = BTreeMap::new();
+    for &(a, b) in edges {
+        if left.contains(&a) && left.contains(&b) {
+            pred.insert(b, a);
+        }
+    }
+    let mut seen: BTreeSet<N> = BTreeSet::new();
+    let mut cur = start;
+    while seen.insert(cur) {
+        cur = *pred.get(&cur).expect("leftover node has a leftover predecessor");
+    }
+    Some(cur)
 }
 
 /// Net-level hard-fault injection on a hybrid system: recompute the
@@ -810,35 +942,64 @@ mod tests {
     }
 
     #[test]
-    fn k4_ring_dateline_hazard_is_refused_even_fault_free() {
-        // On a k=4 chip ring the per-(node, dst) tables are unsound even
-        // with zero faults: src chip 3 -> dst chip 1 wraps at 3 -> 0 and
-        // then continues 0 -> 1 on VC 0 (the table at chip 0 evaluates
-        // the dateline as if it were the source). Previously this
-        // installed silently; now it must be refused with the documented
-        // error.
+    fn k4_and_larger_rings_are_accepted_fault_free() {
+        // The per-channel class scheme makes k >= 4 rings routable: the
+        // healthy VC assignment is class-consistent, so the CDG walk
+        // accepts what the old source-relative wrap-state convention had
+        // to refuse wholesale.
         let cfg = DnpConfig::hybrid();
-        match recompute_hybrid_tables([4, 1, 1], TILES, &[], &cfg) {
-            Err(HierRecoveryError::DatelineHazard { dim: 0, .. }) => {}
-            other => panic!("k=4 ring must be refused as a dateline hazard: {other:?}"),
+        for k in 4..=6u32 {
+            let tables = recompute_hybrid_tables([k, 1, 1], TILES, &[], &cfg)
+                .unwrap_or_else(|e| panic!("fault-free k={k} ring must be accepted: {e}"));
+            assert_eq!(tables.len(), (k * 4) as usize);
         }
+        // And the installed VCs are the static classes: toward dst chip
+        // 0 on k=4, chip 2's hop 2 ->+ 3 is pre-wrap (class 0) while
+        // chip 3's wrap hop 3 ->+ 0 rides the escape class.
+        let tables = recompute_hybrid_tables([4, 1, 1], TILES, &[], &cfg).unwrap();
+        let f4 = AddrFormat::Hybrid { chip_dims: [4, 1, 1], tile_dims: TILES };
+        let gw = gateway_tile(TILES, 0); // dim-0 gateway = tile (0,0) = tile index 0
+        let a = |c: u32| f4.encode(&[c, 0, 0, gw[0], gw[1]]);
+        let d2 = tables[2 * 4].decide(a(2), a(0), 0);
+        let d3 = tables[3 * 4].decide(a(3), a(0), 0);
+        assert_eq!(d2.vc, 0, "pre-wrap channel 2 ->+ 3 is class 0");
+        assert_eq!(d3.vc, 1, "wrap channel 3 ->+ 0 is the escape class");
     }
 
     #[test]
-    fn k3_ring_is_sound_fault_free_but_refused_on_post_wrap_detour() {
+    fn k3_post_wrap_detour_is_accepted_with_class_vcs() {
         let cfg = DnpConfig::hybrid();
-        // Fault-free k=3: every minimal route takes at most one hop per
-        // ring, so the stateless dateline convention is sound.
         assert!(recompute_hybrid_tables([3, 1, 1], TILES, &[], &cfg).is_ok());
-        // A dead + cable forces 0 -> 2 -> 1: the first hop wraps the
-        // dateline (0 -> 2 via the minus wire) and the second continues
-        // on the same ring with a healthy-consistent VC 0 — exactly the
-        // hazard the walk must catch.
+        // A dead + cable forces 0 -> 2 -> 1: the first hop wraps (0 -> 2
+        // over the minus wire, a deviating hop on escape VC 1), the
+        // second continues healthy-consistent on class 0. The old
+        // wrap-state walk refused this; the dependence graph has a
+        // single edge (wrap channel -> non-wrap channel) and no cycle,
+        // so the detour now installs.
         let dead = [HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: true }];
-        match recompute_hybrid_tables([3, 1, 1], TILES, &dead, &cfg) {
-            Err(HierRecoveryError::DatelineHazard { dim: 0, .. }) => {}
-            other => panic!("post-wrap detour must be refused: {other:?}"),
-        }
+        let tables = recompute_hybrid_tables([3, 1, 1], TILES, &dead, &cfg)
+            .unwrap_or_else(|e| panic!("post-wrap detour is class-sound: {e}"));
+        let f3 = AddrFormat::Hybrid { chip_dims: [3, 1, 1], tile_dims: TILES };
+        let gw = gateway_tile(TILES, 0);
+        let a = |c: u32| f3.encode(&[c, 0, 0, gw[0], gw[1]]);
+        let d0 = tables[0].decide(a(0), a(1), 0);
+        let d2 = tables[2 * 4].decide(a(2), a(1), 0);
+        assert_eq!(d0.out, OutSel::Port(cfg.n_ports + 1), "must take the X- wire");
+        assert_eq!(d0.vc, 1, "deviating wrap hop rides the escape VC");
+        assert_eq!(d2.out, OutSel::Port(cfg.n_ports + 1), "2 -> 1 stays on the minus wire");
+        assert_eq!(d2.vc, 0, "healthy-consistent post-wrap hop keeps class 0");
+    }
+
+    #[test]
+    fn dead_cable_on_4x4x4_recovers() {
+        // The headline unlock: single-cable fault recovery at 4x4x4 (64
+        // chips), formerly refused as a DatelineHazard before any routing
+        // even happened.
+        let cfg = DnpConfig::hybrid();
+        let dead = [HierLinkFault::Serdes { chip: [1, 2, 3], dim: 2, plus: true }];
+        let tables = recompute_hybrid_tables([4, 4, 4], TILES, &dead, &cfg)
+            .unwrap_or_else(|e| panic!("single dead cable on 4x4x4 must recover: {e}"));
+        assert_eq!(tables.len(), 256);
     }
 
     #[test]
@@ -916,7 +1077,7 @@ mod tests {
             let healthy = HierRouter::new_with(
                 me,
                 CHIPS,
-                gmap.clone(),
+                Arc::new(gmap.clone()),
                 cfg.route_order,
                 mesh_ports[u % 4],
                 off_ports[u % 4],
@@ -957,7 +1118,7 @@ mod tests {
         let healthy = HierRouter::new_with(
             addr([0, 0, 0], [0, 0]),
             CHIPS,
-            gmap.clone(),
+            Arc::new(gmap.clone()),
             cfg.route_order,
             mesh_ports[0],
             off_ports[0],
@@ -1025,14 +1186,18 @@ mod tests {
     }
 
     #[test]
-    fn dateline_hazard_message_names_the_ring_axis() {
-        let cfg = DnpConfig::hybrid();
-        let err = recompute_hybrid_tables([4, 1, 1], TILES, &[], &cfg).unwrap_err();
+    fn cycle_error_messages_name_the_offending_resource() {
+        // Real dependence cycles need adversarial multi-fault sets the
+        // shipped scenarios never produce; pin the Display formats on
+        // directly-constructed values instead.
+        let err = HierRecoveryError::DatelineHazard { dim: 0, src_chip: 3, dst_chip: 0 };
         let msg = err.to_string();
         assert!(
             msg.contains("the X chip ring") && msg.contains("dim 0"),
             "message must name the offending ring dimension: {msg}"
         );
+        let msg = HierRecoveryError::MeshCycle { chip: 5 }.to_string();
+        assert!(msg.contains("chip 5"), "mesh cycle must name its chip: {msg}");
     }
 
     /// Static all-pairs walk over the recovered tables for each acceptance

@@ -32,11 +32,12 @@
 //!    class, preserving the hierarchical deadlock argument documented in
 //!    `route/hier.rs`. The flat recomputation returns `None` when some
 //!    destination became unreachable; the hybrid one returns a
-//!    [`hier::HierRecoveryError`] naming the reason — disconnection,
-//!    a partitioned tile mesh, or a recovered VC assignment that would
-//!    violate the dateline discipline (see `fault/hier.rs` §Dateline
-//!    verification) — because reconfiguration cannot help and software
-//!    must fence the partition instead.
+//!    [`hier::HierRecoveryError`] naming the reason — disconnection, a
+//!    partitioned tile mesh, or a recovered route set that closes a
+//!    cycle in a channel-dependence graph over the per-channel dateline
+//!    classes (see `fault/hier.rs` §Dateline verification) — because
+//!    reconfiguration cannot help and software must fence the partition
+//!    instead.
 //! 4. **Installation** — [`apply_tables`] swaps every node's router for
 //!    its recomputed [`TableRouter`] (matched by DNP address, so any node
 //!    layout works) and installs a router factory that keeps the table

@@ -56,9 +56,13 @@ pub struct Decision {
 pub trait Router: Send + Sync {
     /// Decide the next hop for a packet injected at `src` headed to `dst`,
     /// currently travelling on `cur_vc`. Deterministic (static routing,
-    /// paper Sec. I). `src` lets ring routers compute the packet's wrap
-    /// status *statelessly* (the dateline VC assignment must reset per
-    /// ring; carrying the VC across dimensions would re-close the cycle).
+    /// paper Sec. I). `src` lets the flat torus routers compute a
+    /// packet's wrap status *statelessly* (their dateline VC assignment
+    /// resets per ring; carrying the VC across dimensions would re-close
+    /// the cycle). The hierarchical router does not need it for VC
+    /// selection: its off-chip VCs are static per-channel dateline
+    /// classes ([`hier::ring_class_vc`]), functions of the channel and
+    /// destination coordinate alone.
     fn decide(&self, src: DnpAddr, dst: DnpAddr, cur_vc: u8) -> Decision;
 
     /// Number of VCs this routing scheme requires for deadlock freedom.

@@ -37,6 +37,14 @@
 //!   `pop + credit_lat`; the runner restores it on the remote tx half at
 //!   exactly that cycle, matching the sequential credit-return wake.
 //!
+//! Boundary messages are VC-faithful: a flit crosses on exactly the
+//! virtual channel the sending shard's router chose — since the
+//! dateline-class rework that is the channel's static class VC
+//! ([`crate::route::hier::ring_class_vc`]), a function of the wire and
+//! the destination coordinate only — so the rx half replays it on the
+//! same `(link, vc)` pair and the sharded run stays bit-exact against
+//! the sequential scheduler with no VC translation at the barrier.
+//!
 //! A packet's metadata crosses with its head flit: the head ships a clone
 //! of the [`Packet`], the receiving shard inserts it into its own
 //! [`PacketStore`](crate::packet::PacketStore) and rewrites the flit's

@@ -46,6 +46,7 @@ use crate::route::{
 };
 use crate::sim::channel::{Channel, ChannelId};
 use crate::sim::Net;
+use std::sync::Arc;
 
 /// Default tile memory size (words). 256 KiB per tile.
 pub const DEFAULT_MEM_WORDS: usize = 1 << 16;
@@ -162,8 +163,10 @@ pub fn two_tiles_onchip(cfg: &DnpConfig, mem_words: usize) -> Net {
 
 /// Step from tile `t` in mesh direction `d` (0:X+, 1:X-, 2:Y+, 3:Y-) on a
 /// `dims` 2D mesh; `None` when the step would leave the mesh. Shared with
-/// the fault module's mesh survivor graph so both agree on what exists.
-pub(crate) fn mesh_step(dims: [u32; 2], t: [u32; 2], d: usize) -> Option<[u32; 2]> {
+/// the fault module's mesh survivor graph so both agree on what exists,
+/// and public so out-of-crate route-walk checks (the fault soak suite)
+/// can resolve ports to neighbours without a built net.
+pub fn mesh_step(dims: [u32; 2], t: [u32; 2], d: usize) -> Option<[u32; 2]> {
     let mut v = t;
     match d {
         0 if t[0] + 1 < dims[0] => v[0] += 1,
@@ -376,10 +379,12 @@ fn serdes_seed(chip: usize, s: &CableSlot) -> u64 {
 /// `gmap` (sequential over the off-chip block, in [`cable_slots`]
 /// order). Shared between [`hybrid_torus_mesh_with`] and the
 /// fault-recovery table recomputation ([`crate::fault::hier`]), which
-/// must agree on the wiring. Panics on a structurally invalid map (the
-/// fault layer validates first and returns a typed error instead).
+/// must agree on the wiring. Public so out-of-crate route-walk checks
+/// (the fault soak suite) can interpret installed tables statically.
+/// Panics on a structurally invalid map (the fault layer validates
+/// first and returns a typed error instead).
 #[allow(clippy::type_complexity)]
-pub(crate) fn hybrid_port_maps(
+pub fn hybrid_port_maps(
     chip_dims: [u32; 3],
     gmap: &GatewayMap,
     cfg: &DnpConfig,
@@ -433,6 +438,35 @@ pub struct HybridWiring {
 impl HybridWiring {
     fn node(&self, chip: [u32; 3], tile: [u32; 2]) -> usize {
         crate::traffic::hybrid_node_index(self.chip_dims, self.tile_dims, chip, tile)
+    }
+
+    /// Does the directed SerDes channel leaving `chip` along `dim` toward
+    /// `plus` cross the ring's dateline (the wrap cable between
+    /// coordinates `k-1` and `0`)? The wrap channel heads the escape
+    /// class of the per-channel dateline scheme (`route/hier.rs`).
+    pub fn crosses_dateline(&self, chip: [u32; 3], dim: usize, plus: bool) -> bool {
+        let k = self.chip_dims[dim];
+        if plus {
+            chip[dim] == k - 1
+        } else {
+            chip[dim] == 0
+        }
+    }
+
+    /// Static dateline VC class of the directed SerDes channel leaving
+    /// `chip` along `dim` toward `plus`, for flows destined to ring
+    /// coordinate `dst_coord` — delegates to
+    /// [`ring_class_vc`](crate::route::hier::ring_class_vc), the single
+    /// class function shared by the healthy [`HierRouter`] and fault
+    /// recovery, so tooling inspecting a wiring sees the exact VCs the
+    /// routers will use on each cable.
+    pub fn dateline_class(&self, chip: [u32; 3], dim: usize, plus: bool, dst_coord: u32) -> u8 {
+        crate::route::hier::ring_class_vc(
+            self.chip_dims[dim],
+            chip[dim],
+            dst_coord,
+            usize::from(!plus),
+        )
     }
 
     /// The two directed channels of the lane-`lane` SerDes cable leaving
@@ -670,6 +704,9 @@ pub fn hybrid_chip_subnet_with(
 
     let mut net = Net::new();
     let (mesh_in, mesh_out) = wire_mesh2d(&mut net, tile_dims, cfg);
+    // One shared gateway-map allocation for every router (and router
+    // factory) of this chip, instead of a deep clone per node (§Perf).
+    let agmap = Arc::new(gmap.clone());
 
     let me = chip_index3(chip_dims, chip);
     let mut cables = Vec::new();
@@ -730,7 +767,7 @@ pub fn hybrid_chip_subnet_with(
         let router = Box::new(HierRouter::new_with(
             addr,
             chip_dims,
-            gmap.clone(),
+            agmap.clone(),
             cfg.route_order,
             mesh_ports,
             off_ports,
@@ -744,7 +781,7 @@ pub fn hybrid_chip_subnet_with(
             mem_words,
             cq_base(cfg, mem_words),
         );
-        let fac_map = gmap.clone();
+        let fac_map = agmap.clone();
         node.set_router_factory(Box::new(move |order: RouteOrder| {
             Box::new(HierRouter::new_with(
                 addr,
@@ -845,6 +882,9 @@ pub fn hybrid_torus_mesh_wired_with(
     }
 
     // --- Nodes, in chip-major order (node index = chip * T + tile).
+    // One shared gateway-map allocation for all n routers and router
+    // factories (§Perf) instead of a deep clone per node.
+    let agmap = Arc::new(gmap.clone());
     for chip in 0..nchips {
         let cc = chip_coords(chip);
         for t in 0..ntiles {
@@ -878,7 +918,7 @@ pub fn hybrid_torus_mesh_wired_with(
             let router = Box::new(HierRouter::new_with(
                 addr,
                 chip_dims,
-                gmap.clone(),
+                agmap.clone(),
                 cfg.route_order,
                 mesh_ports,
                 off_ports,
@@ -893,7 +933,7 @@ pub fn hybrid_torus_mesh_wired_with(
                 cq_base(cfg, mem_words),
             );
             // Run-time route-priority rewrites reorder the chip DOR.
-            let fac_map = gmap.clone();
+            let fac_map = agmap.clone();
             node.set_router_factory(Box::new(move |order: RouteOrder| {
                 Box::new(HierRouter::new_with(
                     addr,
@@ -1011,6 +1051,28 @@ pub fn spidergon_chip(n: u32, cfg: &DnpConfig, mem_words: usize) -> Net {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn wiring_exposes_per_channel_dateline_classes() {
+        // The class metadata a HybridWiring reports must be the exact
+        // VCs the routers assign: wrap channels are class 1, pre-wrap
+        // channels class 0, and wrap-reachable destinations pull their
+        // post-wrap channels into the escape class (k=4 ring).
+        let cfg = DnpConfig::hybrid();
+        let (_, wiring) = hybrid_torus_mesh_wired([4, 2, 1], [2, 2], &cfg, 1 << 12);
+        assert!(wiring.crosses_dateline([3, 0, 0], 0, true));
+        assert!(wiring.crosses_dateline([0, 0, 0], 0, false));
+        assert!(!wiring.crosses_dateline([1, 0, 0], 0, true));
+        // Wrap channel 3 ->+ 0: always the escape class.
+        assert_eq!(wiring.dateline_class([3, 0, 0], 0, true, 1), 1);
+        // Channel 0 ->+ 1 toward x=1: minimal routes to x=1 can wrap
+        // (3 ->+ 0 ->+ 1), so the channel is class 1 for that target...
+        assert_eq!(wiring.dateline_class([0, 0, 0], 0, true, 1), 1);
+        // ...but class 0 toward x=2, which no minimal + route wraps to.
+        assert_eq!(wiring.dateline_class([0, 0, 0], 0, true, 2), 0);
+        // Pre-wrap channel 1 ->+ 2 toward x=0 (the wrap still ahead).
+        assert_eq!(wiring.dateline_class([1, 0, 0], 0, true, 0), 0);
+    }
 
     #[test]
     fn torus_2x2x2_has_8_dnps() {

@@ -9,9 +9,11 @@
 //! LQCD pattern), [`hotspot`] and [`permutation`] traffic, and their
 //! hierarchical twins for the hybrid multi-chip system
 //! ([`hybrid_uniform_random`], [`hybrid_halo_exchange`],
-//! [`hybrid_all_pairs`], [`hybrid_hotspot`] — the gateway-congestion
-//! stress). [`retrying_plan`] layers CQ-driven end-to-end retry on top
-//! of any plan.
+//! [`hybrid_all_pairs`], [`hybrid_chip_all_pairs`] — the chip-granular
+//! form that scales to 4x4x4+ — and [`hybrid_hotspot`], the
+//! gateway-congestion stress). [`retrying_plan`] layers CQ-driven
+//! end-to-end retry on top of any plan and reports failures as typed
+//! [`RetryError`]s.
 //!
 //! A plan can be executed under all three schedulers: [`run_plan`]
 //! (event-driven), [`run_plan_dense`] (dense reference) and
@@ -241,6 +243,50 @@ pub struct RetryReport {
     pub rounds: u32,
 }
 
+/// Why [`retrying_plan`] gave up. Every variant is a recoverable,
+/// caller-visible condition — the retry loop never panics on them, so a
+/// long campaign can log the failure, re-plan (smaller rounds, deeper CQ
+/// ring, repaired LUT) and move on instead of dying mid-run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetryError {
+    /// A round's [`run_plan`] hit its cycle budget (deadlock or an
+    /// undersized `max_cycles`). `round` 0 is the original plan; round
+    /// `r >= 1` is the r-th recovery round.
+    Timeout { round: u32 },
+    /// `max_rounds` recovery rounds still left error events behind
+    /// (e.g. a LUT miss nobody repairs); `retries` PUTs were re-issued
+    /// in total before giving up.
+    RoundsExhausted { retries: u64 },
+    /// Between two scans, `node`'s CQ ring wrapped past the software
+    /// reader: more events were completed than the ring holds, so some
+    /// error events were overwritten unread and the failed transfers
+    /// can no longer be reconstructed. Raise `cfg.cq_len` or split the
+    /// plan into smaller rounds. (`round` as in [`RetryError::Timeout`].)
+    CqLapped { node: usize, round: u32 },
+}
+
+impl std::fmt::Display for RetryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RetryError::Timeout { round } => {
+                write!(f, "retry round {round} timed out (deadlock or cycle budget too small)")
+            }
+            RetryError::RoundsExhausted { retries } => {
+                write!(f, "error events remained after the allowed recovery rounds ({retries} PUTs re-issued)")
+            }
+            RetryError::CqLapped { node, round } => {
+                write!(
+                    f,
+                    "node {node}: CQ ring lapped before the round-{round} scan \
+                     (raise cfg.cq_len or split the plan into rounds)"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for RetryError {}
+
 /// Run `plan` with end-to-end retry driven by the destination CQs: after
 /// each drained round, software polls every DNP's completion queue, and
 /// every `CorruptPayload` (payload bit errors on a BER-afflicted SerDes
@@ -256,8 +302,13 @@ pub struct RetryReport {
 ///
 /// `LutMiss` retries only succeed once software repairs the registration;
 /// use [`retrying_plan_with`] to run a repair hook before each round.
-/// Returns `None` when a round times out or `max_rounds` recovery rounds
-/// were not enough (e.g. a LUT miss nobody repairs).
+/// Returns a typed [`RetryError`] when a round times out
+/// ([`Timeout`](RetryError::Timeout)), `max_rounds` recovery rounds were
+/// not enough (e.g. a LUT miss nobody repairs —
+/// [`RoundsExhausted`](RetryError::RoundsExhausted)), or a CQ ring
+/// wrapped past its reader between scans, losing error events
+/// ([`CqLapped`](RetryError::CqLapped)) — never by panicking, so callers
+/// can re-plan and continue a campaign.
 ///
 /// ```
 /// use dnp::config::DnpConfig;
@@ -286,7 +337,7 @@ pub fn retrying_plan(
     plan: Vec<Planned>,
     max_cycles: u64,
     max_rounds: u32,
-) -> Option<RetryReport> {
+) -> Result<RetryReport, RetryError> {
     retrying_plan_with(net, plan, max_cycles, max_rounds, |_, _| {})
 }
 
@@ -327,7 +378,7 @@ pub fn retrying_plan_with(
     max_cycles: u64,
     max_rounds: u32,
     mut repair: impl FnMut(&mut Net, u32),
-) -> Option<RetryReport> {
+) -> Result<RetryReport, RetryError> {
     // Reconstruction table: (source node, destination node, window) →
     // source memory address, from the plan itself — the CQ error event
     // does not carry the source offset.
@@ -349,7 +400,9 @@ pub fn retrying_plan_with(
         .collect();
     let start = net.cycle;
     let mut feeder = Feeder::new(plan);
-    run_plan(net, &mut feeder, max_cycles)?;
+    if run_plan(net, &mut feeder, max_cycles).is_none() {
+        return Err(RetryError::Timeout { round: 0 });
+    }
     let mut retries = 0u64;
     let mut rounds = 0u32;
     let mut retry_tag = RETRY_TAG_BASE;
@@ -362,13 +415,14 @@ pub fn retrying_plan_with(
             let d = net.dnp(node);
             // The scan runs once per round: a node that completed more
             // events than the ring holds has overwritten slots we never
-            // read — fail loudly instead of silently dropping (or
-            // double-reading) error events.
-            assert!(
-                d.cq.written - rd.consumed() <= d.cfg.cq_len as u64,
-                "node {node}: CQ ring lapped between retry rounds \
-                 (raise cfg.cq_len or split the plan into rounds)"
-            );
+            // read, so error events may be lost and the failed transfers
+            // cannot be reconstructed. Report it as a typed failure
+            // instead of silently dropping (or double-reading) events —
+            // and instead of panicking, which would kill a whole campaign
+            // over one undersized ring.
+            if d.cq.written - rd.consumed() > d.cfg.cq_len as u64 {
+                return Err(RetryError::CqLapped { node, round: rounds });
+            }
             let me = d.addr;
             loop {
                 let ev = {
@@ -396,10 +450,10 @@ pub fn retrying_plan_with(
             }
         }
         if redo.is_empty() {
-            return Some(RetryReport { elapsed: net.cycle - start, retries, rounds });
+            return Ok(RetryReport { elapsed: net.cycle - start, retries, rounds });
         }
         if rounds >= max_rounds {
-            return None;
+            return Err(RetryError::RoundsExhausted { retries });
         }
         rounds += 1;
         retries += redo.len() as u64;
@@ -409,7 +463,9 @@ pub fn retrying_plan_with(
             src_of.insert((p.node, dst, p.cmd.dst_addr), p.cmd.src_addr);
         }
         let mut feeder = Feeder::new(redo);
-        run_plan(net, &mut feeder, max_cycles)?;
+        if run_plan(net, &mut feeder, max_cycles).is_none() {
+            return Err(RetryError::Timeout { round: rounds });
+        }
     }
 }
 
@@ -562,6 +618,69 @@ pub fn hybrid_all_pairs(chip_dims: [u32; 3], tile_dims: [u32; 2], len: u32) -> V
                 at: (slot as u64) * 7 + (peer as u64) * 3,
                 cmd: Command::put(TX_BASE, dst, rx_addr(slot), len)
                     .with_tag((slot * 100 + peer) as u32),
+            });
+        }
+    }
+    plan
+}
+
+/// [`setup_buffers`] at chip granularity, for hybrid systems too large
+/// for per-node windows (a 4x4x4 x 2x2 system has 256 nodes; 256 RX
+/// windows would blow both the 64-record LUT and the tile memory).
+/// Every DNP registers one RX window per *source chip* —
+/// `RX_BASE + src_chip * RX_WINDOW` — and fills its TX window with the
+/// per-node recognizable pattern (`node << 16 | i`), matching
+/// [`hybrid_chip_all_pairs`].
+pub fn setup_chip_buffers(net: &mut Net, nchips: usize) {
+    let n = net.nodes.len();
+    for k in 0..n {
+        let dnp = net.dnp_mut(k);
+        for chip in 0..nchips {
+            dnp.register_buffer(RX_BASE + chip as u32 * RX_WINDOW, RX_WINDOW, crate::rdma::LUT_SENDOK)
+                .expect("LUT capacity (one record per chip)");
+        }
+        let pattern: Vec<u32> = (0..RX_WINDOW).map(|i| (k as u32) << 16 | i).collect();
+        dnp.mem.write_slice(TX_BASE, &pattern);
+    }
+}
+
+/// All-pairs at **chip** granularity: one PUT per ordered chip pair,
+/// from a tile of the source chip to a tile of the destination chip
+/// (tile indices rotate with the pair so the on-chip mesh legs vary),
+/// landing in the window the receiver exposes to the source *chip*
+/// ([`setup_chip_buffers`]). Tag = `src_chip * nchips + dst_chip`,
+/// issue cycles staggered per pair. This is the acceptance workload of
+/// the k≥4 fault matrix: every SerDes ring is crossed in both
+/// directions, with O(nchips^2) packets instead of the O(n^2) of
+/// [`hybrid_all_pairs`].
+pub fn hybrid_chip_all_pairs(chip_dims: [u32; 3], tile_dims: [u32; 2], len: u32) -> Vec<Planned> {
+    let fmt = AddrFormat::Hybrid { chip_dims, tile_dims };
+    let nchips = (chip_dims[0] * chip_dims[1] * chip_dims[2]) as usize;
+    let tiles = (tile_dims[0] * tile_dims[1]) as usize;
+    let chip_coords = |c: usize| -> [u32; 3] {
+        [
+            c as u32 % chip_dims[0],
+            (c as u32 / chip_dims[0]) % chip_dims[1],
+            c as u32 / (chip_dims[0] * chip_dims[1]),
+        ]
+    };
+    let tile_coords = |t: usize| -> [u32; 2] { [t as u32 % tile_dims[0], t as u32 / tile_dims[0]] };
+    let mut plan = Vec::new();
+    for sc in 0..nchips {
+        for dc in 0..nchips {
+            if dc == sc {
+                continue;
+            }
+            let st = tile_coords((sc + dc) % tiles);
+            let dt = tile_coords((sc * 3 + dc) % tiles);
+            let node = hybrid_node_index(chip_dims, tile_dims, chip_coords(sc), st);
+            let d = chip_coords(dc);
+            let dst = fmt.encode(&[d[0], d[1], d[2], dt[0], dt[1]]);
+            plan.push(Planned {
+                node,
+                at: (sc as u64) * 7 + (dc as u64) * 3,
+                cmd: Command::put(TX_BASE, dst, RX_BASE + sc as u32 * RX_WINDOW, len)
+                    .with_tag((sc * nchips + dc) as u32),
             });
         }
     }
@@ -1015,11 +1134,44 @@ mod tests {
             at: 0,
             cmd: Command::put(TX_BASE, fmt.encode(&[1, 0, 0]), rx_addr(0), 1).with_tag(1),
         }];
-        assert!(
-            retrying_plan(&mut net, plan, 1_000_000, 2).is_none(),
-            "nobody repairs the LUT: the retry loop must give up"
+        assert_eq!(
+            retrying_plan(&mut net, plan, 1_000_000, 2),
+            Err(RetryError::RoundsExhausted { retries: 2 }),
+            "nobody repairs the LUT: the retry loop must give up with a typed error"
         );
         assert_eq!(net.traces.lut_misses, 3, "original attempt + 2 retry rounds");
+    }
+
+    #[test]
+    fn cq_lap_between_rounds_is_a_typed_error_not_a_panic() {
+        // An undersized CQ ring: more deliveries land at node 1 than its
+        // ring holds, so by the time the post-round scan runs the writer
+        // has lapped the software reader and error events may be gone.
+        // The loop must report `CqLapped` (naming the node) instead of
+        // panicking mid-campaign.
+        let mut cfg = DnpConfig::shapes_rdt();
+        cfg.cq_len = 4;
+        let mut net = topology::two_tiles_offchip(&cfg, 1 << 16);
+        let fmt = AddrFormat::Torus3D { dims: [2, 1, 1] };
+        let dst = fmt.encode(&[1, 0, 0]);
+        net.dnp_mut(1)
+            .register_buffer(rx_addr(0), RX_WINDOW, LUT_SENDOK)
+            .expect("LUT capacity");
+        net.dnp_mut(0).mem.write_slice(TX_BASE, &[7; 8]);
+        // 8 clean PUTs: 8 PacketWritten events in a 4-deep ring.
+        let plan: Vec<Planned> = (0..8)
+            .map(|i| Planned {
+                node: 0,
+                at: i as u64 * 200,
+                cmd: Command::put(TX_BASE, dst, rx_addr(0), 1).with_tag(i),
+            })
+            .collect();
+        match retrying_plan(&mut net, plan, 1_000_000, 3) {
+            Err(RetryError::CqLapped { node, round: 0 }) => {
+                assert!(node <= 1, "lap detected on a node of this net");
+            }
+            other => panic!("expected CqLapped, got {other:?}"),
+        }
     }
 
     #[test]

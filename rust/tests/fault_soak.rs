@@ -1,0 +1,229 @@
+//! Randomized multi-fault soak on the 4x4x4 hybrid system (ISSUE 6
+//! acceptance): kill random SerDes cables and mesh links, one at a time,
+//! until the system disconnects. Every `recompute_hybrid_tables_with`
+//! call must either install class-sound tables or return a typed
+//! `HierRecoveryError` — never panic — and while the system stays
+//! connected the recovered tables must still deliver all-pairs (checked
+//! by static route walks that avoid every dead wire).
+//!
+//! Tables-only: no `Net` is built. The walk interprets the installed
+//! `TableRouter`s against the builder's port maps
+//! (`topology::hybrid_port_maps`), exactly as the in-crate
+//! `all_pairs_walk_avoids_dead_links` test does at 2x2x1 scale.
+
+use dnp::config::DnpConfig;
+use dnp::fault::{recompute_hybrid_tables_with, HierLinkFault, HierRecoveryError};
+use dnp::packet::AddrFormat;
+use dnp::route::hier::gateway_tile;
+use dnp::route::{GatewayMap, OutSel, Router, TableRouter};
+use dnp::topology::{hybrid_port_maps, mesh_step};
+use dnp::traffic::{hybrid_coords, hybrid_node_index};
+use dnp::util::SplitMix64;
+use std::collections::HashSet;
+
+const CHIPS: [u32; 3] = [4, 4, 4];
+const TILES: [u32; 2] = [2, 2];
+const NTILES: usize = 4;
+const N: usize = 256;
+
+fn fmt() -> AddrFormat {
+    AddrFormat::Hybrid { chip_dims: CHIPS, tile_dims: TILES }
+}
+
+fn node(c: [u32; 3], t: [u32; 2]) -> usize {
+    hybrid_node_index(CHIPS, TILES, c, t)
+}
+
+fn chip_coords(i: u32) -> [u32; 3] {
+    [i % CHIPS[0], (i / CHIPS[0]) % CHIPS[1], i / (CHIPS[0] * CHIPS[1])]
+}
+
+/// Every distinct physical link of the system, each named once (the `+`
+/// naming; killing a cable kills both directed wires).
+fn link_pool() -> Vec<HierLinkFault> {
+    let mut pool = Vec::new();
+    for ci in 0..CHIPS.iter().product::<u32>() {
+        let chip = chip_coords(ci);
+        for dim in 0..3 {
+            pool.push(HierLinkFault::Serdes { chip, dim, plus: true });
+        }
+        for ty in 0..TILES[1] {
+            for tx in 0..TILES[0] {
+                for dim in 0..2 {
+                    if mesh_step(TILES, [tx, ty], dim * 2).is_some() {
+                        pool.push(HierLinkFault::Mesh { chip, tile: [tx, ty], dim, plus: true });
+                    }
+                }
+            }
+        }
+    }
+    pool
+}
+
+/// Dead (node, physical out-port) pairs — both directions of each fault.
+fn dead_ports(
+    faults: &[HierLinkFault],
+    mesh_ports: &[[Option<usize>; 4]],
+    off_ports: &[[[Option<usize>; 2]; 3]],
+) -> HashSet<(usize, usize)> {
+    let mut dead = HashSet::new();
+    for f in faults {
+        match *f {
+            HierLinkFault::Serdes { chip, dim, plus } => {
+                let gw = gateway_tile(TILES, dim);
+                let d = usize::from(!plus);
+                let mut nc = chip;
+                nc[dim] = (chip[dim] + if plus { 1 } else { CHIPS[dim] - 1 }) % CHIPS[dim];
+                let g = (gw[0] + gw[1] * TILES[0]) as usize;
+                dead.insert((node(chip, gw), off_ports[g][dim][d].unwrap()));
+                dead.insert((node(nc, gw), off_ports[g][dim][1 - d].unwrap()));
+            }
+            HierLinkFault::SerdesLane { .. } => {
+                unreachable!("the Fixed-map pool names lane-0 cables via Serdes")
+            }
+            HierLinkFault::Mesh { chip, tile, dim, plus } => {
+                let d = dim * 2 + usize::from(!plus);
+                let nt = mesh_step(TILES, tile, d).unwrap();
+                let back = [1usize, 0, 3, 2][d];
+                let ti = (tile[0] + tile[1] * TILES[0]) as usize;
+                let ni = (nt[0] + nt[1] * TILES[0]) as usize;
+                dead.insert((node(chip, tile), mesh_ports[ti][d].unwrap()));
+                dead.insert((node(chip, nt), mesh_ports[ni][back].unwrap()));
+            }
+        }
+    }
+    dead
+}
+
+/// Follow the installed tables from `s` to `d`, asserting arrival within
+/// `bound` hops and that no hop uses a dead (node, port) pair.
+fn walk_pair(
+    tables: &[TableRouter],
+    mesh_ports: &[[Option<usize>; 4]],
+    off_ports: &[[[Option<usize>; 2]; 3]],
+    dead: &HashSet<(usize, usize)>,
+    s: usize,
+    d: usize,
+    label: &str,
+) {
+    let src = fmt().encode(&hybrid_coords(CHIPS, TILES, s));
+    let dst = fmt().encode(&hybrid_coords(CHIPS, TILES, d));
+    let mut cur = s;
+    let mut vc = 0u8;
+    for hop in 0..512 {
+        let dec = tables[cur].decide(src, dst, vc);
+        let port = match dec.out {
+            OutSel::Local => {
+                assert_eq!(cur, d, "{label}: {s} -> {d} delivered at the wrong node");
+                return;
+            }
+            OutSel::Port(p) => p,
+        };
+        assert!(
+            !dead.contains(&(cur, port)),
+            "{label}: {s} -> {d} rides dead port {port} at node {cur} (hop {hop})"
+        );
+        // Resolve the port to the neighbour it is wired to.
+        let c = hybrid_coords(CHIPS, TILES, cur);
+        let t = cur % NTILES;
+        let mut nxt = None;
+        for (md, p) in mesh_ports[t].iter().enumerate() {
+            if *p == Some(port) {
+                let nt = mesh_step(TILES, [c[3], c[4]], md).expect("wired mesh port");
+                nxt = Some(node([c[0], c[1], c[2]], nt));
+            }
+        }
+        for (dim, pair) in off_ports[t].iter().enumerate() {
+            for (dir, p) in pair.iter().enumerate() {
+                if *p == Some(port) {
+                    let k = CHIPS[dim];
+                    let mut nc = [c[0], c[1], c[2]];
+                    nc[dim] = (nc[dim] + if dir == 0 { 1 } else { k - 1 }) % k;
+                    nxt = Some(node(nc, [c[3], c[4]]));
+                }
+            }
+        }
+        cur = nxt.unwrap_or_else(|| panic!("{label}: walk used unwired port {port} at {cur}"));
+        vc = dec.vc;
+    }
+    panic!("{label}: {s} -> {d} did not arrive within 512 hops");
+}
+
+#[test]
+fn randomized_multi_fault_soak_until_disconnection() {
+    let cfg = DnpConfig::hybrid();
+    let gmap = GatewayMap::fixed(TILES);
+    let (mesh_ports, off_ports) = hybrid_port_maps(CHIPS, &gmap, &cfg);
+
+    // Fisher-Yates over every physical link, with the deterministic
+    // generator the traffic layer uses — the kill order is reproducible.
+    let mut pool = link_pool();
+    let mut rng = SplitMix64::new(0x5041_6B21_D00D_F00D);
+    for i in (1..pool.len()).rev() {
+        pool.swap(i, rng.below(i as u64 + 1) as usize);
+    }
+
+    let mut active: Vec<HierLinkFault> = Vec::new();
+    let mut last_good = recompute_hybrid_tables_with(CHIPS, &gmap, &[], &cfg)
+        .expect("healthy 4x4x4 must install (the k>=4 blanket refusal is gone)");
+    let mut accepted = 0usize;
+    let mut refused = 0usize;
+    let mut disconnected = false;
+
+    for f in pool {
+        let mut trial = active.clone();
+        trial.push(f);
+        // The contract under test: Ok with sound tables, or a typed
+        // error — a panic anywhere in here fails the test.
+        match recompute_hybrid_tables_with(CHIPS, &gmap, &trial, &cfg) {
+            Ok(tables) => {
+                active = trial;
+                accepted += 1;
+                // Sampled per-step walks: a handful of random pairs must
+                // deliver over every intermediate fault set, not just the
+                // final one.
+                if accepted % 16 == 0 {
+                    let dead = dead_ports(&active, &mesh_ports, &off_ports);
+                    for _ in 0..32 {
+                        let s = rng.below(N as u64) as usize;
+                        let mut d = rng.below(N as u64) as usize;
+                        if d == s {
+                            d = (d + 1) % N;
+                        }
+                        walk_pair(&tables, &mesh_ports, &off_ports, &dead, s, d, "sampled");
+                    }
+                }
+                last_good = tables;
+            }
+            Err(HierRecoveryError::ChipTorusDisconnected)
+            | Err(HierRecoveryError::MeshPartitioned { .. }) => {
+                disconnected = true;
+                break;
+            }
+            Err(_) => {
+                // A sound typed refusal (e.g. the route set would close a
+                // channel-dependence cycle): the campaign skips this link
+                // and keeps degrading on the previously installed tables.
+                refused += 1;
+            }
+        }
+    }
+
+    assert!(
+        disconnected,
+        "killing links from a finite pool must eventually disconnect \
+         ({accepted} accepted, {refused} refused)"
+    );
+    assert!(accepted >= 10, "the soak must survive a real multi-fault load, got {accepted}");
+
+    // Survivors deliver all-pairs: every pair routes to the right node
+    // over the last accepted fault set, never touching a dead wire.
+    let dead = dead_ports(&active, &mesh_ports, &off_ports);
+    for s in 0..N {
+        for d in 0..N {
+            if d != s {
+                walk_pair(&last_good, &mesh_ports, &off_ports, &dead, s, d, "final");
+            }
+        }
+    }
+}

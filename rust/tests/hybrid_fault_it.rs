@@ -4,6 +4,11 @@
 //! all-pairs PUT traffic and assert full delivery with intact payloads,
 //! zero flits on the dead wires, and no deadlock under the event-driven
 //! scheduler. Plus the cross-chip BER + CQ-driven retry loop.
+//!
+//! The same matrix runs at 4x4x4 chips (ISSUE 6 acceptance) with
+//! chip-granular all-pairs traffic: k=4 rings route and recover under
+//! the per-channel dateline classes — these scenarios were refused
+//! outright (`DatelineHazard`) before the class rework.
 
 use dnp::config::DnpConfig;
 use dnp::fault::{self, HierLinkFault};
@@ -13,6 +18,10 @@ const CHIPS: [u32; 3] = [2, 2, 1];
 const TILES: [u32; 2] = [2, 2];
 const N: usize = 16;
 const LEN: u32 = 8;
+
+const CHIPS4: [u32; 3] = [4, 4, 4];
+const NCHIPS4: usize = 64;
+const MEM4: usize = 1 << 17; // 64 per-chip RX windows end at 0x14000
 
 /// Inject `faults`, run all-pairs, and assert the acceptance criteria.
 fn run_scenario(faults: &[HierLinkFault], label: &str) {
@@ -60,6 +69,50 @@ fn run_scenario(faults: &[HierLinkFault], label: &str) {
             let want: Vec<u32> = (0..LEN).map(|i| (slot as u32) << 16 | i).collect();
             assert_eq!(got, &want[..], "{label}: payload {slot} -> {peer} damaged");
         }
+    }
+
+    // The dead wires carried zero flits.
+    for ch in dead {
+        assert_eq!(
+            net.chans.get(ch).words_sent,
+            0,
+            "{label}: dead channel {ch:?} carried flits"
+        );
+    }
+}
+
+/// Inject `faults` on the 4x4x4 system, run chip-granular all-pairs,
+/// and assert the acceptance criteria — the k≥4 twin of `run_scenario`.
+fn run_chip_scenario(faults: &[HierLinkFault], label: &str) {
+    let cfg = DnpConfig::hybrid();
+    let (mut net, wiring) = topology::hybrid_torus_mesh_wired(CHIPS4, TILES, &cfg, MEM4);
+    traffic::setup_chip_buffers(&mut net, NCHIPS4);
+    let dead = fault::inject_hybrid(&mut net, &wiring, faults, &cfg)
+        .unwrap_or_else(|e| panic!("{label}: fault set must be recoverable at k=4: {e}"));
+    assert_eq!(dead.len(), faults.len() * 2, "{label}: two wires per fault");
+
+    let plan = traffic::hybrid_chip_all_pairs(CHIPS4, TILES, LEN);
+    let total = plan.len() as u64;
+    let originals = plan.clone();
+    let mut feeder = traffic::Feeder::new(plan);
+    traffic::run_plan(&mut net, &mut feeder, 20_000_000)
+        .unwrap_or_else(|| panic!("{label}: chip all-pairs must drain post-fault (deadlock?)"));
+
+    assert_eq!(net.traces.delivered, total, "{label}: every PUT delivered");
+    assert_eq!(net.traces.lut_misses, 0, "{label}");
+    assert_eq!(net.traces.corrupt_packets, 0, "{label}");
+
+    // Delivery at the right node with an intact payload, per chip pair.
+    for p in &originals {
+        let sc = (p.cmd.tag / NCHIPS4 as u32) as usize;
+        let t = net
+            .pkt_of_tag(p.cmd.tag)
+            .unwrap_or_else(|| panic!("{label}: no trace for tag {}", p.cmd.tag));
+        let dst = net.node_of(p.cmd.dst_dnp);
+        assert_eq!(t.dst_node, Some(dst), "{label}: tag {} landed elsewhere", p.cmd.tag);
+        let got = net.dnp(dst).mem.read_slice(p.cmd.dst_addr, LEN as usize);
+        let want: Vec<u32> = (0..LEN).map(|i| (p.node as u32) << 16 | i).collect();
+        assert_eq!(got, &want[..], "{label}: payload chip {sc} -> node {dst} damaged");
     }
 
     // The dead wires carried zero flits.
@@ -147,6 +200,78 @@ fn cross_chip_ber_retry_loop_recovers_payloads() {
         let got = net.dnp(dst).mem.read_slice(p.cmd.dst_addr, p.cmd.len as usize);
         let want: Vec<u32> = (0..p.cmd.len).map(|i| (p.node as u32) << 16 | i).collect();
         assert_eq!(got, &want[..], "window {} -> {dst} left corrupted", p.node);
+    }
+}
+
+/// 4x4x4 (i): a dead SerDes cable on a k=4 ring — the scenario the
+/// pre-class recovery refused outright with `DatelineHazard`.
+#[test]
+fn dead_serdes_link_4x4x4_recovers() {
+    run_chip_scenario(
+        &[HierLinkFault::Serdes { chip: [1, 2, 3], dim: 2, plus: true }],
+        "4x4x4 dead SerDes link",
+    );
+}
+
+/// 4x4x4 (ii): every off-chip cable of one chip's dim-0 gateway dies —
+/// the dimension's traffic re-homes onto another ring.
+#[test]
+fn dead_gateway_4x4x4_recovers() {
+    run_chip_scenario(
+        &[
+            HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: true },
+            HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: false },
+        ],
+        "4x4x4 dead gateway",
+    );
+}
+
+/// 4x4x4 (iii): one on-chip mesh link dies — intra-chip XY detours,
+/// while every k=4 ring stays on its healthy class routes.
+#[test]
+fn dead_mesh_link_4x4x4_recovers() {
+    run_chip_scenario(
+        &[HierLinkFault::Mesh { chip: [2, 1, 0], tile: [0, 0], dim: 0, plus: true }],
+        "4x4x4 dead mesh link",
+    );
+}
+
+/// 4x4x4 combined: a SerDes cable and a mesh link in different chips.
+#[test]
+fn combined_faults_4x4x4_recover() {
+    run_chip_scenario(
+        &[
+            HierLinkFault::Serdes { chip: [3, 0, 1], dim: 1, plus: true },
+            HierLinkFault::Mesh { chip: [1, 3, 2], tile: [1, 0], dim: 1, plus: true },
+        ],
+        "4x4x4 combined faults",
+    );
+}
+
+/// 4x4x4 BER + retry: soft faults on the k=4 rings' SerDes links are
+/// retried end-to-end until every per-chip window holds clean data.
+#[test]
+fn cross_chip_ber_retry_4x4x4_recovers_payloads() {
+    let mut cfg = DnpConfig::hybrid();
+    cfg.serdes.ber_per_word = 1e-3; // SerDes links only
+    let mut net = topology::hybrid_torus_mesh(CHIPS4, TILES, &cfg, MEM4);
+    traffic::setup_chip_buffers(&mut net, NCHIPS4);
+    let plan = traffic::hybrid_chip_all_pairs(CHIPS4, TILES, LEN);
+    let originals = plan.clone();
+    let report = traffic::retrying_plan(&mut net, plan, 20_000_000, 40)
+        .expect("retry loop must converge at 4x4x4");
+    assert_eq!(net.traces.lut_misses, 0);
+    assert_eq!(report.retries, net.traces.corrupt_packets);
+    assert!(
+        net.traces.corrupt_packets > 0,
+        "BER 1e-3 over {} cross-chip PUTs must corrupt at least one payload",
+        originals.len()
+    );
+    for p in &originals {
+        let dst = net.node_of(p.cmd.dst_dnp);
+        let got = net.dnp(dst).mem.read_slice(p.cmd.dst_addr, LEN as usize);
+        let want: Vec<u32> = (0..LEN).map(|i| (p.node as u32) << 16 | i).collect();
+        assert_eq!(got, &want[..], "window of tag {} left corrupted", p.cmd.tag);
     }
 }
 

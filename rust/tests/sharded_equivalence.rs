@@ -322,6 +322,83 @@ fn dim_pair_3x3x1_sharded_matches_event() {
 }
 
 #[test]
+fn midrun_reconfig_in_flight_three_way_equivalence() {
+    // The sharded analogue of `faulted_torus_reconfig_matches_dense`:
+    // recovery tables installed **mid-run**, with wormholes and commands
+    // in flight, must leave dense, event and sharded (w1/w2/w4) stepping
+    // bit-exact. The cut exploits the budget contract: a timed-out run
+    // parks every mode's clock at exactly `start + budget`, so phase B
+    // resumes from an identical machine state in all modes.
+    let cfg = DnpConfig::hybrid();
+    let dead = HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: true };
+    let plan = traffic::hybrid_all_pairs(CHIPS, TILES, 24);
+    let max_at = plan.iter().map(|p| p.at).max().expect("non-empty plan");
+    let tables =
+        || fault::recompute_hybrid_tables(CHIPS, TILES, &[dead], &cfg).expect("recoverable");
+
+    // Healthy drain time fixes the cut: halfway through the run, but
+    // past the last planned issue cycle — `run_plan` (sharded) replaces
+    // the per-shard feeders wholesale, so phase B must start with every
+    // command already issued.
+    let d = {
+        let mut net = topology::hybrid_torus_mesh(CHIPS, TILES, &cfg, MEM);
+        let slots: Vec<usize> = (0..N).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        let mut feeder = traffic::Feeder::new(plan.clone());
+        traffic::run_plan(&mut net, &mut feeder, 2_000_000).expect("healthy drain")
+    };
+    let cut = (d / 2).max(max_at + 1);
+    assert!(cut < d, "cut must land mid-run (drain {d}, last issue {max_at})");
+
+    // Sequential event leg: phase A to the cut, swap, phase B to drain.
+    let run_seq = |dense: bool| -> (Option<u64>, Snapshot) {
+        let (mut net, wiring) = topology::hybrid_torus_mesh_wired(CHIPS, TILES, &cfg, MEM);
+        let n = net.nodes.len();
+        let slots: Vec<usize> = (0..n).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        let mut feeder = traffic::Feeder::new(plan.clone());
+        let a = if dense {
+            traffic::run_plan_dense(&mut net, &mut feeder, cut)
+        } else {
+            traffic::run_plan(&mut net, &mut feeder, cut)
+        };
+        assert!(a.is_none(), "phase A must still be draining at the cut");
+        // Packets genuinely in flight at the swap.
+        let sent: u64 = net.nodes.iter().filter_map(|x| x.as_dnp().map(|d| d.pkts_sent)).sum();
+        let recv: u64 = net.nodes.iter().filter_map(|x| x.as_dnp().map(|d| d.pkts_recv)).sum();
+        assert!(sent > recv, "cut at {cut}: no packets in flight (sent {sent}, recv {recv})");
+        fault::inject_hybrid(&mut net, &wiring, &[dead], &cfg).expect("recoverable");
+        let b = if dense {
+            traffic::run_plan_dense(&mut net, &mut feeder, 4_000_000)
+        } else {
+            traffic::run_plan(&mut net, &mut feeder, 4_000_000)
+        };
+        assert!(b.is_some(), "phase B must drain over the recovered tables");
+        let snap = snapshot_event(&net, &wiring, b);
+        (b, snap)
+    };
+    let (seq_b, seq) = run_seq(false);
+    let (dense_b, dense) = run_seq(true);
+    assert_eq!(seq_b, dense_b, "dense vs event phase-B drain cycle");
+    assert_eq!(seq, dense, "mid-run reconfig: dense vs event diverged");
+
+    // Sharded legs.
+    for workers in [1usize, 2, 4] {
+        let mut snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, MEM, workers);
+        traffic::setup_buffers_sharded(&mut snet);
+        assert!(
+            traffic::run_plan_sharded(&mut snet, plan.clone(), cut).is_none(),
+            "sharded (w{workers}): phase A must still be draining at the cut"
+        );
+        snet.apply_tables(tables());
+        let b = traffic::run_plan_sharded(&mut snet, vec![], 4_000_000);
+        assert_eq!(seq_b, b, "sharded (w{workers}): phase-B drain cycle diverged");
+        let shd = snapshot_sharded(&mut snet, b);
+        assert_eq!(seq, shd, "mid-run reconfig (w{workers}): sharded diverged");
+    }
+}
+
+#[test]
 fn sharded_budget_edge_matches_event() {
     // The module-level budget contract (traffic docs): with the budget at
     // the exact drain time D both modes report Some(D); at D-1 both
