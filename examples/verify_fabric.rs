@@ -1,0 +1,72 @@
+//! Whole-fabric static verification sweep (ISSUE 7 acceptance).
+//!
+//! Runs [`dnp::verify`] over the shipped configuration matrix — chip
+//! tori `[k,k,1]` for k = 2..=5 plus the full 4×4×4 system, under each
+//! gateway policy (`Fixed`, `DimPair`, `DstHash`), healthy and after a
+//! fault recovery — and prints one greppable `[verify]` row per cell
+//! for the CI experiments-summary artifact (EXPERIMENTS.md §Verify
+//! documents the harvest line). No simulation: every row is a static
+//! proof obligation (all-pairs delivery over live wires, bounded hops,
+//! unified cross-layer CDG acyclicity).
+//!
+//! Run: `cargo run --release --example verify_fabric`
+
+use dnp::config::DnpConfig;
+use dnp::fault::{recompute_hybrid_tables_with, HierLinkFault};
+use dnp::route::GatewayMap;
+use dnp::verify::{self, FabricReport};
+
+const TILES: [u32; 2] = [2, 2];
+
+fn row(topo: [u32; 3], map: &str, state: &str, rep: &FabricReport) -> bool {
+    println!(
+        "[verify] topo={}x{}x{} map={map} state={state} pairs={} chans={} edges={} \
+         warnings={} errors={} certified={}",
+        topo[0],
+        topo[1],
+        topo[2],
+        rep.pairs,
+        rep.chans.len(),
+        rep.edges.len(),
+        rep.warnings,
+        rep.errors,
+        if rep.is_certified() { "yes" } else { "no" },
+    );
+    if !rep.is_certified() {
+        println!("--- full report for topo={topo:?} map={map} state={state} ---\n{rep}");
+    }
+    rep.is_certified()
+}
+
+fn main() {
+    let cfg = DnpConfig::hybrid();
+    let maps: [(&str, GatewayMap); 3] = [
+        ("fixed", GatewayMap::fixed(TILES)),
+        ("dimpair", GatewayMap::dim_pair(TILES)),
+        ("dsthash", GatewayMap::dst_hash(TILES, 2)),
+    ];
+    let mut all_ok = true;
+
+    for topo in [[2, 2, 1], [3, 3, 1], [4, 4, 1], [5, 5, 1], [4, 4, 4]] {
+        for (name, gmap) in &maps {
+            all_ok &= row(topo, name, "healthy", &verify::check_healthy(topo, gmap, &cfg));
+
+            // Faulted state: kill the first + cable of dimension 0 and
+            // one mesh link, recompute, and certify the recovery.
+            let lane = (0..gmap.group(0).len())
+                .find(|&l| gmap.owns(0, l, 0))
+                .expect("some lane owns the + cable");
+            let faults = [
+                HierLinkFault::SerdesLane { chip: [0, 0, 0], dim: 0, plus: true, lane },
+                HierLinkFault::Mesh { chip: [1, 0, 0], tile: [0, 0], dim: 0, plus: true },
+            ];
+            let tables = recompute_hybrid_tables_with(topo, gmap, &faults, &cfg)
+                .expect("the single-cable + mesh scenario is recoverable");
+            let rep = verify::check_tables(topo, gmap, &cfg, &faults, &tables);
+            all_ok &= row(topo, name, "faulted", &rep);
+        }
+    }
+
+    assert!(all_ok, "some configuration failed static verification (see reports above)");
+    println!("[verify] all configurations certified");
+}

@@ -40,7 +40,7 @@ fn main() {
     let mut deltas = Vec::new();
     for hops in 1..=6u32 {
         let b = put_hops(&cfg, hops, 1);
-        let delta = prev.map(|p: u64| b.total() - p).unwrap_or(0);
+        let delta = prev.map_or(0, |p: u64| b.total() - p);
         if prev.is_some() {
             deltas.push(delta as f64);
         }

@@ -33,7 +33,7 @@ pub fn wall<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> WallResult {
         reps,
         median_s: median(&times),
         mad_s: mad(&times),
-        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        min_s: times.iter().copied().fold(f64::INFINITY, f64::min),
     }
 }
 

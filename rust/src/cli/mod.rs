@@ -61,8 +61,7 @@ impl Args {
 
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| die(&format!("bad --{key} value"))))
-            .unwrap_or(default)
+            .map_or(default, |v| v.parse().unwrap_or_else(|_| die(&format!("bad --{key} value"))))
     }
 
     pub fn get_dims(&self, key: &str, default: [u32; 3]) -> [u32; 3] {

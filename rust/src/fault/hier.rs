@@ -72,42 +72,40 @@
 //! Detours complicate the picture: a deviating hop rides escape VC 1
 //! wherever it sits, and the healthy-first, route-order tie-breaks above
 //! act as the constructive turn restriction keeping detoured chains
-//! class-ascending in practice. The exact gate is a
-//! **channel-dependence-graph acyclicity check** (Dally–Seitz):
-//! [`recompute_hybrid_tables`] re-walks every (source chip, destination
-//! node) chain over the exact hops and VCs the tables install —
-//! destination *tiles* matter under `DstHash`, whose lane is keyed on
-//! them — collecting a dependence edge for each consecutive pair of
-//! off-chip channels `(chip, dim, dir, lane, VC)`, and refuses the
-//! table set with [`HierRecoveryError::DatelineHazard`] (naming a
-//! channel on the cycle) unless the graph is acyclic. Contracting the
-//! mesh segments of any would-be waiting cycle yields exactly such a
-//! SerDes-only cycle over consecutive-pair edges, so acyclicity of this
-//! graph plus the per-chip mesh check below is sufficient for deadlock
-//! freedom of the installed tables.
-//!
-//! Purely mesh-level cycles cannot span chips (every cross-chip
-//! dependence traverses a SerDes channel), so each chip is checked
-//! separately: the union of installed BFS detour trees — delivery walks
-//! on VC 1 toward every tile, outbound walks on VC 0 toward exactly the
-//! gateway tiles the installed decisions target — must be acyclic over
-//! the directed mesh channels `(tile, direction, VC)`, or the set is
-//! refused with [`HierRecoveryError::MeshCycle`]. This closes the former
-//! "known approximation" where >= 3x3 tile meshes trusted the
-//! per-destination trees' union unchecked. Fault-free XY and every
-//! shipped scenario pass both checks; adversarial multi-fault sets may
-//! be refused with a typed error, never installed unsound.
+//! class-ascending in practice. The exact gate is the **unified
+//! cross-layer channel-dependence-graph acyclicity check** of
+//! [`crate::verify`] (Dally–Seitz): [`recompute_hybrid_tables`] hands
+//! the candidate tables to [`check_fabric`](crate::verify::check_fabric),
+//! which re-walks every (source, destination) node pair over the exact
+//! hops and VCs the tables install and builds one dependence graph
+//! spanning the directed SerDes channels `(chip, dim, dir, lane, VC)`
+//! *and* the directed mesh channels `(chip, tile, direction, VC)` —
+//! gateway couplings included. Unless that single graph is acyclic the
+//! set is refused: a SerDes channel on the cycle maps to
+//! [`HierRecoveryError::DatelineHazard`], a mesh channel to
+//! [`HierRecoveryError::MeshCycle`]. This is strictly stronger than the
+//! decomposed per-lane SerDes projection + per-chip mesh check this
+//! module ran before PR 7: a cycle stitched from *different* routes'
+//! mesh segments between off-chip hops has no direct SerDes→SerDes
+//! edge and keeps every per-chip mesh subgraph acyclic, yet is caught
+//! here (`tests/verify_it.rs` pins such a set). Fault-free XY and every
+//! shipped scenario pass; adversarial multi-fault sets may be refused
+//! with a typed error, never installed unsound — and whatever this
+//! module *does* install is certified by construction, which the
+//! debug-only [`inject_hybrid`] self-check re-validates against the
+//! routers actually living in the net.
 
 use super::{LinkFault, SurvivorGraph};
 use crate::config::{DnpConfig, RouteOrder};
 use crate::packet::{AddrFormat, DnpAddr};
-use crate::route::hier::{GatewayMap, GatewayMapError, GatewayPolicy};
+use crate::route::hier::{GatewayMap, GatewayMapError};
 use crate::route::{HierRouter, OutSel, Router, TableRouter};
 use crate::sim::channel::ChannelId;
 use crate::sim::Net;
 use crate::topology::{hybrid_port_maps, mesh_step, HybridWiring};
 use crate::traffic::hybrid_coords;
-use std::collections::{BTreeMap, BTreeSet, HashSet, VecDeque};
+use crate::verify;
+use std::collections::{HashSet, VecDeque};
 use std::sync::Arc;
 
 /// A hard fault on one bidirectional link of the hybrid system (kills both
@@ -209,7 +207,7 @@ impl MeshSurvivor {
         let mut consider = |d: usize, best: &mut Option<(u32, usize)>| {
             if let Some(v) = self.adj[t][d] {
                 let dv = dist[v];
-                if dv != u32::MAX && best.map(|(bd, _)| dv < bd).unwrap_or(true) {
+                if dv != u32::MAX && best.is_none_or(|(bd, _)| dv < bd) {
                     *best = Some((dv, d));
                 }
             }
@@ -361,7 +359,7 @@ fn chip_next_hop(
     let mut consider = |dim: usize, d: usize, best: &mut Option<(u32, usize, usize)>| {
         if let Some(v) = chips.neighbor(a, dim * 2 + d) {
             let dv = dist[v];
-            if dv != u32::MAX && best.map(|(bd, _, _)| dv < bd).unwrap_or(true) {
+            if dv != u32::MAX && best.is_none_or(|(bd, _, _)| dv < bd) {
                 *best = Some((dv, dim, d));
             }
         }
@@ -565,19 +563,12 @@ pub fn recompute_hybrid_tables_with(
     /// node — identical for every tile of the chip (the lane is keyed on
     /// the destination, never on the current tile).
     struct OffDec {
-        dim: usize,
-        dir: usize,
-        /// Lane (gateway group member) actually taken — the installed
-        /// lane or its survivor fallback; part of the channel identity
-        /// in the dependence graph below.
-        lane: usize,
-        /// Row-major tile index of the gateway the flow exits through.
+        /// Row-major tile index of the gateway the flow exits through
+        /// (on the installed lane or its survivor fallback).
         gw: usize,
         port: usize,
         vc: u8,
     }
-    // Shared between the table build and the dateline walk below, so the
-    // walk sees precisely the installed decisions.
     let offchip_decision = |achip: usize, dst: usize| -> Result<OffDec, HierRecoveryError> {
         let (bchip, btile) = (dst / ntiles, dst % ntiles);
         let (dim, dir) = chip_next_hop(
@@ -611,14 +602,10 @@ pub fn recompute_hybrid_tables_with(
         let u = achip * ntiles + gw;
         let hd = healthy[u].decide(addrs[u], addrs[dst], 0);
         let vc = if hd.out == OutSel::Port(port) { hd.vc } else { 1 };
-        Ok(OffDec { dim, dir, lane: pick, gw, port, vc })
+        Ok(OffDec { gw, port, vc })
     };
 
     let mut tables: Vec<TableRouter> = addrs.iter().map(|&a| TableRouter::new(a)).collect();
-    // Gateway tiles each chip's installed decisions actually target —
-    // the exact (not over-approximated) VC-0 mesh walk targets for the
-    // per-chip dependence check below.
-    let mut used_gw: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); nchips];
     for dst in 0..n {
         let (bchip, stile) = (dst / ntiles, dst % ntiles);
         for achip in 0..nchips {
@@ -639,7 +626,6 @@ pub fn recompute_hybrid_tables_with(
                 continue;
             }
             let dec = offchip_decision(achip, dst)?;
-            used_gw[achip].insert(dec.gw);
             for t in 0..ntiles {
                 let u = achip * ntiles + t;
                 let (port, vc) = if t == dec.gw {
@@ -659,151 +645,47 @@ pub fn recompute_hybrid_tables_with(
         }
     }
 
-    // §Dateline verification (module docs): re-walk every (source chip,
-    // destination node) chain over the exact chip-level hops and VCs the
-    // tables install — destination *tiles* matter under `DstHash`, whose
-    // lane is keyed on them; under every other policy all tiles of a
-    // chip share one decision chain, so one representative tile per
-    // destination chip suffices — and collect the channel-dependence
-    // graph over the directed SerDes channels `(chip, dim, dir, lane)`
-    // per VC. A packet holding channel `p` while requesting the chain's
-    // next channel `c` induces the dependence `p -> c` (the mesh segment
-    // between them belongs to the same packet, so mixed mesh/SerDes
-    // waiting cycles contract onto exactly these edges). Reuses
-    // `offchip_decision`, so the graph sees precisely the installed
-    // decisions.
-    let walk_all_tiles = gmap.policy() == GatewayPolicy::DstHash;
-    let mut schans: BTreeSet<SerdesCh> = BTreeSet::new();
-    let mut sedges: BTreeSet<(SerdesCh, SerdesCh)> = BTreeSet::new();
-    for src in 0..nchips {
-        for dst in 0..n {
-            let bchip = dst / ntiles;
-            if src == bchip || (!walk_all_tiles && dst % ntiles != 0) {
-                continue;
-            }
-            let mut cur = src;
-            let mut prev: Option<SerdesCh> = None;
-            let mut hops = 0usize;
-            while cur != bchip {
-                let dec = offchip_decision(cur, dst)?;
-                let ch = (cur, dec.dim, dec.dir, dec.lane, dec.vc);
-                schans.insert(ch);
-                if let Some(p) = prev {
-                    sedges.insert((p, ch));
-                }
-                prev = Some(ch);
-                let cur_c = chip_coords(chip_dims, cur);
-                let k = chip_dims[dec.dim];
-                let mut nc = cur_c;
-                nc[dec.dim] = (cur_c[dec.dim] + if dec.dir == 0 { 1 } else { k - 1 }) % k;
-                cur = chip_index(chip_dims, nc);
-                hops += 1;
-                assert!(hops <= 3 * nchips, "chip-level walk did not converge");
-            }
+    // §Dateline verification (module docs): delegate to the unified
+    // cross-layer verifier. It re-walks every (source, destination) node
+    // pair over exactly the decisions installed above and demands
+    // acyclicity of ONE channel-dependence graph spanning SerDes and
+    // mesh channels — strictly stronger than the decomposed per-lane
+    // SerDes projection + per-chip mesh check this module ran before.
+    // `minimal_routes: false`: recovered tables may legally descend to
+    // the escape class mid-ring (the verifier warns), and unified
+    // acyclicity carries the whole deadlock proof.
+    let spec = verify::FabricSpec { chip_dims, gmap, cfg, faults, minimal_routes: false };
+    let report = verify::check_fabric(&spec, &|u, _src, dst, _vc| tables[u].lookup(dst));
+    for f in &report.findings {
+        if f.severity != verify::Severity::Error {
+            continue;
         }
-    }
-    if let Some((chip, dim, dir, _lane, _vc)) = find_cycle(&schans, &sedges) {
-        let cc = chip_coords(chip_dims, chip);
-        let k = chip_dims[dim];
-        let mut nc = cc;
-        nc[dim] = (cc[dim] + if dir == 0 { 1 } else { k - 1 }) % k;
-        return Err(HierRecoveryError::DatelineHazard {
-            dim,
-            src_chip: chip,
-            dst_chip: chip_index(chip_dims, nc),
-        });
-    }
-
-    // Per-chip mesh dependence check on the installed BFS detour trees:
-    // delivery walks (VC 1, every tile a target) and outbound walks
-    // (VC 0, exactly the gateway tiles the installed decisions target —
-    // over-approximating the targets could refuse sound table sets).
-    // Purely mesh-level cycles cannot span chips, so each chip's graph
-    // over `(tile, direction, VC)` is checked in isolation.
-    for (chip, m) in g.meshes.iter().enumerate() {
-        let mut mchans: BTreeSet<MeshCh> = BTreeSet::new();
-        let mut medges: BTreeSet<(MeshCh, MeshCh)> = BTreeSet::new();
-        let mut record = |target: usize,
-                          vc: u8,
-                          mchans: &mut BTreeSet<MeshCh>,
-                          medges: &mut BTreeSet<(MeshCh, MeshCh)>| {
-            let dist = &mesh_dists[chip][target];
-            for t in 0..ntiles {
-                if t == target {
-                    continue;
-                }
-                let d = m.next_hop(dist, t, target).expect("mesh connectivity was checked");
-                let ch = (t, d, vc);
-                mchans.insert(ch);
-                let v = m.adj[t][d].expect("next_hop follows a live link");
-                if v != target {
-                    let dn = m.next_hop(dist, v, target).expect("mesh connectivity was checked");
-                    medges.insert((ch, (v, dn, vc)));
-                }
+        match (f.analysis, f.location) {
+            (
+                verify::Analysis::Cdg,
+                verify::Location::Chan(verify::Chan::Serdes { chip, dim, dir, .. }),
+            ) => {
+                let cc = chip_coords(chip_dims, chip);
+                let k = chip_dims[dim];
+                let mut nc = cc;
+                nc[dim] = (cc[dim] + if dir == 0 { 1 } else { k - 1 }) % k;
+                return Err(HierRecoveryError::DatelineHazard {
+                    dim,
+                    src_chip: chip,
+                    dst_chip: chip_index(chip_dims, nc),
+                });
             }
-        };
-        for stile in 0..ntiles {
-            record(stile, 1, &mut mchans, &mut medges);
-        }
-        for &gw in &used_gw[chip] {
-            record(gw, 0, &mut mchans, &mut medges);
-        }
-        if find_cycle(&mchans, &medges).is_some() {
-            return Err(HierRecoveryError::MeshCycle { chip });
+            (verify::Analysis::Cdg, verify::Location::Chan(verify::Chan::Mesh { chip, .. })) => {
+                return Err(HierRecoveryError::MeshCycle { chip });
+            }
+            // Reachability, termination and dead-wire avoidance hold by
+            // construction here (BFS over survivors; dead lanes re-homed
+            // above), so any other error is a bug in this module, not a
+            // refusable input.
+            _ => unreachable!("recomputed tables failed static verification: {f}"),
         }
     }
     Ok(tables)
-}
-
-/// Directed off-chip channel identity in the dependence graph:
-/// `(tail chip index, ring dim, dir, lane, VC)`.
-type SerdesCh = (usize, usize, usize, usize, u8);
-/// Directed on-chip channel identity: `(tail tile index, mesh direction
-/// 0:X+ 1:X- 2:Y+ 3:Y-, VC)`.
-type MeshCh = (usize, usize, u8);
-
-/// Kahn topological check over a channel-dependence graph; returns a
-/// node lying on a dependence cycle when one exists. Deterministic
-/// (`BTree` collections), so a refusal reproduces bit-identically.
-fn find_cycle<N: Copy + Ord>(nodes: &BTreeSet<N>, edges: &BTreeSet<(N, N)>) -> Option<N> {
-    let mut indeg: BTreeMap<N, usize> = nodes.iter().map(|&v| (v, 0)).collect();
-    let mut succ: BTreeMap<N, Vec<N>> = BTreeMap::new();
-    for &(a, b) in edges {
-        *indeg.get_mut(&b).expect("edge endpoints are nodes") += 1;
-        succ.entry(a).or_default().push(b);
-    }
-    let mut q: VecDeque<N> = indeg
-        .iter()
-        .filter(|&(_, &d)| d == 0)
-        .map(|(&v, _)| v)
-        .collect();
-    let mut left: BTreeSet<N> = nodes.clone();
-    while let Some(u) = q.pop_front() {
-        left.remove(&u);
-        for &v in succ.get(&u).into_iter().flatten() {
-            let d = indeg.get_mut(&v).expect("edge endpoints are nodes");
-            *d -= 1;
-            if *d == 0 {
-                q.push_back(v);
-            }
-        }
-    }
-    // Kahn leftovers each keep >= 1 predecessor inside the leftover set,
-    // so walking predecessors from any of them must revisit a node —
-    // which then lies on a cycle.
-    let &start = left.iter().next()?;
-    let mut pred: BTreeMap<N, N> = BTreeMap::new();
-    for &(a, b) in edges {
-        if left.contains(&a) && left.contains(&b) {
-            pred.insert(b, a);
-        }
-    }
-    let mut seen: BTreeSet<N> = BTreeSet::new();
-    let mut cur = start;
-    while seen.insert(cur) {
-        cur = *pred.get(&cur).expect("leftover node has a leftover predecessor");
-    }
-    Some(cur)
 }
 
 /// Net-level hard-fault injection on a hybrid system: recompute the
@@ -839,6 +721,14 @@ pub fn inject_hybrid(
     // `BadGatewayMap` error instead of panicking mid-recomputation.
     let tables = recompute_hybrid_tables_with(wiring.chip_dims, &wiring.gmap, faults, cfg)?;
     super::apply_tables(net, tables);
+    // Debug-only self-check: re-verify the routers actually installed in
+    // the net (not just the recomputed tables) against the fault set.
+    // Catches any drift between `apply_tables` and the certification.
+    #[cfg(debug_assertions)]
+    {
+        let report = verify::check_net(net, wiring, faults, cfg);
+        assert!(report.is_certified(), "post-inject_hybrid self-check failed:\n{report}");
+    }
     Ok(faults.iter().flat_map(|f| wiring.channels_of(f)).collect())
 }
 

@@ -33,11 +33,11 @@
 //!    `route/hier.rs`. The flat recomputation returns `None` when some
 //!    destination became unreachable; the hybrid one returns a
 //!    [`hier::HierRecoveryError`] naming the reason — disconnection, a
-//!    partitioned tile mesh, or a recovered route set that closes a
-//!    cycle in a channel-dependence graph over the per-channel dateline
-//!    classes (see `fault/hier.rs` §Dateline verification) — because
-//!    reconfiguration cannot help and software must fence the partition
-//!    instead.
+//!    partitioned tile mesh, or a recovered route set that
+//!    [`crate::verify`] refuses to certify (a cycle in the unified
+//!    cross-layer channel-dependence graph; see `fault/hier.rs`
+//!    §Dateline verification) — because reconfiguration cannot help and
+//!    software must fence the partition instead.
 //! 4. **Installation** — [`apply_tables`] swaps every node's router for
 //!    its recomputed [`TableRouter`] (matched by DNP address, so any node
 //!    layout works) and installs a router factory that keeps the table
@@ -214,7 +214,7 @@ pub fn recompute_tables(
                         if dv == u32::MAX {
                             continue;
                         }
-                        if best.map(|(bd, _)| dv < bd).unwrap_or(true) {
+                        if best.is_none_or(|(bd, _)| dv < bd) {
                             best = Some((dv, p));
                         }
                     }

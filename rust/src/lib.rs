@@ -29,8 +29,10 @@
 //! each other by the equivalence suites (`rust/tests/equivalence.rs`,
 //! `rust/tests/sharded_equivalence.rs`).
 //!
-//! Start at [`topology`] to build a system, [`sim::Net`] to run it, and
-//! [`metrics`] to measure it. `examples/quickstart.rs` is a 60-line tour;
+//! Start at [`topology`] to build a system, [`sim::Net`] to run it,
+//! [`metrics`] to measure it, and [`verify`] to statically certify its
+//! routing (unified deadlock proof + route lints, no simulation).
+//! `examples/quickstart.rs` is a 60-line tour;
 //! `docs/ARCHITECTURE.md` (repo root) maps every layer of the crate and
 //! states the execution-mode equivalence and deadlock-freedom arguments.
 
@@ -58,6 +60,7 @@ pub mod switch;
 pub mod topology;
 pub mod traffic;
 pub mod util;
+pub mod verify;
 
 pub use config::DnpConfig;
 pub use packet::DnpAddr;

@@ -51,6 +51,21 @@ impl TableRouter {
         self.table.len()
     }
 
+    /// Non-panicking probe of the installed decision toward `dst`
+    /// (`Local` for the router's own address, like [`Router::decide`]).
+    /// This is the static verifier's route source
+    /// ([`crate::verify::check_tables`]), which must report a missing
+    /// route as a reachability finding instead of unwinding.
+    pub fn lookup(&self, dst: DnpAddr) -> Option<Decision> {
+        if dst == self.me {
+            return Some(Decision {
+                out: OutSel::Local,
+                vc: 0,
+            });
+        }
+        self.table.get(&dst).copied()
+    }
+
     /// Snapshot this router from any other router by probing all
     /// destinations — used to seed the fault-tolerant reconfiguration.
     pub fn snapshot_from(me: DnpAddr, all: &[DnpAddr], r: &dyn Router) -> Self {
@@ -69,15 +84,7 @@ impl TableRouter {
 
 impl Router for TableRouter {
     fn decide(&self, _src: DnpAddr, dst: DnpAddr, _cur_vc: u8) -> Decision {
-        if dst == self.me {
-            return Decision {
-                out: OutSel::Local,
-                vc: 0,
-            };
-        }
-        *self
-            .table
-            .get(&dst)
+        self.lookup(dst)
             .unwrap_or_else(|| panic!("no route from {} to {}", self.me, dst))
     }
 }
@@ -98,6 +105,16 @@ mod tests {
         let d = t.decide(me, DnpAddr::new(9), 0);
         assert_eq!(d.out, OutSel::Port(3));
         assert_eq!(d.vc, 1);
+    }
+
+    #[test]
+    fn lookup_probes_without_panicking() {
+        let me = DnpAddr::new(5);
+        let mut t = TableRouter::new(me);
+        t.install(DnpAddr::new(9), 3, 1);
+        assert_eq!(t.lookup(me).map(|d| d.out), Some(OutSel::Local));
+        assert_eq!(t.lookup(DnpAddr::new(9)).map(|d| d.out), Some(OutSel::Port(3)));
+        assert_eq!(t.lookup(DnpAddr::new(7)), None);
     }
 
     #[test]

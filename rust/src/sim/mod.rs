@@ -467,7 +467,7 @@ impl Net {
             && self
                 .nodes
                 .iter()
-                .all(|n| n.as_dnp().map(|d| d.is_idle()).unwrap_or(true))
+                .all(|n| n.as_dnp().is_none_or(|d| d.is_idle()))
     }
 
     /// O(1) quiescence probe from the scheduler's live counters: no hot

@@ -163,9 +163,10 @@ pub fn two_tiles_onchip(cfg: &DnpConfig, mem_words: usize) -> Net {
 
 /// Step from tile `t` in mesh direction `d` (0:X+, 1:X-, 2:Y+, 3:Y-) on a
 /// `dims` 2D mesh; `None` when the step would leave the mesh. Shared with
-/// the fault module's mesh survivor graph so both agree on what exists,
-/// and public so out-of-crate route-walk checks (the fault soak suite)
-/// can resolve ports to neighbours without a built net.
+/// the fault module's mesh survivor graph and [`crate::verify`]'s
+/// route walks so all agree on what exists, and public so out-of-crate
+/// checks (the fault soak suite) can resolve ports to neighbours
+/// without a built net.
 pub fn mesh_step(dims: [u32; 2], t: [u32; 2], d: usize) -> Option<[u32; 2]> {
     let mut v = t;
     match d {
@@ -377,10 +378,11 @@ fn serdes_seed(chip: usize, s: &CableSlot) -> u64 {
 /// chip): mesh direction → on-chip port (`mesh2d_chip` compaction), and
 /// `(dim, dir)` → off-chip port for every cable the tile carries under
 /// `gmap` (sequential over the off-chip block, in [`cable_slots`]
-/// order). Shared between [`hybrid_torus_mesh_with`] and the
-/// fault-recovery table recomputation ([`crate::fault::hier`]), which
-/// must agree on the wiring. Public so out-of-crate route-walk checks
-/// (the fault soak suite) can interpret installed tables statically.
+/// order). Shared between [`hybrid_torus_mesh_with`], the
+/// fault-recovery table recomputation ([`crate::fault::hier`]) and the
+/// static verifier ([`crate::verify`]), which must all agree on the
+/// wiring. Public so out-of-crate route-walk checks (the fault soak
+/// suite) can interpret installed tables statically.
 /// Panics on a structurally invalid map (the fault layer validates
 /// first and returns a typed error instead).
 #[allow(clippy::type_complexity)]

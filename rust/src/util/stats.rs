@@ -159,12 +159,7 @@ impl Histogram {
     pub fn sparkline(&self) -> String {
         const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
         let hi = self.bins.iter().copied().max().unwrap_or(0).max(1);
-        let last = self
-            .bins
-            .iter()
-            .rposition(|&b| b > 0)
-            .map(|i| i + 1)
-            .unwrap_or(0);
+        let last = self.bins.iter().rposition(|&b| b > 0).map_or(0, |i| i + 1);
         self.bins[..last]
             .iter()
             .map(|&b| {

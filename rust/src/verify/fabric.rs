@@ -1,0 +1,224 @@
+//! Static interpretation of the hybrid wiring: resolve a routing
+//! decision's output port to the physical hop it rides ([`Hop`]) and the
+//! node it lands on, without building a [`Net`](crate::sim::Net).
+//!
+//! Built from the same canonical enumerations the real builders use —
+//! [`hybrid_port_maps`] for the per-tile port layout and [`cable_slots`]
+//! for the `(dim, lane, dir)` cable order — so the verifier cannot drift
+//! from the wiring it certifies. The one subtlety worth restating here:
+//! a directed SerDes channel leaving chip `u` from gateway lane `l`
+//! lands on the *reverse-owner* lane's tile of the neighbouring chip
+//! (`GatewayMap::reverse_lane`) — the same tile under `Fixed`/`DstHash`,
+//! the partner tile under `DimPair`. A verifier that assumed same-tile
+//! arrival would walk routes no packet takes.
+
+use super::{Analysis, Finding, Location, Severity};
+use crate::config::DnpConfig;
+use crate::fault::HierLinkFault;
+use crate::packet::{AddrFormat, DnpAddr};
+use crate::route::GatewayMap;
+use crate::topology::{cable_slots, chip_coords3, chip_index3, hybrid_port_maps, mesh_step};
+use crate::traffic::hybrid_coords;
+use std::collections::HashSet;
+
+/// The physical hop behind one output port of one tile: an on-chip mesh
+/// link in direction `mdir` (0:X+, 1:X-, 2:Y+, 3:Y-), or an off-chip
+/// SerDes cable along chip dimension `dim` in direction `dir`
+/// (0 = `+`, 1 = `-`) on gateway lane `lane`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) enum Hop {
+    Mesh { mdir: usize },
+    Off { dim: usize, dir: usize, lane: usize },
+}
+
+/// Static view of one hybrid fabric: addresses, per-tile port → hop
+/// resolution, cross-chip arrival tiles and the set of (node, port)
+/// pairs a [`HierLinkFault`] set kills.
+pub(super) struct FabricView {
+    chip_dims: [u32; 3],
+    tile_dims: [u32; 2],
+    pub(super) ntiles: usize,
+    pub(super) nchips: usize,
+    pub(super) n: usize,
+    /// Node index → DNP address, chip-major (node = chip * ntiles + tile),
+    /// matching the builders in [`crate::topology`].
+    pub(super) addrs: Vec<DnpAddr>,
+    /// Tile index (within any chip) → output port → hop, identical for
+    /// every chip.
+    tile_hops: Vec<Vec<Option<Hop>>>,
+    /// `rev_tile[dim][dir][lane]`: tile index the lane-`lane` cable along
+    /// `(dim, dir)` lands on at the neighbouring chip.
+    rev_tile: [[Vec<usize>; 2]; 3],
+    /// (node, port) pairs killed by the fault set. A route through one is
+    /// a dead-wire violation.
+    pub(super) dead: HashSet<(usize, usize)>,
+    /// Faults naming links this wiring never had (reported, not fatal).
+    pub(super) findings: Vec<Finding>,
+}
+
+impl FabricView {
+    /// Interpret the wiring of `chip_dims` chips under `gmap`. The caller
+    /// must have passed structural config sanity first —
+    /// [`hybrid_port_maps`] panics on an invalid map or over-capacity
+    /// gateway, which the verifier reports as findings instead.
+    pub(super) fn new(
+        chip_dims: [u32; 3],
+        gmap: &GatewayMap,
+        cfg: &DnpConfig,
+        faults: &[HierLinkFault],
+    ) -> Self {
+        let tile_dims = gmap.tile_dims();
+        let ntiles = (tile_dims[0] * tile_dims[1]) as usize;
+        let nchips = chip_dims.iter().product::<u32>() as usize;
+        let n = nchips * ntiles;
+        let fmt = AddrFormat::Hybrid { chip_dims, tile_dims };
+        let addrs = (0..n)
+            .map(|i| fmt.encode(&hybrid_coords(chip_dims, tile_dims, i)))
+            .collect();
+
+        let tile_idx = |t: [u32; 2]| -> usize { (t[0] + t[1] * tile_dims[0]) as usize };
+        let (mesh_port_of, off_port_of) = hybrid_port_maps(chip_dims, gmap, cfg);
+        let mut tile_hops = vec![vec![None; cfg.n_ports + cfg.m_ports]; ntiles];
+        for (t, ports) in mesh_port_of.iter().enumerate() {
+            for (mdir, p) in ports.iter().enumerate() {
+                if let Some(p) = *p {
+                    tile_hops[t][p] = Some(Hop::Mesh { mdir });
+                }
+            }
+        }
+        for s in cable_slots(chip_dims, gmap) {
+            let g = tile_idx(s.tile);
+            let p = off_port_of[g][s.dim][s.dir].expect("every cable slot got a port");
+            tile_hops[g][p] = Some(Hop::Off { dim: s.dim, dir: s.dir, lane: s.lane });
+        }
+
+        let mut rev_tile: [[Vec<usize>; 2]; 3] = Default::default();
+        for dim in 0..3 {
+            for dir in 0..2 {
+                rev_tile[dim][dir] = (0..gmap.group(dim).len())
+                    .map(|lane| {
+                        if chip_dims[dim] >= 2 && gmap.owns(dim, lane, dir) {
+                            tile_idx(gmap.group(dim)[gmap.reverse_lane(dim, dir, lane)])
+                        } else {
+                            usize::MAX // unwired: never resolved via hop_of
+                        }
+                    })
+                    .collect();
+            }
+        }
+
+        let mut view = Self {
+            chip_dims,
+            tile_dims,
+            ntiles,
+            nchips,
+            n,
+            addrs,
+            tile_hops,
+            rev_tile,
+            dead: HashSet::new(),
+            findings: Vec::new(),
+        };
+        for f in faults {
+            view.kill(gmap, &off_port_of, &mesh_port_of, f);
+        }
+        view
+    }
+
+    /// Mark both directed channels of the logical link `f` dead — the
+    /// exact pair [`crate::topology::HybridWiring::channels_of`]
+    /// resolves, expressed as (node, port). A fault naming a link this
+    /// wiring never had
+    /// becomes a config-sanity finding instead of a panic: the verifier
+    /// must diagnose bad inputs, not die on them.
+    fn kill(
+        &mut self,
+        gmap: &GatewayMap,
+        off_port_of: &[[[Option<usize>; 2]; 3]],
+        mesh_port_of: &[[Option<usize>; 4]],
+        f: &HierLinkFault,
+    ) {
+        let tile_idx = |t: [u32; 2]| -> usize { (t[0] + t[1] * self.tile_dims[0]) as usize };
+        let unwired = |view: &mut Self, what: String| {
+            view.findings.push(Finding {
+                analysis: Analysis::Config,
+                severity: Severity::Error,
+                location: Location::Config,
+                message: format!("fault set names an unwired link: {what}"),
+            });
+        };
+        match *f {
+            HierLinkFault::Serdes { chip, dim, plus }
+            | HierLinkFault::SerdesLane { chip, dim, plus, .. } => {
+                let lane = match *f {
+                    HierLinkFault::SerdesLane { lane, .. } => lane,
+                    _ => 0,
+                };
+                let d = usize::from(!plus);
+                let k = self.chip_dims[dim];
+                let in_bounds = chip.iter().zip(self.chip_dims).all(|(&c, k)| c < k);
+                if k < 2 || !in_bounds || lane >= gmap.group(dim).len() || !gmap.owns(dim, lane, d)
+                {
+                    unwired(self, format!("{f:?}"));
+                    return;
+                }
+                let gw = tile_idx(gmap.group(dim)[lane]);
+                let rl = gmap.reverse_lane(dim, d, lane);
+                let rt = tile_idx(gmap.group(dim)[rl]);
+                let mut nc = chip;
+                nc[dim] = (chip[dim] + if plus { 1 } else { k - 1 }) % k;
+                let u = chip_index3(self.chip_dims, chip) * self.ntiles + gw;
+                let v = chip_index3(self.chip_dims, nc) * self.ntiles + rt;
+                let pf = off_port_of[gw][dim][d].expect("owned slot is wired");
+                let pr = off_port_of[rt][dim][1 - d].expect("reverse slot is wired");
+                self.dead.insert((u, pf));
+                self.dead.insert((v, pr));
+            }
+            HierLinkFault::Mesh { chip, tile, dim, plus } => {
+                let d = dim * 2 + usize::from(!plus);
+                let in_bounds = chip.iter().zip(self.chip_dims).all(|(&c, k)| c < k)
+                    && tile.iter().zip(self.tile_dims).all(|(&t, m)| t < m);
+                let Some(nt) = (in_bounds)
+                    .then(|| mesh_step(self.tile_dims, tile, d))
+                    .flatten()
+                else {
+                    unwired(self, format!("{f:?}"));
+                    return;
+                };
+                let back = [1usize, 0, 3, 2][d];
+                let u = chip_index3(self.chip_dims, chip) * self.ntiles + tile_idx(tile);
+                let v = chip_index3(self.chip_dims, chip) * self.ntiles + tile_idx(nt);
+                let pf = mesh_port_of[tile_idx(tile)][d].expect("mesh link is wired");
+                let pr = mesh_port_of[tile_idx(nt)][back].expect("mesh link is wired");
+                self.dead.insert((u, pf));
+                self.dead.insert((v, pr));
+            }
+        }
+    }
+
+    /// The hop behind `port` at `node`, `None` when the port is dangling
+    /// (a route through a dangling port is a reachability error).
+    pub(super) fn hop_of(&self, node: usize, port: usize) -> Option<Hop> {
+        *self.tile_hops[node % self.ntiles].get(port)?
+    }
+
+    /// The node a packet leaving `node` via `hop` arrives at. `hop` must
+    /// have come from [`Self::hop_of`] at this node.
+    pub(super) fn neighbor(&self, node: usize, hop: Hop) -> usize {
+        let chip = node / self.ntiles;
+        match hop {
+            Hop::Mesh { mdir } => {
+                let t = node % self.ntiles;
+                let tc = [t as u32 % self.tile_dims[0], t as u32 / self.tile_dims[0]];
+                let nt = mesh_step(self.tile_dims, tc, mdir).expect("wired mesh hop");
+                chip * self.ntiles + (nt[0] + nt[1] * self.tile_dims[0]) as usize
+            }
+            Hop::Off { dim, dir, lane } => {
+                let mut c = chip_coords3(self.chip_dims, chip);
+                let k = self.chip_dims[dim];
+                c[dim] = (c[dim] + if dir == 0 { 1 } else { k - 1 }) % k;
+                chip_index3(self.chip_dims, c) * self.ntiles + self.rev_tile[dim][dir][lane]
+            }
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Generic cycle detection over channel-dependence graphs.
+//!
+//! Promoted out of `fault/hier.rs` (where it gated only the
+//! fault-recovery path) so every analysis of [`crate::verify`] — and any
+//! future routing policy's certification — shares one deterministic
+//! implementation.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// Kahn topological check over a channel-dependence graph; returns a
+/// node lying on a dependence cycle when one exists. Deterministic
+/// (`BTree` collections), so a refusal reproduces bit-identically.
+///
+/// Every edge's endpoints must be members of `nodes` (the callers build
+/// both sets from the same walk, so this holds by construction).
+///
+/// ```
+/// use std::collections::BTreeSet;
+/// use dnp::verify::find_cycle;
+///
+/// let nodes: BTreeSet<u32> = [0, 1, 2].into_iter().collect();
+/// let chain: BTreeSet<(u32, u32)> = [(0, 1), (1, 2)].into_iter().collect();
+/// assert_eq!(find_cycle(&nodes, &chain), None);
+/// let cyc: BTreeSet<(u32, u32)> = [(0, 1), (1, 2), (2, 0)].into_iter().collect();
+/// assert!(find_cycle(&nodes, &cyc).is_some());
+/// ```
+pub fn find_cycle<N: Copy + Ord>(nodes: &BTreeSet<N>, edges: &BTreeSet<(N, N)>) -> Option<N> {
+    let mut indeg: BTreeMap<N, usize> = nodes.iter().map(|&v| (v, 0)).collect();
+    let mut succ: BTreeMap<N, Vec<N>> = BTreeMap::new();
+    for &(a, b) in edges {
+        *indeg.get_mut(&b).expect("edge endpoints are nodes") += 1;
+        succ.entry(a).or_default().push(b);
+    }
+    let mut q: VecDeque<N> = indeg
+        .iter()
+        .filter(|&(_, &d)| d == 0)
+        .map(|(&v, _)| v)
+        .collect();
+    let mut left: BTreeSet<N> = nodes.clone();
+    while let Some(u) = q.pop_front() {
+        left.remove(&u);
+        for &v in succ.get(&u).into_iter().flatten() {
+            let d = indeg.get_mut(&v).expect("edge endpoints are nodes");
+            *d -= 1;
+            if *d == 0 {
+                q.push_back(v);
+            }
+        }
+    }
+    // Kahn leftovers each keep >= 1 predecessor inside the leftover set,
+    // so walking predecessors from any of them must revisit a node —
+    // which then lies on a cycle.
+    let &start = left.iter().next()?;
+    let mut pred: BTreeMap<N, N> = BTreeMap::new();
+    for &(a, b) in edges {
+        if left.contains(&a) && left.contains(&b) {
+            pred.insert(b, a);
+        }
+    }
+    let mut seen: BTreeSet<N> = BTreeSet::new();
+    let mut cur = start;
+    while seen.insert(cur) {
+        cur = *pred.get(&cur).expect("leftover node has a leftover predecessor");
+    }
+    Some(cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph(nodes: &[u32], edges: &[(u32, u32)]) -> (BTreeSet<u32>, BTreeSet<(u32, u32)>) {
+        (nodes.iter().copied().collect(), edges.iter().copied().collect())
+    }
+
+    #[test]
+    fn empty_and_single_node_are_acyclic() {
+        let (n, e) = graph(&[], &[]);
+        assert_eq!(find_cycle(&n, &e), None);
+        let (n, e) = graph(&[7], &[]);
+        assert_eq!(find_cycle(&n, &e), None);
+    }
+
+    #[test]
+    fn dag_is_acyclic_even_with_diamonds() {
+        let (n, e) = graph(&[0, 1, 2, 3], &[(0, 1), (0, 2), (1, 3), (2, 3)]);
+        assert_eq!(find_cycle(&n, &e), None);
+    }
+
+    #[test]
+    fn self_loop_is_a_cycle() {
+        let (n, e) = graph(&[0, 1], &[(0, 1), (1, 1)]);
+        assert_eq!(find_cycle(&n, &e), Some(1));
+    }
+
+    #[test]
+    fn reported_witness_lies_on_the_cycle() {
+        // A tail (9 -> 0) into a 3-cycle: the witness must come from the
+        // cycle {0, 1, 2}, never from the tail.
+        let (n, e) = graph(&[0, 1, 2, 9], &[(9, 0), (0, 1), (1, 2), (2, 0)]);
+        let w = find_cycle(&n, &e).expect("cycle exists");
+        assert!(w != 9, "witness must lie on the cycle, got the tail node");
+    }
+
+    #[test]
+    fn disjoint_components_cycle_found() {
+        let (n, e) = graph(&[0, 1, 5, 6], &[(0, 1), (5, 6), (6, 5)]);
+        let w = find_cycle(&n, &e).expect("cycle exists");
+        assert!(w == 5 || w == 6);
+    }
+}

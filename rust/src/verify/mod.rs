@@ -1,0 +1,1090 @@
+//! Whole-fabric static verification: certify an installed routing
+//! configuration — healthy [`HierRouter`]s, fault-recovered
+//! [`TableRouter`] sets, or a fully built hybrid [`Net`] — without
+//! simulating a single cycle.
+//!
+//! # Analyses
+//!
+//! 1. **Unified cross-layer channel-dependence-graph acyclicity**
+//!    (Dally–Seitz). Every (source, destination) pair is walked through
+//!    the actual installed routing decisions; each hop occupies one
+//!    typed channel resource ([`Chan`]) — a directed SerDes lane or a
+//!    directed mesh link, *per VC* — and each consecutive channel pair
+//!    along a route contributes one dependence edge. The union over all
+//!    pairs must be acyclic ([`find_cycle`]). This single graph spans
+//!    SerDes, mesh and the gateway couplings between them, which makes
+//!    it strictly stronger than the per-lane/per-chip decomposition the
+//!    fault layer shipped before: a cycle stitched from *different*
+//!    routes' on-chip mesh segments between off-chip hops is invisible
+//!    both to a SerDes-only projection (no direct SerDes→SerDes edge
+//!    exists) and to any per-chip mesh-only check (each chip's mesh
+//!    subgraph stays acyclic), yet closes a cycle here — the
+//!    adversarial suite in `tests/verify_it.rs` pins exactly such a
+//!    set. *Soundness:* a packet blocked on channel `c` while holding
+//!    `p` induces the dependence `p → c` only along its own installed
+//!    route, so any waiting cycle of the simulated fabric projects onto
+//!    a directed cycle of this graph; acyclicity therefore rules out
+//!    routing-induced deadlock for every traffic pattern over the
+//!    walked pairs.
+//! 2. **Route-walk lints.** Bounded-hop termination (a route revisiting
+//!    a `(node, vc)` state, or exceeding `(chips + 2) · (tiles + 2)`
+//!    hops, can never deliver — livelock); reachability completeness
+//!    (every pair reaches `Local` at the right node); dead-wire
+//!    avoidance (no installed route rides a channel a
+//!    [`HierLinkFault`] killed); and VC-class discipline (below).
+//! 3. **Config sanity.** Gateway-map structure and per-(dim, dir) cable
+//!    coverage, gateway cable count vs `M` off-chip ports, mesh degree
+//!    vs `N` on-chip ports, addressing bounds, VC provisioning vs
+//!    [`DnpConfig::vcs`], decisions selecting unprovisioned VCs, faults
+//!    naming links the wiring never had, and (on a built [`Net`], via
+//!    [`check_channels`]) per-channel VC count/capacity.
+//!
+//! # VC discipline: severity by provenance
+//!
+//! Along a *minimal* healthy route, the static dateline classes of
+//! [`ring_class_vc`](crate::route::hier::ring_class_vc) never descend
+//! within one `(dim, dir, lane)` ring run (the class pattern along any
+//! minimal run is `0… 1 1…`, ascending exactly at the wrap cable), so
+//! for healthy sources ([`FabricSpec::minimal_routes`]` = true`) a
+//! descent on a direct SerDes→SerDes edge is an **error**. Recovered
+//! tables legally break the pattern — a post-wrap detour hop rides
+//! escape VC 1 and then re-joins class 0 (`route::hier`'s k = 3 detour
+//! test and the k = 4 escape-then-class-0 case pin accepted examples) —
+//! so for table sources a descent is a **warning** and CDG acyclicity
+//! is the authoritative deadlock gate. (Under `DimPair` the two
+//! directions of a ring land on partner tiles, so consecutive ring hops
+//! are separated by mesh transit and no direct SerDes→SerDes edge
+//! exists for the lint to inspect; acyclicity again carries the proof.)
+//! Delivery-class finality is provenance-independent: once a packet
+//! takes an on-chip mesh hop on VC ≥ 1 (the delivery class), it must
+//! stay on mesh VCs ≥ that class until `Local` — feeding an off-chip
+//! hop or descending the mesh class re-opens the mesh/SerDes coupling
+//! the delivery class exists to cut, and is always an **error**.
+//!
+//! # Why the healthy hybrid is acyclic (certified, not just argued)
+//!
+//! Off-chip, dimension-order routing consumes chip dimensions in fixed
+//! priority order, so SerDes dependence edges only point from lower to
+//! higher dimension or stay within one ring, where the dateline classes
+//! ascend (above). On-chip, each chip's XY mesh walk is
+//! dimension-ordered, and `DimPair`'s ± transit segments ride opposite
+//! directed mesh channels. [`check_healthy`] turns that argument into a
+//! regression test over every shipped configuration.
+//!
+//! Results land in a typed [`FabricReport`] (machine-readable findings
+//! with severity + location, `Display` for humans), surfaced three
+//! ways: the `verify_fabric` example sweeps the shipped configuration
+//! matrix and prints greppable `[verify]` rows for CI; fault recovery
+//! ([`crate::fault::hier`]) delegates its deadlock gate to
+//! [`check_fabric`] and `inject_hybrid` self-checks the installed net
+//! in debug builds; and the test suites call the checkers directly.
+
+mod fabric;
+mod graph;
+
+pub use graph::find_cycle;
+
+use crate::config::DnpConfig;
+use crate::fault::HierLinkFault;
+use crate::packet::{AddrFormat, DnpAddr};
+use crate::route::{Decision, GatewayMap, HierRouter, OutSel, Router, TableRouter};
+use crate::sim::Net;
+use crate::topology::{cable_slots, hybrid_port_maps, mesh_step, HybridWiring};
+use crate::traffic::hybrid_coords;
+use fabric::{FabricView, Hop};
+use std::collections::{BTreeSet, HashMap, HashSet};
+use std::fmt;
+use std::sync::Arc;
+
+/// How bad a finding is. Any `Error` de-certifies the fabric
+/// ([`FabricReport::is_certified`]); a `Warning` flags something worth a
+/// human look that is not unsound by itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+/// Which analysis produced a finding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Analysis {
+    /// Gateway-map / port-capacity / VC-provisioning sanity.
+    Config,
+    /// A pair with no installed route, a route through a dangling port,
+    /// or delivery at the wrong node.
+    Reachability,
+    /// A route that provably never delivers (state revisit / hop bound).
+    Termination,
+    /// An installed route rides a faulted wire.
+    DeadWire,
+    /// VC-class monotonicity / delivery-class finality.
+    VcDiscipline,
+    /// The unified channel-dependence graph has a cycle.
+    Cdg,
+}
+
+impl fmt::Display for Analysis {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Analysis::Config => "config",
+            Analysis::Reachability => "reachability",
+            Analysis::Termination => "termination",
+            Analysis::DeadWire => "dead-wire",
+            Analysis::VcDiscipline => "vc-discipline",
+            Analysis::Cdg => "cdg",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One CDG node: a directed physical channel on a specific VC. The
+/// per-VC split is what lets the escape-class argument work — VC 0 and
+/// VC 1 of one wire are distinct resources a packet can wait on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Chan {
+    /// Directed off-chip SerDes channel leaving `chip` along chip
+    /// dimension `dim` in direction `dir` (0 = `+`, 1 = `-`) on gateway
+    /// lane `lane`.
+    Serdes { chip: usize, dim: usize, dir: usize, lane: usize, vc: u8 },
+    /// Directed on-chip mesh channel leaving `tile` of `chip` in mesh
+    /// direction `mdir` (0:X+, 1:X-, 2:Y+, 3:Y-).
+    Mesh { chip: usize, tile: usize, mdir: usize, vc: u8 },
+}
+
+impl fmt::Display for Chan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Chan::Serdes { chip, dim, dir, lane, vc } => write!(
+                f,
+                "serdes[chip {chip} {}{} lane {lane} vc {vc}]",
+                ["X", "Y", "Z"][dim],
+                ["+", "-"][dir],
+            ),
+            Chan::Mesh { chip, tile, mdir, vc } => write!(
+                f,
+                "mesh[chip {chip} tile {tile} {} vc {vc}]",
+                ["X+", "X-", "Y+", "Y-"][mdir],
+            ),
+        }
+    }
+}
+
+/// Where a finding points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Location {
+    /// A specific channel/VC resource.
+    Chan(Chan),
+    /// A (source node, destination node) pair.
+    Pair { src: usize, dst: usize },
+    /// One node (tile) of the fabric.
+    Node { node: usize },
+    /// One chip dimension's gateway group.
+    GatewayDim { dim: usize },
+    /// The configuration as a whole.
+    Config,
+}
+
+impl fmt::Display for Location {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Location::Chan(c) => write!(f, "{c}"),
+            Location::Pair { src, dst } => write!(f, "pair {src}->{dst}"),
+            Location::Node { node } => write!(f, "node {node}"),
+            Location::GatewayDim { dim } => write!(f, "gateway dim {dim}"),
+            Location::Config => f.write_str("config"),
+        }
+    }
+}
+
+/// One verification finding: which analysis, how bad, where, and a
+/// human-readable message.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub analysis: Analysis,
+    pub severity: Severity,
+    pub location: Location,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = match self.severity {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        };
+        write!(f, "[{sev}] {}: {} ({})", self.analysis, self.message, self.location)
+    }
+}
+
+/// The verifier's result: every finding (capped per analysis so an
+/// all-pairs failure cannot allocate half a million strings — the full
+/// totals stay exact), plus the walked CDG itself so callers can run
+/// their own projections (the adversarial tests use `chans`/`edges` to
+/// show the old decomposed check is blind to a stitched cycle).
+#[derive(Debug, Clone, Default)]
+pub struct FabricReport {
+    pub findings: Vec<Finding>,
+    /// Exact totals, including findings suppressed past the per-analysis
+    /// cap.
+    pub errors: usize,
+    pub warnings: usize,
+    /// Findings counted above but not stored in `findings`.
+    pub suppressed: usize,
+    /// (src, dst) pairs walked.
+    pub pairs: usize,
+    /// Pairs whose walk did not deliver (each failure class is reported
+    /// once; this counts every failing pair).
+    pub failed_pairs: usize,
+    /// Every channel/VC resource some route occupies.
+    pub chans: BTreeSet<Chan>,
+    /// Every dependence edge some route induces.
+    pub edges: BTreeSet<(Chan, Chan)>,
+}
+
+impl FabricReport {
+    /// No errors: every walked pair delivers over live wires within the
+    /// hop bound, the unified CDG is acyclic, and the config is sound.
+    /// Warnings (e.g. a VC descent in a recovered table, where
+    /// acyclicity is the authoritative gate) do not block certification.
+    pub fn is_certified(&self) -> bool {
+        self.errors == 0
+    }
+
+    fn absorb(&mut self, f: Finding) {
+        match f.severity {
+            Severity::Error => self.errors += 1,
+            Severity::Warning => self.warnings += 1,
+        }
+        let stored = self.findings.iter().filter(|g| g.analysis == f.analysis).count();
+        if stored < FINDING_CAP {
+            self.findings.push(f);
+        } else {
+            self.suppressed += 1;
+        }
+    }
+}
+
+impl fmt::Display for FabricReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "fabric report: {} pairs walked ({} failed), {} channels, {} dependence edges, \
+             {} errors, {} warnings{}",
+            self.pairs,
+            self.failed_pairs,
+            self.chans.len(),
+            self.edges.len(),
+            self.errors,
+            self.warnings,
+            if self.is_certified() { " — certified" } else { "" },
+        )?;
+        for fd in &self.findings {
+            writeln!(f, "  - {fd}")?;
+        }
+        if self.suppressed > 0 {
+            writeln!(f, "  ... and {} further findings suppressed", self.suppressed)?;
+        }
+        Ok(())
+    }
+}
+
+/// What to verify: the topology shape, the gateway map and config it was
+/// built under, the fault set the routes must avoid, and whether the
+/// route source is minimal/healthy (`minimal_routes` tightens the VC
+/// monotonicity lint from warning to error — see the module docs).
+#[derive(Clone, Copy)]
+pub struct FabricSpec<'a> {
+    pub chip_dims: [u32; 3],
+    pub gmap: &'a GatewayMap,
+    pub cfg: &'a DnpConfig,
+    pub faults: &'a [HierLinkFault],
+    pub minimal_routes: bool,
+}
+
+/// Route source for [`check_fabric`]: `(node, src, dst, cur_vc)` → the
+/// installed decision, or `None` when the node has no route toward
+/// `dst` (reported as a reachability error, never a panic). Decisions
+/// must be deterministic, and may depend on the packet source only
+/// through its *chip* — true of [`HierRouter`], whose delivery class
+/// tests the origin chip, and trivially of [`TableRouter`] — because
+/// the walk memoizes route suffixes per `(node, vc, source chip)`.
+pub type RouteFn<'a> = dyn Fn(usize, DnpAddr, DnpAddr, u8) -> Option<Decision> + 'a;
+
+/// Stored findings per [`Analysis`]; totals in [`FabricReport`] stay
+/// exact past the cap.
+const FINDING_CAP: usize = 8;
+
+#[derive(Default)]
+struct Reporter {
+    report: FabricReport,
+}
+
+impl Reporter {
+    fn push(&mut self, analysis: Analysis, severity: Severity, location: Location, message: String) {
+        self.report.absorb(Finding { analysis, severity, location, message });
+    }
+
+    fn finish(
+        mut self,
+        pairs: usize,
+        failed_pairs: usize,
+        chans: BTreeSet<Chan>,
+        edges: BTreeSet<(Chan, Chan)>,
+    ) -> FabricReport {
+        self.report.pairs = pairs;
+        self.report.failed_pairs = failed_pairs;
+        self.report.chans = chans;
+        self.report.edges = edges;
+        self.report
+    }
+}
+
+/// Structural config sanity. Returns `false` when the spec is too broken
+/// to interpret the wiring at all (invalid gateway map, over-capacity
+/// gateway tile, mesh degree beyond `N`, unaddressable dims) — the
+/// builders would panic on such a spec, so the verifier stops at the
+/// findings instead of building a [`FabricView`]. Non-structural
+/// problems (VC under-provisioning, uncovered cable directions) are
+/// reported but do not stop the walk.
+fn config_sanity(spec: &FabricSpec<'_>, rep: &mut Reporter) -> bool {
+    let gmap = spec.gmap;
+    let cfg = spec.cfg;
+    if let Err(e) = gmap.check() {
+        rep.push(
+            Analysis::Config,
+            Severity::Error,
+            Location::Config,
+            format!("invalid gateway map: {e}"),
+        );
+        return false;
+    }
+    let mut sound = true;
+    for (dim, &k) in spec.chip_dims.iter().enumerate() {
+        if k == 0 || k > 16 {
+            rep.push(
+                Analysis::Config,
+                Severity::Error,
+                Location::GatewayDim { dim },
+                format!("chip dimension {dim} = {k} outside the addressable 1..=16"),
+            );
+            sound = false;
+        }
+    }
+    let tile_dims = gmap.tile_dims();
+    if tile_dims.iter().any(|&d| d == 0 || d > 8) {
+        rep.push(
+            Analysis::Config,
+            Severity::Error,
+            Location::Config,
+            format!(
+                "tile dims {}x{} outside the addressable 1..=8 range",
+                tile_dims[0], tile_dims[1]
+            ),
+        );
+        sound = false;
+    }
+    if !sound {
+        return false;
+    }
+    // Every live dimension must have a lane carrying each direction,
+    // or whole rings are unreachable (reported per direction here, and
+    // again pair-by-pair by the walk if a route source is supplied).
+    for dim in 0..3 {
+        if spec.chip_dims[dim] < 2 {
+            continue;
+        }
+        for dir in 0..2 {
+            if !(0..gmap.group(dim).len()).any(|l| gmap.owns(dim, l, dir)) {
+                rep.push(
+                    Analysis::Config,
+                    Severity::Error,
+                    Location::GatewayDim { dim },
+                    format!(
+                        "no gateway lane carries the {} cable of chip dimension {dim}",
+                        ["+", "-"][dir]
+                    ),
+                );
+            }
+        }
+    }
+    // Gateway capacity: more cables on a tile than M off-chip ports
+    // makes the port maps unbuildable (the builder panics; we stop).
+    let ntiles = (tile_dims[0] * tile_dims[1]) as usize;
+    let mut owned = vec![0usize; ntiles];
+    for s in cable_slots(spec.chip_dims, gmap) {
+        owned[(s.tile[0] + s.tile[1] * tile_dims[0]) as usize] += 1;
+    }
+    for (t, &c) in owned.iter().enumerate() {
+        if c > cfg.m_ports {
+            rep.push(
+                Analysis::Config,
+                Severity::Error,
+                Location::Node { node: t },
+                format!(
+                    "gateway tile {t} carries {c} cables but the config provisions M={} \
+                     off-chip ports",
+                    cfg.m_ports
+                ),
+            );
+            sound = false;
+        }
+    }
+    for ty in 0..tile_dims[1] {
+        for tx in 0..tile_dims[0] {
+            let deg = (0..4).filter(|&d| mesh_step(tile_dims, [tx, ty], d).is_some()).count();
+            if deg > cfg.n_ports {
+                rep.push(
+                    Analysis::Config,
+                    Severity::Error,
+                    Location::Node { node: (tx + ty * tile_dims[0]) as usize },
+                    format!(
+                        "tile [{tx},{ty}] has mesh degree {deg} but the config provisions N={} \
+                         on-chip ports",
+                        cfg.n_ports
+                    ),
+                );
+                sound = false;
+            }
+        }
+    }
+    if spec.chip_dims.iter().any(|&k| k >= 2) && cfg.vcs < 2 {
+        rep.push(
+            Analysis::Config,
+            Severity::Error,
+            Location::Config,
+            format!(
+                "chip rings need >= 2 VCs (dateline escape class) but the config provisions {}",
+                cfg.vcs
+            ),
+        );
+    }
+    sound
+}
+
+fn structurally_sound(spec: &FabricSpec<'_>) -> bool {
+    config_sanity(spec, &mut Reporter::default())
+}
+
+#[derive(Clone, Copy)]
+enum MemoEntry {
+    /// This `(node, vc, src-chip)` state delivers; the payload is the
+    /// first channel its continuation occupies (`None` when it is the
+    /// destination itself), so a predecessor can add its dependence edge
+    /// without re-walking the suffix.
+    Delivered(Option<Chan>),
+    Failed,
+}
+
+/// Walk every (src, dst) pair through `route`, collecting the unified
+/// CDG and reporting reachability / termination / dead-wire / VC-range
+/// findings as they surface. Suffix-memoized per destination: a route's
+/// continuation from `(node, vc, src chip)` is deterministic, so each
+/// state is walked once per destination and the all-pairs sweep stays
+/// near-linear in states rather than quadratic in hops.
+fn walk_routes(
+    view: &FabricView,
+    cfg: &DnpConfig,
+    route: &RouteFn<'_>,
+    rep: &mut Reporter,
+) -> (BTreeSet<Chan>, BTreeSet<(Chan, Chan)>, usize, usize) {
+    let n = view.n;
+    let hop_bound = (view.nchips + 2) * (view.ntiles + 2);
+    let mut chans = BTreeSet::new();
+    let mut edges = BTreeSet::new();
+    // Dedup sets so one dead wire / out-of-range VC is reported once,
+    // not once per pair routed through it.
+    let mut dead_seen: HashSet<(usize, usize)> = HashSet::new();
+    let mut range_seen: HashSet<Chan> = HashSet::new();
+    let mut pairs = 0usize;
+    let mut failed_pairs = 0usize;
+
+    for dst in 0..n {
+        let mut memo: HashMap<(usize, u8, usize), MemoEntry> = HashMap::new();
+        for src in 0..n {
+            if src == dst {
+                continue;
+            }
+            pairs += 1;
+            let src_chip = src / view.ntiles;
+            let mut cur = src;
+            let mut vc = 0u8;
+            let mut prev: Option<Chan> = None;
+            let mut trail: Vec<((usize, u8, usize), Chan)> = Vec::new();
+            let mut onpath: HashSet<(usize, u8)> = HashSet::new();
+            let delivered = loop {
+                let state = (cur, vc, src_chip);
+                match memo.get(&state) {
+                    Some(MemoEntry::Delivered(first)) => {
+                        if let (Some(p), Some(c)) = (prev, *first) {
+                            edges.insert((p, c));
+                        }
+                        break true;
+                    }
+                    Some(MemoEntry::Failed) => break false,
+                    None => {}
+                }
+                if !onpath.insert((cur, vc)) {
+                    rep.push(
+                        Analysis::Termination,
+                        Severity::Error,
+                        Location::Pair { src, dst },
+                        format!("route loops: revisits node {cur} on vc {vc} before delivering"),
+                    );
+                    break false;
+                }
+                if trail.len() >= hop_bound {
+                    rep.push(
+                        Analysis::Termination,
+                        Severity::Error,
+                        Location::Pair { src, dst },
+                        format!("route exceeds the {hop_bound}-hop bound without delivering"),
+                    );
+                    break false;
+                }
+                let Some(dec) = route(cur, view.addrs[src], view.addrs[dst], vc) else {
+                    rep.push(
+                        Analysis::Reachability,
+                        Severity::Error,
+                        Location::Node { node: cur },
+                        format!("no route installed at node {cur} toward node {dst}"),
+                    );
+                    break false;
+                };
+                let port = match dec.out {
+                    OutSel::Local => {
+                        if cur == dst {
+                            memo.insert(state, MemoEntry::Delivered(None));
+                            break true;
+                        }
+                        rep.push(
+                            Analysis::Reachability,
+                            Severity::Error,
+                            Location::Pair { src, dst },
+                            format!("delivered at node {cur}, not the destination {dst}"),
+                        );
+                        break false;
+                    }
+                    OutSel::Port(p) => p,
+                };
+                let Some(hop) = view.hop_of(cur, port) else {
+                    rep.push(
+                        Analysis::Reachability,
+                        Severity::Error,
+                        Location::Node { node: cur },
+                        format!("route uses dangling port {port} at node {cur}"),
+                    );
+                    break false;
+                };
+                let chip = cur / view.ntiles;
+                let tile = cur % view.ntiles;
+                let ch = match hop {
+                    Hop::Mesh { mdir } => Chan::Mesh { chip, tile, mdir, vc: dec.vc },
+                    Hop::Off { dim, dir, lane } => Chan::Serdes { chip, dim, dir, lane, vc: dec.vc },
+                };
+                if usize::from(dec.vc) >= cfg.vcs && range_seen.insert(ch) {
+                    rep.push(
+                        Analysis::Config,
+                        Severity::Error,
+                        Location::Chan(ch),
+                        format!(
+                            "decision selects vc {} but the config provisions {} VCs",
+                            dec.vc, cfg.vcs
+                        ),
+                    );
+                }
+                if view.dead.contains(&(cur, port)) && dead_seen.insert((cur, port)) {
+                    rep.push(
+                        Analysis::DeadWire,
+                        Severity::Error,
+                        Location::Chan(ch),
+                        format!("installed route rides a faulted wire (node {cur}, port {port})"),
+                    );
+                }
+                chans.insert(ch);
+                if let Some(p) = prev {
+                    edges.insert((p, ch));
+                }
+                trail.push((state, ch));
+                prev = Some(ch);
+                cur = view.neighbor(cur, hop);
+                vc = dec.vc;
+            };
+            for &(st, c) in &trail {
+                let entry = if delivered { MemoEntry::Delivered(Some(c)) } else { MemoEntry::Failed };
+                memo.insert(st, entry);
+            }
+            if !delivered {
+                failed_pairs += 1;
+                // The terminal state fails too, so sibling sources
+                // short-circuit without re-reporting.
+                memo.entry((cur, vc, src_chip)).or_insert(MemoEntry::Failed);
+            }
+        }
+    }
+    (chans, edges, pairs, failed_pairs)
+}
+
+/// Edge-local VC-class lints over the walked CDG (module docs §VC
+/// discipline): SerDes dateline-class descent within one ring run
+/// (error on minimal/healthy routes, warning on recovered tables) and
+/// delivery-class finality (always an error).
+fn lint_edges(edges: &BTreeSet<(Chan, Chan)>, minimal_routes: bool, rep: &mut Reporter) {
+    for &(a, b) in edges {
+        match (a, b) {
+            (
+                Chan::Serdes { dim: d1, dir: r1, lane: l1, vc: v1, .. },
+                Chan::Serdes { dim: d2, dir: r2, lane: l2, vc: v2, .. },
+            ) if d1 == d2 && r1 == r2 && l1 == l2 && v2 < v1 => {
+                let severity = if minimal_routes { Severity::Error } else { Severity::Warning };
+                rep.push(
+                    Analysis::VcDiscipline,
+                    severity,
+                    Location::Chan(b),
+                    format!(
+                        "dateline class descends {v1} -> {v2} within a ring run (dim {d1} {} \
+                         lane {l1}); legal only for a recovered escape detour",
+                        ["+", "-"][r1]
+                    ),
+                );
+            }
+            (Chan::Mesh { vc: v1, .. }, Chan::Serdes { .. }) if v1 >= 1 => {
+                rep.push(
+                    Analysis::VcDiscipline,
+                    Severity::Error,
+                    Location::Chan(a),
+                    "delivery-class mesh channel feeds an off-chip hop (the delivery class \
+                     must terminate on its chip)"
+                        .to_string(),
+                );
+            }
+            (Chan::Mesh { vc: v1, .. }, Chan::Mesh { vc: v2, .. }) if v1 >= 1 && v2 < v1 => {
+                rep.push(
+                    Analysis::VcDiscipline,
+                    Severity::Error,
+                    Location::Chan(b),
+                    format!("delivery-class mesh walk descends vc {v1} -> {v2} before delivering"),
+                );
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Run every analysis over the fabric described by `spec`, sourcing
+/// routing decisions from `route`. This is the generic entry point the
+/// convenience checkers ([`check_healthy`], [`check_tables`],
+/// [`check_net`]) and fault recovery's deadlock gate all funnel into.
+pub fn check_fabric(spec: &FabricSpec<'_>, route: &RouteFn<'_>) -> FabricReport {
+    let mut rep = Reporter::default();
+    if !config_sanity(spec, &mut rep) {
+        return rep.finish(0, 0, BTreeSet::new(), BTreeSet::new());
+    }
+    let view = FabricView::new(spec.chip_dims, spec.gmap, spec.cfg, spec.faults);
+    for f in &view.findings {
+        rep.report.absorb(f.clone());
+    }
+    let (chans, edges, pairs, failed) = walk_routes(&view, spec.cfg, route, &mut rep);
+    lint_edges(&edges, spec.minimal_routes, &mut rep);
+    if let Some(w) = find_cycle(&chans, &edges) {
+        rep.push(
+            Analysis::Cdg,
+            Severity::Error,
+            Location::Chan(w),
+            format!("channel-dependence cycle through {w}"),
+        );
+    }
+    rep.finish(pairs, failed, chans, edges)
+}
+
+fn hybrid_addrs(chip_dims: [u32; 3], tile_dims: [u32; 2]) -> Vec<DnpAddr> {
+    let n = chip_dims.iter().product::<u32>() as usize
+        * (tile_dims[0] * tile_dims[1]) as usize;
+    let fmt = AddrFormat::Hybrid { chip_dims, tile_dims };
+    (0..n).map(|i| fmt.encode(&hybrid_coords(chip_dims, tile_dims, i))).collect()
+}
+
+/// Certify the *healthy* hybrid fabric: build one [`HierRouter`] per
+/// node exactly as [`crate::topology::hybrid_torus_mesh_with`] does and
+/// run [`check_fabric`] with the monotonicity lint at error strength
+/// (healthy routes are minimal).
+pub fn check_healthy(chip_dims: [u32; 3], gmap: &GatewayMap, cfg: &DnpConfig) -> FabricReport {
+    let spec = FabricSpec { chip_dims, gmap, cfg, faults: &[], minimal_routes: true };
+    if !structurally_sound(&spec) {
+        return check_fabric(&spec, &|_, _, _, _| None);
+    }
+    let tile_dims = gmap.tile_dims();
+    let ntiles = (tile_dims[0] * tile_dims[1]) as usize;
+    let addrs = hybrid_addrs(chip_dims, tile_dims);
+    let (mesh_port_of, off_port_of) = hybrid_port_maps(chip_dims, gmap, cfg);
+    let shared = Arc::new(gmap.clone());
+    let routers: Vec<HierRouter> = addrs
+        .iter()
+        .enumerate()
+        .map(|(i, &addr)| {
+            HierRouter::new_with(
+                addr,
+                chip_dims,
+                Arc::clone(&shared),
+                cfg.route_order,
+                mesh_port_of[i % ntiles],
+                off_port_of[i % ntiles],
+            )
+        })
+        .collect();
+    check_fabric(&spec, &|u, src, dst, vc| Some(routers[u].decide(src, dst, vc)))
+}
+
+/// Certify a recovered [`TableRouter`] set against the fault set it was
+/// recomputed for. Tables are matched to nodes by their own address
+/// (`TableRouter::me`), so any node order is accepted; a node with no
+/// table surfaces as a reachability error.
+pub fn check_tables(
+    chip_dims: [u32; 3],
+    gmap: &GatewayMap,
+    cfg: &DnpConfig,
+    faults: &[HierLinkFault],
+    tables: &[TableRouter],
+) -> FabricReport {
+    let spec = FabricSpec { chip_dims, gmap, cfg, faults, minimal_routes: false };
+    if !structurally_sound(&spec) {
+        return check_fabric(&spec, &|_, _, _, _| None);
+    }
+    let addrs = hybrid_addrs(chip_dims, gmap.tile_dims());
+    let by_me: HashMap<DnpAddr, &TableRouter> = tables.iter().map(|t| (t.me(), t)).collect();
+    check_fabric(&spec, &|u, _src, dst, _vc| by_me.get(&addrs[u]).and_then(|t| t.lookup(dst)))
+}
+
+/// Certify a fully built hybrid [`Net`] — whatever routers are actually
+/// installed (healthy [`HierRouter`]s or post-`inject_hybrid`
+/// [`TableRouter`]s), plus per-channel config sanity via
+/// [`check_channels`]. The debug-only self-check in
+/// [`inject_hybrid`](crate::fault::inject_hybrid) runs exactly this.
+pub fn check_net(
+    net: &Net,
+    wiring: &HybridWiring,
+    faults: &[HierLinkFault],
+    cfg: &DnpConfig,
+) -> FabricReport {
+    let spec = FabricSpec {
+        chip_dims: wiring.chip_dims,
+        gmap: &wiring.gmap,
+        cfg,
+        faults,
+        minimal_routes: false,
+    };
+    let mut report = if structurally_sound(&spec) {
+        let addrs = hybrid_addrs(wiring.chip_dims, wiring.tile_dims);
+        let idx: Vec<usize> = addrs.iter().map(|&a| net.node_of(a)).collect();
+        check_fabric(&spec, &|u, src, dst, vc| {
+            Some(net.dnp(idx[u]).router().decide(src, dst, vc))
+        })
+    } else {
+        check_fabric(&spec, &|_, _, _, _| None)
+    };
+    for f in check_channels(net, cfg) {
+        report.absorb(f);
+    }
+    report
+}
+
+/// Per-channel config sanity on any built [`Net`] (not hybrid-specific):
+/// VC count below the config's provisioning, zero-capacity VC buffers,
+/// zero-rate wires. The channel constructor rejects the degenerate
+/// values at build time; this re-checks the built arena so a future
+/// deserialization/mutation path cannot smuggle one in.
+pub fn check_channels(net: &Net, cfg: &DnpConfig) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (id, ch) in net.chans.iter() {
+        let mut bad = |message: String| {
+            out.push(Finding {
+                analysis: Analysis::Config,
+                severity: Severity::Error,
+                location: Location::Config,
+                message,
+            });
+        };
+        if ch.vcs() < cfg.vcs {
+            bad(format!(
+                "channel {} provisions {} VCs but the config requires {}",
+                id.0,
+                ch.vcs(),
+                cfg.vcs
+            ));
+        }
+        if ch.vc_depth == 0 {
+            bad(format!("channel {} has zero-capacity VC buffers", id.0));
+        }
+        if ch.cycles_per_word == 0 {
+            bad(format!("channel {} has a zero cycles-per-word rate", id.0));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::route::hier::ring_class_vc;
+
+    const TILES: [u32; 2] = [2, 2];
+
+    fn maps() -> [(&'static str, GatewayMap); 3] {
+        [
+            ("fixed", GatewayMap::fixed(TILES)),
+            ("dimpair", GatewayMap::dim_pair(TILES)),
+            ("dsthash", GatewayMap::dst_hash(TILES, 2)),
+        ]
+    }
+
+    #[test]
+    fn healthy_small_matrix_certifies() {
+        let cfg = DnpConfig::hybrid();
+        for chips in [[3, 3, 1], [2, 2, 2]] {
+            for (name, gmap) in maps() {
+                let rep = check_healthy(chips, &gmap, &cfg);
+                assert!(rep.is_certified(), "{chips:?} {name} not certified:\n{rep}");
+                let n = chips.iter().product::<u32>() as usize * 4;
+                assert_eq!(rep.pairs, n * (n - 1));
+                assert_eq!(rep.failed_pairs, 0);
+                assert!(!rep.chans.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn pure_mesh_chip_certifies() {
+        let cfg = DnpConfig::hybrid();
+        let rep = check_healthy([1, 1, 1], &GatewayMap::fixed(TILES), &cfg);
+        assert!(rep.is_certified(), "{rep}");
+        // No SerDes resources on a single chip.
+        assert!(rep.chans.iter().all(|c| matches!(c, Chan::Mesh { .. })));
+    }
+
+    #[test]
+    fn vc_underprovision_is_an_error() {
+        let mut cfg = DnpConfig::hybrid();
+        cfg.vcs = 1;
+        let rep = check_healthy([2, 1, 1], &GatewayMap::fixed(TILES), &cfg);
+        assert!(!rep.is_certified());
+        assert!(
+            rep.findings
+                .iter()
+                .any(|f| f.analysis == Analysis::Config && f.message.contains("VC")),
+            "{rep}"
+        );
+    }
+
+    #[test]
+    fn overloaded_gateway_is_reported_not_a_panic() {
+        // Fixed parks every cable of all three dimensions on tile [0,0]:
+        // 6 cables on a 3x3x3 torus, against M=1 off-chip ports. The
+        // builders panic on this spec; the verifier must diagnose it.
+        let mut cfg = DnpConfig::hybrid();
+        cfg.m_ports = 1;
+        let rep = check_healthy([3, 3, 3], &GatewayMap::fixed(TILES), &cfg);
+        assert!(!rep.is_certified());
+        assert!(rep.findings.iter().any(|f| f.analysis == Analysis::Config), "{rep}");
+        assert_eq!(rep.pairs, 0, "walk must not run on a structurally broken spec");
+    }
+
+    #[test]
+    fn fault_naming_unwired_link_is_reported() {
+        let cfg = DnpConfig::hybrid();
+        let gmap = GatewayMap::fixed(TILES);
+        // Dim 1 has k = 1: no cables exist there.
+        let faults = [HierLinkFault::Serdes { chip: [0, 0, 0], dim: 1, plus: true }];
+        let spec = FabricSpec {
+            chip_dims: [2, 1, 1],
+            gmap: &gmap,
+            cfg: &cfg,
+            faults: &faults,
+            minimal_routes: false,
+        };
+        let rep = check_fabric(&spec, &|_, _, _, _| None);
+        assert!(
+            rep.findings
+                .iter()
+                .any(|f| f.analysis == Analysis::Config && f.message.contains("unwired")),
+            "{rep}"
+        );
+    }
+
+    #[test]
+    fn healthy_route_over_dead_wire_is_flagged() {
+        // Healthy routers ignore faults — verifying them against a fault
+        // set must produce dead-wire findings (this is exactly the state
+        // recovery exists to fix).
+        let cfg = DnpConfig::hybrid();
+        let gmap = GatewayMap::fixed(TILES);
+        let chips = [3, 1, 1];
+        let faults = [HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: true }];
+        let spec = FabricSpec {
+            chip_dims: chips,
+            gmap: &gmap,
+            cfg: &cfg,
+            faults: &faults,
+            minimal_routes: true,
+        };
+        let tile_dims = gmap.tile_dims();
+        let addrs = hybrid_addrs(chips, tile_dims);
+        let (mesh_port_of, off_port_of) = hybrid_port_maps(chips, &gmap, &cfg);
+        let shared = Arc::new(gmap.clone());
+        let routers: Vec<HierRouter> = addrs
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| {
+                HierRouter::new_with(
+                    a,
+                    chips,
+                    Arc::clone(&shared),
+                    cfg.route_order,
+                    mesh_port_of[i % 4],
+                    off_port_of[i % 4],
+                )
+            })
+            .collect();
+        let rep = check_fabric(&spec, &|u, s, d, v| Some(routers[u].decide(s, d, v)));
+        assert!(!rep.is_certified());
+        assert!(rep.findings.iter().any(|f| f.analysis == Analysis::DeadWire), "{rep}");
+    }
+
+    #[test]
+    fn livelock_loop_is_caught() {
+        // Two tiles on one chip, the route source ping-pongs forever.
+        let cfg = DnpConfig::hybrid();
+        let gmap = GatewayMap::fixed([2, 1]);
+        let spec = FabricSpec {
+            chip_dims: [1, 1, 1],
+            gmap: &gmap,
+            cfg: &cfg,
+            faults: &[],
+            minimal_routes: false,
+        };
+        let rep = check_fabric(&spec, &|_, _, _, _| {
+            Some(Decision { out: OutSel::Port(0), vc: 0 })
+        });
+        assert!(!rep.is_certified());
+        assert!(rep.findings.iter().any(|f| f.analysis == Analysis::Termination), "{rep}");
+        assert_eq!(rep.failed_pairs, rep.pairs);
+    }
+
+    #[test]
+    fn missing_route_is_a_reachability_error() {
+        let cfg = DnpConfig::hybrid();
+        let gmap = GatewayMap::fixed([2, 1]);
+        let spec = FabricSpec {
+            chip_dims: [1, 1, 1],
+            gmap: &gmap,
+            cfg: &cfg,
+            faults: &[],
+            minimal_routes: false,
+        };
+        let rep = check_fabric(&spec, &|_, _, _, _| None);
+        assert!(!rep.is_certified());
+        assert!(rep.findings.iter().any(|f| f.analysis == Analysis::Reachability), "{rep}");
+    }
+
+    #[test]
+    fn delivery_class_feeding_serdes_is_an_error() {
+        // Healthy routers on 2 chips x [2,1] tiles, with node 1's route
+        // toward node 3 overridden to ride the *delivery* mesh class
+        // (vc 1) into the gateway — the exact coupling the delivery
+        // class exists to cut. The CDG stays acyclic; only the finality
+        // lint must fire.
+        let cfg = DnpConfig::hybrid();
+        let gmap = GatewayMap::fixed([2, 1]);
+        let chips = [2, 1, 1];
+        let spec = FabricSpec {
+            chip_dims: chips,
+            gmap: &gmap,
+            cfg: &cfg,
+            faults: &[],
+            minimal_routes: false,
+        };
+        let tile_dims = gmap.tile_dims();
+        let addrs = hybrid_addrs(chips, tile_dims);
+        let (mesh_port_of, off_port_of) = hybrid_port_maps(chips, &gmap, &cfg);
+        let shared = Arc::new(gmap.clone());
+        let routers: Vec<HierRouter> = addrs
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| {
+                HierRouter::new_with(
+                    a,
+                    chips,
+                    Arc::clone(&shared),
+                    cfg.route_order,
+                    mesh_port_of[i % 2],
+                    off_port_of[i % 2],
+                )
+            })
+            .collect();
+        let dst3 = addrs[3];
+        let rep = check_fabric(&spec, &|u, s, d, v| {
+            if u == 1 && d == dst3 {
+                // Mesh X- toward the gateway, but on the delivery class.
+                return Some(Decision { out: OutSel::Port(0), vc: 1 });
+            }
+            Some(routers[u].decide(s, d, v))
+        });
+        assert!(!rep.is_certified());
+        assert!(rep.findings.iter().any(|f| f.analysis == Analysis::VcDiscipline), "{rep}");
+        assert!(
+            rep.findings.iter().all(|f| f.analysis != Analysis::Cdg),
+            "finality violation alone must not fabricate a cycle:\n{rep}"
+        );
+    }
+
+    #[test]
+    fn serdes_descent_severity_follows_provenance() {
+        // Single-tile chips on a k=4 ring; all routes stay wrap-free
+        // (plus for dst > src, minus for dst < src), with one route's
+        // first hop forced onto vc 1 so the next hop descends to class 0.
+        // The graph is a DAG (no wrap edges), so the descent is the only
+        // finding: a warning for table provenance, an error for minimal.
+        let cfg = DnpConfig::hybrid();
+        let gmap = GatewayMap::fixed([1, 1]);
+        let chips = [4, 1, 1];
+        let addrs = hybrid_addrs(chips, [1, 1]);
+        let plus = cfg.n_ports; // first off-chip port: (dim 0, +)
+        let minus = cfg.n_ports + 1;
+        let route = |u: usize, _s: DnpAddr, d: DnpAddr, _v: u8| -> Option<Decision> {
+            let dst = addrs.iter().position(|&a| a == d).expect("hybrid address");
+            let (port, dir) = if dst > u { (plus, 0) } else { (minus, 1) };
+            let vc = if u == 3 && dst == 0 {
+                1 // adversarial: escape class on a wrap-free hop
+            } else {
+                ring_class_vc(4, u as u32, dst as u32, dir)
+            };
+            Some(Decision { out: OutSel::Port(port), vc })
+        };
+        for (minimal, expect_certified) in [(false, true), (true, false)] {
+            let spec = FabricSpec {
+                chip_dims: chips,
+                gmap: &gmap,
+                cfg: &cfg,
+                faults: &[],
+                minimal_routes: minimal,
+            };
+            let rep = check_fabric(&spec, &route);
+            assert_eq!(rep.is_certified(), expect_certified, "minimal={minimal}:\n{rep}");
+            assert!(
+                rep.findings.iter().any(|f| f.analysis == Analysis::VcDiscipline),
+                "minimal={minimal}:\n{rep}"
+            );
+            assert!(
+                rep.findings.iter().all(|f| f.analysis != Analysis::Cdg),
+                "wrap-free routes must stay acyclic:\n{rep}"
+            );
+        }
+    }
+
+    #[test]
+    fn report_display_is_greppable() {
+        let cfg = DnpConfig::hybrid();
+        let rep = check_healthy([2, 2, 1], &GatewayMap::fixed(TILES), &cfg);
+        let s = format!("{rep}");
+        assert!(s.contains("pairs walked"), "{s}");
+        assert!(s.contains("certified"), "{s}");
+    }
+}

@@ -1,0 +1,221 @@
+//! Integration suite for the whole-fabric static verifier (ISSUE 7
+//! acceptance): every shipped healthy configuration certifies, every
+//! recovery the fault layer installs certifies, and hand-built cyclic
+//! table sets are rejected with correctly-located findings — including
+//! a cross-layer cycle that is provably invisible to the decomposed
+//! per-lane SerDes / per-chip mesh checks the fault layer ran before.
+
+use dnp::config::DnpConfig;
+use dnp::fault::{recompute_hybrid_tables_with, HierLinkFault};
+use dnp::packet::{AddrFormat, DnpAddr};
+use dnp::route::hier::ring_class_vc;
+use dnp::route::{GatewayMap, TableRouter};
+use dnp::verify::{self, Analysis, Chan, Location, Severity};
+use std::collections::BTreeSet;
+
+const TILES: [u32; 2] = [2, 2];
+
+fn maps() -> [(&'static str, GatewayMap); 3] {
+    [
+        ("fixed", GatewayMap::fixed(TILES)),
+        ("dimpair", GatewayMap::dim_pair(TILES)),
+        ("dsthash", GatewayMap::dst_hash(TILES, 2)),
+    ]
+}
+
+#[test]
+fn every_shipped_healthy_configuration_certifies() {
+    let cfg = DnpConfig::hybrid();
+    for chips in [[2, 2, 1], [3, 3, 1], [4, 4, 1], [5, 5, 1], [3, 3, 3], [4, 4, 4]] {
+        for (name, gmap) in maps() {
+            let rep = verify::check_healthy(chips, &gmap, &cfg);
+            assert!(rep.is_certified(), "{chips:?} {name} not certified:\n{rep}");
+            let n = chips.iter().product::<u32>() as usize * 4;
+            assert_eq!(rep.pairs, n * (n - 1), "{chips:?} {name}");
+            assert_eq!(rep.failed_pairs, 0, "{chips:?} {name}");
+        }
+    }
+}
+
+#[test]
+fn every_installed_recovery_certifies() {
+    // Whatever `recompute_hybrid_tables_with` installs must pass the
+    // external verifier too (it gates on the same check internally, so
+    // this pins the two entry points against drift) — across maps,
+    // both the k = 3 detour regime and the k = 4 escape regime, with a
+    // mesh fault riding along.
+    let cfg = DnpConfig::hybrid();
+    for chips in [[3, 3, 1], [4, 4, 1]] {
+        for (name, gmap) in maps() {
+            let lane = (0..gmap.group(0).len())
+                .find(|&l| gmap.owns(0, l, 0))
+                .expect("some lane owns the + cable");
+            let faults = [
+                HierLinkFault::SerdesLane { chip: [0, 0, 0], dim: 0, plus: true, lane },
+                HierLinkFault::Mesh { chip: [1, 0, 0], tile: [0, 0], dim: 0, plus: true },
+            ];
+            let tables = recompute_hybrid_tables_with(chips, &gmap, &faults, &cfg)
+                .unwrap_or_else(|e| panic!("{chips:?} {name}: recovery refused: {e:?}"));
+            let rep = verify::check_tables(chips, &gmap, &cfg, &faults, &tables);
+            assert!(rep.is_certified(), "{chips:?} {name} recovery not certified:\n{rep}");
+            assert_eq!(rep.failed_pairs, 0, "{chips:?} {name}");
+        }
+    }
+}
+
+/// Single-tile chips on a k = 4 ring (fixed map): addresses and a table
+/// set installed by `routes(u, dst) -> (port, vc)`.
+fn ring4_tables(routes: impl Fn(usize, usize) -> (usize, u8)) -> (Vec<DnpAddr>, Vec<TableRouter>) {
+    let fmt = AddrFormat::Hybrid { chip_dims: [4, 1, 1], tile_dims: [1, 1] };
+    let addrs: Vec<DnpAddr> = (0..4).map(|u| fmt.encode(&[u as u32, 0, 0, 0, 0])).collect();
+    let mut tables: Vec<TableRouter> = addrs.iter().map(|&a| TableRouter::new(a)).collect();
+    for u in 0..4 {
+        for d in 0..4 {
+            if d != u {
+                let (port, vc) = routes(u, d);
+                tables[u].install(addrs[d], port, vc);
+            }
+        }
+    }
+    (addrs, tables)
+}
+
+#[test]
+fn all_plus_ring_on_one_class_is_rejected() {
+    // Every route rides the + cable on VC 0: each pair still delivers
+    // within 3 hops, but the four directed channels form the textbook
+    // ring credit cycle. The verifier must refuse with a CDG finding
+    // located at one of the dim-0 + SerDes channels.
+    let cfg = DnpConfig::hybrid();
+    let gmap = GatewayMap::fixed([1, 1]);
+    let plus = cfg.n_ports;
+    let (_, tables) = ring4_tables(|_, _| (plus, 0));
+    let rep = verify::check_tables([4, 1, 1], &gmap, &cfg, &[], &tables);
+    assert!(!rep.is_certified(), "{rep}");
+    assert_eq!(rep.failed_pairs, 0, "all pairs deliver; only the CDG is unsound:\n{rep}");
+    assert!(
+        rep.findings.iter().any(|f| f.analysis == Analysis::Cdg
+            && matches!(f.location, Location::Chan(Chan::Serdes { dim: 0, dir: 0, .. }))),
+        "CDG refusal must name a dim-0 + SerDes channel:\n{rep}"
+    );
+}
+
+#[test]
+fn dateline_classed_ring_certifies() {
+    // The near-cycle control for the test above: same k = 4 ring, but
+    // minimal directions with the static dateline classes of
+    // `ring_class_vc`. The + channels still chain around the ring —
+    // one class ascent at the wrap cable is all that separates this
+    // from the rejected set.
+    let cfg = DnpConfig::hybrid();
+    let gmap = GatewayMap::fixed([1, 1]);
+    let (plus, minus) = (cfg.n_ports, cfg.n_ports + 1);
+    let (_, tables) = ring4_tables(|u, d| {
+        let fwd = (d + 4 - u) % 4;
+        let dir = usize::from(fwd > 2); // ring_step ties toward +
+        let port = if dir == 0 { plus } else { minus };
+        (port, ring_class_vc(4, u as u32, d as u32, dir))
+    });
+    let rep = verify::check_tables([4, 1, 1], &gmap, &cfg, &[], &tables);
+    assert!(rep.is_certified(), "{rep}");
+    // Both dateline classes are genuinely in use (the graph got "near"
+    // the cycle and the class split broke it).
+    let vcs: BTreeSet<u8> = rep
+        .chans
+        .iter()
+        .filter_map(|c| match *c {
+            Chan::Serdes { vc, .. } => Some(vc),
+            Chan::Mesh { .. } => None,
+        })
+        .collect();
+    assert_eq!(vcs.into_iter().collect::<Vec<_>>(), vec![0, 1], "{rep}");
+}
+
+#[test]
+fn cross_layer_stitched_cycle_is_caught_and_decomposition_is_blind() {
+    // Two chips (k = 2) x two tiles ([2,1]) under DimPair: the + cable
+    // leaves tile 0 and lands on the neighbour's tile 1; the - cable
+    // leaves tile 1 and lands on tile 0. Nodes: 0 = (c0,t0),
+    // 1 = (c0,t1), 2 = (c1,t0), 3 = (c1,t1). Port 0 is each tile's one
+    // mesh link (t0: X+, t1: X-), port 4 its one cable.
+    //
+    // The table set below delivers all 12 pairs in <= 3 hops, with no
+    // two consecutive SerDes hops anywhere and no mesh->mesh edge on
+    // either chip — yet the per-route mesh segments stitch the four
+    // vc-0 channels into a cycle:
+    //
+    //   S0+ -> M1(t1->t0) -> S1+ -> M0(t1->t0) -> S0+
+    //
+    // The pre-PR-7 decomposed gate (SerDes-only projection + per-chip
+    // mesh check) accepts this set by construction; only the unified
+    // cross-layer CDG sees the cycle.
+    let cfg = DnpConfig::hybrid();
+    let gmap = GatewayMap::dim_pair([2, 1]);
+    let chips = [2, 1, 1];
+    let fmt = AddrFormat::Hybrid { chip_dims: chips, tile_dims: [2, 1] };
+    let coords = [[0u32, 0, 0, 0, 0], [0, 0, 0, 1, 0], [1, 0, 0, 0, 0], [1, 0, 0, 1, 0]];
+    let addrs: Vec<DnpAddr> = coords.iter().map(|c| fmt.encode(c)).collect();
+    let mut tables: Vec<TableRouter> = addrs.iter().map(|&a| TableRouter::new(a)).collect();
+    let mesh = 0usize;
+    let cable = cfg.n_ports;
+    // (node, dst, port, vc) — see the walk-through above.
+    let set: [(usize, usize, usize, u8); 12] = [
+        (0, 1, mesh, 1),  // delivery X+
+        (0, 2, cable, 0), // S0+ then node3's dst-2 entry
+        (0, 3, cable, 0), // S0+ lands on the destination
+        (1, 0, mesh, 1),  // delivery X-
+        (1, 2, mesh, 0),  // to the + gateway, then S0+
+        (1, 3, mesh, 0),  // to the + gateway, then S0+
+        (2, 0, cable, 0), // S1+ then node1's delivery entry
+        (2, 1, cable, 0), // S1+ lands on the destination
+        (2, 3, cable, 0), // adversarial: out through c0 and back
+        (3, 0, mesh, 0),  // to t0, then S1+
+        (3, 1, mesh, 0),  // to t0, then S1+
+        (3, 2, mesh, 0),  // vc-0 final mesh hop (legal, and load-bearing)
+    ];
+    for (u, d, port, vc) in set {
+        tables[u].install(addrs[d], port, vc);
+    }
+    let rep = verify::check_tables(chips, &gmap, &cfg, &[], &tables);
+
+    // Every pair delivers; the only unsoundness is the stitched cycle.
+    assert_eq!(rep.failed_pairs, 0, "{rep}");
+    assert!(!rep.is_certified(), "{rep}");
+    assert!(
+        rep.findings
+            .iter()
+            .filter(|f| f.severity == Severity::Error)
+            .all(|f| f.analysis == Analysis::Cdg),
+        "the set must fail on the CDG alone:\n{rep}"
+    );
+    assert!(
+        rep.findings.iter().any(|f| f.analysis == Analysis::Cdg),
+        "missing the CDG refusal:\n{rep}"
+    );
+
+    // Decomposition-blindness, shown on the walked graph itself:
+    // (a) no direct SerDes->SerDes dependence exists, so a SerDes-only
+    //     projection has no edges at all;
+    assert!(
+        rep.edges.iter().all(|&(a, b)| !(matches!(a, Chan::Serdes { .. })
+            && matches!(b, Chan::Serdes { .. }))),
+        "a direct SerDes->SerDes edge would make the old projection see it:\n{rep}"
+    );
+    // (b) each chip's mesh-only projection is acyclic.
+    for chip in 0..2 {
+        let of_chip =
+            |c: &Chan| matches!(*c, Chan::Mesh { chip: mc, .. } if mc == chip);
+        let nodes: BTreeSet<Chan> = rep.chans.iter().filter(|c| of_chip(c)).copied().collect();
+        let edges: BTreeSet<(Chan, Chan)> = rep
+            .edges
+            .iter()
+            .filter(|(a, b)| of_chip(a) && of_chip(b))
+            .copied()
+            .collect();
+        assert_eq!(
+            verify::find_cycle(&nodes, &edges),
+            None,
+            "chip {chip}'s mesh projection must stay acyclic"
+        );
+    }
+}
