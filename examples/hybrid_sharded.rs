@@ -1,16 +1,17 @@
 //! Sharded-vs-sequential tour of the hybrid system: the same 2×2×2-chip
 //! torus of 2×2 tile meshes (32 DNPs) runs a halo-exchange phase and a
-//! uniform-random plan twice — once under the sequential event scheduler
-//! (`traffic::run_plan`) and once sharded per chip on worker threads
-//! (`traffic::run_plan_sharded`) — and asserts the two agree bit-exactly
-//! on drain cycles and every delivery counter.
+//! uniform-random plan three ways — under the sequential event scheduler
+//! (`traffic::run_plan`) and sharded per chip on worker threads
+//! (`traffic::run_plan_sharded`) with both parallel runners (windowed
+//! barrier and per-link conservative clocks) — and asserts all three
+//! agree bit-exactly on drain cycles and every delivery counter.
 //!
 //! Run: `cargo run --release --example hybrid_sharded [workers]`
 //! (default 2 workers; CI runs this as the sharded smoke).
 
 use dnp::config::DnpConfig;
-use dnp::metrics::{net_totals, sharded_totals};
-use dnp::sim::ShardedNet;
+use dnp::metrics::{net_totals, scheduler_totals, sharded_totals};
+use dnp::sim::{ParallelMode, ShardedNet};
 use dnp::{topology, traffic};
 
 const CHIPS: [u32; 3] = [2, 2, 2];
@@ -52,38 +53,48 @@ fn main() {
         let seq = traffic::run_plan(&mut net, &mut feeder, 10_000_000).expect("sequential drains");
         let seq_totals = net_totals(&net);
 
-        // Per-chip shards on worker threads.
-        let mut snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, MEM, workers);
-        traffic::setup_buffers_sharded(&mut snet);
-        let shd =
-            traffic::run_plan_sharded(&mut snet, plan.clone(), 10_000_000).expect("sharded drains");
-        let shd_totals = sharded_totals(&snet);
+        // Per-chip shards on worker threads, under both parallel runners.
+        for mode in [ParallelMode::Barrier, ParallelMode::LinkClock] {
+            let mut snet =
+                ShardedNet::hybrid(CHIPS, TILES, &cfg, MEM, workers).expect("uniform links");
+            snet.set_parallel_mode(mode);
+            traffic::setup_buffers_sharded(&mut snet);
+            let shd = traffic::run_plan_sharded(&mut snet, plan.clone(), 10_000_000)
+                .expect("sharded drains");
+            let shd_totals = sharded_totals(&snet);
 
-        println!(
-            "{name}: {} messages, sequential {} cycles, sharded {} cycles (horizon {} cycles)",
-            plan.len(),
-            seq,
-            shd,
-            snet.horizon(),
-        );
-        assert_eq!(seq, shd, "{name}: drain cycles diverged");
-        assert_eq!(seq_totals, shd_totals, "{name}: counters diverged");
-        assert_eq!(shd_totals.delivered, plan.len() as u64);
-        assert_eq!(shd_totals.lut_misses, 0);
-        // Per-wire agreement: every directed SerDes wire carried exactly
-        // the words the sequential build's twin channel carried.
-        for (i, l) in wiring.partition().links.iter().enumerate() {
-            let seq_words = net.chans.get(l.chan).words_sent;
-            assert_eq!(
-                seq_words,
-                snet.link_words_sent(i),
-                "wire {i} (chip {} dim {} {}) words diverged",
-                l.from_chip,
-                l.dim,
-                if l.plus { "+" } else { "-" },
+            println!(
+                "{name} [{mode:?}]: {} messages, sequential {} cycles, sharded {} cycles \
+                 (horizon {} cycles)",
+                plan.len(),
+                seq,
+                shd,
+                snet.horizon(),
+            );
+            assert_eq!(seq, shd, "{name} ({mode:?}): drain cycles diverged");
+            assert_eq!(seq_totals, shd_totals, "{name} ({mode:?}): counters diverged");
+            assert_eq!(shd_totals.delivered, plan.len() as u64);
+            assert_eq!(shd_totals.lut_misses, 0);
+            // Per-wire agreement: every directed SerDes wire carried exactly
+            // the words the sequential build's twin channel carried.
+            for (i, l) in wiring.partition().links.iter().enumerate() {
+                let seq_words = net.chans.get(l.chan).words_sent;
+                assert_eq!(
+                    seq_words,
+                    snet.link_words_sent(i),
+                    "wire {i} (chip {} dim {} {}) words diverged",
+                    l.from_chip,
+                    l.dim,
+                    if l.plus { "+" } else { "-" },
+                );
+            }
+            let sched = scheduler_totals(&snet);
+            println!(
+                "EXPERIMENTS: shard-smoke {name} mode={mode:?} cycles={seq} delivered={} \
+                 rounds={} null-windows={}",
+                shd_totals.delivered, sched.rounds, sched.null_windows,
             );
         }
-        println!("EXPERIMENTS: shard-smoke {name} cycles={seq} delivered={}", shd_totals.delivered);
     }
     println!("sharded == sequential on every counter and every wire: OK");
 }

@@ -1,0 +1,119 @@
+//! §Shard-scale smoke: the 512-chip system under asymmetric load.
+//!
+//! An 8×8×8 chip torus of 2×2 tile meshes — 512 shards, 2048 DNPs —
+//! where only the 8 chips of one x-axis row send (each tile PUTs to its
+//! antipodal chip) and the other 504 chips sit idle. The load is the
+//! worst case for the windowed-barrier runner (every shard pays every
+//! global window) and the best case for the per-link conservative
+//! clocks (idle shards run ahead at their own pace), so the sweep below
+//! is the headline scalability comparison of EXPERIMENTS.md
+//! §Shard-scale. Every (mode × workers) run must stay bit-exact with
+//! every other at the fixed budget; the `[shard-scale]` rows are
+//! harvested by CI into the experiments summary.
+//!
+//! Run: `cargo run --release --example shard_scale [max_workers]`
+//! (default sweep: 1, 2, 4, 8, 16 workers in both modes).
+
+use std::time::Instant;
+
+use dnp::config::DnpConfig;
+use dnp::metrics::{scheduler_totals, sharded_totals, NetTotals};
+use dnp::packet::AddrFormat;
+use dnp::rdma::Command;
+use dnp::sim::{ParallelMode, ShardedNet};
+use dnp::traffic::{self, Planned};
+
+const CHIPS: [u32; 3] = [8, 8, 8];
+const TILES: [u32; 2] = [2, 2];
+const MEM: usize = 1 << 15;
+const BUDGET: u64 = 10_000_000;
+
+/// Asymmetric antipodal load: row (y=0, z=0) sends, everyone else idles.
+/// Per-sender RX windows are infeasible at 2048 nodes, so every flow
+/// lands in one shared `0x4000` window — this is a scheduler workload,
+/// not a payload check (the equivalence suite owns those).
+fn scale_plan() -> Vec<Planned> {
+    let fmt = AddrFormat::Hybrid { chip_dims: CHIPS, tile_dims: TILES };
+    let tiles = (TILES[0] * TILES[1]) as usize;
+    let mut plan = Vec::new();
+    for x in 0..CHIPS[0] {
+        for t in 0..tiles {
+            let tc = [t as u32 % TILES[0], t as u32 / TILES[0]];
+            let node = traffic::hybrid_node_index(CHIPS, TILES, [x, 0, 0], tc);
+            let dst = fmt.encode(&[(x + 4) % CHIPS[0], 4, 4, tc[0], tc[1]]);
+            for i in 0..4u64 {
+                plan.push(Planned {
+                    node,
+                    at: i * 97 + u64::from(x) * 11,
+                    cmd: Command::put(0x1000, dst, 0x4000, 32)
+                        .with_tag((node as u32) * 8 + i as u32),
+                });
+            }
+        }
+    }
+    plan
+}
+
+fn main() {
+    let max_workers: usize = std::env::args()
+        .nth(1)
+        .map(|a| a.parse().expect("max_workers must be a number"))
+        .unwrap_or(16);
+    let cfg = DnpConfig::hybrid();
+    let n = (CHIPS.iter().product::<u32>() * TILES.iter().product::<u32>()) as usize;
+    let nchips = CHIPS.iter().product::<u32>();
+    println!(
+        "shard-scale: {}x{}x{} chips of {}x{} tiles = {n} DNPs, {nchips} shards, \
+         budget {BUDGET} cycles",
+        CHIPS[0], CHIPS[1], CHIPS[2], TILES[0], TILES[1],
+    );
+
+    // (elapsed, totals) of the first run: every later (mode × workers)
+    // combination must reproduce it exactly at the fixed budget.
+    let mut reference: Option<(Option<u64>, NetTotals)> = None;
+    for mode in [ParallelMode::Barrier, ParallelMode::LinkClock] {
+        for workers in [1usize, 2, 4, 8, 16] {
+            if workers > max_workers {
+                continue;
+            }
+            let mut snet =
+                ShardedNet::hybrid(CHIPS, TILES, &cfg, MEM, workers).expect("uniform links");
+            snet.set_parallel_mode(mode);
+            snet.set_tracing(false);
+            for i in 0..n {
+                snet.dnp_mut(i)
+                    .register_buffer(0x4000, traffic::RX_WINDOW, 0)
+                    .expect("LUT capacity (one shared window)");
+            }
+            let t0 = Instant::now();
+            let elapsed = traffic::run_plan_sharded(&mut snet, scale_plan(), BUDGET);
+            let wall = t0.elapsed().as_secs_f64();
+            let totals = sharded_totals(&snet);
+            let sched = scheduler_totals(&snet);
+            let cycles = elapsed.unwrap_or(BUDGET);
+            println!(
+                "[shard-scale] mode={mode:?} workers={workers} cycles={cycles} \
+                 delivered={} wall={wall:.3}s Mcycles/s={:.2} horizon={} rounds={} \
+                 busy={} null={} stalls={} util={:.3}",
+                totals.delivered,
+                cycles as f64 / wall / 1e6,
+                snet.horizon(),
+                sched.rounds,
+                sched.busy_windows,
+                sched.null_windows,
+                sched.stalls,
+                sched.utilization(),
+            );
+            assert!(elapsed.is_some(), "the load must drain inside the budget");
+            assert!(totals.delivered > 0, "the senders must deliver");
+            match &reference {
+                None => reference = Some((elapsed, totals)),
+                Some((re, rt)) => {
+                    assert_eq!(*re, elapsed, "mode={mode:?} w{workers}: drain cycle diverged");
+                    assert_eq!(*rt, totals, "mode={mode:?} w{workers}: totals diverged");
+                }
+            }
+        }
+    }
+    println!("[shard-scale] every mode x worker count bit-exact at the fixed budget: OK");
+}

@@ -69,6 +69,16 @@ pub struct SerdesConfig {
     /// Retransmission buffer depth in words (envelope protection,
     /// Sec. III-A.2: header/footer are retransmitted on error).
     pub retx_buf_words: u32,
+    /// Batch credit returns at flit-flight boundaries instead of per
+    /// flit. The receiver accumulates freed credits and releases them at
+    /// multiples of the flit flight ([`crate::phy::serdes_flight`]), so
+    /// a credit lands `flight..2*flight (+wire)` cycles after its pop
+    /// instead of `wire` cycles after. Slightly deeper effective
+    /// buffering requirements under sustained load, identical protocol
+    /// semantics — and it lifts the sharded scheduler's conservative
+    /// horizon from `credit_lat` (8) to the full flight (~114), cutting
+    /// cross-worker synchronization ~14x (see [`crate::sim::shard`]).
+    pub credit_batch: bool,
 }
 
 impl SerdesConfig {
@@ -96,6 +106,7 @@ impl Default for SerdesConfig {
             wire: 8,
             ber_per_word: 0.0,
             retx_buf_words: 16,
+            credit_batch: false,
         }
     }
 }

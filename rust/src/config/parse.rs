@@ -106,6 +106,7 @@ pub fn parse_config(text: &str, base: DnpConfig) -> Result<DnpConfig, ParseError
             "serdes.wire" => c.serdes.wire = parse_u(line_no, key, value)?,
             "serdes.ber_per_word" => c.serdes.ber_per_word = parse_f(line_no, key, value)?,
             "serdes.retx_buf_words" => c.serdes.retx_buf_words = parse_u(line_no, key, value)?,
+            "serdes.credit_batch" => c.serdes.credit_batch = parse_bool(line_no, key, value)?,
             "timing.cmd_issue" => c.timing.cmd_issue = parse_u(line_no, key, value)?,
             "timing.eng_fetch" => c.timing.eng_fetch = parse_u(line_no, key, value)?,
             "timing.rdma_prog" => c.timing.rdma_prog = parse_u(line_no, key, value)?,
@@ -191,5 +192,13 @@ freq_mhz = 1000
     fn timing_overrides() {
         let c = parse_config("timing.eng_fetch = 99", DnpConfig::default()).unwrap();
         assert_eq!(c.timing.eng_fetch, 99);
+    }
+
+    #[test]
+    fn serdes_credit_batch_parses() {
+        assert!(!DnpConfig::default().serdes.credit_batch);
+        let c = parse_config("serdes.credit_batch = true", DnpConfig::default()).unwrap();
+        assert!(c.serdes.credit_batch);
+        assert!(parse_config("serdes.credit_batch = sometimes", DnpConfig::default()).is_err());
     }
 }

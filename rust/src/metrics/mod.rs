@@ -23,7 +23,7 @@
 //!   measurement behind the hotspot-spreading acceptance numbers in
 //!   EXPERIMENTS.md §Gateway.
 
-use crate::sim::{CmdTrace, Net, PktTrace, ShardedNet};
+use crate::sim::{CmdTrace, Net, PktTrace, ShardedNet, WorkerStats};
 use crate::topology::{cable_slots, HybridWiring};
 use crate::util::{bits_per_cycle_to_gbs, cycles_to_ns};
 
@@ -190,6 +190,21 @@ pub fn net_totals(net: &Net) -> NetTotals {
 /// equivalence suite asserts exactly that).
 pub fn sharded_totals(snet: &ShardedNet) -> NetTotals {
     snet.fold_nets(NetTotals::default(), |acc, net| acc + net_totals(net))
+}
+
+/// Merge the per-worker scheduler counters of the last sharded run into
+/// one bundle — rounds, busy/null windows, steps, advanced cycles, flits
+/// and credits flushed across shard boundaries, barrier/park stalls.
+/// Unlike [`sharded_totals`] these describe the *runtime*, not the
+/// modeled hardware: they differ between [`ParallelMode`](crate::sim::ParallelMode)s and worker
+/// counts even when the modeled counters are bit-exact, and they back
+/// the `[shard-scale]` utilization rows in EXPERIMENTS.md §Shard-scale.
+pub fn scheduler_totals(snet: &ShardedNet) -> WorkerStats {
+    let mut total = WorkerStats::default();
+    for s in snet.worker_stats() {
+        total.merge(s);
+    }
+    total
 }
 
 /// Delivered-payload bandwidth of a sharded run over a window, GB/s —

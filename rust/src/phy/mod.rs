@@ -21,6 +21,18 @@ pub use dc_balance::DcBalancer;
 use crate::config::{DnpConfig, SerdesConfig};
 use crate::sim::channel::{Channel, LinkFx};
 
+/// Flit flight time of an off-chip SerDes link: the cycles between a
+/// word entering the serializer and it landing in the remote receiver
+/// buffer (serialization + TX pipeline + wire + RX pipeline + downstream
+/// switch input stage). With SHAPES defaults this is `8 + 44 + 8 + 44 +
+/// 10 = 114`. It is both the landing delay [`Channel::send`] reports and
+/// the credit-release period installed when
+/// [`SerdesConfig::credit_batch`] is on.
+pub fn serdes_flight(cfg: &DnpConfig) -> u64 {
+    let s = &cfg.serdes;
+    s.cycles_per_word() + s.tx_pipe + s.wire + s.rx_pipe + cfg.timing.switch_lat
+}
+
 /// Build an off-chip SerDes channel from the config. `seed` feeds the
 /// link's error-injection RNG (distinct per link).
 pub fn offchip_channel(cfg: &DnpConfig, seed: u64) -> Channel {
@@ -32,6 +44,9 @@ pub fn offchip_channel(cfg: &DnpConfig, seed: u64) -> Channel {
     let mut ch = Channel::new(latency, s.cycles_per_word(), cfg.vcs, cfg.vc_buf_depth);
     // Credits ride the reverse direction of the full-duplex link.
     ch.credit_lat = s.wire;
+    if s.credit_batch {
+        ch.credit_release_period = serdes_flight(cfg);
+    }
     if s.ber_per_word > 0.0 {
         // Envelope retransmission drains the retx buffer and re-serializes
         // the protected words: one buffer turn-around plus re-serialization.
@@ -84,6 +99,18 @@ mod tests {
         let mut cfg8 = DnpConfig::default();
         cfg8.serdes.factor = 8;
         assert_eq!(offchip_channel(&cfg8, 1).cycles_per_word, 4);
+    }
+
+    #[test]
+    fn credit_batch_sets_flight_period() {
+        let cfg = DnpConfig::default();
+        assert_eq!(serdes_flight(&cfg), 114, "SHAPES flight: 8+44+8+44+10");
+        assert_eq!(offchip_channel(&cfg, 1).credit_release_period, 0);
+        let mut batched = DnpConfig::default();
+        batched.serdes.credit_batch = true;
+        let ch = offchip_channel(&batched, 1);
+        assert_eq!(ch.credit_release_period, 114);
+        assert_eq!(ch.credit_lat, 8, "return flight itself is unchanged");
     }
 
     #[test]

@@ -132,6 +132,20 @@ pub struct Channel {
     credit_return: VecDeque<(u8, u64)>,
     /// Credit return flight time (0 = instant; off-chip links set this).
     pub credit_lat: u64,
+    /// Batched credit release period (cycles; 0 = per-flit return). When
+    /// set, a credit freed by a pop at cycle `g` does not start its
+    /// return flight immediately: the receiver accumulates credits and
+    /// releases the batch at the next multiple of the period, so the
+    /// credit lands at `(g / period + 1) * period + credit_lat`. Off-chip
+    /// links set this to the flit flight ([`serdes_flight`]) when
+    /// [`SerdesConfig::credit_batch`] is on, which lifts the sharded
+    /// runner's conservative horizon from `credit_lat` to the full
+    /// flight — see [`credit_ready_at`](Self::credit_ready_at) and the
+    /// horizon derivation in [`crate::sim::shard`].
+    ///
+    /// [`serdes_flight`]: crate::phy::serdes_flight
+    /// [`SerdesConfig::credit_batch`]: crate::config::SerdesConfig
+    pub credit_release_period: u64,
     /// Earliest cycle the serializer accepts the next word.
     next_send_ok: u64,
     /// Optional link-error model (off-chip SerDes links).
@@ -171,6 +185,7 @@ impl Channel {
             credits: vec![vc_depth; vcs],
             credit_return: VecDeque::new(),
             credit_lat: 0,
+            credit_release_period: 0,
             next_send_ok: 0,
             fx: None,
             rx_total: 0,
@@ -249,18 +264,34 @@ impl Channel {
         self.rx_bufs[vc as usize].front()
     }
 
+    /// Cycle at which a credit freed by a pop at `now` lands back in the
+    /// sender's counter. Per-flit (`credit_release_period == 0`) this is
+    /// `now + credit_lat`; batched, the credit waits for the next release
+    /// boundary — a strict multiple of the period *after* `now` — and
+    /// then takes the return flight. Monotone non-decreasing in `now`, so
+    /// `credit_return` stays FIFO-sorted in both regimes.
+    #[inline]
+    pub fn credit_ready_at(&self, now: u64) -> u64 {
+        if self.credit_release_period == 0 {
+            now + self.credit_lat
+        } else {
+            (now / self.credit_release_period + 1) * self.credit_release_period + self.credit_lat
+        }
+    }
+
     /// Receiver: consume the head-of-line flit of `vc`, freeing its credit.
     pub fn pop(&mut self, vc: u8, now: u64) -> Flit {
         let f = self.rx_bufs[vc as usize]
             .pop_front()
             .expect("pop from empty VC buffer");
         self.rx_total -= 1;
-        if self.credit_lat == 0 {
+        let ready = self.credit_ready_at(now);
+        if ready == now {
             // On-chip credit wires are combinational: free immediately.
             self.credits[vc as usize] += 1;
             debug_assert!(self.credits[vc as usize] <= self.vc_depth);
         } else {
-            self.credit_return.push_back((vc, now + self.credit_lat));
+            self.credit_return.push_back((vc, ready));
         }
         f
     }
@@ -308,6 +339,12 @@ impl Channel {
     /// Flits buffered at the receiver on `vc`.
     pub fn rx_len(&self, vc: u8) -> usize {
         self.rx_bufs[vc as usize].len()
+    }
+
+    /// Sender-side credits currently available on `vc` (diagnostic;
+    /// the hot path uses [`can_send`](Self::can_send)).
+    pub fn credits_available(&self, vc: u8) -> usize {
+        self.credits[vc as usize]
     }
 
     /// Flits buffered at the receiver, all VCs (O(1)).
@@ -454,15 +491,16 @@ impl ChannelArena {
         let c = &mut self.chans[id.0 as usize];
         let f = match role {
             BoundaryRole::Interior | BoundaryRole::Tx(_) => {
+                let ready = c.credit_ready_at(now);
                 let f = c.pop(vc, now);
-                if c.credit_lat > 0 {
-                    self.wheel.schedule(now + c.credit_lat, id.0);
+                if ready > now {
+                    self.wheel.schedule(ready, id.0);
                 }
                 f
             }
             BoundaryRole::Rx(link) => {
                 let f = c.pop_no_credit(vc);
-                let at = now + c.credit_lat;
+                let at = c.credit_ready_at(now);
                 self.outbox.push(BoundaryOut::Credit { link, vc, at });
                 f
             }
@@ -644,6 +682,64 @@ mod tests {
         assert!(!c.can_send(0, 2), "credit still in flight");
         c.tick(5);
         assert!(c.can_send(0, 5));
+    }
+
+    #[test]
+    fn batched_credit_release_waits_for_period_boundary() {
+        // Period 10, credit_lat 4: a pop at cycle 13 releases at the next
+        // period boundary (20) plus the return flight => 24. A pop at a
+        // boundary itself (20) still waits for the *next* one (30 + 4).
+        let mut c = Channel::new(0, 1, 1, 2);
+        c.credit_lat = 4;
+        c.credit_release_period = 10;
+        assert_eq!(c.credit_ready_at(13), 24);
+        assert_eq!(c.credit_ready_at(20), 34);
+        c.send(flit(0), 0, 0);
+        c.tick(13);
+        c.pop(0, 13);
+        c.tick(23);
+        assert_eq!(c.credits_available(0), 1, "credit still batched at 23");
+        c.tick(24);
+        assert_eq!(c.credits_available(0), 2, "batch released at 24");
+    }
+
+    #[test]
+    fn batched_release_is_monotone_so_returns_stay_fifo() {
+        let c = {
+            let mut c = Channel::new(0, 1, 1, 4);
+            c.credit_lat = 8;
+            c.credit_release_period = 114;
+            c
+        };
+        let mut prev = 0;
+        for now in 0..500 {
+            let r = c.credit_ready_at(now);
+            assert!(r > now, "batched release must be strictly later");
+            assert!(r >= prev, "credit_ready_at must be monotone in now");
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn arena_rx_half_stamps_batched_credit_departure() {
+        // Boundary rx half with batching: the BoundaryOut::Credit must
+        // carry the batched release cycle, not now + credit_lat.
+        let mut a = ChannelArena::new();
+        let id = a.add(Channel::new(3, 1, 1, 4));
+        a.get_mut(id).credit_lat = 2;
+        a.get_mut(id).credit_release_period = 10;
+        a.mark_boundary_rx(id, 7);
+        a.push_rx(id, flit(3), 0);
+        let f = a.pop(id, 0, 13);
+        assert_eq!(f.seq, 3);
+        let mut out = Vec::new();
+        a.drain_boundary_out(&mut out);
+        match out.as_slice() {
+            [BoundaryOut::Credit { link: 7, vc: 0, at }] => {
+                assert_eq!(*at, 22, "next boundary (20) + credit_lat (2)");
+            }
+            other => panic!("expected one credit, got {other:?}"),
+        }
     }
 
     #[test]

@@ -67,7 +67,7 @@ pub mod shard;
 pub mod wheel;
 
 pub use channel::{BoundaryOut, Channel, ChannelArena, ChannelId, LinkFx};
-pub use shard::ShardedNet;
+pub use shard::{ParallelMode, ShardSetupError, ShardedNet, WorkerStats};
 pub use wheel::EventWheel;
 
 use crate::dnp::{DnpNode, NodeEvent};

@@ -16,8 +16,10 @@
 //! each shard is a self-contained [`Net`] holding the chip's tiles, its
 //! mesh channels and a *half* of every off-chip wire
 //! ([`crate::topology::hybrid_chip_subnet`]). Shards run on
-//! `std::thread` workers and synchronize at barriers every `H` cycles,
-//! exchanging time-stamped boundary flits and credits.
+//! `std::thread` workers — several chips per worker at scale — and
+//! synchronize by exchanging time-stamped boundary flits and credits,
+//! either at lockstep barrier windows or over per-link conservative
+//! clocks (see [`ParallelMode`]).
 //!
 //! # The boundary protocol
 //!
@@ -54,29 +56,89 @@
 //!
 //! # The synchronization horizon
 //!
-//! `H = min` over boundary wires of `min(latency + cycles_per_word,
-//! credit_lat)`: a flit sent at cycle `s` lands no earlier than
-//! `s + cycles_per_word + latency`, and a credit freed at cycle `p`
-//! arrives no earlier than `p + credit_lat`, so every message generated
-//! inside a window `[T, T+H)` takes effect at `>= T+H` — in a *later*
-//! window, after the barrier has delivered it. With the SHAPES SerDes
-//! parameters the binding term is the credit return (`credit_lat =
-//! wire = 8`); the ~114-cycle flit flight would allow much wider windows
-//! if credits were batched — ROADMAP tracks that follow-on.
+//! Every boundary message's effect cycle is bounded below by when it was
+//! generated plus a link-specific lookahead:
+//!
+//! * a flit sent at cycle `s` lands no earlier than
+//!   `s + cycles_per_word + latency` (the *flight*, ~114 cycles with the
+//!   SHAPES SerDes render);
+//! * a per-flit credit freed at cycle `p` arrives no earlier than
+//!   `p + credit_lat` (`credit_lat = wire = 8`);
+//! * a **batched** credit ([`SerdesConfig::credit_batch`]) freed at `p`
+//!   waits for the next multiple of the release period `P` (the phy
+//!   installs `P = flight`) and then takes the return flight:
+//!   `(p/P + 1)*P + credit_lat` — always strictly after `p`, and at
+//!   least `P` cycles after the period boundary below `p`.
+//!
+//! Per-flit credits therefore bind the lookahead to `credit_lat` = 8;
+//! batching lifts it to the full flit flight. The barrier runner's
+//! window width is `H = P` when batching is on (`H = min(flight,
+//! credit_lat)` otherwise), with window ends **aligned to absolute
+//! multiples of `H`**: for any pop at cycle `g` inside an aligned window
+//! `[T, T+H)` ending at a multiple of `P`, the release point
+//! `(g/P + 1)*P >= T+H` lands at or past the window edge, and any flit
+//! sent at `s >= T` lands at `s + flight >= T + P >= T+H` (setup
+//! enforces `P <= flight`, [`ShardSetupError::PeriodExceedsFlight`]).
+//! Alignment is load-bearing: an *unaligned* window `[113, 227)` under
+//! `P = 114` would see a pop at 113 release at 114, inside the window.
+//! Setup also enforces one uniform `(flight, credit_lat, P)` tuple
+//! across all boundary wires ([`ShardSetupError::NonUniformLink`]) so a
+//! single `H` is conservative for every link at once.
+//!
+//! # Two parallel modes
+//!
+//! [`ParallelMode::Barrier`] (the reference) runs all workers in
+//! lockstep windows of `H` cycles: every worker advances its shards to
+//! the common window edge, rendezvous at a [`std::sync::Barrier`], the
+//! coordinator moves boundary messages, repeat. Simple, and every run
+//! state is globally consistent at each edge — but one quiet chip costs
+//! two barrier waits per window for everyone.
+//!
+//! [`ParallelMode::LinkClock`] removes the global rendezvous with
+//! per-link-pair conservative clocks (null-message / bounded-lag style).
+//! Each shard `i` owns an announced clock `c_i` (an `AtomicU64`) meaning
+//! "shard `i` has simulated every cycle `< c_i` and flushed every
+//! boundary message generated before `c_i`". A shard may advance to
+//!
+//! ```text
+//! bound(i) = min over incoming edges (j -> i) of  edge_bound(c_j)
+//! edge_bound(c) = c + flight                      (flit edges)
+//!               = c + credit_lat                  (credit edges, per-flit)
+//!               = (c/P + 1)*P + credit_lat        (credit edges, batched)
+//! ```
+//!
+//! capped at the budget edge. A message not yet flushed by `j` was
+//! generated at `>= c_j`, so it takes effect at `>= edge_bound(c_j) >=
+//! bound(i)` — advancing to `bound(i)` can never miss an input. The
+//! worker's per-shard pass is ordered: **read peer clocks (Acquire),
+//! drain the shard's mailbox, run to the bound, flush outgoing into peer
+//! mailboxes, store the clock (Release), announce**. Reading clocks
+//! before draining is what makes the claim sound — a message flushed
+//! after the mailbox drain is covered by the *older* clock value used in
+//! the bound. The shard with the minimum clock always has strictly
+//! larger bounds than its clock, so the system never deadlocks; workers
+//! with no advanceable shard park on a condvar and are woken by clock
+//! announcements. No window alignment is needed — each edge bound is
+//! conservative by itself, per message class.
 //!
 //! # Determinism
 //!
 //! Sharded results are **bit-exact** against the sequential event
-//! scheduler ([`Net::step`]), independent of worker count and thread
-//! interleaving:
+//! scheduler ([`Net::step`]), independent of worker count, parallel mode
+//! and thread interleaving:
 //!
-//! * windows are data-isolated — a shard's inputs for `[T, T+H)` are
-//!   fully known at the barrier that opens the window, so each shard's
-//!   trajectory is a pure function of its inputs;
-//! * boundary messages are drained in `(cycle, link-id)` order (stable
-//!   sort at the barrier preserves per-link FIFO order), and applied at
-//!   exactly their timestamp, *before* the step of that cycle — the same
-//!   phase ordering as the sequential scheduler's channel wakes;
+//! * advances are data-isolated — a shard's inputs for `[c, bound)` are
+//!   fully known when the advance starts (barrier: at the opening
+//!   rendezvous; link-clock: by the clock-then-drain ordering above), so
+//!   each shard's trajectory is a pure function of its inputs;
+//! * boundary messages are applied in `(cycle, link-id, sender-seq)`
+//!   order — the inbox is a min-heap on exactly that key, and `seq` is a
+//!   per-shard monotone counter stamped at emission, so two messages
+//!   with equal `(cycle, link)` (necessarily from the same sender) apply
+//!   in emission order: the same total order the sequential scheduler's
+//!   channel wakes induce, independent of *when* messages arrived;
+//! * messages are applied at exactly their timestamp, *before* the step
+//!   of that cycle — the sequential scheduler's phase ordering;
 //! * within a shard, nodes tick in ascending index order exactly as the
 //!   sequential loop ticks them (a chip's nodes are contiguous), and
 //!   every cross-chip interaction rides a channel with `>= 1` cycle of
@@ -84,12 +146,25 @@
 //!   channels have combinational credit returns — both endpoints always
 //!   share a shard.)
 //!
-//! `rust/tests/sharded_equivalence.rs` pins this: delivered payloads, CQ
-//! event streams, per-node and per-wire flit counts and drain cycles are
-//! snapshot-identical to the sequential event run for 1, 2 and 4 workers,
-//! on healthy and faulted (dead-cable) systems — which, combined with the
-//! dense-vs-event suite, makes the equivalence argument a three-way
-//! dense/event/sharded check.
+//! The one sanctioned divergence: *where the clocks park after a
+//! drained run*. Barrier mode parks at the aligned window edge that
+//! detected the drain; link-clock mode normalizes every shard forward
+//! to the next multiple of `H` at or past the highest clock any worker
+//! reached (clocks are never rewound). Both are `>=` the sequential
+//! net's stop cycle; nothing observable happens in the gap (no step
+//! executes, only pending credit returns restore — and a drained net
+//! has no stalled sender to notice them early). On a *timeout* every
+//! mode parks at exactly `start + budget`, deterministically.
+//!
+//! `rust/tests/sharded_equivalence.rs` pins the equivalence: delivered
+//! payloads, CQ event streams, per-node and per-wire flit counts and
+//! drain cycles are snapshot-identical to the sequential event run for
+//! 1, 2, 4 and 8 workers in both parallel modes, on healthy, faulted
+//! (dead-cable), BER-afflicted and hotspot-skewed systems — which,
+//! combined with the dense-vs-event suite, makes the equivalence
+//! argument a three-way dense/event/sharded check.
+//!
+//! [`SerdesConfig::credit_batch`]: crate::config::SerdesConfig
 //!
 //! [`ChannelArena::mark_boundary_tx`]: crate::sim::channel::ChannelArena::mark_boundary_tx
 //! [`mark_boundary_rx`]: crate::sim::channel::ChannelArena::mark_boundary_rx
@@ -105,20 +180,51 @@ use crate::sim::channel::{BoundaryOut, ChannelId};
 use crate::sim::Net;
 use crate::topology::{cable_slots, chip_coords3, chip_index3, hybrid_chip_subnet_with};
 use crate::traffic::{hybrid_node_index, Feeder, Planned};
-use std::collections::{HashMap, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Barrier, Mutex, MutexGuard};
+use std::sync::{Barrier, Condvar, Mutex, MutexGuard};
 
-/// A time-stamped message crossing a shard boundary at a barrier.
+/// A time-stamped message crossing a shard boundary.
 #[derive(Debug)]
 struct BoundaryMsg {
     /// Global boundary-link id (the determinism tie-break).
     link: u32,
     /// Cycle the message takes effect on the receiving side.
     at: u64,
+    /// Per-sending-shard monotone emission counter — the final
+    /// determinism tie-break: equal `(at, link)` implies one sender, so
+    /// `seq` replays that sender's emission order exactly.
+    seq: u64,
     vc: u8,
     kind: MsgKind,
+}
+
+impl BoundaryMsg {
+    #[inline]
+    fn key(&self) -> (u64, u32, u64) {
+        (self.at, self.link, self.seq)
+    }
+}
+
+// Ordered by `(at, link, seq)` for the inbox min-heap (wrapped in
+// `Reverse`); payloads are deliberately outside the key.
+impl PartialEq for BoundaryMsg {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+impl Eq for BoundaryMsg {}
+impl PartialOrd for BoundaryMsg {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for BoundaryMsg {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key().cmp(&other.key())
+    }
 }
 
 #[derive(Debug)]
@@ -130,17 +236,181 @@ enum MsgKind {
     Credit,
 }
 
+/// How the shard workers synchronize during [`ShardedNet::run_plan`].
+/// Both modes produce bit-exact results (see the [module docs](self));
+/// `Barrier` is the reference the way `step_dense` anchors the event
+/// wheel, `LinkClock` is the scalable scheduler.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum ParallelMode {
+    /// Lockstep windows of `H` cycles between global barriers: every
+    /// worker advances its shards to the common aligned window edge,
+    /// then all rendezvous to exchange boundary messages.
+    #[default]
+    Barrier,
+    /// Per-link-pair conservative clocks (null-message / bounded-lag
+    /// style): each shard advances to the minimum over incoming links of
+    /// its neighbor's announced safe time plus that link's lookahead, so
+    /// a quiet chip never gates a busy one.
+    LinkClock,
+}
+
+/// Why a [`ShardedNet`] could not be built. Typed, like
+/// [`HierRecoveryError`](crate::fault::hier::HierRecoveryError) and
+/// [`RetryError`](crate::traffic::RetryError), so callers and tests can
+/// match on the cause instead of catching panics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardSetupError {
+    /// An off-chip link returns credits per flit with `credit_lat == 0`:
+    /// a combinational cross-chip credit would force a zero conservative
+    /// horizon (no window could ever open).
+    ZeroHorizon {
+        /// Chip index owning the tx half of the offending wire.
+        chip: usize,
+        /// Torus dimension of the wire.
+        dim: usize,
+        /// `true` for the plus direction.
+        plus: bool,
+        /// Gateway lane carrying the wire.
+        lane: usize,
+    },
+    /// Boundary wires disagree on `(flight, credit_lat, release period)`
+    /// — the barrier runner sizes one window for all links at once, so
+    /// the timing tuple must be uniform across the fabric.
+    NonUniformLink {
+        /// Global link id of the first wire that disagrees.
+        link: usize,
+    },
+    /// The batched credit-release period exceeds the flit flight, which
+    /// would let a flit land inside a `P`-wide aligned window. The phy
+    /// sets `P = flight`; anything larger is a configuration error.
+    PeriodExceedsFlight {
+        /// Configured release period.
+        period: u64,
+        /// Flit flight (serialization + pipeline + wire + switch).
+        flight: u64,
+    },
+}
+
+impl std::fmt::Display for ShardSetupError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Self::ZeroHorizon { chip, dim, plus, lane } => write!(
+                f,
+                "zero conservative horizon: off-chip link at chip {chip} dim {dim} \
+                 {} lane {lane} has per-flit credits with credit_lat == 0",
+                if plus { "+" } else { "-" }
+            ),
+            Self::NonUniformLink { link } => write!(
+                f,
+                "boundary link {link} disagrees with link 0 on \
+                 (flight, credit_lat, release period); sharded setup needs one \
+                 uniform off-chip timing tuple"
+            ),
+            Self::PeriodExceedsFlight { period, flight } => write!(
+                f,
+                "credit release period {period} exceeds the flit flight {flight}; \
+                 a window of the period width could miss a flit landing"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ShardSetupError {}
+
+/// Per-worker scheduler counters for one [`ShardedNet::run_plan`] call,
+/// exposed via [`ShardedNet::worker_stats`] (and aggregated by
+/// [`scheduler_totals`](crate::metrics::scheduler_totals)) so the
+/// parallel runtime's behavior — who worked, who spun clocks, who
+/// blocked — is observable at 512-chip scale.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerStats {
+    /// Synchronization rounds: windows opened (barrier mode) or scan
+    /// passes over the worker's shards (link-clock mode).
+    pub rounds: u64,
+    /// Shard advances that executed at least one scheduler step.
+    pub busy_windows: u64,
+    /// Shard advances that only moved the clock — the null-message
+    /// analogue: lookahead consumed with zero work available.
+    pub null_windows: u64,
+    /// Scheduler steps executed across the worker's shards.
+    pub steps: u64,
+    /// Simulated cycles advanced, summed over the worker's shards.
+    pub cycles: u64,
+    /// Boundary flits shipped by the worker's shards.
+    pub flits_out: u64,
+    /// Boundary credits shipped by the worker's shards.
+    pub credits_out: u64,
+    /// Times the worker blocked: barrier waits (barrier mode) or condvar
+    /// parks (link-clock mode).
+    pub stalls: u64,
+}
+
+impl WorkerStats {
+    /// Field-wise accumulate (fleet aggregation).
+    pub fn merge(&mut self, o: &WorkerStats) {
+        self.rounds += o.rounds;
+        self.busy_windows += o.busy_windows;
+        self.null_windows += o.null_windows;
+        self.steps += o.steps;
+        self.cycles += o.cycles;
+        self.flits_out += o.flits_out;
+        self.credits_out += o.credits_out;
+        self.stalls += o.stalls;
+    }
+
+    /// Fraction of shard advances that did real work (vs pure clock
+    /// moves). `1.0` for a worker that never advanced at all.
+    pub fn utilization(&self) -> f64 {
+        let total = self.busy_windows + self.null_windows;
+        if total == 0 {
+            1.0
+        } else {
+            self.busy_windows as f64 / total as f64
+        }
+    }
+}
+
+/// Incoming dependency edge of a shard: boundary messages of `kind`
+/// arrive from `peer`, bounding how far this shard may advance past
+/// `peer`'s announced clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct InEdge {
+    peer: usize,
+    kind: EdgeKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EdgeKind {
+    /// Flits flowing here from `peer` (this shard terminates a link that
+    /// originates there): lookahead = flit flight.
+    Flit,
+    /// Credits flowing back from `peer` (this shard originates a link
+    /// that terminates there): lookahead = credit return (per-flit or
+    /// batched).
+    Credit,
+}
+
 /// One per-chip simulation shard: a self-contained [`Net`] plus the
 /// cross-shard queues and bookkeeping the runner needs.
 pub struct Shard {
     pub net: Net,
     feeder: Option<Feeder>,
-    /// Incoming boundary messages, sorted by `(at, link)`; applied at
-    /// exactly their timestamp by the window loop, before that cycle's
-    /// step.
-    inbox: VecDeque<BoundaryMsg>,
-    /// Messages generated this window, moved to peer inboxes at the
-    /// barrier.
+    /// Incoming boundary messages: a min-heap on `(at, link, seq)`,
+    /// applied at exactly their timestamp by the window loop, before
+    /// that cycle's step. The heap makes the apply order independent of
+    /// arrival order — required by the link-clock mode, where messages
+    /// from different peers arrive whenever those peers flush.
+    inbox: BinaryHeap<Reverse<BoundaryMsg>>,
+    /// Flit messages currently in `inbox` (O(1) drain check; credits are
+    /// deliberately not counted, matching the sequential scheduler's
+    /// `idle_now` ignoring pending credit wakes).
+    inbox_flits: usize,
+    /// Per-shard monotone emission counter stamped onto every outgoing
+    /// message (the heap's final tie-break; never reset, so it stays
+    /// monotone across windows and runs).
+    out_seq: u64,
+    /// Messages generated this advance, flushed to peer inboxes at the
+    /// barrier (barrier mode) or into peer mailboxes (link-clock mode).
     outgoing: Vec<BoundaryMsg>,
     /// Open incoming wormhole trains: `(link, vc)` → local `PacketId` of
     /// the packet whose flits are currently arriving.
@@ -188,22 +458,40 @@ pub struct ShardedNet {
     pub gmap: GatewayMap,
     tiles: usize,
     horizon: u64,
+    /// Uniform boundary-link timing (checked at build): flit flight,
+    /// credit return flight, batched release period (0 = per-flit).
+    flight: u64,
+    credit_lat: u64,
+    period: u64,
+    /// Per-shard incoming dependency edges (deduplicated), for the
+    /// link-clock bound computation.
+    in_edges: Vec<Vec<InEdge>>,
     workers: usize,
+    mode: ParallelMode,
+    /// Per-worker scheduler counters of the most recent
+    /// [`run_plan`](Self::run_plan) call.
+    stats: Vec<WorkerStats>,
     cycle: u64,
 }
 
 impl ShardedNet {
     /// Build the sharded twin of
     /// [`hybrid_torus_mesh`](crate::topology::hybrid_torus_mesh): one
-    /// shard per chip, boundary halves wired and marked, windows driven
-    /// by up to `workers` threads (clamped to the chip count).
+    /// shard per chip, boundary halves wired and marked, advances driven
+    /// by up to `workers` threads (clamped to the chip count; at scale
+    /// each worker owns a contiguous chunk of chips).
+    ///
+    /// # Errors
+    /// Returns a [`ShardSetupError`] when the off-chip timing cannot
+    /// sustain a conservative horizon (zero lookahead, non-uniform link
+    /// timing, or a release period wider than the flit flight).
     pub fn hybrid(
         chip_dims: [u32; 3],
         tile_dims: [u32; 2],
         cfg: &DnpConfig,
         mem_words: usize,
         workers: usize,
-    ) -> Self {
+    ) -> Result<Self, ShardSetupError> {
         Self::hybrid_with(chip_dims, &GatewayMap::fixed(tile_dims), cfg, mem_words, workers)
     }
 
@@ -213,13 +501,16 @@ impl ShardedNet {
     /// [`cable_slots`](crate::topology::cable_slots) order the sequential
     /// [`partition`](crate::topology::HybridWiring::partition) lists its
     /// links in, so link ids line up between the two builds.
+    ///
+    /// # Errors
+    /// See [`hybrid`](Self::hybrid).
     pub fn hybrid_with(
         chip_dims: [u32; 3],
         gmap: &GatewayMap,
         cfg: &DnpConfig,
         mem_words: usize,
         workers: usize,
-    ) -> Self {
+    ) -> Result<Self, ShardSetupError> {
         let tile_dims = gmap.tile_dims();
         let nchips = chip_dims.iter().product::<u32>() as usize;
         let tiles = (tile_dims[0] * tile_dims[1]) as usize;
@@ -231,7 +522,9 @@ impl ShardedNet {
             shards.push(Shard {
                 net,
                 feeder: None,
-                inbox: VecDeque::new(),
+                inbox: BinaryHeap::new(),
+                inbox_flits: 0,
+                out_seq: 0,
                 outgoing: Vec::new(),
                 rx_cur: HashMap::new(),
                 link_tx: HashMap::new(),
@@ -247,7 +540,9 @@ impl ShardedNet {
         // enumerate the same canonical list).
         let slots = cable_slots(chip_dims, gmap);
         let mut links: Vec<ShardLink> = Vec::new();
-        let mut horizon = u64::MAX;
+        // Uniform off-chip timing tuple (flight, credit_lat, period) —
+        // set from the first wire, checked against every other.
+        let mut timing: Option<(u64, u64, u64)> = None;
         for c in 0..nchips {
             let cc = chip_coords3(chip_dims, c);
             for (j, s) in slots.iter().enumerate() {
@@ -274,13 +569,29 @@ impl ShardedNet {
                 shards[nc].link_rx.insert(id, rx);
                 {
                     let ch = shards[c].net.chans.get(tx);
-                    assert!(
-                        ch.credit_lat >= 1,
-                        "sharded execution needs credit_lat >= 1 on off-chip links \
-                         (a combinational cross-chip credit would force a zero horizon)"
-                    );
+                    if ch.credit_release_period == 0 && ch.credit_lat == 0 {
+                        return Err(ShardSetupError::ZeroHorizon {
+                            chip: c,
+                            dim: s.dim,
+                            plus: s.dir == 0,
+                            lane: s.lane,
+                        });
+                    }
                     let flight = ch.latency + ch.cycles_per_word;
-                    horizon = horizon.min(flight).min(ch.credit_lat);
+                    if ch.credit_release_period > flight {
+                        return Err(ShardSetupError::PeriodExceedsFlight {
+                            period: ch.credit_release_period,
+                            flight,
+                        });
+                    }
+                    let tuple = (flight, ch.credit_lat, ch.credit_release_period);
+                    match timing {
+                        None => timing = Some(tuple),
+                        Some(t) if t != tuple => {
+                            return Err(ShardSetupError::NonUniformLink { link: id as usize });
+                        }
+                        Some(_) => {}
+                    }
                 }
                 links.push(ShardLink {
                     from_chip: c,
@@ -293,12 +604,22 @@ impl ShardedNet {
                 });
             }
         }
-        if links.is_empty() {
-            // Single-chip degenerate case: no boundary dependencies, the
-            // window size only bounds how often the runner polls.
-            horizon = 4096;
+        // Single-chip degenerate case: no boundary dependencies, the
+        // window size only bounds how often the barrier runner polls.
+        let (flight, credit_lat, period) = timing.unwrap_or((4096, 4096, 0));
+        let horizon = if period > 0 { period } else { flight.min(credit_lat) };
+        let mut in_edges: Vec<Vec<InEdge>> = (0..nchips).map(|_| Vec::new()).collect();
+        for l in &links {
+            let f = InEdge { peer: l.from_chip, kind: EdgeKind::Flit };
+            if !in_edges[l.to_chip].contains(&f) {
+                in_edges[l.to_chip].push(f);
+            }
+            let cr = InEdge { peer: l.to_chip, kind: EdgeKind::Credit };
+            if !in_edges[l.from_chip].contains(&cr) {
+                in_edges[l.from_chip].push(cr);
+            }
         }
-        Self {
+        Ok(Self {
             shards: shards.into_iter().map(Mutex::new).collect(),
             links,
             chip_dims,
@@ -306,9 +627,15 @@ impl ShardedNet {
             gmap: gmap.clone(),
             tiles,
             horizon,
+            flight,
+            credit_lat,
+            period,
+            in_edges,
             workers: workers.max(1),
+            mode: ParallelMode::default(),
+            stats: Vec::new(),
             cycle: 0,
-        }
+        })
     }
 
     pub fn n_chips(&self) -> usize {
@@ -323,14 +650,51 @@ impl ShardedNet {
         self.tiles
     }
 
-    /// The conservative synchronization horizon `H` in cycles.
+    /// The conservative synchronization horizon `H` in cycles: the
+    /// barrier runner's window width, and the dominant per-edge
+    /// lookahead term of the link-clock runner.
     pub fn horizon(&self) -> u64 {
         self.horizon
     }
 
-    /// Current barrier time (every shard's clock agrees between runs).
+    /// Current synchronization time (every shard's clock agrees between
+    /// runs).
     pub fn cycle(&self) -> u64 {
         self.cycle
+    }
+
+    /// Select how workers synchronize in the next
+    /// [`run_plan`](Self::run_plan) (results are bit-exact either way).
+    pub fn set_parallel_mode(&mut self, mode: ParallelMode) {
+        self.mode = mode;
+    }
+
+    /// The currently selected [`ParallelMode`].
+    pub fn parallel_mode(&self) -> ParallelMode {
+        self.mode
+    }
+
+    /// Per-worker scheduler counters of the most recent
+    /// [`run_plan`](Self::run_plan) call (empty before the first run).
+    pub fn worker_stats(&self) -> &[WorkerStats] {
+        &self.stats
+    }
+
+    /// Lookahead bound an incoming edge grants when its peer has
+    /// announced clock `c`: no message of the edge's kind still
+    /// unflushed by the peer can take effect before the returned cycle
+    /// (see the module-docs derivation).
+    fn edge_bound(&self, c: u64, kind: EdgeKind) -> u64 {
+        match kind {
+            EdgeKind::Flit => c + self.flight,
+            EdgeKind::Credit => {
+                if self.period > 0 {
+                    (c / self.period + 1) * self.period + self.credit_lat
+                } else {
+                    c + self.credit_lat
+                }
+            }
+        }
     }
 
     /// The directed boundary wires, indexed by global link id.
@@ -467,16 +831,23 @@ impl ShardedNet {
     /// still-pending credit wakes.
     ///
     /// Back-to-back runs: after a drained run the shard clocks park at
-    /// the *window boundary* that detected the drain (`>= start +
-    /// elapsed`; a sequential net stops at exactly `start + elapsed`), so
-    /// a follow-up run starts a few cycles later in absolute time than
-    /// its sequential twin. The offset is uniform and nothing observable
-    /// happens inside it — no step executes and pending credits restore
-    /// long before any node can touch their channel (a command needs
-    /// tens of cycles of issue/fetch pipeline before its first send) —
-    /// so follow-up runs still report identical `elapsed` and counters;
-    /// only *absolute* trace cycle stamps shift, the same
-    /// observability-artifact class as packet uids.
+    /// an `H`-aligned cycle `>= start + elapsed` (barrier mode: the
+    /// window edge that detected the drain; link-clock mode: the next
+    /// multiple of `H` past the furthest clock — never rewound; a
+    /// sequential net stops at exactly `start + elapsed`). A follow-up
+    /// run therefore starts later in absolute time than its sequential
+    /// twin. The offset is uniform and nothing observable happens inside
+    /// it — no step executes and pending credits restore long before any
+    /// node can touch their channel (a command needs tens of cycles of
+    /// issue/fetch pipeline before its first send) — so follow-up runs
+    /// still report identical `elapsed` and counters; only *absolute*
+    /// trace cycle stamps shift, the same observability-artifact class
+    /// as packet uids. With `credit_batch` on, the `H`-alignment of the
+    /// park keeps the batch phase canonical between the two parallel
+    /// modes; a *sequential* net's drained stop cycle has its own batch
+    /// phase, so batched cross-mode comparisons of back-to-back runs
+    /// should cut at budget timeouts (which park every mode at exactly
+    /// `start + budget`) rather than at drains.
     pub fn run_plan(&mut self, plan: Vec<Planned>, max_cycles: u64) -> Option<u64> {
         let start = self.cycle;
         let budget_end = start.saturating_add(max_cycles);
@@ -500,6 +871,28 @@ impl ShardedNet {
         }
 
         let nworkers = self.workers.min(self.shards.len()).max(1);
+        let stat_slots: Vec<Mutex<WorkerStats>> =
+            (0..nworkers).map(|_| Mutex::new(WorkerStats::default())).collect();
+        let (elapsed, final_cycle) = match self.mode {
+            ParallelMode::Barrier => self.run_barrier(start, budget_end, nworkers, &stat_slots),
+            ParallelMode::LinkClock => {
+                self.run_linkclock(start, budget_end, nworkers, &stat_slots)
+            }
+        };
+        self.stats = stat_slots.into_iter().map(|m| m.into_inner().unwrap()).collect();
+        self.cycle = final_cycle;
+        elapsed
+    }
+
+    /// Reference parallel runner: lockstep aligned windows between
+    /// global barriers. Returns `(drain result, final cycle)`.
+    fn run_barrier(
+        &self,
+        start: u64,
+        budget_end: u64,
+        nworkers: usize,
+        stat_slots: &[Mutex<WorkerStats>],
+    ) -> (Option<u64>, u64) {
         let horizon = self.horizon.max(1);
         let shards = &self.shards;
         let links = &self.links;
@@ -511,35 +904,47 @@ impl ShardedNet {
         let stop = AtomicBool::new(false);
         let panicked = AtomicBool::new(false);
         let (barrier, window_end, stop, panicked) = (&barrier, &window_end, &stop, &panicked);
-        let (elapsed, final_cycle) = std::thread::scope(|scope| {
+        std::thread::scope(|scope| {
             let chunk = shards.len().div_ceil(nworkers);
             for w in 0..nworkers {
                 let lo = w * chunk;
                 let hi = ((w + 1) * chunk).min(shards.len());
-                scope.spawn(move || loop {
-                    barrier.wait();
-                    if stop.load(Ordering::Acquire) {
-                        break;
-                    }
-                    let end = window_end.load(Ordering::Acquire);
-                    // A panicking shard must not leave the others parked
-                    // at the barrier forever: trap it, flag it, and let
-                    // the coordinator re-raise after the window.
-                    let r = catch_unwind(AssertUnwindSafe(|| {
-                        for m in &shards[lo..hi] {
-                            run_window(&mut m.lock().unwrap(), end);
+                let slot = &stat_slots[w];
+                scope.spawn(move || {
+                    let mut st = WorkerStats::default();
+                    loop {
+                        barrier.wait();
+                        st.stalls += 1;
+                        if stop.load(Ordering::Acquire) {
+                            break;
                         }
-                    }));
-                    if r.is_err() {
-                        panicked.store(true, Ordering::Release);
+                        let end = window_end.load(Ordering::Acquire);
+                        st.rounds += 1;
+                        // A panicking shard must not leave the others
+                        // parked at the barrier forever: trap it, flag
+                        // it, and let the coordinator re-raise after the
+                        // window.
+                        let r = catch_unwind(AssertUnwindSafe(|| {
+                            for m in &shards[lo..hi] {
+                                advance_shard(&mut m.lock().unwrap(), end, &mut st);
+                            }
+                        }));
+                        if r.is_err() {
+                            panicked.store(true, Ordering::Release);
+                        }
+                        barrier.wait();
+                        st.stalls += 1;
                     }
-                    barrier.wait();
+                    *slot.lock().unwrap() = st;
                 });
             }
             let mut cur = start;
             let mut result = None;
             while cur < budget_end {
-                let end = (cur + horizon).min(budget_end);
+                // Window ends sit on absolute multiples of `H` — the
+                // alignment that makes batched credit releases land at or
+                // past the window edge (module docs, §horizon).
+                let end = ((cur / horizon + 1) * horizon).min(budget_end);
                 window_end.store(end, Ordering::Release);
                 barrier.wait(); // open the window
                 barrier.wait(); // every shard reached `end`
@@ -558,16 +963,304 @@ impl ShardedNet {
             stop.store(true, Ordering::Release);
             barrier.wait(); // release the workers into their exit path
             (result, cur)
-        });
-        self.cycle = final_cycle;
-        elapsed
+        })
+    }
+
+    /// Per-link conservative-clock runner (null-message / bounded-lag
+    /// style): no global rendezvous, each shard advances to the minimum
+    /// of its incoming edge bounds. Returns `(drain result, final
+    /// cycle)`. See the module docs for the protocol and its memory
+    /// ordering; the load-bearing worker invariant is *read peer clocks,
+    /// then drain the mailbox, then run* — and *flush, then store the
+    /// clock*.
+    fn run_linkclock(
+        &self,
+        start: u64,
+        budget_end: u64,
+        nworkers: usize,
+        stat_slots: &[Mutex<WorkerStats>],
+    ) -> (Option<u64>, u64) {
+        let shards = &self.shards;
+        let links = &self.links;
+        let in_edges = &self.in_edges;
+        let (flight, credit_lat, period) = (self.flight, self.credit_lat, self.period);
+        let nshards = shards.len();
+        let clocks: Vec<AtomicU64> = (0..nshards).map(|_| AtomicU64::new(start)).collect();
+        let mailboxes: Vec<Mutex<Vec<BoundaryMsg>>> =
+            (0..nshards).map(|_| Mutex::new(Vec::new())).collect();
+        // Per-shard "looks locally drained" hints, refreshed every time a
+        // worker advances the shard; the coordinator verifies exactly
+        // under the full lock set before trusting them.
+        let hints: Vec<AtomicBool> = (0..nshards).map(|_| AtomicBool::new(false)).collect();
+        let epoch = Mutex::new(0u64);
+        let wake = Condvar::new();
+        let stop = AtomicBool::new(false);
+        let panicked = AtomicBool::new(false);
+        let (clocks, mailboxes, hints) = (&clocks, &mailboxes, &hints);
+        let (epoch, wake, stop, panicked) = (&epoch, &wake, &stop, &panicked);
+        std::thread::scope(|scope| {
+            let chunk = nshards.div_ceil(nworkers);
+            for w in 0..nworkers {
+                let lo = w * chunk;
+                let hi = ((w + 1) * chunk).min(nshards);
+                let slot = &stat_slots[w];
+                scope.spawn(move || {
+                    let mut st = WorkerStats::default();
+                    let mut seen = *epoch.lock().unwrap();
+                    loop {
+                        if stop.load(Ordering::Acquire) {
+                            break;
+                        }
+                        st.rounds += 1;
+                        let mut progressed = false;
+                        let r = catch_unwind(AssertUnwindSafe(|| {
+                            for i in lo..hi {
+                                // (1) Read peer clocks FIRST (Acquire):
+                                // any message flushed after these reads
+                                // is already covered by the bound the
+                                // older values produce.
+                                let mut bound = budget_end;
+                                for e in &in_edges[i] {
+                                    let c = clocks[e.peer].load(Ordering::Acquire);
+                                    bound = bound
+                                        .min(edge_bound(c, e.kind, flight, credit_lat, period));
+                                }
+                                if bound <= clocks[i].load(Ordering::Acquire) {
+                                    continue;
+                                }
+                                let mut sh = shards[i].lock().unwrap();
+                                // The coordinator normalizes shards
+                                // forward under `stop`; a stale bound
+                                // must not re-advance them afterwards.
+                                if stop.load(Ordering::Acquire) {
+                                    return;
+                                }
+                                // (2) Drain our mailbox into the inbox.
+                                drain_mailbox(&mut sh, &mailboxes[i]);
+                                // (3) Run to the bound.
+                                advance_shard(&mut sh, bound, &mut st);
+                                // (4) Flush outgoing into peer mailboxes
+                                // *before* publishing the clock.
+                                flush_outgoing(&mut sh, links, mailboxes);
+                                hints[i].store(locally_drained(&sh), Ordering::Release);
+                                drop(sh);
+                                // (5) Publish: Release orders the store
+                                // after the flush above.
+                                clocks[i].store(bound, Ordering::Release);
+                                progressed = true;
+                            }
+                        }));
+                        if r.is_err() {
+                            panicked.store(true, Ordering::Release);
+                            stop.store(true, Ordering::Release);
+                            announce(epoch, wake);
+                            break;
+                        }
+                        if progressed {
+                            announce(epoch, wake);
+                        } else {
+                            let mut g = epoch.lock().unwrap();
+                            if *g == seen && !stop.load(Ordering::Acquire) {
+                                st.stalls += 1;
+                                g = wake.wait(g).unwrap();
+                            }
+                            seen = *g;
+                        }
+                    }
+                    *slot.lock().unwrap() = st;
+                });
+            }
+
+            // Coordinator: parks on the announcement condvar; on each
+            // wake checks for panics, global drain, and budget
+            // exhaustion. Never holds the epoch mutex while taking shard
+            // locks (a worker announcing while holding a shard lock
+            // would deadlock against that).
+            let horizon = self.horizon.max(1);
+            let mut seen = *epoch.lock().unwrap();
+            loop {
+                if panicked.load(Ordering::Acquire) {
+                    stop.store(true, Ordering::Release);
+                    announce(epoch, wake);
+                    panic!("a shard worker panicked inside the window");
+                }
+                let all_end =
+                    clocks.iter().all(|c| c.load(Ordering::Acquire) == budget_end);
+                if all_end || hints.iter().all(|h| h.load(Ordering::Acquire)) {
+                    // Exact check: take every shard lock (workers hold at
+                    // most one each, and never block on the epoch mutex
+                    // while holding one), pull in-between messages out of
+                    // the mailboxes, then test the drain predicate.
+                    let mut guards: Vec<MutexGuard<'_, Shard>> =
+                        shards.iter().map(|m| m.lock().unwrap()).collect();
+                    for (i, sh) in guards.iter_mut().enumerate() {
+                        drain_mailbox(sh, &mailboxes[i]);
+                    }
+                    for (i, sh) in guards.iter().enumerate() {
+                        hints[i].store(locally_drained(sh), Ordering::Release);
+                    }
+                    let ok = guards.iter().all(|sh| locally_drained(sh));
+                    if ok {
+                        let done_at =
+                            guards.iter().map(|sh| sh.idle_at).max().unwrap_or(start);
+                        // Normalize every shard *forward* (never rewind a
+                        // clock) to a common `H`-aligned cycle. Safe: the
+                        // system is fully drained, so the extra cycles
+                        // hold no step — only pending credit returns
+                        // restore, exactly as they would early in the
+                        // next run.
+                        let top = guards.iter().map(|sh| sh.net.cycle).max().unwrap_or(start);
+                        let u = top.div_ceil(horizon) * horizon;
+                        stop.store(true, Ordering::Release);
+                        for sh in guards.iter_mut() {
+                            run_window(sh, u);
+                        }
+                        drop(guards);
+                        announce(epoch, wake);
+                        return (Some(done_at - start), u);
+                    }
+                    if all_end {
+                        // Budget exhausted without drain: every clock and
+                        // every shard sits at exactly `budget_end`
+                        // (deterministically, in every mode); pending
+                        // messages stay queued for the next run.
+                        stop.store(true, Ordering::Release);
+                        drop(guards);
+                        announce(epoch, wake);
+                        return (None, budget_end);
+                    }
+                    drop(guards);
+                }
+                let mut g = epoch.lock().unwrap();
+                if *g == seen {
+                    g = wake.wait(g).unwrap();
+                }
+                seen = *g;
+            }
+        })
+    }
+}
+
+/// Bump the announcement epoch and wake every parked worker (and the
+/// coordinator). The increment happens under the condvar's mutex so a
+/// parker that snapshotted the epoch before this call cannot miss it.
+fn announce(epoch: &Mutex<u64>, wake: &Condvar) {
+    let mut g = epoch.lock().unwrap();
+    *g = g.wrapping_add(1);
+    wake.notify_all();
+}
+
+/// Lookahead bound an incoming edge grants when its peer has announced
+/// clock `c` (see the module-docs derivation): no message of `kind`
+/// still unflushed by the peer can take effect before the returned
+/// cycle.
+fn edge_bound(c: u64, kind: EdgeKind, flight: u64, credit_lat: u64, period: u64) -> u64 {
+    match kind {
+        EdgeKind::Flit => c + flight,
+        EdgeKind::Credit => {
+            if period > 0 {
+                (c / period + 1) * period + credit_lat
+            } else {
+                c + credit_lat
+            }
+        }
+    }
+}
+
+/// One shard's locally-drained predicate: idle since its last step, plan
+/// fully issued, no boundary flit waiting in its inbox. (Pending
+/// *credits* are deliberately ignored — the sequential scheduler's
+/// `idle_now` likewise ignores its still-scheduled credit-return wakes.)
+fn locally_drained(sh: &Shard) -> bool {
+    sh.was_idle
+        && !sh.feeder.as_ref().is_some_and(|f| !f.exhausted())
+        && sh.inbox_flits == 0
+}
+
+/// Advance one shard to `end`, recording scheduler counters: window
+/// width, steps, busy-vs-null classification, and the boundary messages
+/// it emitted.
+fn advance_shard(sh: &mut Shard, end: u64, st: &mut WorkerStats) {
+    if sh.net.cycle >= end {
+        return;
+    }
+    let from = sh.net.cycle;
+    let out_before = sh.outgoing.len();
+    let steps = run_window(sh, end);
+    st.cycles += end - from;
+    st.steps += steps;
+    if steps == 0 {
+        st.null_windows += 1;
+    } else {
+        st.busy_windows += 1;
+    }
+    for m in &sh.outgoing[out_before..] {
+        match m.kind {
+            MsgKind::Flit(..) => st.flits_out += 1,
+            MsgKind::Credit => st.credits_out += 1,
+        }
+    }
+}
+
+/// Move every message parked in `mailbox` into the shard's inbox heap.
+fn drain_mailbox(sh: &mut Shard, mailbox: &Mutex<Vec<BoundaryMsg>>) {
+    let mut mb = mailbox.lock().unwrap();
+    for m in mb.drain(..) {
+        inbox_push(sh, m);
+    }
+}
+
+/// Push one boundary message into a shard's inbox, maintaining the O(1)
+/// pending-flit counter.
+fn inbox_push(sh: &mut Shard, m: BoundaryMsg) {
+    if matches!(m.kind, MsgKind::Flit(..)) {
+        sh.inbox_flits += 1;
+    }
+    sh.inbox.push(Reverse(m));
+}
+
+/// Link-clock flush: route this shard's outgoing messages into their
+/// destination shards' mailboxes (flits toward the link's receiving
+/// chip, credits back to its sending chip), batching locks per
+/// destination. Must complete before the sender's clock store — the
+/// Release/Acquire pair on the clock is what publishes these writes.
+fn flush_outgoing(sh: &mut Shard, links: &[ShardLink], mailboxes: &[Mutex<Vec<BoundaryMsg>>]) {
+    if sh.outgoing.is_empty() {
+        return;
+    }
+    // Tag each message with its destination, then group contiguous runs
+    // (stable sort keeps emission order inside a destination; the inbox
+    // heap re-orders by `(at, link, seq)` anyway).
+    let mut tagged: Vec<(usize, BoundaryMsg)> = sh
+        .outgoing
+        .drain(..)
+        .map(|m| {
+            let l = &links[m.link as usize];
+            let dst = match m.kind {
+                MsgKind::Flit(..) => l.to_chip,
+                MsgKind::Credit => l.from_chip,
+            };
+            (dst, m)
+        })
+        .collect();
+    tagged.sort_by_key(|(dst, _)| *dst);
+    let mut iter = tagged.into_iter().peekable();
+    while let Some((dst, m)) = iter.next() {
+        let mut mb = mailboxes[dst].lock().unwrap();
+        mb.push(m);
+        while iter.peek().is_some_and(|(d, _)| *d == dst) {
+            mb.push(iter.next().unwrap().1);
+        }
     }
 }
 
 /// Advance one shard from its current cycle to exactly `end`, applying
 /// due boundary messages before each step and pumping the shard's feeder
 /// — the per-shard mirror of [`crate::traffic::run_plan`]'s loop.
-fn run_window(shard: &mut Shard, end: u64) {
+/// Returns the number of scheduler steps executed (0 = a pure clock
+/// advance, the null-message case).
+fn run_window(shard: &mut Shard, end: u64) -> u64 {
+    let mut steps = 0;
     while shard.net.cycle < end {
         apply_due(shard);
         if let Some(f) = shard.feeder.as_mut() {
@@ -580,13 +1273,13 @@ fn run_window(shard: &mut Shard, end: u64) {
             };
             let mut target = shard.net.next_wake();
             target = merge(target, shard.feeder.as_ref().and_then(|f| f.next_at()));
-            target = merge(target, shard.inbox.front().map(|m| m.at));
+            target = merge(target, shard.inbox.peek().map(|Reverse(m)| m.at));
             match target {
                 // Next event at or beyond the window edge: nothing inside
-                // this window can change, jump straight to the barrier.
+                // this window can change, jump straight to the edge.
                 Some(t) if t >= end => {
                     shard.net.advance_to(end);
-                    return;
+                    return steps;
                 }
                 Some(t) if t > shard.net.cycle => {
                     shard.net.advance_to(t);
@@ -595,13 +1288,15 @@ fn run_window(shard: &mut Shard, end: u64) {
                 Some(_) => {}
                 None => {
                     shard.net.advance_to(end);
-                    return;
+                    return steps;
                 }
             }
         }
         shard.net.step();
+        steps += 1;
         post_step(shard);
     }
+    steps
 }
 
 /// Apply every inbox message whose cycle has come: flits land in their rx
@@ -610,11 +1305,15 @@ fn run_window(shard: &mut Shard, end: u64) {
 /// step of the message's cycle — the sequential scheduler applies the
 /// equivalent channel wakes in the same step's phase 1.
 fn apply_due(shard: &mut Shard) {
-    while let Some(front) = shard.inbox.front() {
-        if front.at > shard.net.cycle {
-            break;
+    loop {
+        match shard.inbox.peek() {
+            Some(Reverse(front)) if front.at <= shard.net.cycle => {}
+            _ => break,
         }
-        let m = shard.inbox.pop_front().unwrap();
+        let Reverse(m) = shard.inbox.pop().unwrap();
+        if matches!(m.kind, MsgKind::Flit(..)) {
+            shard.inbox_flits -= 1;
+        }
         match m.kind {
             MsgKind::Flit(mut flit, pkt) => {
                 let ch = *shard
@@ -659,6 +1358,10 @@ fn post_step(shard: &mut Shard) {
         let mut raw = std::mem::take(&mut shard.scratch);
         shard.net.chans.drain_boundary_out(&mut raw);
         for ev in raw.drain(..) {
+            // The emission-order stamp: the inbox heap's final tie-break
+            // (monotone for the shard's whole lifetime).
+            let seq = shard.out_seq;
+            shard.out_seq += 1;
             match ev {
                 BoundaryOut::Flit { link, flit, vc, at } => {
                     let pkt = match flit.kind {
@@ -674,6 +1377,7 @@ fn post_step(shard: &mut Shard) {
                     shard.outgoing.push(BoundaryMsg {
                         link,
                         at,
+                        seq,
                         vc,
                         kind: MsgKind::Flit(flit, pkt),
                     });
@@ -682,6 +1386,7 @@ fn post_step(shard: &mut Shard) {
                     shard.outgoing.push(BoundaryMsg {
                         link,
                         at,
+                        seq,
                         vc,
                         kind: MsgKind::Credit,
                     });
@@ -698,9 +1403,9 @@ fn post_step(shard: &mut Shard) {
 }
 
 /// Barrier exchange: move every outgoing message to its destination
-/// shard's inbox in deterministic `(cycle, link-id)` order (stable sort —
-/// per-link FIFO order is preserved). Flits travel to the link's
-/// receiving chip, credits back to its sending chip.
+/// shard's inbox (flits travel to the link's receiving chip, credits
+/// back to its sending chip). Arrival order is irrelevant — the inbox
+/// heap applies messages in `(cycle, link, seq)` order regardless.
 fn exchange(shards: &[Mutex<Shard>], links: &[ShardLink]) {
     let mut moved: Vec<BoundaryMsg> = Vec::new();
     for m in shards {
@@ -709,7 +1414,6 @@ fn exchange(shards: &[Mutex<Shard>], links: &[ShardLink]) {
     if moved.is_empty() {
         return;
     }
-    moved.sort_by_key(|m| (m.at, m.link));
     let mut per: Vec<Vec<BoundaryMsg>> = (0..shards.len()).map(|_| Vec::new()).collect();
     for m in moved {
         let l = &links[m.link as usize];
@@ -724,42 +1428,22 @@ fn exchange(shards: &[Mutex<Shard>], links: &[ShardLink]) {
             continue;
         }
         let mut sh = m.lock().unwrap();
-        if sh.inbox.is_empty() {
-            // The batch is already in (at, link) order from the global
-            // sort above — adopt it wholesale.
-            sh.inbox = batch.into();
-        } else {
-            // Not-yet-due messages remain (flit flights span ~14 of the
-            // credit-bound windows): merge via a stable re-sort, which
-            // keeps per-link FIFO order intact. The rebuild is linear-ish
-            // on mostly-sorted input and small next to the per-window
-            // barrier waits; widening the credit-bound horizon (ROADMAP)
-            // shrinks barrier frequency itself by ~14x.
-            let mut v: Vec<BoundaryMsg> = sh.inbox.drain(..).collect();
-            v.extend(batch);
-            v.sort_by_key(|msg| (msg.at, msg.link));
-            sh.inbox = v.into();
+        for msg in batch {
+            inbox_push(&mut sh, msg);
         }
     }
 }
 
 /// Global drain check, evaluated at a barrier: every feeder exhausted,
 /// every shard idle after its last step, and no flit anywhere between
-/// shards. Pending *credits* are deliberately ignored — the sequential
-/// scheduler's `idle_now` likewise ignores its still-scheduled
-/// credit-return wakes — and stay queued for the next run. Returns the
-/// global drain cycle (max over shards of the last idle transition).
+/// shards ([`locally_drained`]). Pending credits stay queued for the
+/// next run. Returns the global drain cycle (max over shards of the
+/// last idle transition).
 fn drained(shards: &[Mutex<Shard>]) -> Option<u64> {
     let mut last = 0u64;
     for m in shards {
         let sh = m.lock().unwrap();
-        if !sh.was_idle {
-            return None;
-        }
-        if sh.feeder.as_ref().is_some_and(|f| !f.exhausted()) {
-            return None;
-        }
-        if sh.inbox.iter().any(|m| matches!(m.kind, MsgKind::Flit(..))) {
+        if !locally_drained(&sh) {
             return None;
         }
         last = last.max(sh.idle_at);
@@ -780,13 +1464,14 @@ mod tests {
     #[test]
     fn builder_wires_links_and_horizon() {
         let cfg = DnpConfig::hybrid();
-        let snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, 1 << 12, 2);
+        let snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, 1 << 12, 2).unwrap();
         assert_eq!(snet.n_chips(), 2);
         assert_eq!(snet.n_nodes(), 8);
         // One active ring (X, k=2): 2 chips × 1 dim × 2 dirs.
         assert_eq!(snet.links().len(), 4);
         // SHAPES SerDes: credit_lat = wire = 8 binds the horizon.
         assert_eq!(snet.horizon(), 8);
+        assert_eq!(snet.parallel_mode(), ParallelMode::Barrier);
         for l in snet.links() {
             assert_ne!(l.from_chip, l.to_chip);
             assert_eq!(l.dim, 0);
@@ -794,43 +1479,97 @@ mod tests {
     }
 
     #[test]
-    fn cross_chip_put_delivers_under_two_workers() {
-        let cfg = DnpConfig::hybrid();
-        let mut snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, 1 << 16, 2);
-        let fmt = AddrFormat::Hybrid { chip_dims: CHIPS, tile_dims: TILES };
-        let dst = fmt.encode(&[1, 0, 0, 1, 1]);
-        let dst_node = snet.node_of(dst);
-        assert_eq!(dst_node, 7);
-        let payload: Vec<u32> = (0..48).map(|i| 0xABC0_0000 | i).collect();
-        snet.dnp_mut(0).mem.write_slice(0x1000, &payload);
-        snet.dnp_mut(dst_node).register_buffer(0x4000, 256, 0).unwrap();
-        let plan = vec![Planned {
-            node: 0,
-            at: 0,
-            cmd: Command::put(0x1000, dst, 0x4000, 48).with_tag(1),
-        }];
-        let elapsed = snet.run_plan(plan, 1_000_000).expect("PUT must drain");
-        assert!(elapsed > 100, "a SerDes crossing costs >100 cycles: {elapsed}");
-        assert_eq!(snet.dnp(dst_node).mem.read_slice(0x4000, 48), &payload[..]);
-        let delivered = snet.fold_nets(0u64, |acc, n| acc + n.traces.delivered);
-        assert_eq!(delivered, 1);
+    fn batched_credits_widen_the_horizon_to_the_flight() {
+        let mut cfg = DnpConfig::hybrid();
+        cfg.serdes.credit_batch = true;
+        let snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, 1 << 12, 2).unwrap();
+        // Flight = cycles_per_word + tx_pipe + wire + rx_pipe + switch
+        //        = 8 + 44 + 8 + 44 + 10 = 114.
+        assert_eq!(snet.horizon(), 114);
     }
 
     #[test]
-    fn second_run_reuses_the_net() {
+    fn zero_horizon_is_a_typed_error_not_a_panic() {
+        // Per-flit credits with a zero-latency credit wire would force a
+        // zero conservative horizon; the builder must refuse with a
+        // matchable error (the old code asserted).
+        let mut cfg = DnpConfig::hybrid();
+        cfg.serdes.wire = 0;
+        let err = ShardedNet::hybrid(CHIPS, TILES, &cfg, 1 << 12, 2).unwrap_err();
+        assert!(
+            matches!(err, ShardSetupError::ZeroHorizon { chip: 0, dim: 0, .. }),
+            "unexpected error: {err:?}"
+        );
+        assert!(err.to_string().contains("zero conservative horizon"));
+        // Batching rescues the same config: the release period (the
+        // flight, 106 without the wire term's 8) carries the horizon.
+        cfg.serdes.credit_batch = true;
+        let snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, 1 << 12, 2).unwrap();
+        assert_eq!(snet.horizon(), 106);
+    }
+
+    #[test]
+    fn setup_error_display_is_informative() {
+        let e = ShardSetupError::PeriodExceedsFlight { period: 200, flight: 114 };
+        assert!(e.to_string().contains("200"));
+        assert!(e.to_string().contains("114"));
+        let e = ShardSetupError::NonUniformLink { link: 3 };
+        assert!(e.to_string().contains("link 3"));
+    }
+
+    #[test]
+    fn cross_chip_put_delivers_in_both_modes() {
+        for mode in [ParallelMode::Barrier, ParallelMode::LinkClock] {
+            let cfg = DnpConfig::hybrid();
+            let mut snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, 1 << 16, 2).unwrap();
+            snet.set_parallel_mode(mode);
+            let fmt = AddrFormat::Hybrid { chip_dims: CHIPS, tile_dims: TILES };
+            let dst = fmt.encode(&[1, 0, 0, 1, 1]);
+            let dst_node = snet.node_of(dst);
+            assert_eq!(dst_node, 7);
+            let payload: Vec<u32> = (0..48).map(|i| 0xABC0_0000 | i).collect();
+            snet.dnp_mut(0).mem.write_slice(0x1000, &payload);
+            snet.dnp_mut(dst_node).register_buffer(0x4000, 256, 0).unwrap();
+            let plan = vec![Planned {
+                node: 0,
+                at: 0,
+                cmd: Command::put(0x1000, dst, 0x4000, 48).with_tag(1),
+            }];
+            let elapsed = snet.run_plan(plan, 1_000_000).expect("PUT must drain");
+            assert!(elapsed > 100, "a SerDes crossing costs >100 cycles: {elapsed}");
+            assert_eq!(snet.dnp(dst_node).mem.read_slice(0x4000, 48), &payload[..]);
+            let delivered = snet.fold_nets(0u64, |acc, n| acc + n.traces.delivered);
+            assert_eq!(delivered, 1);
+            // The run must leave per-worker scheduler counters behind.
+            let stats = snet.worker_stats();
+            assert!(!stats.is_empty());
+            let mut total = WorkerStats::default();
+            for s in stats {
+                total.merge(s);
+            }
+            assert!(total.steps > 0, "somebody must have stepped ({mode:?})");
+            assert!(total.flits_out > 0, "the PUT crossed a boundary ({mode:?})");
+        }
+    }
+
+    #[test]
+    fn second_run_reuses_the_net_in_both_modes() {
         // Pending credit wakes and clock offsets between runs must not
         // corrupt a follow-up plan (mirrors the sequential scheduler's
         // multi-run usage in the benches).
-        let cfg = DnpConfig::hybrid();
-        let mut snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, 1 << 16, 2);
-        traffic::setup_buffers_sharded(&mut snet);
-        for round in 0..2 {
-            let plan = traffic::hybrid_halo_exchange(CHIPS, TILES, 16);
-            let total = plan.len() as u64;
-            snet.run_plan(plan, 1_000_000)
-                .unwrap_or_else(|| panic!("round {round} must drain"));
-            let delivered = snet.fold_nets(0u64, |acc, n| acc + n.traces.delivered);
-            assert_eq!(delivered, (round + 1) * total);
+        for mode in [ParallelMode::Barrier, ParallelMode::LinkClock] {
+            let cfg = DnpConfig::hybrid();
+            let mut snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, 1 << 16, 2).unwrap();
+            snet.set_parallel_mode(mode);
+            traffic::setup_buffers_sharded(&mut snet);
+            for round in 0..2 {
+                let plan = traffic::hybrid_halo_exchange(CHIPS, TILES, 16);
+                let total = plan.len() as u64;
+                snet.run_plan(plan, 1_000_000)
+                    .unwrap_or_else(|| panic!("round {round} must drain ({mode:?})"));
+                let delivered = snet.fold_nets(0u64, |acc, n| acc + n.traces.delivered);
+                assert_eq!(delivered, (round + 1) * total);
+            }
         }
     }
 }

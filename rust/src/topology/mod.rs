@@ -1298,4 +1298,39 @@ mod tests {
         let cfg = DnpConfig::shapes_rdt();
         hybrid_torus_mesh([2, 1, 1], [3, 3], &cfg, 1 << 12);
     }
+
+    #[test]
+    fn partition_8x8x8_is_closed_and_complete() {
+        // The 512-chip build the shard-scale harness runs on: 2048 DNPs,
+        // 3 active k=8 rings per chip → 512 × 3 dims × 2 dirs = 3072
+        // directed boundary wires. The partition must cover every chip's
+        // full in/out degree with no duplicate (from, to, dim, lane,
+        // plus) edge — the invariant the sharded builder's in-edge
+        // dedup and the per-link conservative clocks both lean on.
+        let cfg = DnpConfig::hybrid();
+        let (net, wiring) = hybrid_torus_mesh_wired([8, 8, 8], [2, 2], &cfg, 1 << 8);
+        assert_eq!(net.nodes.len(), 2048);
+        let p = wiring.partition();
+        assert_eq!(p.n_chips(), 512);
+        assert_eq!(p.tiles_per_chip, 4);
+        assert_eq!(p.links.len(), 3072);
+        let mut seen = std::collections::HashSet::new();
+        let mut out_deg = vec![0usize; 512];
+        let mut in_deg = vec![0usize; 512];
+        for l in &p.links {
+            assert_ne!(l.from_chip, l.to_chip, "k=8 rings have no self-loops");
+            assert!(
+                seen.insert((l.from_chip, l.to_chip, l.dim, l.lane, l.plus)),
+                "duplicate boundary edge {l:?}"
+            );
+            out_deg[l.from_chip] += 1;
+            in_deg[l.to_chip] += 1;
+        }
+        assert!(out_deg.iter().all(|&d| d == 6), "every chip drives 3 dims x 2 dirs");
+        assert!(in_deg.iter().all(|&d| d == 6), "every chip hears 3 dims x 2 dirs");
+        // Node ownership is positional and total.
+        assert_eq!(p.chip_nodes(0), 0..4);
+        assert_eq!(p.chip_nodes(511), 2044..2048);
+        assert_eq!(p.chip_of_node(2047), 511);
+    }
 }

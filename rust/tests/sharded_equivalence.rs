@@ -13,10 +13,14 @@
 
 use dnp::config::DnpConfig;
 use dnp::fault::{self, HierLinkFault};
-use dnp::metrics::{net_totals, sharded_totals, NetTotals};
+use dnp::metrics::{net_totals, scheduler_totals, sharded_totals, NetTotals};
+use dnp::packet::AddrFormat;
+use dnp::rdma::Command;
 use dnp::route::hier::GatewayMap;
-use dnp::sim::ShardedNet;
+use dnp::sim::{ParallelMode, ShardedNet};
 use dnp::{topology, traffic, Net};
+
+const MODES: [ParallelMode; 2] = [ParallelMode::Barrier, ParallelMode::LinkClock];
 
 const CHIPS: [u32; 3] = [2, 2, 1];
 const TILES: [u32; 2] = [2, 2];
@@ -111,9 +115,12 @@ fn snapshot_sharded(snet: &mut ShardedNet, elapsed: Option<u64>) -> Snapshot {
     }
 }
 
-/// Run `plan` sequentially (event scheduler) and sharded with `workers`
-/// threads on a `chips` system under `gmap`, optionally after installing
-/// recovery tables for `faults`, and assert snapshot equality.
+/// Run `plan` sequentially (event scheduler) once, then sharded with
+/// `workers` threads under BOTH parallel runners (windowed barrier and
+/// per-link conservative clocks) on a `chips` system under `gmap`,
+/// optionally after installing recovery tables for `faults`, and assert
+/// snapshot equality for each mode. The runtime schedule differs wildly
+/// between the modes; the modeled machine must not.
 #[allow(clippy::too_many_arguments)]
 fn assert_sharded_equivalent_with(
     cfg: &DnpConfig,
@@ -138,28 +145,35 @@ fn assert_sharded_equivalent_with(
     assert!(seq_elapsed.is_some(), "{label}: sequential run must drain");
     let seq = snapshot_event(&net, &wiring, seq_elapsed);
 
-    // Sharded run.
-    let mut snet = ShardedNet::hybrid_with(chips, gmap, cfg, MEM, workers);
-    traffic::setup_buffers_sharded(&mut snet);
-    if !faults.is_empty() {
-        let tables = fault::recompute_hybrid_tables_with(chips, gmap, faults, cfg)
-            .expect("recoverable fault set");
-        snet.apply_tables(tables);
-    }
-    let shd_elapsed = traffic::run_plan_sharded(&mut snet, plan, max_cycles);
-    let shd = snapshot_sharded(&mut snet, shd_elapsed);
+    // Sharded runs, one per parallel mode.
+    for mode in MODES {
+        let mut snet = ShardedNet::hybrid_with(chips, gmap, cfg, MEM, workers)
+            .expect("uniform SHAPES links shard cleanly");
+        snet.set_parallel_mode(mode);
+        traffic::setup_buffers_sharded(&mut snet);
+        if !faults.is_empty() {
+            let tables = fault::recompute_hybrid_tables_with(chips, gmap, faults, cfg)
+                .expect("recoverable fault set");
+            snet.apply_tables(tables);
+        }
+        let shd_elapsed = traffic::run_plan_sharded(&mut snet, plan.clone(), max_cycles);
+        let shd = snapshot_sharded(&mut snet, shd_elapsed);
 
-    assert_eq!(seq.elapsed, shd.elapsed, "{label} (w{workers}): drain cycle diverged");
-    assert_eq!(seq.totals, shd.totals, "{label} (w{workers}): totals diverged");
-    assert_eq!(seq.wires, shd.wires, "{label} (w{workers}): per-wire counters diverged");
-    for i in 0..n {
-        assert_eq!(seq.nodes[i], shd.nodes[i], "{label} (w{workers}): node {i} counters");
-        assert_eq!(
-            seq.mems[i], shd.mems[i],
-            "{label} (w{workers}): node {i} tile memory (payloads / CQ ring)"
-        );
+        let tag = format!("{label} (w{workers}, {mode:?})");
+        assert_eq!(seq.elapsed, shd.elapsed, "{tag}: drain cycle diverged");
+        assert_eq!(seq.totals, shd.totals, "{tag}: totals diverged");
+        assert_eq!(seq.wires, shd.wires, "{tag}: per-wire counters diverged");
+        for i in 0..n {
+            assert_eq!(seq.nodes[i], shd.nodes[i], "{tag}: node {i} counters");
+            assert_eq!(
+                seq.mems[i], shd.mems[i],
+                "{tag}: node {i} tile memory (payloads / CQ ring)"
+            );
+        }
+        assert_eq!(seq, shd, "{tag}: snapshots diverged");
+        let sched = scheduler_totals(&snet);
+        assert!(sched.steps > 0, "{tag}: scheduler counters must be populated");
     }
-    assert_eq!(seq, shd, "{label} (w{workers}): snapshots diverged");
 }
 
 /// The historical Fixed-map harness on the 2x2x1 system.
@@ -184,9 +198,11 @@ fn assert_sharded_equivalent(
 }
 
 #[test]
-fn hybrid_uniform_matches_event_1_2_4_workers() {
+fn hybrid_uniform_matches_event_1_2_4_8_workers() {
+    // Workers beyond the chip count (8 > 4) exercise the clamped /
+    // multi-chip-per-worker placement paths of both runners.
     let cfg = DnpConfig::hybrid();
-    for workers in [1usize, 2, 4] {
+    for workers in [1usize, 2, 4, 8] {
         let plan = traffic::hybrid_uniform_random(CHIPS, TILES, 8, 32, 10, 0xFEED_1001);
         assert_sharded_equivalent(&cfg, plan, workers, &[], 2_000_000, "hybrid uniform");
     }
@@ -213,7 +229,7 @@ fn faulted_dead_cable_matches_event_and_keeps_wire_silent() {
     }
     // Explicit dead-wire check on a sharded run (the snapshot equality
     // above already implies it, but pin it directly too).
-    let mut snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, MEM, 2);
+    let mut snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, MEM, 2).unwrap();
     traffic::setup_buffers_sharded(&mut snet);
     let tables =
         fault::recompute_hybrid_tables(CHIPS, TILES, &[dead], &cfg).expect("recoverable");
@@ -382,19 +398,24 @@ fn midrun_reconfig_in_flight_three_way_equivalence() {
     assert_eq!(seq_b, dense_b, "dense vs event phase-B drain cycle");
     assert_eq!(seq, dense, "mid-run reconfig: dense vs event diverged");
 
-    // Sharded legs.
+    // Sharded legs, both parallel runners. A timed-out phase A parks
+    // every mode's clock at exactly `cut`, so phase B resumes from an
+    // identical machine state regardless of runner.
     for workers in [1usize, 2, 4] {
-        let mut snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, MEM, workers);
-        traffic::setup_buffers_sharded(&mut snet);
-        assert!(
-            traffic::run_plan_sharded(&mut snet, plan.clone(), cut).is_none(),
-            "sharded (w{workers}): phase A must still be draining at the cut"
-        );
-        snet.apply_tables(tables());
-        let b = traffic::run_plan_sharded(&mut snet, vec![], 4_000_000);
-        assert_eq!(seq_b, b, "sharded (w{workers}): phase-B drain cycle diverged");
-        let shd = snapshot_sharded(&mut snet, b);
-        assert_eq!(seq, shd, "mid-run reconfig (w{workers}): sharded diverged");
+        for mode in MODES {
+            let mut snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, MEM, workers).unwrap();
+            snet.set_parallel_mode(mode);
+            traffic::setup_buffers_sharded(&mut snet);
+            assert!(
+                traffic::run_plan_sharded(&mut snet, plan.clone(), cut).is_none(),
+                "sharded (w{workers}, {mode:?}): phase A must still be draining at the cut"
+            );
+            snet.apply_tables(tables());
+            let b = traffic::run_plan_sharded(&mut snet, vec![], 4_000_000);
+            assert_eq!(seq_b, b, "sharded (w{workers}, {mode:?}): phase-B drain cycle diverged");
+            let shd = snapshot_sharded(&mut snet, b);
+            assert_eq!(seq, shd, "mid-run reconfig (w{workers}, {mode:?}): sharded diverged");
+        }
     }
 }
 
@@ -421,17 +442,163 @@ fn sharded_budget_edge_matches_event() {
         let seq = traffic::run_plan(&mut net, &mut feeder, budget);
         assert_eq!(seq.is_some(), expect_some, "event mode at budget {budget}");
 
-        let mut snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, MEM, 2);
-        traffic::setup_buffers_sharded(&mut snet);
-        let shd = traffic::run_plan_sharded(&mut snet, plan.clone(), budget);
-        assert_eq!(seq, shd, "budget {budget}: modes disagree at the edge");
-        if !expect_some {
-            assert_eq!(snet.cycle(), budget, "timeout must burn the whole budget");
+        for mode in MODES {
+            let mut snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, MEM, 2).unwrap();
+            snet.set_parallel_mode(mode);
+            traffic::setup_buffers_sharded(&mut snet);
+            let shd = traffic::run_plan_sharded(&mut snet, plan.clone(), budget);
+            assert_eq!(seq, shd, "budget {budget} ({mode:?}): modes disagree at the edge");
+            if !expect_some {
+                assert_eq!(
+                    snet.cycle(),
+                    budget,
+                    "timeout must burn the whole budget ({mode:?})"
+                );
+            }
+            assert_eq!(
+                net_totals(&net),
+                sharded_totals(&snet),
+                "budget {budget} ({mode:?}): totals diverged"
+            );
         }
-        assert_eq!(
-            net_totals(&net),
-            sharded_totals(&snet),
-            "budget {budget}: totals diverged"
+    }
+}
+
+/// Adversarial asymmetric load for the conservative runners: chip
+/// (0,0,0)'s tiles hammer chip (1,0,0) with widely spaced PUTs while the
+/// other two chips are COMPLETELY idle — they never send, never receive,
+/// and only see credit echoes on their boundary rx halves. Under the
+/// barrier runner the idle shards pay every window; under the link-clock
+/// runner they must keep publishing clock advances (null-message role)
+/// or the busy pair stalls forever. Either way the modeled machine must
+/// be bit-exact with the sequential event scheduler.
+fn quiet_chip_plan(count: usize, len: u32, gap: u64) -> Vec<traffic::Planned> {
+    let fmt = AddrFormat::Hybrid { chip_dims: CHIPS, tile_dims: TILES };
+    let tiles = (TILES[0] * TILES[1]) as usize;
+    let mut plan = Vec::new();
+    for t in 0..tiles {
+        let slot = t; // chip (0,0,0) holds nodes 0..tiles
+        let c = traffic::hybrid_coords(CHIPS, TILES, tiles + t); // chip (1,0,0), same tile
+        let dst = fmt.encode(&c);
+        for i in 0..count {
+            plan.push(traffic::Planned {
+                node: slot,
+                // Long prime-strided gaps: the busy shards repeatedly run
+                // far ahead of the quiet ones between issues.
+                at: i as u64 * gap + slot as u64 * 13,
+                cmd: Command::put(0x1000, dst, traffic::rx_addr(slot), len)
+                    .with_tag((slot * count + i) as u32),
+            });
+        }
+    }
+    plan
+}
+
+#[test]
+fn quiet_chip_hotspot_matches_event_both_modes() {
+    let cfg = DnpConfig::hybrid();
+    for workers in [1usize, 2, 4, 8] {
+        let plan = quiet_chip_plan(6, 24, 617);
+        assert_sharded_equivalent(&cfg, plan, workers, &[], 2_000_000, "quiet-chip hotspot");
+    }
+}
+
+#[test]
+fn wide_horizon_batched_credits_match_event() {
+    // Batched credit returns widen the conservative horizon from the
+    // credit wire (8) to the full flit flight (114). The release
+    // schedule is part of the modeled hardware — identical in the
+    // sequential and sharded builds — so the equivalence must hold with
+    // 14x fewer synchronization rounds.
+    let mut cfg = DnpConfig::hybrid();
+    cfg.serdes.credit_batch = true;
+    assert_eq!(
+        ShardedNet::hybrid(CHIPS, TILES, &cfg, 1 << 12, 1).unwrap().horizon(),
+        114,
+        "batched horizon must be the flit flight"
+    );
+    for workers in [1usize, 2, 4, 8] {
+        let plan = traffic::hybrid_uniform_random(CHIPS, TILES, 8, 32, 10, 0xFEED_1005);
+        assert_sharded_equivalent(&cfg, plan, workers, &[], 2_000_000, "wide-horizon uniform");
+    }
+    // The quiet-chip adversary under the wide horizon too.
+    for workers in [2usize, 4] {
+        let plan = quiet_chip_plan(6, 24, 617);
+        assert_sharded_equivalent(&cfg, plan, workers, &[], 2_000_000, "wide-horizon quiet-chip");
+    }
+}
+
+#[test]
+fn wide_horizon_ber_matches_event() {
+    // Bit errors + envelope retransmission stalls on top of batched
+    // credit release: the retx schedule perturbs pop times, which
+    // perturbs release-window membership — the seeded RNGs must keep
+    // both builds in lockstep anyway.
+    let mut cfg = DnpConfig::hybrid();
+    cfg.serdes.credit_batch = true;
+    cfg.serdes.ber_per_word = 2e-3;
+    for workers in [1usize, 2] {
+        let plan = traffic::hybrid_uniform_random(CHIPS, TILES, 6, 48, 12, 0xFEED_1006);
+        assert_sharded_equivalent(&cfg, plan, workers, &[], 2_000_000, "wide-horizon BER");
+    }
+}
+
+#[test]
+fn wide_horizon_midrun_reconfig_matches_event() {
+    // Mid-run recovery-table install under batched credits. The cut is a
+    // budget timeout, which parks EVERY mode's clock at exactly `cut`
+    // (sequential included) — the only cross-mode-safe cut point under
+    // batching, where a drained run's park cycle is phase-dependent.
+    let mut cfg = DnpConfig::hybrid();
+    cfg.serdes.credit_batch = true;
+    let dead = HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: true };
+    let plan = traffic::hybrid_all_pairs(CHIPS, TILES, 24);
+    let max_at = plan.iter().map(|p| p.at).max().expect("non-empty plan");
+    let d = {
+        let mut net = topology::hybrid_torus_mesh(CHIPS, TILES, &cfg, MEM);
+        let slots: Vec<usize> = (0..N).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        let mut feeder = traffic::Feeder::new(plan.clone());
+        traffic::run_plan(&mut net, &mut feeder, 2_000_000).expect("healthy drain")
+    };
+    let cut = (d / 2).max(max_at + 1);
+    assert!(cut < d, "cut must land mid-run (drain {d}, last issue {max_at})");
+
+    // Sequential event leg.
+    let (seq_b, seq) = {
+        let (mut net, wiring) = topology::hybrid_torus_mesh_wired(CHIPS, TILES, &cfg, MEM);
+        let n = net.nodes.len();
+        let slots: Vec<usize> = (0..n).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        let mut feeder = traffic::Feeder::new(plan.clone());
+        assert!(
+            traffic::run_plan(&mut net, &mut feeder, cut).is_none(),
+            "phase A must still be draining at the cut"
         );
+        fault::inject_hybrid(&mut net, &wiring, &[dead], &cfg).expect("recoverable");
+        let b = traffic::run_plan(&mut net, &mut feeder, 4_000_000);
+        assert!(b.is_some(), "phase B must drain over the recovered tables");
+        let snap = snapshot_event(&net, &wiring, b);
+        (b, snap)
+    };
+
+    // Sharded legs, both runners.
+    for workers in [1usize, 2, 4] {
+        for mode in MODES {
+            let mut snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, MEM, workers).unwrap();
+            snet.set_parallel_mode(mode);
+            traffic::setup_buffers_sharded(&mut snet);
+            assert!(
+                traffic::run_plan_sharded(&mut snet, plan.clone(), cut).is_none(),
+                "wide-horizon (w{workers}, {mode:?}): phase A must time out at the cut"
+            );
+            let tables = fault::recompute_hybrid_tables(CHIPS, TILES, &[dead], &cfg)
+                .expect("recoverable");
+            snet.apply_tables(tables);
+            let b = traffic::run_plan_sharded(&mut snet, vec![], 4_000_000);
+            assert_eq!(seq_b, b, "wide-horizon (w{workers}, {mode:?}): phase-B drain diverged");
+            let shd = snapshot_sharded(&mut snet, b);
+            assert_eq!(seq, shd, "wide-horizon reconfig (w{workers}, {mode:?}): diverged");
+        }
     }
 }

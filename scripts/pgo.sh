@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Profile-guided optimization of the release bench binary, bounded by
+# the hotpath_profile harness:
+#
+#   1. build hotpath_profile with -Cprofile-generate,
+#   2. run it (the profiling workload is the harness itself),
+#   3. merge the raw profiles with the toolchain's llvm-profdata
+#      (ships in the llvm-tools component; located via the sysroot),
+#   4. rebuild with -Cprofile-use,
+#   5. run plain and PGO binaries and print before/after `[pgo]` rows.
+#
+# EXPERIMENTS.md §Perf records a reference run. Usage: scripts/pgo.sh
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+pgo_dir=$(mktemp -d)
+trap 'rm -rf "${pgo_dir}"' EXIT
+
+sysroot=$(rustc --print sysroot)
+profdata=$(find "${sysroot}" -name llvm-profdata -type f | head -n1)
+if [ -z "${profdata}" ]; then
+    echo "llvm-profdata not found under ${sysroot} (rustup component add llvm-tools)" >&2
+    exit 1
+fi
+
+echo "[pgo] step 1/4: instrumented build + profiling run"
+RUSTFLAGS="-Cprofile-generate=${pgo_dir}" \
+    cargo build --release --bench hotpath_profile --target-dir target/pgo-gen
+gen_bin=$(find target/pgo-gen/release -maxdepth 2 -name 'hotpath_profile-*' -type f -perm -u+x | head -n1)
+LLVM_PROFILE_FILE="${pgo_dir}/hotpath-%p.profraw" "${gen_bin}" --bench >/dev/null
+
+echo "[pgo] step 2/4: merging profiles"
+"${profdata}" merge -o "${pgo_dir}/merged.profdata" "${pgo_dir}"/*.profraw
+
+echo "[pgo] step 3/4: PGO build"
+RUSTFLAGS="-Cprofile-use=${pgo_dir}/merged.profdata" \
+    cargo build --release --bench hotpath_profile --target-dir target/pgo-use
+use_bin=$(find target/pgo-use/release -maxdepth 2 -name 'hotpath_profile-*' -type f -perm -u+x | head -n1)
+
+echo "[pgo] step 4/4: before/after"
+cargo build --release --bench hotpath_profile
+plain_bin=$(find target/release -maxdepth 2 -name 'hotpath_profile-*' -type f -perm -u+x | head -n1)
+
+run_wall() { /usr/bin/time -f '%e' "$1" --bench >/dev/null 2>"${pgo_dir}/t" || true; cat "${pgo_dir}/t" | tail -n1; }
+plain_s=$(run_wall "${plain_bin}")
+pgo_s=$(run_wall "${use_bin}")
+echo "[pgo] hotpath_profile wall: plain=${plain_s}s pgo=${pgo_s}s"
+echo "[pgo] speedup: $(awk -v a="${plain_s}" -v b="${pgo_s}" 'BEGIN { if (b > 0) printf "%.2fx", a/b; else print "n/a" }')"

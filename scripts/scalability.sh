@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Shard-scale scalability sweep: run the 512-chip asymmetric-load smoke
+# (examples/shard_scale.rs) across worker counts in both parallel modes
+# and collect the `[shard-scale]` rows. CI greps these rows into the
+# experiments-summary artifact; EXPERIMENTS.md §Shard-scale records a
+# reference sweep with the exact harvest line.
+#
+# Usage: scripts/scalability.sh [max_workers] [out_file]
+#   max_workers  highest worker count to sweep (default: nproc, capped 16)
+#   out_file     where to append the rows (default: stdout only)
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+cores=$(nproc 2>/dev/null || echo 4)
+max=${1:-$((cores < 16 ? cores : 16))}
+out=${2:-}
+
+cargo build --release --example shard_scale
+
+echo "shard-scale sweep: up to ${max} workers on ${cores} cores"
+rows=$(cargo run --release --quiet --example shard_scale -- "${max}" | tee /dev/stderr | grep '^\[shard-scale\]')
+
+if [ -n "${out}" ]; then
+    {
+        echo "# scalability sweep, $(uname -sm), ${cores} cores"
+        echo "${rows}"
+    } >>"${out}"
+    echo "rows appended to ${out}"
+fi
