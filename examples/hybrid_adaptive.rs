@@ -1,0 +1,144 @@
+//! Congestion-adaptive (UGAL-lite) gateway selection head-to-head
+//! (ISSUE 9 acceptance).
+//!
+//! Two measured legs plus a static certification matrix, each printing
+//! greppable `[adaptive]` rows for the CI experiments-summary artifact
+//! (EXPERIMENTS.md §Adaptive documents the harvest line):
+//!
+//! 1. **Asymmetric hotspot** (4-chip X ring, 2x2 tiles): every sender
+//!    targets destination tiles that hash onto ONE lane, the adversarial
+//!    worst case for the static `DstHash` map. `Adaptive` must beat it on
+//!    both the busiest-cable load and the drain time.
+//! 2. **Balanced all-pairs** (2x2x2): lane-balanced traffic where the
+//!    hysteresis threshold must keep `Adaptive` within ε = 5% of
+//!    `DstHash` (minimal picks are stamp-free and bit-identical).
+//! 3. **Certification**: `verify::check_adaptive` proves every stamped
+//!    route set deadlock-free (one walk per forced lane stamp + union
+//!    CDG acyclicity) across the shipped configuration matrix.
+//!
+//! Run: `cargo run --release --example hybrid_adaptive`
+
+use dnp::config::DnpConfig;
+use dnp::metrics::{adaptive_decision_report, gateway_load_report};
+use dnp::route::GatewayMap;
+use dnp::{topology, traffic, verify};
+
+const TILES: [u32; 2] = [2, 2];
+
+struct Leg {
+    peak: u64,
+    drain: u64,
+    delivered: u64,
+    alternate: u64,
+    fraction: f64,
+}
+
+/// Run `plan` on a `chips` system under `gmap` with one wide RX window
+/// per tile, and return the gateway-load peak plus adaptive stats.
+fn run(chips: [u32; 3], gmap: &GatewayMap, plan: Vec<traffic::Planned>) -> Leg {
+    let cfg = DnpConfig::hybrid();
+    let (mut net, wiring) = topology::hybrid_torus_mesh_wired_with(chips, gmap, &cfg, 1 << 17);
+    net.traces.enabled = false;
+    let n = net.nodes.len();
+    let window = n as u32 * traffic::RX_WINDOW;
+    for i in 0..n {
+        net.dnp_mut(i)
+            .register_buffer(traffic::rx_addr(0), window, 0)
+            .expect("LUT capacity");
+    }
+    let total = plan.len() as u64;
+    let mut feeder = traffic::Feeder::new(plan);
+    let drain = traffic::run_plan(&mut net, &mut feeder, 10_000_000).expect("plan drains");
+    assert_eq!(net.traces.delivered, total, "every PUT must deliver");
+    let rep = adaptive_decision_report(&net);
+    Leg {
+        peak: gateway_load_report(&net, &wiring).peak_channel_words(),
+        drain,
+        delivered: net.traces.delivered,
+        alternate: rep.alternate,
+        fraction: rep.alternate_fraction(),
+    }
+}
+
+fn row(leg: &str, map: &str, l: &Leg) {
+    println!(
+        "[adaptive] leg={leg} map={map} peak_words={} drain_cycles={} delivered={} \
+         alternate_picks={} alternate_fraction={:.3}",
+        l.peak, l.drain, l.delivered, l.alternate, l.fraction,
+    );
+}
+
+fn main() {
+    let cfg = DnpConfig::hybrid();
+
+    // Leg 1: the hash-adversarial funnel. The skew is computed against
+    // the static hash, which both maps share — identical plans.
+    let chips = [4u32, 1, 1];
+    let hash_map = GatewayMap::dst_hash(TILES, 2);
+    let ada_map = GatewayMap::adaptive(TILES, 2);
+    let funnel = |m: &GatewayMap| traffic::hybrid_asymmetric_hotspot(chips, m, [0, 0, 0], 4, 32);
+    let hash = run(chips, &hash_map, funnel(&hash_map));
+    let ada = run(chips, &ada_map, funnel(&ada_map));
+    row("asym-hotspot-4x1x1", "dsthash", &hash);
+    row("asym-hotspot-4x1x1", "adaptive", &ada);
+    assert_eq!(hash.delivered, ada.delivered, "same workload, same deliveries");
+    assert!(ada.alternate > 0, "the funnel must trigger alternate-lane picks");
+    assert!(
+        ada.peak < hash.peak && ada.drain < hash.drain,
+        "Adaptive (peak {}, drain {}) must beat DstHash (peak {}, drain {})",
+        ada.peak,
+        ada.drain,
+        hash.peak,
+        hash.drain,
+    );
+
+    // Leg 2: lane-balanced all-pairs — hysteresis must hold Adaptive
+    // within 5% of the static hash.
+    let chips = [2u32, 2, 2];
+    let hash = run(chips, &hash_map, traffic::hybrid_all_pairs(chips, TILES, 16));
+    let ada = run(chips, &ada_map, traffic::hybrid_all_pairs(chips, TILES, 16));
+    row("all-pairs-2x2x2", "dsthash", &hash);
+    row("all-pairs-2x2x2", "adaptive", &ada);
+    assert_eq!(hash.delivered, ada.delivered);
+    assert!(
+        ada.peak * 20 <= hash.peak * 21 && ada.drain * 20 <= hash.drain * 21,
+        "Adaptive (peak {}, drain {}) must stay within 5% of DstHash (peak {}, drain {})",
+        ada.peak,
+        ada.drain,
+        hash.peak,
+        hash.drain,
+    );
+
+    // Leg 3: static certification of every stamped route set.
+    let mut all_ok = true;
+    for topo in [[2, 2, 1], [3, 3, 1], [4, 4, 1], [3, 3, 3]] {
+        for lanes in [2usize, 4] {
+            let rep = verify::check_adaptive(topo, &GatewayMap::adaptive(TILES, lanes), &cfg);
+            let certified = rep.is_certified();
+            println!(
+                "[adaptive] leg=certify topo={}x{}x{} lanes={lanes} stamps={} \
+                 max_chans={} max_edges={} certified={}",
+                topo[0],
+                topo[1],
+                topo[2],
+                rep.stamps.len(),
+                rep.stamps.iter().map(|s| s.chans.len()).max().unwrap_or(0),
+                rep.stamps.iter().map(|s| s.edges.len()).max().unwrap_or(0),
+                if certified { "yes" } else { "no" },
+            );
+            if !certified {
+                if let Some(c) = rep.union_cycle {
+                    println!("--- union CDG cycle through {c:?}");
+                }
+                for (s, r) in rep.stamps.iter().enumerate() {
+                    if !r.is_certified() {
+                        println!("--- stamp {s} report ---\n{r}");
+                    }
+                }
+            }
+            all_ok &= certified;
+        }
+    }
+    assert!(all_ok, "some adaptive configuration failed static verification");
+    println!("[adaptive] all legs passed");
+}

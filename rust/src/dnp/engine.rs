@@ -48,6 +48,11 @@ pub struct TxStream {
     /// Wire-op override: the GET service path sends `GetResponse` packets
     /// through an otherwise PUT-shaped stream.
     pub wire_op_override: Option<PacketOp>,
+    /// Gateway-lane commitment for adaptive routing (`0` = unstamped):
+    /// chosen once by the DNP when the stream starts and applied to
+    /// every packet the stream builds, so all fragments of one command
+    /// ride one lane ([`NetHeader::lane`]).
+    pub lane_stamp: u8,
     /// The master port is released as soon as the read burst completes —
     /// holding it until the last flit injects would couple bus availability
     /// to network backpressure and deadlock the RX path.
@@ -91,6 +96,7 @@ impl TxStream {
             words_injected: 0,
             first_head_injected: None,
             wire_op_override: None,
+            lane_stamp: 0,
             bus_port_released: false,
         }
     }
@@ -107,7 +113,10 @@ impl TxStream {
         }
     }
 
-    fn wire_dst(&self) -> DnpAddr {
+    /// Destination DNP of this stream's packets on the wire (distinct
+    /// from `cmd.dst_dnp` for LOOPBACK and GET): the address adaptive
+    /// injection scores lanes against before stamping.
+    pub fn wire_dst(&self) -> DnpAddr {
         match self.cmd.op {
             CmdOp::Loopback => self.me,
             // GET: the *request* travels to the data holder (SRC DNP).
@@ -129,6 +138,7 @@ impl TxStream {
                     src: self.me,
                     len: 1,
                     vc: 0,
+                    lane: self.lane_stamp,
                 },
                 RdmaHeader {
                     op: PacketOp::GetRequest,
@@ -140,7 +150,7 @@ impl TxStream {
             );
         }
         let data = mem.read_slice(self.cmd.src_addr + frag.offset, frag.len);
-        build_fragment_packet(
+        let mut p = build_fragment_packet(
             frag,
             self.me,
             self.wire_dst(),
@@ -148,7 +158,11 @@ impl TxStream {
             self.cmd.src_addr,
             DnpAddr::new(0),
             data,
-        )
+        );
+        if self.lane_stamp != 0 {
+            p.set_lane(self.lane_stamp);
+        }
+        p
     }
 
     /// Highest flit seq of the current fragment's packet injectable by

@@ -17,12 +17,14 @@ pub use rx::{GetService, RxDone, RxSession, RxState};
 
 use crate::bus::{BusMasters, PortUse, TileMemory};
 use crate::config::{DnpConfig, RouteOrder, Timing};
-use crate::packet::{DnpAddr, Flit, PacketId, PacketOp, PacketStore};
+use crate::packet::{hybrid_split, DnpAddr, Flit, PacketId, PacketOp, PacketStore};
 use crate::rdma::{CmdFifo, CmdOp, Command, CqWriter, Event, EventKind, Lut, LutMatch};
+use crate::route::hier::{stamp_dim, GatewayMap, GatewayPolicy};
 use crate::route::Router;
 use crate::switch::{InputSrc, LocalSink, SwitchFabric};
 use crate::sim::channel::{ChannelArena, ChannelId};
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
 
 /// Observable things a DNP did during a tick; the `Net` aggregates these
 /// into per-packet / per-command traces (feeds Figs. 8-11 measurements).
@@ -70,6 +72,116 @@ struct Fetching {
     ready: u64,
 }
 
+/// Counters for the UGAL-lite decision point (see [`AdaptiveInjector`]).
+/// Exposed so [`crate::metrics::adaptive_decision_report`] can show how
+/// often the source deviated from the destination-hash lane.
+#[derive(Debug, Default, Clone)]
+pub struct AdaptiveStats {
+    /// Injections that kept the minimal (destination-hash) lane.
+    pub minimal: u64,
+    /// Injections that deviated to a less-loaded alternate lane.
+    pub alternate: u64,
+    /// Lane actually chosen, keyed by `(dim, lane)` — both minimal and
+    /// alternate picks count, so the map shows the realised lane spread.
+    pub lane_picks: BTreeMap<(usize, usize), u64>,
+}
+
+/// The congestion-adaptive (UGAL-lite) lane chooser that runs at the
+/// injection point of a source DNP under [`GatewayPolicy::Adaptive`].
+///
+/// At `TxStream` start it compares the sender-side occupancy
+/// ([`crate::sim::channel::Channel::outstanding_flits`]) of this chip's
+/// off-chip TX channels for the packet's *first* routing dimension: the
+/// destination-hash lane is the minimal default, and the stream deviates
+/// to the least-loaded alternate lane only when that alternate beats the
+/// default by more than the policy's hysteresis `threshold`. The choice
+/// is frozen into the packet header's lane stamp (one stamp per command,
+/// so every fragment of a stream rides the same ring — see
+/// [`crate::packet::NetHeader`]); transit routers only *read* the stamp.
+///
+/// The occupancy it reads is the chip's own TX halves (conceptually a
+/// cheap on-chip congestion wire from the gateway tiles to every DNP),
+/// so in sharded runs the signal is always shard-local and the decision
+/// is bit-exact across dense / event-driven / sharded engines.
+pub struct AdaptiveInjector {
+    gmap: Arc<GatewayMap>,
+    chip_dims: [u32; 3],
+    order: RouteOrder,
+    my_chip: [u32; 3],
+    /// `lane_tx[dim][dir][lane]`: this chip's off-chip TX channel for the
+    /// cable `(dim, dir, lane)`, or `None` where the map owns no such
+    /// lane / the dimension is flat.
+    lane_tx: [[Vec<Option<ChannelId>>; 2]; 3],
+    /// Hysteresis copied out of the policy at construction.
+    threshold: u32,
+}
+
+/// Outcome of one adaptive lane choice (internal to the stamping path).
+struct AdaptiveChoice {
+    dim: usize,
+    lane: usize,
+    minimal: bool,
+}
+
+impl AdaptiveInjector {
+    /// Wire up the chooser for one chip. Panics unless `gmap` carries the
+    /// `Adaptive` policy — topology builders only install it then.
+    pub fn new(
+        gmap: Arc<GatewayMap>,
+        chip_dims: [u32; 3],
+        order: RouteOrder,
+        my_chip: [u32; 3],
+        lane_tx: [[Vec<Option<ChannelId>>; 2]; 3],
+    ) -> Self {
+        let GatewayPolicy::Adaptive { threshold } = gmap.policy() else {
+            panic!("AdaptiveInjector requires GatewayPolicy::Adaptive");
+        };
+        Self { gmap, chip_dims, order, my_chip, lane_tx, threshold }
+    }
+
+    /// Score one lane: live outstanding flits on its TX channel, or
+    /// `u32::MAX` when the lane has no wire here (never picked).
+    fn score(&self, dim: usize, di: usize, lane: usize, chans: &ChannelArena) -> u32 {
+        match self.lane_tx[dim][di].get(lane).copied().flatten() {
+            Some(ch) => u32::try_from(chans.get(ch).outstanding_flits()).unwrap_or(u32::MAX),
+            None => u32::MAX,
+        }
+    }
+
+    /// UGAL-lite decision for a stream headed to `dst`. Returns `None`
+    /// when the destination is on this chip (no off-chip hop to pick).
+    fn choose(&self, dst: DnpAddr, chans: &ChannelArena) -> Option<AdaptiveChoice> {
+        let d = hybrid_split(dst);
+        let dchip = [d[0], d[1], d[2]];
+        let dim = stamp_dim(self.order, self.my_chip, dchip)?;
+        // Same direction rule as the transit ring step: prefer Plus on a
+        // distance tie so the stamped ring is the one the hash lane uses.
+        let k = self.chip_dims[dim];
+        let (from, to) = (self.my_chip[dim], dchip[dim]);
+        let fwd = (to + k - from) % k;
+        let bwd = (from + k - to) % k;
+        let di = usize::from(fwd > bwd);
+        let cd = self.chip_dims;
+        let dchip_idx = (d[0] + d[1] * cd[0] + d[2] * cd[0] * cd[1]) as usize;
+        let dtile_idx = (d[3] + d[4] * self.gmap.tile_dims()[0]) as usize;
+        let base = self.gmap.lane(dim, di, dchip_idx, dtile_idx);
+        let base_score = self.score(dim, di, base, chans);
+        let nlanes = self.gmap.group(dim).len();
+        let alt = (0..nlanes)
+            .filter(|&l| l != base)
+            .map(|l| (self.score(dim, di, l, chans), l))
+            .min()?;
+        // Deviate only when the alternate wins by more than the
+        // hysteresis margin — ties and near-ties stay minimal, so uniform
+        // traffic reproduces DstHash exactly.
+        if alt.0.saturating_add(self.threshold) < base_score {
+            Some(AdaptiveChoice { dim, lane: alt.1, minimal: false })
+        } else {
+            Some(AdaptiveChoice { dim, lane: base, minimal: true })
+        }
+    }
+}
+
 pub struct DnpNode {
     pub addr: DnpAddr,
     pub cfg: DnpConfig,
@@ -104,6 +216,13 @@ pub struct DnpNode {
 
     /// Lane base: injection lanes follow the N+M channel inputs.
     lane_base: usize,
+
+    /// UGAL-lite lane chooser; installed by the topology builders only
+    /// under [`GatewayPolicy::Adaptive`], `None` otherwise.
+    adaptive: Option<AdaptiveInjector>,
+    /// Minimal-vs-alternate decision counters (always present, all zero
+    /// unless an adaptive injector is installed).
+    pub adaptive_stats: AdaptiveStats,
 }
 
 impl DnpNode {
@@ -155,9 +274,37 @@ impl DnpNode {
             pkts_sent: 0,
             pkts_recv: 0,
             lane_base,
+            adaptive: None,
+            adaptive_stats: AdaptiveStats::default(),
             router,
             router_factory: None,
             cfg,
+        }
+    }
+
+    /// Install the UGAL-lite lane chooser (topology builders call this on
+    /// every node of an [`GatewayPolicy::Adaptive`] fabric).
+    pub fn set_adaptive_injector(&mut self, inj: AdaptiveInjector) {
+        self.adaptive = Some(inj);
+    }
+
+    /// Lane stamp for a stream headed to `dst`: `0` (unstamped — DstHash
+    /// behavior) without an adaptive injector, for on-chip destinations,
+    /// and for minimal picks; `l + 1` when UGAL-lite deviates to lane `l`.
+    fn adaptive_stamp(&mut self, dst: DnpAddr, chans: &ChannelArena) -> u8 {
+        let Some(inj) = &self.adaptive else { return 0 };
+        match inj.choose(dst, chans) {
+            None => 0,
+            Some(AdaptiveChoice { dim, lane, minimal }) => {
+                *self.adaptive_stats.lane_picks.entry((dim, lane)).or_insert(0) += 1;
+                if minimal {
+                    self.adaptive_stats.minimal += 1;
+                    0
+                } else {
+                    self.adaptive_stats.alternate += 1;
+                    u8::try_from(lane + 1).expect("lane stamp fits the 6-bit header field")
+                }
+            }
         }
     }
 
@@ -251,7 +398,7 @@ impl DnpNode {
         }
 
         if self.regs.enabled(regs::EN_ENG) {
-            self.tick_eng(now, store, &timing);
+            self.tick_eng(now, chans, store, &timing);
         }
 
         // --- RX sessions waiting for a master port.
@@ -299,8 +446,16 @@ impl DnpNode {
         self.quiescent(chans)
     }
 
-    /// ENG: fetch/decode commands, run the two TX streams.
-    fn tick_eng(&mut self, now: u64, store: &mut PacketStore, timing: &Timing) {
+    /// ENG: fetch/decode commands, run the two TX streams. `chans` is the
+    /// (read-only here) channel arena: the UGAL-lite injector samples live
+    /// TX occupancy from it when a stream starts.
+    fn tick_eng(
+        &mut self,
+        now: u64,
+        chans: &ChannelArena,
+        store: &mut PacketStore,
+        timing: &Timing,
+    ) {
         // Prefetch the next command while the current stream drains — the
         // ENG pipelines fetch/decode against injection so back-to-back
         // commands sustain BW_int = L × 32 bit/cycle (Sec. IV).
@@ -319,8 +474,9 @@ impl DnpNode {
                     if let Some(port) = self.bus.acquire(PortUse::TxRead) {
                         self.fetching = None;
                         self.events.push(NodeEvent::ReadStart { tag: f.cmd.tag, cycle: now });
-                        self.cmd_tx =
-                            Some(TxStream::start(f.cmd, self.addr, port, now, timing));
+                        let mut tx = TxStream::start(f.cmd, self.addr, port, now, timing);
+                        tx.lane_stamp = self.adaptive_stamp(tx.wire_dst(), chans);
+                        self.cmd_tx = Some(tx);
                     }
                 }
             }
@@ -348,6 +504,7 @@ impl DnpNode {
                     };
                     let mut tx = TxStream::start(cmd, self.addr, port, now, timing);
                     tx.wire_op_override = Some(PacketOp::GetResponse);
+                    tx.lane_stamp = self.adaptive_stamp(tx.wire_dst(), chans);
                     self.svc_tx = Some(tx);
                 }
             }

@@ -271,6 +271,7 @@ mod tests {
                 src: DnpAddr::new(2),
                 len: payload.len() as u16,
                 vc: 0,
+                lane: 0,
             },
             RdmaHeader {
                 op: PacketOp::Put,

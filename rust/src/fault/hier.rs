@@ -40,7 +40,16 @@
 //! multi-gateway layout back onto one tile. A structurally invalid map
 //! (out-of-bounds tile, duplicate, empty group) is rejected up front
 //! with the typed [`HierRecoveryError::BadGatewayMap`] instead of a
-//! panic.
+//! panic. An [`Adaptive`](crate::route::hier::GatewayPolicy::Adaptive)
+//! map is preserved the same way with **zero** recovery-algorithm
+//! changes: its static [`lane`](GatewayMap::lane) is the identical
+//! destination hash as `DstHash`, which is exactly the anchor the
+//! recomputation re-homes flows against. Recovered
+//! [`TableRouter`](crate::route::TableRouter)s
+//! ignore in-flight lane stamps (their `decide_pkt` is the trait
+//! default), which is sound by construction — the table already avoids
+//! every dead wire, while honoring a pre-fault stamp could steer a
+//! packet onto one.
 //!
 //! # Escape-VC discipline
 //!

@@ -9,8 +9,9 @@
 //!   SEND / GET over CMD FIFO + CQ + LUT), wormhole crossbar switch with
 //!   virtual channels, deterministic torus/mesh/Spidergon/hierarchical
 //!   routing with a pluggable multi-gateway policy
-//!   ([`route::hier::GatewayMap`]) and fault-recovery table
-//!   recomputation, SerDes and NoC link models, topology builders,
+//!   ([`route::hier::GatewayMap`]: `Fixed`, `DimPair`, `DstHash`, and
+//!   the congestion-adaptive UGAL-lite `Adaptive`) and fault-recovery
+//!   table recomputation, SerDes and NoC link models, topology builders,
 //!   traffic generators, metrics (including per-gateway congestion
 //!   reports) and the full experiment harness for every table and figure
 //!   of the paper's Section IV.

@@ -21,7 +21,10 @@
 //!   backpressure events) into per-gateway-lane loads, grouped by the
 //!   installed [`GatewayMap`](crate::route::hier::GatewayMap) — the
 //!   measurement behind the hotspot-spreading acceptance numbers in
-//!   EXPERIMENTS.md §Gateway.
+//!   EXPERIMENTS.md §Gateway. [`adaptive_decision_report`] (and its
+//!   sharded twin) sums the UGAL-lite minimal/alternate injection
+//!   counters of an [`Adaptive`](crate::route::hier::GatewayPolicy::Adaptive)
+//!   fabric — EXPERIMENTS.md §Adaptive.
 
 use crate::sim::{CmdTrace, Net, PktTrace, ShardedNet, WorkerStats};
 use crate::topology::{cable_slots, HybridWiring};
@@ -289,6 +292,12 @@ pub fn gateway_load_report(net: &Net, wiring: &HybridWiring) -> GatewayLoadRepor
     let nchips = wiring.chip_dims.iter().product::<u32>() as usize;
     let tile_idx = |t: [u32; 2]| -> usize { (t[0] + t[1] * wiring.tile_dims[0]) as usize };
     let mut lanes: Vec<GatewayLaneLoad> = Vec::new();
+    // Seen-guard keyed by ChannelId: a physical channel counts toward
+    // exactly one lane entry, even if a gateway map ever names the same
+    // `(tile, dim, dir)` cell from two cable slots — double-counting a
+    // wire would silently inflate `words`/`channels` and skew the
+    // max/mean imbalance signal (regression-pinned below).
+    let mut seen: std::collections::BTreeSet<u32> = std::collections::BTreeSet::new();
     for s in cable_slots(wiring.chip_dims, &wiring.gmap) {
         let idx = match lanes.iter().position(|l| l.dim == s.dim && l.lane == s.lane) {
             Some(i) => i,
@@ -311,6 +320,9 @@ pub fn gateway_load_report(net: &Net, wiring: &HybridWiring) -> GatewayLoadRepor
         for chip in 0..nchips {
             let ch = wiring.off_out[chip * ntiles + tile_idx(s.tile)][s.dim * 2 + s.dir]
                 .expect("cable slot is wired");
+            if !seen.insert(ch.0) {
+                continue;
+            }
             let c = net.chans.get(ch);
             entry.channels += 1;
             entry.words += c.words_sent;
@@ -321,6 +333,73 @@ pub fn gateway_load_report(net: &Net, wiring: &HybridWiring) -> GatewayLoadRepor
         }
     }
     GatewayLoadReport { lanes }
+}
+
+/// Aggregated UGAL-lite injection decisions of a fabric — see
+/// [`adaptive_decision_report`]. All-zero on nets built without the
+/// [`Adaptive`](crate::route::hier::GatewayPolicy::Adaptive) policy.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AdaptiveDecisionReport {
+    /// Streams that kept the minimal (destination-hash) lane.
+    pub minimal: u64,
+    /// Streams that deviated to a less-loaded alternate lane.
+    pub alternate: u64,
+    /// Lane actually chosen per `(dim, lane)`, minimal picks included —
+    /// the realised lane spread.
+    pub lane_picks: std::collections::BTreeMap<(usize, usize), u64>,
+}
+
+impl AdaptiveDecisionReport {
+    /// Total off-chip stream injections that went through the chooser.
+    pub fn decisions(&self) -> u64 {
+        self.minimal + self.alternate
+    }
+
+    /// Share of decisions that deviated from the hash lane (0.0 when no
+    /// decision was taken — uniform traffic should sit near 0, the
+    /// asymmetric hotspot well above it).
+    pub fn alternate_fraction(&self) -> f64 {
+        if self.decisions() == 0 {
+            return 0.0;
+        }
+        self.alternate as f64 / self.decisions() as f64
+    }
+
+    fn absorb(&mut self, s: &crate::dnp::AdaptiveStats) {
+        self.minimal += s.minimal;
+        self.alternate += s.alternate;
+        for (&k, &v) in &s.lane_picks {
+            *self.lane_picks.entry(k).or_insert(0) += v;
+        }
+    }
+}
+
+/// Sum the per-DNP [`AdaptiveStats`](crate::dnp::AdaptiveStats) counters
+/// of one sequential [`Net`] — how often sources kept the hash lane vs
+/// deviated, and where the picks landed.
+pub fn adaptive_decision_report(net: &Net) -> AdaptiveDecisionReport {
+    let mut rep = AdaptiveDecisionReport::default();
+    for n in &net.nodes {
+        if let crate::sim::Node::Dnp(d) = n {
+            rep.absorb(&d.adaptive_stats);
+        }
+    }
+    rep
+}
+
+/// [`adaptive_decision_report`] merged across the per-chip shards of a
+/// [`ShardedNet`] (each DNP lives in exactly one shard, so the merge is
+/// a plain sum and comparable 1:1 with the sequential report).
+pub fn sharded_adaptive_decision_report(snet: &ShardedNet) -> AdaptiveDecisionReport {
+    snet.fold_nets(AdaptiveDecisionReport::default(), |mut acc, net| {
+        let r = adaptive_decision_report(net);
+        acc.minimal += r.minimal;
+        acc.alternate += r.alternate;
+        for (k, v) in r.lane_picks {
+            *acc.lane_picks.entry(k).or_insert(0) += v;
+        }
+        acc
+    })
 }
 
 #[cfg(test)]
@@ -442,6 +521,68 @@ mod tests {
         assert_eq!(report.peak_channel_words(), 14);
         assert_eq!(report.group_max_mean(0), Some((14, 14.0)));
         assert_eq!(report.group_max_mean(1), None, "degenerate ring has no lanes");
+    }
+
+    #[test]
+    fn gateway_load_report_3x3x1_dimpair_counts_each_channel_once() {
+        // Regression pin for the ChannelId dedupe guard: the DimPair map
+        // on 3x3x1 chips has two active dimensions × two lanes, each
+        // lane owning exactly one direction — so each lane entry must
+        // aggregate exactly 9 channels (one per chip), every channel
+        // counted once, and the flat Z dimension must contribute nothing.
+        use crate::route::hier::GatewayMap;
+        let cfg = DnpConfig::hybrid();
+        let (net, wiring) = topology::hybrid_torus_mesh_wired_with(
+            [3, 3, 1],
+            &GatewayMap::dim_pair([2, 2]),
+            &cfg,
+            1 << 12,
+        );
+        let report = gateway_load_report(&net, &wiring);
+        let mut shape: Vec<(usize, usize, usize)> =
+            report.lanes.iter().map(|l| (l.dim, l.lane, l.channels)).collect();
+        shape.sort_unstable();
+        assert_eq!(
+            shape,
+            vec![(0, 0, 9), (0, 1, 9), (1, 0, 9), (1, 1, 9)],
+            "one entry per (dim, lane), 9 chips each, none double-counted"
+        );
+        // Dedupe invariant: the aggregated channel count equals the
+        // number of distinct wired off-chip TX cells.
+        let wired = wiring
+            .off_out
+            .iter()
+            .flat_map(|row| row.iter())
+            .filter(|c| c.is_some())
+            .count();
+        assert_eq!(report.lanes.iter().map(|l| l.channels).sum::<usize>(), wired);
+        assert_eq!(report.peak_channel_words(), 0, "fresh net has quiet wires");
+    }
+
+    #[test]
+    fn adaptive_decision_report_counts_stream_starts() {
+        use crate::route::hier::GatewayMap;
+        use crate::traffic;
+        let cfg = DnpConfig::hybrid();
+        let gmap = GatewayMap::adaptive([2, 2], 2);
+        let (mut net, _wiring) =
+            topology::hybrid_torus_mesh_wired_with([2, 1, 1], &gmap, &cfg, 1 << 14);
+        let fmt = AddrFormat::Hybrid { chip_dims: [2, 1, 1], tile_dims: [2, 2] };
+        net.dnp_mut(4).register_buffer(traffic::rx_addr(0), 256, 0).unwrap();
+        net.dnp_mut(0).mem.write_slice(0x40, &[9; 8]);
+        net.issue(
+            0,
+            crate::rdma::Command::put(0x40, fmt.encode(&[1, 0, 0, 0, 0]), traffic::rx_addr(0), 8)
+                .with_tag(1),
+        );
+        net.run_until_idle(100_000).expect("PUT completes");
+        let rep = adaptive_decision_report(&net);
+        // One cross-chip stream on an otherwise idle fabric: exactly one
+        // decision, and an idle fabric never justifies deviating.
+        assert_eq!((rep.minimal, rep.alternate), (1, 0));
+        assert_eq!(rep.decisions(), 1);
+        assert!((rep.alternate_fraction() - 0.0).abs() < f64::EPSILON);
+        assert_eq!(rep.lane_picks.values().sum::<u64>(), 1);
     }
 
     #[test]

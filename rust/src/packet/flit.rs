@@ -154,6 +154,7 @@ mod tests {
                 src: DnpAddr::new(2),
                 len: len as u16,
                 vc: 0,
+                lane: 0,
             },
             RdmaHeader {
                 op: PacketOp::Put,

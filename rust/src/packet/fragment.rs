@@ -102,6 +102,7 @@ pub fn build_fragment_packet(
             src,
             len: frag.len as u16,
             vc: 0,
+            lane: 0,
         },
         RdmaHeader {
             op,

@@ -222,12 +222,24 @@ pub struct NetHeader {
     pub len: u16,
     /// Virtual-channel class the packet currently travels on.
     pub vc: u8,
+    /// Gateway-lane commitment stamp for adaptive routing: `0` means
+    /// unstamped (every router falls back to its static policy), `l+1`
+    /// pins the packet to lane `l` on the dimension the source chose at
+    /// injection. Stamped at the source DNP, read-only in transit, so a
+    /// packet's lane choice cannot flap mid-flight.
+    pub lane: u8,
 }
+
+/// Bit offset of the lane stamp within NET HDR word 0: the 18 address
+/// bits plus the 8 VC bits leave exactly bits 26..32 for the stamp.
+const LANE_SHIFT: u32 = ADDR_BITS + 8;
 
 impl NetHeader {
     pub fn pack(&self) -> [Word; NET_HDR_WORDS] {
         [
-            self.dst.raw() | ((self.vc as u32) << ADDR_BITS),
+            self.dst.raw()
+                | ((self.vc as u32) << ADDR_BITS)
+                | (((self.lane as u32) & 0x3F) << LANE_SHIFT),
             self.src.raw() | ((self.len as u32) << ADDR_BITS),
         ]
     }
@@ -236,6 +248,7 @@ impl NetHeader {
         Self {
             dst: DnpAddr::new(w[0] & ADDR_MASK),
             vc: ((w[0] >> ADDR_BITS) & 0xFF) as u8,
+            lane: ((w[0] >> LANE_SHIFT) & 0x3F) as u8,
             src: DnpAddr::new(w[1] & ADDR_MASK),
             len: ((w[1] >> ADDR_BITS) & 0x3FFF) as u16,
         }
@@ -341,6 +354,17 @@ impl Packet {
         c.finish()
     }
 
+    /// Stamp the gateway-lane commitment (`0` = unstamped, `l+1` = lane
+    /// `l`) and refresh the footer CRC: the stamp lives in NET HDR word
+    /// 0, which the CRC covers, so it must be applied before the packet
+    /// hits the wire — the source DNP stamps between building the packet
+    /// and injecting its head flit.
+    pub fn set_lane(&mut self, lane: u8) {
+        debug_assert!(lane <= 0x3F, "lane stamp exceeds the 6-bit field");
+        self.net.lane = lane;
+        self.footer.crc = Self::compute_crc(&self.net, &self.rdma, &self.payload);
+    }
+
     /// Re-check integrity; returns true if the stored CRC matches.
     pub fn check_crc(&self) -> bool {
         Self::compute_crc(&self.net, &self.rdma, &self.payload) == self.footer.crc
@@ -362,6 +386,7 @@ mod tests {
             src: DnpAddr::new(0x2A),
             len: len as u16,
             vc: 0,
+            lane: 0,
         };
         let rdma = RdmaHeader {
             op: PacketOp::Put,
@@ -434,8 +459,24 @@ mod tests {
             src: DnpAddr::new(0x00001),
             len: 256,
             vc: 1,
+            lane: 0,
         };
         assert_eq!(NetHeader::unpack(&h.pack()), h);
+        let stamped = NetHeader { lane: 0x3F, ..h };
+        assert_eq!(NetHeader::unpack(&stamped.pack()), stamped);
+    }
+
+    #[test]
+    fn set_lane_restamps_crc() {
+        let mut p = sample_packet(8);
+        assert!(p.check_crc());
+        p.set_lane(2);
+        assert_eq!(p.net.lane, 2);
+        assert!(p.check_crc(), "the stamp must be CRC-covered and refreshed");
+        // A stamp smuggled in without the refresh is caught as corruption.
+        let mut q = sample_packet(8);
+        q.net.lane = 2;
+        assert!(!q.check_crc());
     }
 
     #[test]

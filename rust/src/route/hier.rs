@@ -35,6 +35,19 @@
 //!   every shard worker (no `Math.random`-style state); the assignment is
 //!   pinned by snapshot tests so recorded experiments cannot silently
 //!   reshuffle.
+//! * [`GatewayPolicy::Adaptive`] — UGAL-lite over the same lane window
+//!   as `DstHash`: the *static* lane function is the identical
+//!   destination hash (the minimal/default assignment, which is also
+//!   what the fault layer re-homes against), but the source DNP may
+//!   override it at injection by comparing live sender-side credit
+//!   occupancy across the candidate lanes of the packet's first routing
+//!   dimension and stamping the winner into the packet header
+//!   ([`crate::packet::NetHeader::lane`]). Transit routers honor the
+//!   stamp only while routing that first (stamped) dimension —
+//!   recomputed from `(src, dst, order)` at every hop, so every tile
+//!   agrees — and fall back to the hash for the remaining dimensions.
+//!   The stamp never changes mid-flight (it is CRC-covered header
+//!   state), so a flow cannot ping-pong between lanes.
 //!
 //! Because the lane is a pure function of the *destination* (never of
 //! the current chip), a packet transiting a ring arrives and departs on
@@ -42,7 +55,10 @@
 //! mesh hops. Under `DimPair` a transit packet arrives on the tile owning
 //! the cable it came in on (the `1-dir` side) and mesh-walks to the
 //! `dir`-side tile; that within-ring mesh segment is covered by the
-//! deadlock argument below.
+//! deadlock argument below. Under `Adaptive` the lane is a pure function
+//! of `(destination, stamp)`, and the stamp is constant for the packet's
+//! lifetime — so within one ring the packet still arrives and departs on
+//! one tile, exactly as under `DstHash`.
 //!
 //! # Deadlock freedom (per-channel dateline classes)
 //!
@@ -79,8 +95,11 @@
 //! is non-decreasing — transitions only go 0 → 1. Each lane's channel
 //! dependence graph is therefore acyclic. The remaining resource
 //! families keep their original order: parallel lanes are parallel
-//! rings (the lane is a pure function of `(dim, dst)`, constant while a
-//! ring is consumed, so no dependency crosses lanes); within-ring and
+//! rings (the lane is a pure function of `(dim, dst)` — or of
+//! `(dim, dst, stamp)` under `Adaptive`, with the stamp frozen at
+//! injection — constant while a ring is consumed, so no dependency
+//! crosses lanes; adaptivity only picks *which* dateline-disciplined
+//! ring a flow enters, never the path within one); within-ring and
 //! ring-to-ring mesh segments ride mesh VC 0 and XY routing is
 //! cycle-free, while rings of different dimensions are ordered by DOR
 //! priority (a packet leaves ring `d` only for ring `d' > d`); and the
@@ -165,6 +184,20 @@ pub enum GatewayPolicy {
     /// `lane = mix64((dim, dst chip, dst tile)) % lanes`, stable across
     /// runs and pinned by snapshot tests.
     DstHash,
+    /// UGAL-lite congestion-adaptive lane selection over the `DstHash`
+    /// window: the static lane function is the identical destination
+    /// hash (minimal/default), but the source DNP may stamp an
+    /// alternate lane into the packet header at injection when the
+    /// alternate's sender-side occupancy beats the hash lane's by more
+    /// than `threshold` flits (hysteresis: ties and near-ties stay
+    /// minimal, so uniform traffic reproduces `DstHash` exactly).
+    /// Adaptivity lives on VC 0 lane choice only; the escape path stays
+    /// deterministic DOR with dateline classes, unchanged.
+    Adaptive {
+        /// Minimum occupancy advantage (in flits) an alternate lane
+        /// must show over the hash lane before the source deviates.
+        threshold: u32,
+    },
 }
 
 /// A structurally invalid [`GatewayMap`], reported by
@@ -289,6 +322,25 @@ impl GatewayMap {
         }
     }
 
+    /// UGAL-lite adaptive map over the same lane window as
+    /// [`dst_hash`](Self::dst_hash), with the default deviation
+    /// threshold of 4 flits (one quarter of the hybrid preset's 16-deep
+    /// VC buffers — deep enough to ignore transient ripple, shallow
+    /// enough to dodge a standing hotspot queue).
+    pub fn adaptive(tile_dims: [u32; 2], lanes: usize) -> Self {
+        Self::adaptive_with(tile_dims, lanes, 4)
+    }
+
+    /// [`adaptive`](Self::adaptive) with an explicit deviation
+    /// threshold (in flits of sender-side occupancy advantage).
+    pub fn adaptive_with(tile_dims: [u32; 2], lanes: usize, threshold: u32) -> Self {
+        Self {
+            tile_dims,
+            policy: GatewayPolicy::Adaptive { threshold },
+            groups: Self::window_groups(tile_dims, lanes),
+        }
+    }
+
     /// An arbitrary (unvalidated) map: callers that accept external maps
     /// must run [`check`](Self::check) — the fault layer surfaces its
     /// errors as typed [`HierRecoveryError`]s, the topology builders
@@ -337,7 +389,7 @@ impl GatewayMap {
     /// its direction.
     pub fn owns(&self, dim: usize, lane: usize, dir: usize) -> bool {
         match self.policy {
-            GatewayPolicy::Fixed | GatewayPolicy::DstHash => true,
+            GatewayPolicy::Fixed | GatewayPolicy::DstHash | GatewayPolicy::Adaptive { .. } => true,
             GatewayPolicy::DimPair => dir % self.groups[dim].len() == lane,
         }
     }
@@ -365,7 +417,12 @@ impl GatewayMap {
         match self.policy {
             GatewayPolicy::Fixed => 0,
             GatewayPolicy::DimPair => dir % n,
-            GatewayPolicy::DstHash => {
+            // Adaptive's *static* lane is the identical destination hash:
+            // it is the minimal/default assignment for unstamped packets,
+            // and the anchor the fault layer re-homes against — which is
+            // why `recompute_hybrid_tables_with` preserves an installed
+            // adaptive map with no algorithm change.
+            GatewayPolicy::DstHash | GatewayPolicy::Adaptive { .. } => {
                 let key = ((dim as u64) << 40) | ((dst_chip as u64) << 16) | dst_tile as u64;
                 (mix64(key) % n as u64) as usize
             }
@@ -470,10 +527,14 @@ impl HierRouter {
         }
         Decision { out: OutSel::Local, vc: 0 }
     }
-}
 
-impl Router for HierRouter {
-    fn decide(&self, src: DnpAddr, dst: DnpAddr, _cur_vc: u8) -> Decision {
+    /// [`Router::decide`] with an explicit gateway-lane commitment stamp
+    /// (`0` = unstamped; `l+1` pins lane `l` on the packet's stamp
+    /// dimension — see [`stamp_dim`]). The normal path reads the stamp
+    /// from the packet header via [`Router::decide_pkt`]; the static
+    /// verifier calls this directly to certify every lane a stamp could
+    /// force ([`crate::verify::check_adaptive`]).
+    pub fn decide_stamped(&self, src: DnpAddr, dst: DnpAddr, _cur_vc: u8, stamp: u8) -> Decision {
         // Allocation-free decodes: this runs per head-flit hop (§Perf).
         let d = hybrid_split(dst);
         let dchip = [d[0], d[1], d[2]];
@@ -491,13 +552,32 @@ impl Router for HierRouter {
         let dchip_idx = (d[0] + d[1] * cd[0] + d[2] * cd[0] * cd[1]) as usize;
         let td = self.gmap.tile_dims();
         let dtile_idx = (d[3] + d[4] * td[0]) as usize;
+        // The stamp applies only on the packet's first routing dimension
+        // (recomputed here from (src, dst, order), so every transit tile
+        // agrees); later dimensions always use the static hash lane.
+        let sd = if stamp != 0 && matches!(self.gmap.policy(), GatewayPolicy::Adaptive { .. }) {
+            let s = hybrid_split(src);
+            stamp_dim(self.order, [s[0], s[1], s[2]], dchip)
+        } else {
+            None
+        };
         // Chip coordinates first, in priority order (Sec. III-A).
         for &dim in &self.order.0 {
             let Some(dir) = self.ring_step(dim, dchip[dim]) else {
                 continue;
             };
             let di = usize::from(dir == Dir::Minus);
-            let gw = self.gmap.gateway(dim, di, dchip_idx, dtile_idx);
+            let mut lane = self.gmap.lane(dim, di, dchip_idx, dtile_idx);
+            if sd == Some(dim) {
+                let l = (stamp - 1) as usize;
+                // A stamp naming a lane this direction doesn't wire falls
+                // back to the hash (sources never emit one, but a stamp
+                // is untrusted header state as far as transit goes).
+                if l < self.gmap.group(dim).len() && self.gmap.owns(dim, l, di) {
+                    lane = l;
+                }
+            }
+            let gw = self.gmap.group(dim)[lane];
             if gw != self.my_tile {
                 // Walk to the gateway carrying this flow's cable (VC 0).
                 return self.mesh_toward(gw, 0);
@@ -512,6 +592,30 @@ impl Router for HierRouter {
             return Decision { out: OutSel::Port(p), vc };
         }
         unreachable!("all chip coordinates equal was handled above")
+    }
+}
+
+/// The one chip dimension an adaptive lane stamp applies to: the first
+/// dimension in `order` where the source and destination chips differ.
+/// While that ring is being consumed it is also the first dimension
+/// where the *current* chip differs from the destination (earlier
+/// dimensions were already equal at the source and never change), and
+/// once it is consumed the first-differing dimension moves strictly
+/// later in the order — so every router along the path, knowing only
+/// `(src, dst, order)`, agrees on exactly which hops the stamp governs.
+pub fn stamp_dim(order: RouteOrder, src_chip: [u32; 3], dst_chip: [u32; 3]) -> Option<usize> {
+    order.0.iter().copied().find(|&d| src_chip[d] != dst_chip[d])
+}
+
+impl Router for HierRouter {
+    fn decide(&self, src: DnpAddr, dst: DnpAddr, cur_vc: u8) -> Decision {
+        self.decide_stamped(src, dst, cur_vc, 0)
+    }
+
+    /// Honor the gateway-lane commitment stamp carried in the header
+    /// (no-op for unstamped packets and non-adaptive maps).
+    fn decide_pkt(&self, hdr: &crate::packet::NetHeader, cur_vc: u8) -> Decision {
+        self.decide_stamped(hdr.src, hdr.dst, cur_vc, hdr.lane)
     }
 
     fn min_vcs(&self) -> usize {
@@ -874,6 +978,96 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn adaptive_unstamped_decisions_match_dst_hash() {
+        // Stamp 0 (and `decide`, which always passes stamp 0) must be
+        // bit-identical to DstHash everywhere: the adaptive policy's
+        // static lane is the same destination hash.
+        let a = GatewayMap::adaptive(TILES, 2);
+        let h = GatewayMap::dst_hash(TILES, 2);
+        for (chip, tile) in [([0, 0, 0], [0, 0]), ([2, 1, 0], [1, 1]), ([3, 0, 0], [0, 1])] {
+            let ra = router_with(a.clone(), chip, tile);
+            let rh = router_with(h.clone(), chip, tile);
+            let src = fmt().encode(&[chip[0], chip[1], chip[2], tile[0], tile[1]]);
+            for dc in 0..8u32 {
+                let c = [dc % 4, dc / 4, 0];
+                for t in 0..4u32 {
+                    let dst = fmt().encode(&[c[0], c[1], c[2], t % 2, t / 2]);
+                    assert_eq!(
+                        ra.decide(src, dst, 0),
+                        rh.decide(src, dst, 0),
+                        "chip {chip:?} tile {tile:?} -> chip {c:?} tile {t}"
+                    );
+                    assert_eq!(ra.decide(src, dst, 0), ra.decide_stamped(src, dst, 0, 0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_stamp_forces_the_lane_on_the_stamp_dim_only() {
+        let m = GatewayMap::adaptive(TILES, 2);
+        // Flow chip [0,0,0] → [1,1,0]: stamp dim is 0 (first differing in
+        // XYZ). At the source, stamping lane l must route toward the
+        // dim-0 gateway group's member l.
+        let src = fmt().encode(&[0, 0, 0, 0, 0]);
+        let dst = fmt().encode(&[1, 1, 0, 1, 1]);
+        for l in 0..2u8 {
+            let gw = m.group(0)[l as usize];
+            let r = router_with(m.clone(), [0, 0, 0], gw);
+            let d = r.decide_stamped(
+                fmt().encode(&[0, 0, 0, gw[0], gw[1]]),
+                dst,
+                0,
+                l + 1,
+            );
+            // Standing on the stamped lane's gateway, the decision is the
+            // off-chip port — never a mesh walk to the *other* lane.
+            assert!(
+                matches!(d.out, OutSel::Port(p) if p >= 4),
+                "stamp {} must exit via gateway {gw:?}, got {:?}",
+                l + 1,
+                d.out
+            );
+        }
+        // Once the dim-0 ring is consumed (router inside chip [1,0,0]),
+        // the stamp no longer applies: dim-1 hops use the hash lane, and
+        // stamped vs unstamped decisions coincide at every tile.
+        for t in 0..4u32 {
+            let tile = [t % 2, t / 2];
+            let r = router_with(m.clone(), [1, 0, 0], tile);
+            for stamp in 0..=2u8 {
+                assert_eq!(
+                    r.decide_stamped(src, dst, 0, stamp),
+                    r.decide(src, dst, 0),
+                    "tile {tile:?} stamp {stamp}: dim-1 hop must ignore the stamp"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_invalid_stamp_falls_back_to_the_hash_lane() {
+        let m = GatewayMap::adaptive(TILES, 2);
+        let r = router_with(m.clone(), [0, 0, 0], [0, 0]);
+        let src = fmt().encode(&[0, 0, 0, 0, 0]);
+        let dst = fmt().encode(&[1, 0, 0, 1, 1]);
+        // Stamp naming a lane past the group (lane 5 of a 2-lane group):
+        // transit treats it as untrusted and uses the hash.
+        assert_eq!(r.decide_stamped(src, dst, 0, 6), r.decide(src, dst, 0));
+    }
+
+    #[test]
+    fn stamp_dim_is_first_differing_in_order() {
+        let o = RouteOrder::XYZ;
+        assert_eq!(stamp_dim(o, [0, 0, 0], [0, 0, 0]), None);
+        assert_eq!(stamp_dim(o, [0, 1, 1], [2, 1, 1]), Some(0));
+        assert_eq!(stamp_dim(o, [1, 0, 1], [1, 2, 0]), Some(1));
+        assert_eq!(stamp_dim(o, [1, 1, 0], [1, 1, 2]), Some(2));
+        // Consuming the first ring moves the stamp dim strictly later.
+        assert_eq!(stamp_dim(o, [2, 0, 1], [2, 2, 0]), Some(1));
     }
 
     #[test]

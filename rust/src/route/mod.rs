@@ -16,7 +16,9 @@
 //!   system (chip-torus DOR over off-chip ports, then mesh XY inside the
 //!   destination chip — paper Fig. 2), parameterized by the pluggable
 //!   [`hier::GatewayMap`] gateway policy (`Fixed` / `DimPair` /
-//!   `DstHash` — which tile a cross-chip flow exits the chip through).
+//!   `DstHash` / `Adaptive` — which tile a cross-chip flow exits the
+//!   chip through; `Adaptive` honors the UGAL-lite lane stamp the
+//!   source DNP writes into the packet header at injection).
 //! * [`table::TableRouter`] — fully general table-driven routing (used by
 //!   the fault-tolerance extension to install recomputed routes).
 
@@ -64,6 +66,16 @@ pub trait Router: Send + Sync {
     /// classes ([`hier::ring_class_vc`]), functions of the channel and
     /// destination coordinate alone.
     fn decide(&self, src: DnpAddr, dst: DnpAddr, cur_vc: u8) -> Decision;
+
+    /// Decide from the full network header. The default forwards to
+    /// [`Router::decide`]; only routers that honor per-packet state in
+    /// the header override it — [`hier::HierRouter`] reads the
+    /// gateway-lane commitment stamp ([`crate::packet::NetHeader::lane`])
+    /// so a source's adaptive lane choice sticks for the packet's whole
+    /// lifetime. Still deterministic: the header is fixed at injection.
+    fn decide_pkt(&self, hdr: &crate::packet::NetHeader, cur_vc: u8) -> Decision {
+        self.decide(hdr.src, hdr.dst, cur_vc)
+    }
 
     /// Number of VCs this routing scheme requires for deadlock freedom.
     fn min_vcs(&self) -> usize {

@@ -201,6 +201,21 @@ impl Channel {
         self.rx_bufs.len()
     }
 
+    /// Sender-visible occupancy: flits sent but not yet credited back,
+    /// summed over VCs (per-VC depth minus the live credit counter).
+    /// This is the congestion signal adaptive injection reads
+    /// ([`GatewayPolicy::Adaptive`](crate::route::hier::GatewayPolicy)):
+    /// it counts in-flight flits *and* flits parked in the remote rx
+    /// buffers, ramps exactly when the far side stops draining, and —
+    /// unlike `rx_total`/`peak_rx_occupancy` — lives entirely on the tx
+    /// half, so a sharded source reads it without touching another
+    /// shard's state (credits are restored at bit-exact sequential
+    /// cycles in every execution mode, batched returns included).
+    #[inline]
+    pub fn outstanding_flits(&self) -> usize {
+        self.credits.iter().map(|&c| self.vc_depth - c).sum()
+    }
+
     /// Can the sender push a flit on `vc` this cycle?
     #[inline]
     pub fn can_send(&self, vc: u8, now: u64) -> bool {

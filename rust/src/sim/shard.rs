@@ -146,6 +146,17 @@
 //!   channels have combinational credit returns — both endpoints always
 //!   share a shard.)
 //!
+//! Congestion-adaptive injection
+//! ([`GatewayPolicy::Adaptive`](crate::route::hier::GatewayPolicy::Adaptive))
+//! preserves all of this *by construction*: the UGAL-lite chooser
+//! ([`crate::dnp::AdaptiveInjector`]) only ever samples the credit
+//! occupancy of its own chip's off-chip **tx halves** — state that lives
+//! in the sampling shard and is updated at exact sequential cycles by
+//! the boundary credit protocol — so the lane decision, its header
+//! stamp and every downstream route are identical across dense, event
+//! and sharded runs (the adaptive legs of the equivalence suite pin
+//! this).
+//!
 //! The one sanctioned divergence: *where the clocks park after a
 //! drained run*. Barrier mode parks at the aligned window edge that
 //! detected the drain; link-clock mode normalizes every shard forward

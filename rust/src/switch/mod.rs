@@ -276,7 +276,7 @@ impl SwitchFabric {
                 if let Some(f) = Self::peek_input(input, chans, vc) {
                     if f.kind == FlitKind::Head {
                         let hdr = &store.get(f.pkt).net;
-                        let Decision { out, vc: out_vc } = router.decide(hdr.src, hdr.dst, vc);
+                        let Decision { out, vc: out_vc } = router.decide_pkt(hdr, vc);
                         let out = match (out, redirect) {
                             (OutSel::Local, Some(p)) => OutSel::Port(p),
                             (o, _) => o,
@@ -515,6 +515,7 @@ mod tests {
                 src: DnpAddr::new(1),
                 len: len as u16,
                 vc: 0,
+                lane: 0,
             },
             RdmaHeader {
                 op: PacketOp::Put,

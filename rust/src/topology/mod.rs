@@ -34,15 +34,15 @@
 //! `docs/ARCHITECTURE.md` for the layer map.
 
 use crate::config::{DnpConfig, RouteOrder};
-use crate::dnp::DnpNode;
+use crate::dnp::{AdaptiveInjector, DnpNode};
 use crate::fault::hier::HierLinkFault;
 use crate::noc::{NocRouterNode, NOC_PORT_ACROSS, NOC_PORT_CCW, NOC_PORT_CW};
 use crate::packet::{AddrFormat, DnpAddr};
 use crate::phy::{dni_channel, noc_channel, offchip_channel, onchip_channel};
 use crate::rdma::EVENT_WORDS;
 use crate::route::{
-    mesh::mesh_port, spidergon_neighbor, Decision, GatewayMap, HierRouter, MeshRouter, OutSel,
-    Router, TableRouter, TorusRouter,
+    mesh::mesh_port, spidergon_neighbor, Decision, GatewayMap, GatewayPolicy, HierRouter,
+    MeshRouter, OutSel, Router, TableRouter, TorusRouter,
 };
 use crate::sim::channel::{Channel, ChannelId};
 use crate::sim::Net;
@@ -61,6 +61,29 @@ fn cq_base(cfg: &DnpConfig, mem_words: usize) -> u32 {
 fn dangling(net: &mut Net, cfg: &DnpConfig) -> ChannelId {
     net.chans
         .add(Channel::new(1, 1, cfg.vcs.max(2), cfg.vc_buf_depth))
+}
+
+/// `lane_tx[dim][dir][lane]` table for one chip's
+/// [`AdaptiveInjector`]: the chip's off-chip TX channel carrying cable
+/// `(dim, dir, lane)`, read out of the builder's `off_out` rows via
+/// `row(tile)` (`None` where a dimension is flat and has no cables).
+fn adaptive_lane_tx(
+    gmap: &GatewayMap,
+    mut row: impl FnMut(usize) -> [Option<ChannelId>; 6],
+) -> [[Vec<Option<ChannelId>>; 2]; 3] {
+    let tile_dims = gmap.tile_dims();
+    let tile_idx = |t: [u32; 2]| -> usize { (t[0] + t[1] * tile_dims[0]) as usize };
+    let mut out: [[Vec<Option<ChannelId>>; 2]; 3] = Default::default();
+    for dim in 0..3 {
+        for dir in 0..2 {
+            out[dim][dir] = gmap
+                .group(dim)
+                .iter()
+                .map(|&g| row(tile_idx(g))[dim * 2 + dir])
+                .collect();
+        }
+    }
+    out
 }
 
 /// Build a full 3D torus of DNPs over off-chip SerDes links.
@@ -794,6 +817,19 @@ pub fn hybrid_chip_subnet_with(
                 off_ports,
             )) as Box<dyn Router>
         }));
+        // UGAL-lite lane chooser: shard-local by construction — it only
+        // ever samples this chip's own TX halves, all of which live in
+        // this subnet, so sharded runs stay bit-exact (see
+        // `crate::sim::shard`).
+        if matches!(gmap.policy(), GatewayPolicy::Adaptive { .. }) {
+            node.set_adaptive_injector(AdaptiveInjector::new(
+                agmap.clone(),
+                chip_dims,
+                cfg.route_order,
+                chip,
+                adaptive_lane_tx(gmap, |ti| off_out[ti]),
+            ));
+        }
         net.add_dnp(node);
     }
     (net, ChipBoundary { cables })
@@ -946,6 +982,16 @@ pub fn hybrid_torus_mesh_wired_with(
                     off_ports,
                 )) as Box<dyn Router>
             }));
+            // UGAL-lite lane chooser over this chip's own TX halves.
+            if matches!(gmap.policy(), GatewayPolicy::Adaptive { .. }) {
+                node.set_adaptive_injector(AdaptiveInjector::new(
+                    agmap.clone(),
+                    chip_dims,
+                    cfg.route_order,
+                    cc,
+                    adaptive_lane_tx(gmap, |ti| off_out[chip * ntiles + ti]),
+                ));
+            }
             net.add_dnp(node);
         }
     }

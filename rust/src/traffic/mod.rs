@@ -10,8 +10,10 @@
 //! hierarchical twins for the hybrid multi-chip system
 //! ([`hybrid_uniform_random`], [`hybrid_halo_exchange`],
 //! [`hybrid_all_pairs`], [`hybrid_chip_all_pairs`] — the chip-granular
-//! form that scales to 4x4x4+ — and [`hybrid_hotspot`], the
-//! gateway-congestion stress). [`retrying_plan`] layers CQ-driven
+//! form that scales to 4x4x4+ — [`hybrid_hotspot`], the
+//! gateway-congestion stress, and [`hybrid_asymmetric_hotspot`], its
+//! hash-adversarial skew that the UGAL-lite adaptive policy defuses).
+//! [`retrying_plan`] layers CQ-driven
 //! end-to-end retry on top of any plan and reports failures as typed
 //! [`RetryError`]s.
 //!
@@ -786,6 +788,89 @@ pub fn hybrid_hotspot(
     plan
 }
 
+/// Asymmetric hotspot: the adversarial pattern for destination-hashed
+/// gateway lane selection, and the workload the UGAL-lite
+/// [`Adaptive`](crate::route::hier::GatewayPolicy::Adaptive) policy is
+/// scored on.
+///
+/// All tiles of every chip that differs from `victim_chip` *only* along
+/// its first multi-chip dimension (so every flow's stamp dimension — see
+/// [`stamp_dim`](crate::route::hier::stamp_dim) — is that ring) send
+/// `count` PUTs each. The destinations are deliberately skewed: of the
+/// victim chip's tiles, only those whose static destination hash
+/// ([`GatewayMap::lane`](crate::route::hier::GatewayMap::lane)) maps to
+/// the *majority* lane are targeted (round-robin per sender). Under
+/// `DstHash` every flow therefore funnels onto the same cable of the
+/// ring while its siblings idle; an adaptive source sees the imbalance
+/// in its TX occupancy and spreads streams across lanes, which is
+/// exactly what `rust/tests/gateway_it.rs` asserts (lower peak channel
+/// load *and* faster drain).
+///
+/// Conventions match [`hybrid_hotspot`]: issue cycles staggered `i*4`,
+/// tags `slot*count + i`, destination windows at [`rx_addr`]`(slot)`.
+pub fn hybrid_asymmetric_hotspot(
+    chip_dims: [u32; 3],
+    gmap: &crate::route::hier::GatewayMap,
+    victim_chip: [u32; 3],
+    count: usize,
+    len: u32,
+) -> Vec<Planned> {
+    let tile_dims = gmap.tile_dims();
+    let fmt = AddrFormat::Hybrid { chip_dims, tile_dims };
+    let tiles = (tile_dims[0] * tile_dims[1]) as usize;
+    let dim = (0..3)
+        .find(|&d| chip_dims[d] >= 2)
+        .expect("asymmetric hotspot needs at least one multi-chip dimension");
+    let vchip_idx = (victim_chip[0]
+        + victim_chip[1] * chip_dims[0]
+        + victim_chip[2] * chip_dims[0] * chip_dims[1]) as usize;
+
+    // Victim tiles sharing the most-popular static hash lane (the hash
+    // ignores direction for DstHash/Adaptive, so dir 0 stands for both).
+    let nlanes = gmap.group(dim).len();
+    let mut per_lane: Vec<Vec<usize>> = vec![Vec::new(); nlanes];
+    for t in 0..tiles {
+        per_lane[gmap.lane(dim, 0, vchip_idx, t)].push(t);
+    }
+    let funnel: &[usize] = per_lane
+        .iter()
+        .max_by_key(|v| v.len())
+        .expect("at least one lane")
+        .as_slice();
+
+    let mut plan = Vec::new();
+    let k = chip_dims[dim];
+    let mut sender = 0usize;
+    for step in 1..k {
+        let mut sc = victim_chip;
+        sc[dim] = (victim_chip[dim] + step) % k;
+        for t in 0..tiles {
+            let slot = hybrid_node_index(chip_dims, tile_dims, sc, [
+                t as u32 % tile_dims[0],
+                t as u32 / tile_dims[0],
+            ]);
+            let vt = funnel[sender % funnel.len()];
+            sender += 1;
+            let dst = fmt.encode(&[
+                victim_chip[0],
+                victim_chip[1],
+                victim_chip[2],
+                vt as u32 % tile_dims[0],
+                vt as u32 / tile_dims[0],
+            ]);
+            for i in 0..count {
+                plan.push(Planned {
+                    node: slot,
+                    at: (i as u64) * 4,
+                    cmd: Command::put(TX_BASE, dst, rx_addr(slot), len)
+                        .with_tag((slot * count + i) as u32),
+                });
+            }
+        }
+    }
+    plan
+}
+
 /// Hotspot traffic: every node hammers one victim.
 pub fn hotspot(
     nodes: &[(usize, DnpAddr)],
@@ -1042,6 +1127,32 @@ mod tests {
             assert_eq!(p.cmd.dst_addr, rx_addr(p.node), "lands in the sender's window");
         }
         assert_eq!(per_tile, [52; 4], "per-victim-tile totals must be balanced");
+    }
+
+    #[test]
+    fn hybrid_asymmetric_hotspot_funnels_one_hash_lane() {
+        use crate::route::hier::GatewayMap;
+        let chip_dims = [4, 1, 1];
+        let gmap = GatewayMap::dst_hash([2, 2], 2);
+        let plan = hybrid_asymmetric_hotspot(chip_dims, &gmap, [0, 0, 0], 2, 8);
+        // 3 ring chips × 4 tiles × 2 PUTs, all aimed at the victim chip.
+        assert_eq!(plan.len(), 3 * 4 * 2);
+        let fmt = AddrFormat::Hybrid { chip_dims, tile_dims: [2, 2] };
+        let vchip_idx = 0usize;
+        // Every destination tile must hash to one single lane on dim 0.
+        let mut lanes = std::collections::BTreeSet::new();
+        for p in &plan {
+            let d = fmt.decode(p.cmd.dst_dnp);
+            assert_eq!([d[0], d[1], d[2]], [0, 0, 0], "all traffic hits the victim chip");
+            let t = (d[3] + d[4] * 2) as usize;
+            lanes.insert(gmap.lane(0, 0, vchip_idx, t));
+            // Senders differ from the victim only along dim 0.
+            let s = hybrid_coords(chip_dims, [2, 2], p.node);
+            assert_ne!(s[0], 0, "victim chip stays quiet");
+            assert_eq!([s[1], s[2]], [0, 0], "senders sit on the victim's dim-0 ring");
+            assert_eq!(p.cmd.dst_addr, rx_addr(p.node), "lands in the sender's window");
+        }
+        assert_eq!(lanes.len(), 1, "destination skew must funnel one hash lane");
     }
 
     #[test]

@@ -69,7 +69,13 @@
 //! ascend (above). On-chip, each chip's XY mesh walk is
 //! dimension-ordered, and `DimPair`'s ± transit segments ride opposite
 //! directed mesh channels. [`check_healthy`] turns that argument into a
-//! regression test over every shipped configuration.
+//! regression test over every shipped configuration. Under the
+//! [`Adaptive`](crate::route::hier::GatewayPolicy::Adaptive) policy a
+//! source-chosen lane stamp widens the route set — the stamp only picks
+//! *which* dateline-disciplined ring a flow enters, never the path
+//! within one — and [`check_adaptive`] certifies it by exhaustion: one
+//! full walk per forced stamp plus a cycle search over the union of all
+//! per-stamp CDGs.
 //!
 //! Results land in a typed [`FabricReport`] (machine-readable findings
 //! with severity + location, `Display` for humans), surfaced three
@@ -732,6 +738,89 @@ pub fn check_healthy(chip_dims: [u32; 3], gmap: &GatewayMap, cfg: &DnpConfig) ->
         })
         .collect();
     check_fabric(&spec, &|u, src, dst, vc| Some(routers[u].decide(src, dst, vc)))
+}
+
+/// Result of [`check_adaptive`]: one [`FabricReport`] per forced lane
+/// stamp, plus the cycle check over the *union* CDG of all stamps.
+#[derive(Debug, Clone, Default)]
+pub struct AdaptiveReport {
+    /// Per-stamp reports, indexed by stamp value (`stamps[0]` is the
+    /// unstamped/DstHash-equivalent walk, `stamps[l + 1]` forces lane
+    /// `l` on every packet's stamp dimension).
+    pub stamps: Vec<FabricReport>,
+    /// A resource on a cycle of the cross-stamp union CDG, if one
+    /// exists. Any concrete traffic mix stamps each packet with exactly
+    /// one value, so every packet's dependence edges lie inside one
+    /// stamp's (acyclic) walk — but packets with *different* stamps
+    /// coexist, so certification additionally requires the union of all
+    /// per-stamp CDGs to be acyclic.
+    pub union_cycle: Option<Chan>,
+}
+
+impl AdaptiveReport {
+    /// Every per-stamp walk certifies and the union CDG is acyclic.
+    pub fn is_certified(&self) -> bool {
+        self.union_cycle.is_none() && self.stamps.iter().all(FabricReport::is_certified)
+    }
+
+    /// Total errors across the per-stamp reports.
+    pub fn errors(&self) -> usize {
+        self.stamps.iter().map(|r| r.errors).sum()
+    }
+}
+
+/// Certify a healthy [`Adaptive`](crate::route::hier::GatewayPolicy::Adaptive)
+/// fabric. The UGAL-lite source may stamp any lane of the packet's stamp
+/// dimension, so the route set is wider than one deterministic walk:
+/// this runs [`check_fabric`] once per possible stamp (`0` = unstamped,
+/// then `l + 1` for every lane of the widest gateway group, forced on
+/// every pair via [`HierRouter::decide_stamped`]), requires each walk to
+/// certify on its own, and finally runs the cycle search over the union
+/// of all per-stamp CDGs — the condition that holds for every concurrent
+/// mix of stamped packets. Also sound (if redundant) for non-adaptive
+/// maps, where stamps are ignored and all walks coincide.
+pub fn check_adaptive(chip_dims: [u32; 3], gmap: &GatewayMap, cfg: &DnpConfig) -> AdaptiveReport {
+    let spec = FabricSpec { chip_dims, gmap, cfg, faults: &[], minimal_routes: true };
+    if !structurally_sound(&spec) {
+        return AdaptiveReport {
+            stamps: vec![check_fabric(&spec, &|_, _, _, _| None)],
+            union_cycle: None,
+        };
+    }
+    let tile_dims = gmap.tile_dims();
+    let ntiles = (tile_dims[0] * tile_dims[1]) as usize;
+    let addrs = hybrid_addrs(chip_dims, tile_dims);
+    let (mesh_port_of, off_port_of) = hybrid_port_maps(chip_dims, gmap, cfg);
+    let shared = Arc::new(gmap.clone());
+    let routers: Vec<HierRouter> = addrs
+        .iter()
+        .enumerate()
+        .map(|(i, &addr)| {
+            HierRouter::new_with(
+                addr,
+                chip_dims,
+                Arc::clone(&shared),
+                cfg.route_order,
+                mesh_port_of[i % ntiles],
+                off_port_of[i % ntiles],
+            )
+        })
+        .collect();
+    let max_lanes = (0..3).map(|d| gmap.group(d).len()).max().unwrap_or(1);
+    let mut stamps = Vec::with_capacity(max_lanes + 1);
+    let mut union_chans: BTreeSet<Chan> = BTreeSet::new();
+    let mut union_edges: BTreeSet<(Chan, Chan)> = BTreeSet::new();
+    for stamp in 0..=max_lanes {
+        let stamp = u8::try_from(stamp).expect("gateway groups fit the 6-bit stamp");
+        let rep = check_fabric(&spec, &|u, src, dst, vc| {
+            Some(routers[u].decide_stamped(src, dst, vc, stamp))
+        });
+        union_chans.extend(rep.chans.iter().copied());
+        union_edges.extend(rep.edges.iter().copied());
+        stamps.push(rep);
+    }
+    let union_cycle = find_cycle(&union_chans, &union_edges);
+    AdaptiveReport { stamps, union_cycle }
 }
 
 /// Certify a recovered [`TableRouter`] set against the fault set it was

@@ -198,6 +198,21 @@ fn dimpair_4x4x1_soak_until_disconnection() {
 }
 
 #[test]
+fn adaptive_3x3x3_bounded_soak() {
+    // ISSUE 9: `Adaptive` maps ride the same fault campaign with zero
+    // recovery-layer changes — the map's static `lane()` is the
+    // identical destination hash `DstHash` uses, so
+    // `recompute_hybrid_tables_with` re-homes dead lanes' flows exactly
+    // as it would for a hash map, and the recovered `TableRouter`s
+    // ignore in-flight lane stamps (tables avoid dead wires by
+    // construction; honoring a stale stamp could steer onto one). Every
+    // accepted fault set re-certifies through `check_tables` above.
+    let gmap = GatewayMap::adaptive(TILES, 2);
+    let r = soak("adaptive 3x3x3", [3, 3, 3], &gmap, Some(20));
+    assert!(r.accepted >= 10, "the soak must survive a real multi-fault load, got {}", r.accepted);
+}
+
+#[test]
 fn dimpair_4x4x4_bounded_soak() {
     // Full-scale DimPair leg, bounded: running to disconnection at
     // 4x4x4 would dominate the suite's runtime, and the k >= 4 escape

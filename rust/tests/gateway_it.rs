@@ -8,10 +8,16 @@
 //! Also: `DimPair` and `DstHash` nets deliver full all-pairs traffic,
 //! and a dead lane cable detours only its own flows while staying
 //! silent forever.
+//!
+//! The UGAL-lite acceptance criteria (ROADMAP §congestion-adaptive) live
+//! here too: on the hash-adversarial `hybrid_asymmetric_hotspot`,
+//! `Adaptive` must beat `DstHash` on BOTH the peak gateway channel load
+//! and the drain time, and on lane-balanced traffic it must never be
+//! worse than `DstHash` beyond a small ε.
 
 use dnp::config::DnpConfig;
 use dnp::fault::{self, HierLinkFault};
-use dnp::metrics::gateway_load_report;
+use dnp::metrics::{adaptive_decision_report, gateway_load_report};
 use dnp::route::hier::GatewayMap;
 use dnp::{topology, traffic};
 
@@ -102,6 +108,93 @@ fn dim_pair_all_pairs_delivers_and_uses_both_tiles() {
         }
         assert_ne!(lanes[0].tile, lanes[1].tile);
     }
+}
+
+/// Run the hash-adversarial asymmetric hotspot (4-chip X ring, 2x2
+/// tiles, victim chip [0,0,0]) under `gmap` and return (peak gateway
+/// channel words, delivered, drain cycles, alternate decisions).
+fn asym_run(gmap: &GatewayMap) -> (u64, u64, u64, u64) {
+    const CHIPS: [u32; 3] = [4, 1, 1];
+    let cfg = DnpConfig::hybrid();
+    let (mut net, wiring) = topology::hybrid_torus_mesh_wired_with(CHIPS, gmap, &cfg, 1 << 17);
+    net.traces.enabled = false;
+    let n = net.nodes.len();
+    // One wide RX window per tile (see `hotspot_run`).
+    let window = n as u32 * traffic::RX_WINDOW;
+    for i in 0..n {
+        net.dnp_mut(i)
+            .register_buffer(traffic::rx_addr(0), window, 0)
+            .expect("LUT capacity");
+    }
+    // The skew is computed against the *static* hash, which Adaptive and
+    // DstHash share — both runs see the identical plan.
+    let plan = traffic::hybrid_asymmetric_hotspot(CHIPS, gmap, [0, 0, 0], 4, 32);
+    let total = plan.len() as u64;
+    let mut feeder = traffic::Feeder::new(plan);
+    let drain = traffic::run_plan(&mut net, &mut feeder, 10_000_000)
+        .expect("asymmetric hotspot drains");
+    assert_eq!(net.traces.delivered, total, "every PUT must deliver");
+    assert_eq!(net.traces.lut_misses, 0);
+    let report = gateway_load_report(&net, &wiring);
+    let adecisions = adaptive_decision_report(&net).alternate;
+    (report.peak_channel_words(), net.traces.delivered, drain, adecisions)
+}
+
+/// ROADMAP acceptance: on the asymmetric hotspot, UGAL-lite beats the
+/// static hash on the busiest-cable load AND on drain time, because the
+/// source sees the funnel in its own TX occupancy and re-lanes streams.
+#[test]
+fn asymmetric_hotspot_adaptive_beats_dsthash_on_peak_and_drain() {
+    let (hash_peak, hash_delivered, hash_drain, hash_alt) =
+        asym_run(&GatewayMap::dst_hash([2, 2], 2));
+    let (ad_peak, ad_delivered, ad_drain, ad_alt) = asym_run(&GatewayMap::adaptive([2, 2], 2));
+    assert_eq!(hash_delivered, ad_delivered, "same workload, same deliveries");
+    assert_eq!(hash_alt, 0, "DstHash has no adaptive decision point");
+    assert!(ad_alt > 0, "the funnel must trigger alternate-lane picks");
+    assert!(
+        ad_peak < hash_peak,
+        "Adaptive peak {ad_peak} must beat the DstHash funnel peak {hash_peak}"
+    );
+    assert!(
+        ad_drain < hash_drain,
+        "Adaptive drain {ad_drain} must beat the DstHash drain {hash_drain}"
+    );
+}
+
+/// The hysteresis guarantee: on lane-balanced all-pairs traffic the
+/// adaptive fabric is never worse than `DstHash` beyond ε = 5% (ties and
+/// near-ties stay on the hash lane).
+#[test]
+fn balanced_all_pairs_adaptive_never_worse_than_dsthash() {
+    const CHIPS: [u32; 3] = [2, 2, 2];
+    const TILES: [u32; 2] = [2, 2];
+    let run = |gmap: &GatewayMap| -> (u64, u64, u64) {
+        let cfg = DnpConfig::hybrid();
+        let (mut net, wiring) =
+            topology::hybrid_torus_mesh_wired_with(CHIPS, gmap, &cfg, 1 << 16);
+        let n = net.nodes.len();
+        let slots: Vec<usize> = (0..n).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        let plan = traffic::hybrid_all_pairs(CHIPS, TILES, 16);
+        let total = plan.len() as u64;
+        let mut feeder = traffic::Feeder::new(plan);
+        let drain = traffic::run_plan(&mut net, &mut feeder, 10_000_000)
+            .expect("all-pairs drains");
+        assert_eq!(net.traces.delivered, total);
+        let report = gateway_load_report(&net, &wiring);
+        (report.peak_channel_words(), drain, net.traces.delivered)
+    };
+    let (hash_peak, hash_drain, hash_delivered) = run(&GatewayMap::dst_hash(TILES, 2));
+    let (ad_peak, ad_drain, ad_delivered) = run(&GatewayMap::adaptive(TILES, 2));
+    assert_eq!(hash_delivered, ad_delivered);
+    assert!(
+        ad_peak * 20 <= hash_peak * 21,
+        "Adaptive peak {ad_peak} must stay within 5% of DstHash peak {hash_peak}"
+    );
+    assert!(
+        ad_drain * 20 <= hash_drain * 21,
+        "Adaptive drain {ad_drain} must stay within 5% of DstHash drain {hash_drain}"
+    );
 }
 
 #[test]

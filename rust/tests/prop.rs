@@ -4,9 +4,12 @@
 //! failures carry the case index so they replay deterministically.
 
 use dnp::config::{DnpConfig, RouteOrder};
+use dnp::fault::{recompute_hybrid_tables_with, HierLinkFault};
+use dnp::metrics::{adaptive_decision_report, sharded_totals};
 use dnp::packet::{AddrFormat, DnpAddr, Fragmenter, MAX_PAYLOAD_WORDS};
 use dnp::rdma::Command;
-use dnp::route::{OutSel, Router, TorusRouter};
+use dnp::route::{GatewayMap, OutSel, Router, TorusRouter};
+use dnp::sim::ShardedNet;
 use dnp::util::SplitMix64;
 use dnp::{topology, traffic, Net};
 
@@ -194,6 +197,144 @@ fn prop_put_data_integrity() {
             &data[..],
             "case {case}: s={s} d={d} len={len}"
         );
+    }
+}
+
+/// Property (ISSUE 9): random adaptive hybrid systems with random PUT
+/// plans and one random killed SerDes lane — UGAL-lite never loses a
+/// packet (exact delivery conservation through recovery tables), and the
+/// dead wires carry exactly zero words: a stale lane stamp can never
+/// steer traffic onto a killed cable, because recovered `TableRouter`s
+/// ignore stamps by construction.
+#[test]
+fn prop_adaptive_random_faulted_traffic_no_loss_dead_wires_silent() {
+    let mut rng = SplitMix64::new(0xADA9);
+    let tiles: [u32; 2] = [2, 2];
+    let chips_pool = [[2u32, 2, 1], [2, 2, 2], [3, 2, 1], [4, 1, 1]];
+    let cfg = DnpConfig::hybrid();
+    let mut recovered = 0usize;
+    for case in 0..8 {
+        let chips = *rng.pick(&chips_pool);
+        let lanes = rng.range(2, 4) as usize; // <= the 4 gateway tiles
+        let threshold = rng.range(0, 9) as u32;
+        let gmap = GatewayMap::adaptive_with(tiles, lanes, threshold);
+        let fmt = AddrFormat::Hybrid { chip_dims: chips, tile_dims: tiles };
+        let n = fmt.node_count() as usize;
+
+        let mut plan = Vec::new();
+        let mut expected = 0u64;
+        for slot in 0..n {
+            for c in 0..rng.range(1, 4) {
+                let mut peer = rng.below(n as u64) as usize;
+                if peer == slot {
+                    peer = (peer + 1) % n;
+                }
+                let len = rng.range(1, 200) as u32;
+                expected += u64::from(Fragmenter::packet_count(len));
+                let dst = fmt.encode(&traffic::hybrid_coords(chips, tiles, peer));
+                plan.push(traffic::Planned {
+                    node: slot,
+                    at: rng.below(400),
+                    cmd: Command::put(traffic::TX_BASE, dst, traffic::rx_addr(slot), len)
+                        .with_tag((slot * 100 + c as usize) as u32),
+                });
+            }
+        }
+
+        // One random owned `+` cable of a live ring dimension dies.
+        let live: Vec<usize> = (0..3).filter(|&d| chips[d] >= 2).collect();
+        let dim = *rng.pick(&live);
+        let ci = rng.below(chips.iter().product::<u32>() as u64) as u32;
+        let chip = [ci % chips[0], (ci / chips[0]) % chips[1], ci / (chips[0] * chips[1])];
+        let lane = rng.below(lanes as u64) as usize;
+        let dead = HierLinkFault::SerdesLane { chip, dim, plus: true, lane };
+        let tables = match recompute_hybrid_tables_with(chips, &gmap, &[dead], &cfg) {
+            Ok(t) => t,
+            Err(e) => {
+                // A sound typed refusal; the property only requires that
+                // most single-fault cases recover.
+                println!("case {case}: {dead:?} refused ({e:?})");
+                continue;
+            }
+        };
+
+        let workers = rng.range(1, 4) as usize;
+        let mut snet = ShardedNet::hybrid_with(chips, &gmap, &cfg, 1 << 16, workers)
+            .expect("uniform SHAPES links shard cleanly");
+        traffic::setup_buffers_sharded(&mut snet);
+        snet.apply_tables(tables);
+        let elapsed = traffic::run_plan_sharded(&mut snet, plan, 10_000_000);
+        assert!(elapsed.is_some(), "case {case}: chips {chips:?} lanes {lanes} wedged");
+        assert_eq!(
+            sharded_totals(&snet).delivered,
+            expected,
+            "case {case}: chips {chips:?} lanes {lanes} lost packets"
+        );
+        for link in snet.links_of(&dead) {
+            assert_eq!(
+                snet.link_words_sent(link),
+                0,
+                "case {case}: dead wire {link} carried flits"
+            );
+        }
+        recovered += 1;
+    }
+    assert!(recovered >= 4, "too few recoverable single-fault cases ({recovered}/8)");
+}
+
+/// Property (ISSUE 9): per-flow lane freezing + minimal-pick degeneracy.
+/// On an otherwise idle fabric every UGAL-lite pick is minimal — the
+/// strict-improvement rule keeps the hash lane even at threshold 0 — so
+/// a single random cross-chip PUT under `Adaptive` must be
+/// indistinguishable from the same PUT under `DstHash` with the same
+/// lane count: identical drain cycle, delivery count and destination
+/// memory. The stream's stamp is chosen once at injection, so the whole
+/// multi-fragment wormhole rides one lane per dimension for its entire
+/// lifetime (any mid-flow lane flip would desynchronize the two runs).
+#[test]
+fn prop_adaptive_idle_fabric_matches_dst_hash() {
+    let mut rng = SplitMix64::new(0x1A9E);
+    let tiles: [u32; 2] = [2, 2];
+    let cfg = DnpConfig::hybrid();
+    for case in 0..10 {
+        let chips = *rng.pick(&[[2u32, 2, 1], [2, 2, 2], [3, 2, 1]]);
+        let lanes = rng.range(2, 4) as usize; // <= the 4 gateway tiles
+        let threshold = rng.range(0, 6) as u32;
+        let fmt = AddrFormat::Hybrid { chip_dims: chips, tile_dims: tiles };
+        let n = fmt.node_count() as usize;
+        let ntiles = (tiles[0] * tiles[1]) as usize;
+        let s = rng.below(n as u64) as usize;
+        let mut d = rng.below(n as u64) as usize;
+        if d / ntiles == s / ntiles {
+            d = (d + ntiles) % n; // force a cross-chip flow
+        }
+        let len = rng.range(1, 700) as u32; // multi-fragment streams too
+
+        let run = |gmap: &GatewayMap| {
+            let mut net = topology::hybrid_torus_mesh_with(chips, gmap, &cfg, 1 << 16);
+            let slots: Vec<usize> = (0..n).collect();
+            traffic::setup_buffers(&mut net, &slots);
+            let dst = fmt.encode(&traffic::hybrid_coords(chips, tiles, d));
+            net.issue(
+                s,
+                Command::put(traffic::TX_BASE, dst, traffic::rx_addr(s), len).with_tag(7),
+            );
+            let elapsed = net.run_until_idle(2_000_000);
+            let mem = net.dnp(d).mem.read_slice(traffic::rx_addr(s), len).to_vec();
+            let rep = adaptive_decision_report(&net);
+            (elapsed, net.traces.delivered, mem, rep)
+        };
+        let ada = run(&GatewayMap::adaptive_with(tiles, lanes, threshold));
+        let hash = run(&GatewayMap::dst_hash(tiles, lanes));
+        let tag = format!("case {case}: chips {chips:?} lanes {lanes} t={threshold} {s}->{d}");
+        assert!(ada.0.is_some(), "{tag}: adaptive run wedged");
+        assert_eq!(ada.0, hash.0, "{tag}: drain cycle diverged");
+        assert_eq!(ada.1, hash.1, "{tag}: deliveries diverged");
+        assert_eq!(ada.2, hash.2, "{tag}: destination memory diverged");
+        // The DstHash net has no injector; the adaptive net made exactly
+        // one pick (the single stream) and it was minimal.
+        assert_eq!(hash.3.decisions(), 0, "{tag}: DstHash must not record picks");
+        assert_eq!((ada.3.minimal, ada.3.alternate), (1, 0), "{tag}: {:?}", ada.3);
     }
 }
 

@@ -13,7 +13,10 @@
 
 use dnp::config::DnpConfig;
 use dnp::fault::{self, HierLinkFault};
-use dnp::metrics::{net_totals, scheduler_totals, sharded_totals, NetTotals};
+use dnp::metrics::{
+    adaptive_decision_report, net_totals, scheduler_totals, sharded_adaptive_decision_report,
+    sharded_totals, NetTotals,
+};
 use dnp::packet::AddrFormat;
 use dnp::rdma::Command;
 use dnp::route::hier::GatewayMap;
@@ -333,6 +336,88 @@ fn dim_pair_3x3x1_sharded_matches_event() {
             &[],
             2_000_000,
             "DimPair 3x3x1 uniform",
+        );
+    }
+}
+
+#[test]
+fn adaptive_2x2x2_three_way_equivalence() {
+    // ISSUE 9: the UGAL-lite injector reads only the sender chip's own
+    // off-chip tx halves — shard-local state the boundary credit
+    // protocol updates at exact sequential cycles — so the lane
+    // decision, the CRC-covered header stamp and every downstream route
+    // must be bit-exact across the event scheduler and both sharded
+    // runners for 1/2/4 workers, on uniform traffic AND under the
+    // asymmetric hotspot where alternate-lane picks actually fire.
+    let cfg = DnpConfig::hybrid();
+    let chips = [2u32, 2, 2];
+    let gmap = GatewayMap::adaptive(TILES, 2);
+    let uniform = traffic::hybrid_uniform_random(chips, TILES, 6, 24, 10, 0xFEED_1007);
+    let hotspot = traffic::hybrid_asymmetric_hotspot(chips, &gmap, [0, 0, 0], 4, 24);
+    for (plan, label) in
+        [(&uniform, "Adaptive 2x2x2 uniform"), (&hotspot, "Adaptive 2x2x2 hotspot")]
+    {
+        for workers in [1usize, 2, 4] {
+            assert_sharded_equivalent_with(
+                &cfg,
+                chips,
+                &gmap,
+                plan.clone(),
+                workers,
+                &[],
+                2_000_000,
+                label,
+            );
+        }
+    }
+
+    // Dense reference leg on the hotspot: the dense loop must agree with
+    // the event scheduler on drain cycle, totals, tile memories AND the
+    // per-(dim, lane) adaptive decision histogram.
+    let run = |dense: bool| {
+        let mut net = topology::hybrid_torus_mesh_with(chips, &gmap, &cfg, MEM);
+        let n = net.nodes.len();
+        let slots: Vec<usize> = (0..n).collect();
+        traffic::setup_buffers(&mut net, &slots);
+        let mut feeder = traffic::Feeder::new(hotspot.clone());
+        let elapsed = if dense {
+            traffic::run_plan_dense(&mut net, &mut feeder, 2_000_000)
+        } else {
+            traffic::run_plan(&mut net, &mut feeder, 2_000_000)
+        };
+        let mems: Vec<Vec<u32>> = (0..n)
+            .map(|i| {
+                let m = &net.dnp(i).mem;
+                m.read_slice(0, m.len() as u32).to_vec()
+            })
+            .collect();
+        (elapsed, net_totals(&net), mems, adaptive_decision_report(&net))
+    };
+    let dense = run(true);
+    let event = run(false);
+    assert_eq!(dense.0, event.0, "Adaptive 2x2x2: dense vs event drain cycle");
+    assert_eq!(dense.1, event.1, "Adaptive 2x2x2: dense vs event totals");
+    assert_eq!(dense.2, event.2, "Adaptive 2x2x2: dense vs event tile memories");
+    assert_eq!(dense.3, event.3, "Adaptive 2x2x2: dense vs event decision report");
+    assert!(
+        event.3.alternate > 0,
+        "the asymmetric hotspot must trigger alternate-lane picks, got {:?}",
+        event.3
+    );
+
+    // Decision-report determinism across the shard boundary: the merged
+    // per-shard histogram must equal the sequential one, both runners.
+    for mode in MODES {
+        let mut snet = ShardedNet::hybrid_with(chips, &gmap, &cfg, MEM, 4)
+            .expect("uniform SHAPES links shard cleanly");
+        snet.set_parallel_mode(mode);
+        traffic::setup_buffers_sharded(&mut snet);
+        let shd_elapsed = traffic::run_plan_sharded(&mut snet, hotspot.clone(), 2_000_000);
+        assert_eq!(event.0, shd_elapsed, "Adaptive 2x2x2 ({mode:?}): drain cycle");
+        assert_eq!(
+            event.3,
+            sharded_adaptive_decision_report(&snet),
+            "Adaptive 2x2x2 ({mode:?}): sharded decision report diverged"
         );
     }
 }

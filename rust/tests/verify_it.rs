@@ -15,11 +15,14 @@ use std::collections::BTreeSet;
 
 const TILES: [u32; 2] = [2, 2];
 
-fn maps() -> [(&'static str, GatewayMap); 3] {
+fn maps() -> [(&'static str, GatewayMap); 4] {
     [
         ("fixed", GatewayMap::fixed(TILES)),
         ("dimpair", GatewayMap::dim_pair(TILES)),
         ("dsthash", GatewayMap::dst_hash(TILES, 2)),
+        // Unstamped adaptive routes are identical to DstHash; the full
+        // stamped route set is covered by `check_adaptive` below.
+        ("adaptive", GatewayMap::adaptive(TILES, 2)),
     ]
 }
 
@@ -60,6 +63,35 @@ fn every_installed_recovery_certifies() {
             assert!(rep.is_certified(), "{chips:?} {name} recovery not certified:\n{rep}");
             assert_eq!(rep.failed_pairs, 0, "{chips:?} {name}");
         }
+    }
+}
+
+/// ISSUE 9 acceptance: every healthy `Adaptive` configuration certifies
+/// over its *entire* stamped route set — one full `check_fabric` walk
+/// per forced lane stamp (the widened route set a UGAL-lite source can
+/// realize), plus acyclicity of the cross-stamp union CDG — across ring
+/// sizes k = 2..4 and lane counts 2..4 on 3x3x3.
+#[test]
+fn adaptive_configs_certify_across_all_stamps() {
+    let cfg = DnpConfig::hybrid();
+    let matrix: [([u32; 3], usize); 5] =
+        [([2, 2, 2], 2), ([3, 3, 3], 2), ([4, 4, 4], 2), ([3, 3, 3], 3), ([3, 3, 3], 4)];
+    for (chips, lanes) in matrix {
+        let gmap = GatewayMap::adaptive(TILES, lanes);
+        let rep = verify::check_adaptive(chips, &gmap, &cfg);
+        assert!(rep.is_certified(), "{chips:?} lanes {lanes} not certified");
+        assert_eq!(rep.union_cycle, None, "{chips:?} lanes {lanes}: union CDG cycle");
+        assert_eq!(rep.stamps.len(), lanes + 1, "one walk per stamp plus unstamped");
+        let n = chips.iter().product::<u32>() as usize * 4;
+        for (s, r) in rep.stamps.iter().enumerate() {
+            assert!(r.is_certified(), "{chips:?} lanes {lanes} stamp {s}:\n{r}");
+            assert_eq!(r.pairs, n * (n - 1), "{chips:?} lanes {lanes} stamp {s}");
+            assert_eq!(r.failed_pairs, 0, "{chips:?} lanes {lanes} stamp {s}");
+        }
+        // The unstamped walk is the DstHash walk, resource for resource.
+        let hash = verify::check_healthy(chips, &GatewayMap::dst_hash(TILES, lanes), &cfg);
+        assert_eq!(rep.stamps[0].chans, hash.chans, "{chips:?} lanes {lanes}");
+        assert_eq!(rep.stamps[0].edges, hash.edges, "{chips:?} lanes {lanes}");
     }
 }
 
