@@ -2,9 +2,10 @@
 //! torus of 2×2 tile meshes (32 DNPs) runs a halo-exchange phase and a
 //! uniform-random plan three ways — under the sequential event scheduler
 //! (`traffic::run_plan`) and sharded per chip on worker threads
-//! (`traffic::run_plan_sharded`) with both parallel runners (windowed
-//! barrier and per-link conservative clocks) — and asserts all three
-//! agree bit-exactly on drain cycles and every delivery counter.
+//! (`traffic::run_plan_sharded`) with every parallel runner (windowed
+//! barrier, per-link conservative clocks, and the work-stealing shard
+//! pool) — and asserts all of them agree bit-exactly on drain cycles
+//! and every delivery counter.
 //!
 //! Run: `cargo run --release --example hybrid_sharded [workers]`
 //! (default 2 workers; CI runs this as the sharded smoke).
@@ -53,8 +54,10 @@ fn main() {
         let seq = traffic::run_plan(&mut net, &mut feeder, 10_000_000).expect("sequential drains");
         let seq_totals = net_totals(&net);
 
-        // Per-chip shards on worker threads, under both parallel runners.
-        for mode in [ParallelMode::Barrier, ParallelMode::LinkClock] {
+        // Per-chip shards on worker threads, under every parallel runner.
+        for mode in
+            [ParallelMode::Barrier, ParallelMode::LinkClock, ParallelMode::WorkSteal]
+        {
             let mut snet =
                 ShardedNet::hybrid(CHIPS, TILES, &cfg, MEM, workers).expect("uniform links");
             snet.set_parallel_mode(mode);

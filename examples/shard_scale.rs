@@ -1,23 +1,37 @@
-//! §Shard-scale smoke: the 512-chip system under asymmetric load.
+//! §Shard-scale / §Shard-steal smoke: the 512-chip system under
+//! asymmetric load.
 //!
 //! An 8×8×8 chip torus of 2×2 tile meshes — 512 shards, 2048 DNPs —
-//! where only the 8 chips of one x-axis row send (each tile PUTs to its
-//! antipodal chip) and the other 504 chips sit idle. The load is the
-//! worst case for the windowed-barrier runner (every shard pays every
-//! global window) and the best case for the per-link conservative
-//! clocks (idle shards run ahead at their own pace), so the sweep below
-//! is the headline scalability comparison of EXPERIMENTS.md
-//! §Shard-scale. Every (mode × workers) run must stay bit-exact with
-//! every other at the fixed budget; the `[shard-scale]` rows are
+//! under one of two adversarial scenarios:
+//!
+//! * **row** (`[shard-scale]` rows, EXPERIMENTS.md §Shard-scale): only
+//!   the 8 chips of one x-axis row send, each tile PUTting to its
+//!   antipodal chip. Worst case for the windowed-barrier runner (every
+//!   shard pays every global window), best case for per-link
+//!   conservative clocks (idle shards run ahead at their own pace).
+//! * **hotspot** (`[shard-steal]` rows, EXPERIMENTS.md §Shard-steal):
+//!   the same 8 sender chips — a CONTIGUOUS chip-index range, so static
+//!   placement parks them all on worker 0 at w8 — funnel every PUT into
+//!   the single victim chip (4,4,4) while the other 503 chips idle.
+//!   Static placement provably wastes cores here (most workers own
+//!   nothing but clock spinning); the work-stealing runner migrates the
+//!   hot tokens to idle workers, which is exactly what the
+//!   LinkClock-vs-WorkSteal wall-clock comparison at the bottom
+//!   measures.
+//!
+//! Every (mode × workers) run must stay bit-exact with every other at
+//! the fixed budget; the `[shard-scale]`/`[shard-steal]` rows are
 //! harvested by CI into the experiments summary.
 //!
-//! Run: `cargo run --release --example shard_scale [max_workers]`
-//! (default sweep: 1, 2, 4, 8, 16 workers in both modes).
+//! Run: `cargo run --release --example shard_scale [max_workers] [mode] [scenario]`
+//! with mode `barrier|linkclock|worksteal|all` (default `all`) and
+//! scenario `row|hotspot` (default `row`). Default sweep: 1, 2, 4, 8,
+//! 16 workers.
 
 use std::time::Instant;
 
 use dnp::config::DnpConfig;
-use dnp::metrics::{scheduler_totals, sharded_totals, NetTotals};
+use dnp::metrics::{scheduler_totals, sharded_totals, steal_report, NetTotals};
 use dnp::packet::AddrFormat;
 use dnp::rdma::Command;
 use dnp::sim::{ParallelMode, ShardedNet};
@@ -27,6 +41,7 @@ const CHIPS: [u32; 3] = [8, 8, 8];
 const TILES: [u32; 2] = [2, 2];
 const MEM: usize = 1 << 15;
 const BUDGET: u64 = 10_000_000;
+const SWEEP: [usize; 5] = [1, 2, 4, 8, 16];
 
 /// Asymmetric antipodal load: row (y=0, z=0) sends, everyone else idles.
 /// Per-sender RX windows are infeasible at 2048 nodes, so every flow
@@ -54,25 +69,67 @@ fn scale_plan() -> Vec<Planned> {
     plan
 }
 
+/// Adversarial quiet-chip hotspot: chips (x,0,0) — indices 0..8, one
+/// contiguous chunk under static placement — send widely spaced PUTs
+/// that ALL land on chip (4,4,4)'s tiles. One victim shard and eight
+/// sender shards carry every real step; the remaining 503 shards only
+/// spin clocks.
+fn hotspot_plan() -> Vec<Planned> {
+    let fmt = AddrFormat::Hybrid { chip_dims: CHIPS, tile_dims: TILES };
+    let tiles = (TILES[0] * TILES[1]) as usize;
+    let mut plan = Vec::new();
+    for x in 0..CHIPS[0] {
+        for t in 0..tiles {
+            let tc = [t as u32 % TILES[0], t as u32 / TILES[0]];
+            let node = traffic::hybrid_node_index(CHIPS, TILES, [x, 0, 0], tc);
+            let dst = fmt.encode(&[4, 4, 4, tc[0], tc[1]]);
+            for i in 0..6u64 {
+                plan.push(Planned {
+                    node,
+                    at: i * 617 + u64::from(x) * 13,
+                    cmd: Command::put(0x1000, dst, 0x4000, 24)
+                        .with_tag((node as u32) * 8 + i as u32),
+                });
+            }
+        }
+    }
+    plan
+}
+
 fn main() {
-    let max_workers: usize = std::env::args()
-        .nth(1)
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let max_workers: usize = args
+        .first()
         .map(|a| a.parse().expect("max_workers must be a number"))
         .unwrap_or(16);
+    let mode_arg = args.get(1).map_or("all", String::as_str);
+    let scenario = args.get(2).map_or("row", String::as_str);
+    let modes: Vec<ParallelMode> = if mode_arg == "all" {
+        vec![ParallelMode::Barrier, ParallelMode::LinkClock, ParallelMode::WorkSteal]
+    } else {
+        vec![mode_arg.parse().expect("mode must be barrier|linkclock|worksteal|all")]
+    };
+    let (tag, plan_fn): (&str, fn() -> Vec<Planned>) = match scenario {
+        "row" => ("[shard-scale]", scale_plan),
+        "hotspot" => ("[shard-steal]", hotspot_plan),
+        other => panic!("unknown scenario '{other}' (expected row|hotspot)"),
+    };
     let cfg = DnpConfig::hybrid();
     let n = (CHIPS.iter().product::<u32>() * TILES.iter().product::<u32>()) as usize;
     let nchips = CHIPS.iter().product::<u32>();
     println!(
         "shard-scale: {}x{}x{} chips of {}x{} tiles = {n} DNPs, {nchips} shards, \
-         budget {BUDGET} cycles",
+         scenario {scenario}, budget {BUDGET} cycles",
         CHIPS[0], CHIPS[1], CHIPS[2], TILES[0], TILES[1],
     );
 
     // (elapsed, totals) of the first run: every later (mode × workers)
     // combination must reproduce it exactly at the fixed budget.
     let mut reference: Option<(Option<u64>, NetTotals)> = None;
-    for mode in [ParallelMode::Barrier, ParallelMode::LinkClock] {
-        for workers in [1usize, 2, 4, 8, 16] {
+    // wall[mode][worker-sweep-slot], for the steal-vs-static compare.
+    let mut walls: Vec<Vec<Option<f64>>> = vec![vec![None; SWEEP.len()]; modes.len()];
+    for (mi, &mode) in modes.iter().enumerate() {
+        for (wi, &workers) in SWEEP.iter().enumerate() {
             if workers > max_workers {
                 continue;
             }
@@ -86,15 +143,18 @@ fn main() {
                     .expect("LUT capacity (one shared window)");
             }
             let t0 = Instant::now();
-            let elapsed = traffic::run_plan_sharded(&mut snet, scale_plan(), BUDGET);
+            let elapsed = traffic::run_plan_sharded(&mut snet, plan_fn(), BUDGET);
             let wall = t0.elapsed().as_secs_f64();
+            walls[mi][wi] = Some(wall);
             let totals = sharded_totals(&snet);
             let sched = scheduler_totals(&snet);
+            let steal = steal_report(&snet);
             let cycles = elapsed.unwrap_or(BUDGET);
             println!(
-                "[shard-scale] mode={mode:?} workers={workers} cycles={cycles} \
+                "{tag} mode={mode:?} workers={workers} cycles={cycles} \
                  delivered={} wall={wall:.3}s Mcycles/s={:.2} horizon={} rounds={} \
-                 busy={} null={} stalls={} util={:.3}",
+                 busy={} null={} stalls={} util={:.3} steals={} steal-fails={} \
+                 maxq={} hit-rate={:.3}",
                 totals.delivered,
                 cycles as f64 / wall / 1e6,
                 snet.horizon(),
@@ -103,9 +163,16 @@ fn main() {
                 sched.null_windows,
                 sched.stalls,
                 sched.utilization(),
+                steal.steals,
+                steal.steal_fails,
+                steal.max_queue,
+                steal.hit_rate(),
             );
             assert!(elapsed.is_some(), "the load must drain inside the budget");
             assert!(totals.delivered > 0, "the senders must deliver");
+            if mode != ParallelMode::WorkSteal {
+                assert_eq!(steal.attempts(), 0, "static runners must never steal");
+            }
             match &reference {
                 None => reference = Some((elapsed, totals)),
                 Some((re, rt)) => {
@@ -115,5 +182,34 @@ fn main() {
             }
         }
     }
-    println!("[shard-scale] every mode x worker count bit-exact at the fixed budget: OK");
+    println!("{tag} every mode x worker count bit-exact at the fixed budget: OK");
+
+    // Dynamic-vs-static wall-clock comparison, when both clock runners
+    // ran. The hotspot scenario is the headline: static placement parks
+    // all eight hot sender shards on one worker, so WorkSteal should win
+    // outright at w4+. The assert is deliberately lenient (1.25x) — CI
+    // runners have few, noisy cores; the strict per-worker-count
+    // acceptance numbers live in EXPERIMENTS.md §Shard-steal, measured
+    // via scripts/scalability.sh.
+    let lc = modes.iter().position(|&m| m == ParallelMode::LinkClock);
+    let ws = modes.iter().position(|&m| m == ParallelMode::WorkSteal);
+    if let (Some(lc), Some(ws)) = (lc, ws) {
+        for (wi, &workers) in SWEEP.iter().enumerate() {
+            let (Some(t_lc), Some(t_ws)) = (walls[lc][wi], walls[ws][wi]) else {
+                continue;
+            };
+            println!(
+                "{tag} compare workers={workers} linkclock={t_lc:.3}s worksteal={t_ws:.3}s \
+                 speedup={:.2}x",
+                t_lc / t_ws,
+            );
+            if scenario == "hotspot" {
+                assert!(
+                    t_ws <= t_lc * 1.25,
+                    "w{workers}: WorkSteal ({t_ws:.3}s) fell >25% behind LinkClock \
+                     ({t_lc:.3}s) on the imbalanced scenario it exists to fix"
+                );
+            }
+        }
+    }
 }

@@ -398,6 +398,11 @@ fn main() {
         ("hybrid 8x8x8 linkclk w4", scale_scenario(4, ParallelMode::LinkClock)),
         ("hybrid 8x8x8 linkclk w8", scale_scenario(8, ParallelMode::LinkClock)),
         ("hybrid 8x8x8 linkclk w16", scale_scenario(16, ParallelMode::LinkClock)),
+        ("hybrid 8x8x8 worksteal w1", scale_scenario(1, ParallelMode::WorkSteal)),
+        ("hybrid 8x8x8 worksteal w2", scale_scenario(2, ParallelMode::WorkSteal)),
+        ("hybrid 8x8x8 worksteal w4", scale_scenario(4, ParallelMode::WorkSteal)),
+        ("hybrid 8x8x8 worksteal w8", scale_scenario(8, ParallelMode::WorkSteal)),
+        ("hybrid 8x8x8 worksteal w16", scale_scenario(16, ParallelMode::WorkSteal)),
     ] {
         t.row(&[
             name.into(),

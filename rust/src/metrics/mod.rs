@@ -210,6 +210,58 @@ pub fn scheduler_totals(snet: &ShardedNet) -> WorkerStats {
     total
 }
 
+/// Work-stealing behavior of the last sharded run under
+/// [`ParallelMode::WorkSteal`](crate::sim::ParallelMode): aggregate and
+/// per-worker steal counters plus peak deque depth. All zeros after a
+/// run under the static runners, so the report doubles as a cheap "did
+/// anybody actually steal" probe in tests and backs the `[shard-steal]`
+/// rows in EXPERIMENTS.md §Shard-steal. Like [`scheduler_totals`], this
+/// describes the *runtime*, never the modeled hardware — steal counts
+/// vary run to run while the simulated results stay bit-exact.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StealReport {
+    /// Runnable shard tokens taken from another worker's deque.
+    pub steals: u64,
+    /// Steal scans that found no runnable token on any victim.
+    pub steal_fails: u64,
+    /// Peak shard tokens on any single worker's deque.
+    pub max_queue: u64,
+    /// Per-worker `(steals, steal_fails, max_queue)`, worker-indexed.
+    pub per_worker: Vec<(u64, u64, u64)>,
+}
+
+impl StealReport {
+    /// Total steal scans, successful or not.
+    pub fn attempts(&self) -> u64 {
+        self.steals + self.steal_fails
+    }
+
+    /// Fraction of steal scans that found a runnable token (`0.0` when
+    /// nobody attempted any).
+    pub fn hit_rate(&self) -> f64 {
+        let attempts = self.attempts();
+        if attempts == 0 {
+            0.0
+        } else {
+            self.steals as f64 / attempts as f64
+        }
+    }
+}
+
+/// Build the [`StealReport`] of the most recent
+/// [`run_plan`](crate::sim::ShardedNet::run_plan) call from the
+/// per-worker scheduler counters.
+pub fn steal_report(snet: &ShardedNet) -> StealReport {
+    let mut r = StealReport::default();
+    for s in snet.worker_stats() {
+        r.steals += s.steals;
+        r.steal_fails += s.steal_fails;
+        r.max_queue = r.max_queue.max(s.max_queue);
+        r.per_worker.push((s.steals, s.steal_fails, s.max_queue));
+    }
+    r
+}
+
 /// Delivered-payload bandwidth of a sharded run over a window, GB/s —
 /// the sharded twin of [`delivered_gbs`].
 pub fn sharded_delivered_gbs(snet: &ShardedNet, elapsed: u64, freq_mhz: f64) -> f64 {

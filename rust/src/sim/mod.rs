@@ -59,8 +59,11 @@
 //!    pinned bit-exact to dense by `rust/tests/equivalence.rs`;
 //! 3. **sharded** ([`shard::ShardedNet`]) — one `Net` per chip of a
 //!    hybrid system on worker threads, free-running between conservative
-//!    synchronization horizons; pinned bit-exact to the event scheduler
-//!    by `rust/tests/sharded_equivalence.rs`.
+//!    synchronization horizons under one of three parallel runners
+//!    (lockstep barrier, per-link conservative clocks, or those clocks
+//!    with work-stealing shard placement — see [`ParallelMode`]); pinned
+//!    bit-exact to the event scheduler by
+//!    `rust/tests/sharded_equivalence.rs`.
 
 pub mod channel;
 pub mod shard;

@@ -17,9 +17,10 @@
 //! mesh channels and a *half* of every off-chip wire
 //! ([`crate::topology::hybrid_chip_subnet`]). Shards run on
 //! `std::thread` workers — several chips per worker at scale — and
-//! synchronize by exchanging time-stamped boundary flits and credits,
-//! either at lockstep barrier windows or over per-link conservative
-//! clocks (see [`ParallelMode`]).
+//! synchronize by exchanging time-stamped boundary flits and credits —
+//! at lockstep barrier windows, over per-link conservative clocks, or
+//! over those same clocks with work-stealing shard placement (see
+//! [`ParallelMode`]).
 //!
 //! # The boundary protocol
 //!
@@ -85,7 +86,7 @@
 //! across all boundary wires ([`ShardSetupError::NonUniformLink`]) so a
 //! single `H` is conservative for every link at once.
 //!
-//! # Two parallel modes
+//! # Three parallel modes
 //!
 //! [`ParallelMode::Barrier`] (the reference) runs all workers in
 //! lockstep windows of `H` cycles: every worker advances its shards to
@@ -121,6 +122,28 @@
 //! announcements. No window alignment is needed — each edge bound is
 //! conservative by itself, per message class.
 //!
+//! [`ParallelMode::WorkSteal`] keeps LinkClock's per-shard clocks,
+//! bounds and mailboxes but replaces the *static* chip-to-worker
+//! placement with dynamic load balance: every shard is a unit-of-work
+//! token on a per-worker deque (seeded with the same contiguous chunks
+//! the static runners use). An owner pops tokens LIFO from the back of
+//! its own deque — riding its most recently advanced, cache-hot shard —
+//! and parks tokens that cannot advance at the FIFO front, where
+//! thieves look. A worker whose whole deque yields no progress scans the
+//! other deques front-to-back and steals the first **runnable** token —
+//! one whose conservative bound exceeds its announced clock — instead
+//! of parking (the Chase–Lev discipline, realized over mutexed deques:
+//! the crate forbids `unsafe`, and a work unit here is a whole shard
+//! window, not a nanosecond task, so a mutex per deque is ample).
+//! Tokens are exclusive — a shard index lives on exactly one deque or
+//! in exactly one worker's hands — so no two workers ever race on one
+//! shard, and the LinkClock advance pass carries over unchanged.
+//! Thieves scan *whole* deques rather than peeking fronts: a runnable
+//! token buried behind a non-runnable one must still be stealable, or
+//! every worker could park with work available. Liveness is inherited
+//! from LinkClock (the minimum-clock shard is always runnable), and a
+//! successful advance announces on the condvar, waking parked workers.
+//!
 //! # Determinism
 //!
 //! Sharded results are **bit-exact** against the sequential event
@@ -146,6 +169,17 @@
 //!   channels have combinational credit returns — both endpoints always
 //!   share a shard.)
 //!
+//! Work stealing adds nothing to that surface: *which worker* advances a
+//! shard, and in what steal order, varies run to run — but every bit of
+//! mutable simulation state (net, RNG streams, feeder cursor, inbox
+//! heap, emission counter, packet store) lives in the [`Shard`] behind
+//! its mutex, and a shard's trajectory is cut-point-invariant (advancing
+//! `[c1, c3)` in one window or as `[c1, c2)` + `[c2, c3)` applies the
+//! same messages before the same steps). No worker-indexed state exists
+//! for a steal to leak through; only the runtime-observability
+//! [`WorkerStats`] (steals, queue depths, stalls) differ between runs,
+//! and those are explicitly outside the equivalence snapshots.
+//!
 //! Congestion-adaptive injection
 //! ([`GatewayPolicy::Adaptive`](crate::route::hier::GatewayPolicy::Adaptive))
 //! preserves all of this *by construction*: the UGAL-lite chooser
@@ -159,9 +193,10 @@
 //!
 //! The one sanctioned divergence: *where the clocks park after a
 //! drained run*. Barrier mode parks at the aligned window edge that
-//! detected the drain; link-clock mode normalizes every shard forward
-//! to the next multiple of `H` at or past the highest clock any worker
-//! reached (clocks are never rewound). Both are `>=` the sequential
+//! detected the drain; the clock modes (link-clock and work-steal share
+//! one coordinator) normalize every shard forward to the next multiple
+//! of `H` at or past the highest clock any worker reached (clocks are
+//! never rewound). Both are `>=` the sequential
 //! net's stop cycle; nothing observable happens in the gap (no step
 //! executes, only pending credit returns restore — and a drained net
 //! has no stalled sender to notice them early). On a *timeout* every
@@ -170,7 +205,7 @@
 //! `rust/tests/sharded_equivalence.rs` pins the equivalence: delivered
 //! payloads, CQ event streams, per-node and per-wire flit counts and
 //! drain cycles are snapshot-identical to the sequential event run for
-//! 1, 2, 4 and 8 workers in both parallel modes, on healthy, faulted
+//! 1, 2, 4 and 8 workers in all three parallel modes, on healthy, faulted
 //! (dead-cable), BER-afflicted and hotspot-skewed systems — which,
 //! combined with the dense-vs-event suite, makes the equivalence
 //! argument a three-way dense/event/sharded check.
@@ -192,7 +227,7 @@ use crate::sim::Net;
 use crate::topology::{cable_slots, chip_coords3, chip_index3, hybrid_chip_subnet_with};
 use crate::traffic::{hybrid_node_index, Feeder, Planned};
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Barrier, Condvar, Mutex, MutexGuard};
@@ -248,9 +283,10 @@ enum MsgKind {
 }
 
 /// How the shard workers synchronize during [`ShardedNet::run_plan`].
-/// Both modes produce bit-exact results (see the [module docs](self));
+/// All modes produce bit-exact results (see the [module docs](self));
 /// `Barrier` is the reference the way `step_dense` anchors the event
-/// wheel, `LinkClock` is the scalable scheduler.
+/// wheel, `LinkClock` is the scalable static scheduler, `WorkSteal` its
+/// dynamically load-balanced sibling.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub enum ParallelMode {
     /// Lockstep windows of `H` cycles between global barriers: every
@@ -263,6 +299,31 @@ pub enum ParallelMode {
     /// its neighbor's announced safe time plus that link's lookahead, so
     /// a quiet chip never gates a busy one.
     LinkClock,
+    /// `LinkClock`'s clocks with dynamic load balance: shards are
+    /// unit-of-work tokens on per-worker deques (owner pops LIFO,
+    /// thieves steal FIFO — the Chase–Lev discipline), and an idle
+    /// worker steals *runnable* shards — ones whose conservative bound
+    /// lets them advance — instead of parking, so a hotspot chip cannot
+    /// pin one worker at 100% while its neighbors idle.
+    WorkSteal,
+}
+
+impl std::str::FromStr for ParallelMode {
+    type Err = String;
+
+    /// Parse a CLI-style mode name (`barrier` | `linkclock` |
+    /// `worksteal`, with `linkclk`/`steal` shorthands), as taken by
+    /// `examples/shard_scale.rs` and `scripts/scalability.sh`.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "barrier" => Ok(Self::Barrier),
+            "linkclock" | "linkclk" => Ok(Self::LinkClock),
+            "worksteal" | "steal" => Ok(Self::WorkSteal),
+            other => Err(format!(
+                "unknown parallel mode '{other}' (expected barrier|linkclock|worksteal)"
+            )),
+        }
+    }
 }
 
 /// Why a [`ShardedNet`] could not be built. Typed, like
@@ -336,7 +397,7 @@ impl std::error::Error for ShardSetupError {}
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct WorkerStats {
     /// Synchronization rounds: windows opened (barrier mode) or scan
-    /// passes over the worker's shards (link-clock mode).
+    /// passes over the worker's shards (clock modes).
     pub rounds: u64,
     /// Shard advances that executed at least one scheduler step.
     pub busy_windows: u64,
@@ -352,12 +413,23 @@ pub struct WorkerStats {
     /// Boundary credits shipped by the worker's shards.
     pub credits_out: u64,
     /// Times the worker blocked: barrier waits (barrier mode) or condvar
-    /// parks (link-clock mode).
+    /// parks (clock modes).
     pub stalls: u64,
+    /// Successful steals: runnable shard tokens this worker took from
+    /// another worker's deque. Always 0 outside
+    /// [`ParallelMode::WorkSteal`].
+    pub steals: u64,
+    /// Steal scans that found no runnable token on any victim's deque
+    /// (the worker parked instead). Always 0 outside `WorkSteal`.
+    pub steal_fails: u64,
+    /// Peak number of shard tokens observed on this worker's own deque
+    /// (0 under the static runners, whose placement never moves).
+    pub max_queue: u64,
 }
 
 impl WorkerStats {
-    /// Field-wise accumulate (fleet aggregation).
+    /// Field-wise accumulate (fleet aggregation); `max_queue`, a peak,
+    /// merges by maximum.
     pub fn merge(&mut self, o: &WorkerStats) {
         self.rounds += o.rounds;
         self.busy_windows += o.busy_windows;
@@ -367,6 +439,9 @@ impl WorkerStats {
         self.flits_out += o.flits_out;
         self.credits_out += o.credits_out;
         self.stalls += o.stalls;
+        self.steals += o.steals;
+        self.steal_fails += o.steal_fails;
+        self.max_queue = self.max_queue.max(o.max_queue);
     }
 
     /// Fraction of shard advances that did real work (vs pure clock
@@ -421,7 +496,7 @@ pub struct Shard {
     /// monotone across windows and runs).
     out_seq: u64,
     /// Messages generated this advance, flushed to peer inboxes at the
-    /// barrier (barrier mode) or into peer mailboxes (link-clock mode).
+    /// barrier (barrier mode) or into peer mailboxes (clock modes).
     outgoing: Vec<BoundaryMsg>,
     /// Open incoming wormhole trains: `(link, vc)` → local `PacketId` of
     /// the packet whose flits are currently arriving.
@@ -432,6 +507,10 @@ pub struct Shard {
     link_rx: HashMap<u32, ChannelId>,
     /// Reusable raw-event buffer (allocation-free steady state).
     scratch: Vec<BoundaryOut>,
+    /// Reusable destination-tagged message buffer for
+    /// [`flush_outgoing`] (clock modes flush every advance; re-allocating
+    /// this per flush was measurable at 512-chip scale).
+    flush_scratch: Vec<(usize, BoundaryMsg)>,
     /// Post-step cycle of this shard's last non-idle → idle transition;
     /// the global drain cycle is the max over shards (matching the
     /// sequential run's return cycle exactly).
@@ -541,6 +620,7 @@ impl ShardedNet {
                 link_tx: HashMap::new(),
                 link_rx: HashMap::new(),
                 scratch: Vec::new(),
+                flush_scratch: Vec::new(),
                 idle_at: 0,
                 was_idle: true,
             });
@@ -843,7 +923,7 @@ impl ShardedNet {
     ///
     /// Back-to-back runs: after a drained run the shard clocks park at
     /// an `H`-aligned cycle `>= start + elapsed` (barrier mode: the
-    /// window edge that detected the drain; link-clock mode: the next
+    /// window edge that detected the drain; clock modes: the next
     /// multiple of `H` past the furthest clock — never rewound; a
     /// sequential net stops at exactly `start + elapsed`). A follow-up
     /// run therefore starts later in absolute time than its sequential
@@ -854,7 +934,7 @@ impl ShardedNet {
     /// still report identical `elapsed` and counters; only *absolute*
     /// trace cycle stamps shift, the same observability-artifact class
     /// as packet uids. With `credit_batch` on, the `H`-alignment of the
-    /// park keeps the batch phase canonical between the two parallel
+    /// park keeps the batch phase canonical between the parallel
     /// modes; a *sequential* net's drained stop cycle has its own batch
     /// phase, so batched cross-mode comparisons of back-to-back runs
     /// should cut at budget timeouts (which park every mode at exactly
@@ -888,6 +968,9 @@ impl ShardedNet {
             ParallelMode::Barrier => self.run_barrier(start, budget_end, nworkers, &stat_slots),
             ParallelMode::LinkClock => {
                 self.run_linkclock(start, budget_end, nworkers, &stat_slots)
+            }
+            ParallelMode::WorkSteal => {
+                self.run_worksteal(start, budget_end, nworkers, &stat_slots)
             }
         };
         self.stats = stat_slots.into_iter().map(|m| m.into_inner().unwrap()).collect();
@@ -951,6 +1034,7 @@ impl ShardedNet {
             }
             let mut cur = start;
             let mut result = None;
+            let mut bufs = ExchangeBufs::default();
             while cur < budget_end {
                 // Window ends sit on absolute multiples of `H` — the
                 // alignment that makes batched credit releases land at or
@@ -965,7 +1049,7 @@ impl ShardedNet {
                     barrier.wait();
                     panic!("a shard worker panicked inside the window");
                 }
-                exchange(shards, links);
+                exchange(shards, links, &mut bufs);
                 if let Some(done_at) = drained(shards) {
                     result = Some(done_at - start);
                     break;
@@ -991,24 +1075,9 @@ impl ShardedNet {
         nworkers: usize,
         stat_slots: &[Mutex<WorkerStats>],
     ) -> (Option<u64>, u64) {
-        let shards = &self.shards;
-        let links = &self.links;
-        let in_edges = &self.in_edges;
-        let (flight, credit_lat, period) = (self.flight, self.credit_lat, self.period);
-        let nshards = shards.len();
-        let clocks: Vec<AtomicU64> = (0..nshards).map(|_| AtomicU64::new(start)).collect();
-        let mailboxes: Vec<Mutex<Vec<BoundaryMsg>>> =
-            (0..nshards).map(|_| Mutex::new(Vec::new())).collect();
-        // Per-shard "looks locally drained" hints, refreshed every time a
-        // worker advances the shard; the coordinator verifies exactly
-        // under the full lock set before trusting them.
-        let hints: Vec<AtomicBool> = (0..nshards).map(|_| AtomicBool::new(false)).collect();
-        let epoch = Mutex::new(0u64);
-        let wake = Condvar::new();
-        let stop = AtomicBool::new(false);
-        let panicked = AtomicBool::new(false);
-        let (clocks, mailboxes, hints) = (&clocks, &mailboxes, &hints);
-        let (epoch, wake, stop, panicked) = (&epoch, &wake, &stop, &panicked);
+        let rt = ClockRt::new(self, start, budget_end);
+        let rt = &rt;
+        let nshards = self.shards.len();
         std::thread::scope(|scope| {
             let chunk = nshards.div_ceil(nworkers);
             for w in 0..nworkers {
@@ -1017,139 +1086,353 @@ impl ShardedNet {
                 let slot = &stat_slots[w];
                 scope.spawn(move || {
                     let mut st = WorkerStats::default();
-                    let mut seen = *epoch.lock().unwrap();
+                    let mut seen = *rt.epoch.lock().unwrap();
                     loop {
-                        if stop.load(Ordering::Acquire) {
+                        if rt.stop.load(Ordering::Acquire) {
                             break;
                         }
                         st.rounds += 1;
                         let mut progressed = false;
                         let r = catch_unwind(AssertUnwindSafe(|| {
                             for i in lo..hi {
-                                // (1) Read peer clocks FIRST (Acquire):
-                                // any message flushed after these reads
-                                // is already covered by the bound the
-                                // older values produce.
-                                let mut bound = budget_end;
-                                for e in &in_edges[i] {
-                                    let c = clocks[e.peer].load(Ordering::Acquire);
-                                    bound = bound
-                                        .min(edge_bound(c, e.kind, flight, credit_lat, period));
+                                if rt.advance_one(i, &mut st) {
+                                    progressed = true;
                                 }
-                                if bound <= clocks[i].load(Ordering::Acquire) {
-                                    continue;
-                                }
-                                let mut sh = shards[i].lock().unwrap();
-                                // The coordinator normalizes shards
-                                // forward under `stop`; a stale bound
-                                // must not re-advance them afterwards.
-                                if stop.load(Ordering::Acquire) {
-                                    return;
-                                }
-                                // (2) Drain our mailbox into the inbox.
-                                drain_mailbox(&mut sh, &mailboxes[i]);
-                                // (3) Run to the bound.
-                                advance_shard(&mut sh, bound, &mut st);
-                                // (4) Flush outgoing into peer mailboxes
-                                // *before* publishing the clock.
-                                flush_outgoing(&mut sh, links, mailboxes);
-                                hints[i].store(locally_drained(&sh), Ordering::Release);
-                                drop(sh);
-                                // (5) Publish: Release orders the store
-                                // after the flush above.
-                                clocks[i].store(bound, Ordering::Release);
-                                progressed = true;
                             }
                         }));
                         if r.is_err() {
-                            panicked.store(true, Ordering::Release);
-                            stop.store(true, Ordering::Release);
-                            announce(epoch, wake);
+                            rt.panicked.store(true, Ordering::Release);
+                            rt.stop.store(true, Ordering::Release);
+                            rt.announce();
                             break;
                         }
                         if progressed {
-                            announce(epoch, wake);
+                            rt.announce();
                         } else {
-                            let mut g = epoch.lock().unwrap();
-                            if *g == seen && !stop.load(Ordering::Acquire) {
-                                st.stalls += 1;
-                                g = wake.wait(g).unwrap();
-                            }
-                            seen = *g;
+                            seen = rt.park(seen, &mut st);
                         }
                     }
                     *slot.lock().unwrap() = st;
                 });
             }
-
-            // Coordinator: parks on the announcement condvar; on each
-            // wake checks for panics, global drain, and budget
-            // exhaustion. Never holds the epoch mutex while taking shard
-            // locks (a worker announcing while holding a shard lock
-            // would deadlock against that).
-            let horizon = self.horizon.max(1);
-            let mut seen = *epoch.lock().unwrap();
-            loop {
-                if panicked.load(Ordering::Acquire) {
-                    stop.store(true, Ordering::Release);
-                    announce(epoch, wake);
-                    panic!("a shard worker panicked inside the window");
-                }
-                let all_end =
-                    clocks.iter().all(|c| c.load(Ordering::Acquire) == budget_end);
-                if all_end || hints.iter().all(|h| h.load(Ordering::Acquire)) {
-                    // Exact check: take every shard lock (workers hold at
-                    // most one each, and never block on the epoch mutex
-                    // while holding one), pull in-between messages out of
-                    // the mailboxes, then test the drain predicate.
-                    let mut guards: Vec<MutexGuard<'_, Shard>> =
-                        shards.iter().map(|m| m.lock().unwrap()).collect();
-                    for (i, sh) in guards.iter_mut().enumerate() {
-                        drain_mailbox(sh, &mailboxes[i]);
-                    }
-                    for (i, sh) in guards.iter().enumerate() {
-                        hints[i].store(locally_drained(sh), Ordering::Release);
-                    }
-                    let ok = guards.iter().all(|sh| locally_drained(sh));
-                    if ok {
-                        let done_at =
-                            guards.iter().map(|sh| sh.idle_at).max().unwrap_or(start);
-                        // Normalize every shard *forward* (never rewind a
-                        // clock) to a common `H`-aligned cycle. Safe: the
-                        // system is fully drained, so the extra cycles
-                        // hold no step — only pending credit returns
-                        // restore, exactly as they would early in the
-                        // next run.
-                        let top = guards.iter().map(|sh| sh.net.cycle).max().unwrap_or(start);
-                        let u = top.div_ceil(horizon) * horizon;
-                        stop.store(true, Ordering::Release);
-                        for sh in guards.iter_mut() {
-                            run_window(sh, u);
-                        }
-                        drop(guards);
-                        announce(epoch, wake);
-                        return (Some(done_at - start), u);
-                    }
-                    if all_end {
-                        // Budget exhausted without drain: every clock and
-                        // every shard sits at exactly `budget_end`
-                        // (deterministically, in every mode); pending
-                        // messages stay queued for the next run.
-                        stop.store(true, Ordering::Release);
-                        drop(guards);
-                        announce(epoch, wake);
-                        return (None, budget_end);
-                    }
-                    drop(guards);
-                }
-                let mut g = epoch.lock().unwrap();
-                if *g == seen {
-                    g = wake.wait(g).unwrap();
-                }
-                seen = *g;
-            }
+            rt.coordinate(start, self.horizon.max(1))
         })
     }
+
+    /// Work-stealing runner: `LinkClock`'s clocks and coordinator with
+    /// dynamic shard-to-worker placement. Shards are unit-of-work tokens
+    /// on per-worker deques (owner pops LIFO from the back, thieves scan
+    /// and steal *runnable* tokens from the FIFO front — the Chase–Lev
+    /// discipline over mutexed deques; the crate forbids `unsafe`, and a
+    /// work unit is a whole shard window, so a mutex per deque costs
+    /// nothing measurable). Returns `(drain result, final cycle)`. See
+    /// the module docs for the protocol, liveness and the
+    /// steal-order-cannot-leak determinism argument.
+    fn run_worksteal(
+        &self,
+        start: u64,
+        budget_end: u64,
+        nworkers: usize,
+        stat_slots: &[Mutex<WorkerStats>],
+    ) -> (Option<u64>, u64) {
+        let rt = ClockRt::new(self, start, budget_end);
+        let rt = &rt;
+        let nshards = self.shards.len();
+        let chunk = nshards.div_ceil(nworkers);
+        // Seed the deques with the same contiguous placement the static
+        // runners use: w1 degenerates to the LinkClock sweep, and under
+        // balanced load nobody ever needs to steal.
+        let deques: Vec<Mutex<VecDeque<usize>>> = (0..nworkers)
+            .map(|w| Mutex::new((w * chunk..((w + 1) * chunk).min(nshards)).collect()))
+            .collect();
+        let deques = &deques;
+        std::thread::scope(|scope| {
+            for (w, slot) in stat_slots.iter().enumerate() {
+                scope.spawn(move || {
+                    let mut st = WorkerStats::default();
+                    let mut seen = *rt.epoch.lock().unwrap();
+                    loop {
+                        if rt.stop.load(Ordering::Acquire) {
+                            break;
+                        }
+                        st.rounds += 1;
+                        let mut progressed = false;
+                        let r = catch_unwind(AssertUnwindSafe(|| {
+                            progressed = steal_pass(rt, deques, w, &mut st);
+                        }));
+                        if r.is_err() {
+                            rt.panicked.store(true, Ordering::Release);
+                            rt.stop.store(true, Ordering::Release);
+                            rt.announce();
+                            break;
+                        }
+                        if progressed {
+                            rt.announce();
+                        } else {
+                            seen = rt.park(seen, &mut st);
+                        }
+                    }
+                    *slot.lock().unwrap() = st;
+                });
+            }
+            rt.coordinate(start, self.horizon.max(1))
+        })
+    }
+}
+
+/// Shared runtime of the two conservative-clock runners
+/// ([`ParallelMode::LinkClock`] and [`ParallelMode::WorkSteal`]):
+/// per-shard announced clocks, cross-shard mailboxes, drained hints and
+/// the announcement condvar. The runners differ only in how workers
+/// *pick* the next shard to advance (static ranges vs work-stealing
+/// deques); the advance itself ([`ClockRt::advance_one`]) and the
+/// coordinator ([`ClockRt::coordinate`]) are shared, so the memory
+/// ordering and determinism arguments in the [module docs](self) cover
+/// both.
+struct ClockRt<'a> {
+    shards: &'a [Mutex<Shard>],
+    links: &'a [ShardLink],
+    in_edges: &'a [Vec<InEdge>],
+    flight: u64,
+    credit_lat: u64,
+    period: u64,
+    budget_end: u64,
+    clocks: Vec<AtomicU64>,
+    mailboxes: Vec<Mutex<Vec<BoundaryMsg>>>,
+    /// Per-shard "looks locally drained" hints, refreshed every time a
+    /// worker advances the shard; the coordinator verifies exactly under
+    /// the full lock set before trusting them.
+    hints: Vec<AtomicBool>,
+    epoch: Mutex<u64>,
+    wake: Condvar,
+    stop: AtomicBool,
+    panicked: AtomicBool,
+}
+
+impl<'a> ClockRt<'a> {
+    fn new(net: &'a ShardedNet, start: u64, budget_end: u64) -> Self {
+        let n = net.shards.len();
+        Self {
+            shards: &net.shards,
+            links: &net.links,
+            in_edges: &net.in_edges,
+            flight: net.flight,
+            credit_lat: net.credit_lat,
+            period: net.period,
+            budget_end,
+            clocks: (0..n).map(|_| AtomicU64::new(start)).collect(),
+            mailboxes: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
+            hints: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            epoch: Mutex::new(0),
+            wake: Condvar::new(),
+            stop: AtomicBool::new(false),
+            panicked: AtomicBool::new(false),
+        }
+    }
+
+    /// Shard `i`'s conservative advance bound: the minimum over its
+    /// incoming edges of the peer clock's lookahead, capped at the
+    /// budget edge. Reading the peer clocks (Acquire) *before* the
+    /// caller drains the mailbox is what makes the bound sound — any
+    /// message flushed after these reads is covered by the older clock
+    /// values used here (module docs).
+    fn bound_of(&self, i: usize) -> u64 {
+        let mut bound = self.budget_end;
+        for e in &self.in_edges[i] {
+            let c = self.clocks[e.peer].load(Ordering::Acquire);
+            bound = bound.min(edge_bound(c, e.kind, self.flight, self.credit_lat, self.period));
+        }
+        bound
+    }
+
+    /// The work-stealing runner's steal predicate: shard `i` is
+    /// *runnable* when its conservative bound lets it advance past its
+    /// announced clock. Monotone while a worker holds `i`'s token —
+    /// peer clocks only grow and nobody else can move `clocks[i]` — so
+    /// a token observed runnable stays runnable until advanced.
+    fn runnable(&self, i: usize) -> bool {
+        self.bound_of(i) > self.clocks[i].load(Ordering::Acquire)
+    }
+
+    /// Advance shard `i` through the full ordered pass — (1) read peer
+    /// clocks, (2) drain the mailbox, (3) run to the bound, (4) flush
+    /// outgoing into peer mailboxes, (5) publish the clock (Release) —
+    /// returning whether the clock moved. The caller must hold `i`'s
+    /// *token* (static ownership under LinkClock, deque possession under
+    /// WorkSteal), so no two workers ever race on one shard's clock.
+    fn advance_one(&self, i: usize, st: &mut WorkerStats) -> bool {
+        let bound = self.bound_of(i);
+        if bound <= self.clocks[i].load(Ordering::Acquire) {
+            return false;
+        }
+        let mut sh = self.shards[i].lock().unwrap();
+        // The coordinator normalizes shards forward under `stop`; a
+        // stale bound must not re-advance them afterwards.
+        if self.stop.load(Ordering::Acquire) {
+            return false;
+        }
+        drain_mailbox(&mut sh, &self.mailboxes[i]);
+        advance_shard(&mut sh, bound, st);
+        // Flush *before* publishing the clock — the Release/Acquire
+        // pair on the clock is what publishes these writes.
+        flush_outgoing(&mut sh, self.links, &self.mailboxes);
+        self.hints[i].store(locally_drained(&sh), Ordering::Release);
+        drop(sh);
+        self.clocks[i].store(bound, Ordering::Release);
+        true
+    }
+
+    fn announce(&self) {
+        announce(&self.epoch, &self.wake);
+    }
+
+    /// Worker park: wait for the next announcement unless one landed
+    /// since `seen` was snapshotted (or a stop is pending). Returns the
+    /// fresh epoch.
+    fn park(&self, seen: u64, st: &mut WorkerStats) -> u64 {
+        let mut g = self.epoch.lock().unwrap();
+        if *g == seen && !self.stop.load(Ordering::Acquire) {
+            st.stalls += 1;
+            g = self.wake.wait(g).unwrap();
+        }
+        *g
+    }
+
+    /// Coordinator loop shared by both clock runners: parks on the
+    /// announcement condvar; on each wake checks for panics, global
+    /// drain, and budget exhaustion. Never holds the epoch mutex while
+    /// taking shard locks (a worker announcing while holding a shard
+    /// lock would deadlock against that).
+    fn coordinate(&self, start: u64, horizon: u64) -> (Option<u64>, u64) {
+        let mut seen = *self.epoch.lock().unwrap();
+        loop {
+            if self.panicked.load(Ordering::Acquire) {
+                self.stop.store(true, Ordering::Release);
+                self.announce();
+                panic!("a shard worker panicked inside the window");
+            }
+            let all_end = self
+                .clocks
+                .iter()
+                .all(|c| c.load(Ordering::Acquire) == self.budget_end);
+            if all_end || self.hints.iter().all(|h| h.load(Ordering::Acquire)) {
+                // Exact check: take every shard lock (workers hold at
+                // most one each, and never block on the epoch mutex
+                // while holding one), pull in-between messages out of
+                // the mailboxes, then test the drain predicate.
+                let mut guards: Vec<MutexGuard<'_, Shard>> =
+                    self.shards.iter().map(|m| m.lock().unwrap()).collect();
+                for (i, sh) in guards.iter_mut().enumerate() {
+                    drain_mailbox(sh, &self.mailboxes[i]);
+                }
+                for (i, sh) in guards.iter().enumerate() {
+                    self.hints[i].store(locally_drained(sh), Ordering::Release);
+                }
+                let ok = guards.iter().all(|sh| locally_drained(sh));
+                if ok {
+                    let done_at = guards.iter().map(|sh| sh.idle_at).max().unwrap_or(start);
+                    // Normalize every shard *forward* (never rewind a
+                    // clock) to a common `H`-aligned cycle. Safe: the
+                    // system is fully drained, so the extra cycles hold
+                    // no step — only pending credit returns restore,
+                    // exactly as they would early in the next run.
+                    let top = guards.iter().map(|sh| sh.net.cycle).max().unwrap_or(start);
+                    let u = top.div_ceil(horizon) * horizon;
+                    self.stop.store(true, Ordering::Release);
+                    for sh in guards.iter_mut() {
+                        run_window(sh, u);
+                    }
+                    drop(guards);
+                    self.announce();
+                    return (Some(done_at - start), u);
+                }
+                if all_end {
+                    // Budget exhausted without drain: every clock and
+                    // every shard sits at exactly `budget_end`
+                    // (deterministically, in every mode); pending
+                    // messages stay queued for the next run.
+                    self.stop.store(true, Ordering::Release);
+                    drop(guards);
+                    self.announce();
+                    return (None, self.budget_end);
+                }
+                drop(guards);
+            }
+            let mut g = self.epoch.lock().unwrap();
+            if *g == seen {
+                g = self.wake.wait(g).unwrap();
+            }
+            seen = *g;
+        }
+    }
+}
+
+/// One work-stealing pass for worker `w`. Own phase: pop tokens LIFO
+/// from the back of the own deque — the most recently advanced,
+/// cache-hot shard first; a shard that keeps advancing is ridden
+/// (re-pushed to the back and popped again next pass), one that cannot
+/// advance rotates to the FIFO front where thieves look. Steal phase
+/// (only when the whole own deque made no progress): scan the other
+/// workers' deques front-to-back and take the first *runnable* token —
+/// ownership migrates to the thief. Returns whether any shard advanced.
+///
+/// Thieves scan whole deques, not just fronts: a runnable token buried
+/// behind a non-runnable one must still be stealable, or every worker
+/// could park while work is available. Tokens are exclusive — a shard
+/// index lives on exactly one deque or in exactly one worker's hands —
+/// so no two workers ever advance the same shard concurrently and
+/// [`ClockRt::advance_one`] needs no synchronization beyond the shard
+/// mutex it already takes.
+fn steal_pass(
+    rt: &ClockRt<'_>,
+    deques: &[Mutex<VecDeque<usize>>],
+    w: usize,
+    st: &mut WorkerStats,
+) -> bool {
+    let mut progressed = false;
+    let own = deques[w].lock().unwrap().len();
+    st.max_queue = st.max_queue.max(own as u64);
+    for _ in 0..own {
+        let Some(i) = deques[w].lock().unwrap().pop_back() else {
+            break; // thieves emptied the deque mid-pass
+        };
+        if rt.advance_one(i, st) {
+            progressed = true;
+            deques[w].lock().unwrap().push_back(i);
+        } else {
+            deques[w].lock().unwrap().push_front(i);
+        }
+    }
+    if progressed {
+        return true;
+    }
+    // Idle: steal a runnable shard instead of parking. The scan starts
+    // at the next worker (a fixed victim order is kind to lock
+    // contention and irrelevant to simulated results) and takes the
+    // first runnable token from the FIFO side — the victim's least
+    // recently advanced shard, the one whose lagging clock most likely
+    // gates its neighbors.
+    for k in 1..deques.len() {
+        let v = (w + k) % deques.len();
+        let stolen = {
+            let mut dq = deques[v].lock().unwrap();
+            dq.iter()
+                .position(|&i| rt.runnable(i))
+                .and_then(|pos| dq.remove(pos))
+        };
+        if let Some(i) = stolen {
+            st.steals += 1;
+            if rt.advance_one(i, st) {
+                progressed = true;
+            }
+            let mut dq = deques[w].lock().unwrap();
+            dq.push_back(i);
+            st.max_queue = st.max_queue.max(dq.len() as u64);
+            return progressed;
+        }
+        st.steal_fails += 1;
+    }
+    false
 }
 
 /// Bump the announcement epoch and wake every parked worker (and the
@@ -1241,28 +1524,29 @@ fn flush_outgoing(sh: &mut Shard, links: &[ShardLink], mailboxes: &[Mutex<Vec<Bo
     }
     // Tag each message with its destination, then group contiguous runs
     // (stable sort keeps emission order inside a destination; the inbox
-    // heap re-orders by `(at, link, seq)` anyway).
-    let mut tagged: Vec<(usize, BoundaryMsg)> = sh
-        .outgoing
-        .drain(..)
-        .map(|m| {
-            let l = &links[m.link as usize];
-            let dst = match m.kind {
-                MsgKind::Flit(..) => l.to_chip,
-                MsgKind::Credit => l.from_chip,
-            };
-            (dst, m)
-        })
-        .collect();
+    // heap re-orders by `(at, link, seq)` anyway). The tag buffer is
+    // shard-owned and reused across flushes.
+    let mut tagged = std::mem::take(&mut sh.flush_scratch);
+    for m in sh.outgoing.drain(..) {
+        let l = &links[m.link as usize];
+        let dst = match m.kind {
+            MsgKind::Flit(..) => l.to_chip,
+            MsgKind::Credit => l.from_chip,
+        };
+        tagged.push((dst, m));
+    }
     tagged.sort_by_key(|(dst, _)| *dst);
-    let mut iter = tagged.into_iter().peekable();
-    while let Some((dst, m)) = iter.next() {
-        let mut mb = mailboxes[dst].lock().unwrap();
-        mb.push(m);
-        while iter.peek().is_some_and(|(d, _)| *d == dst) {
-            mb.push(iter.next().unwrap().1);
+    {
+        let mut iter = tagged.drain(..).peekable();
+        while let Some((dst, m)) = iter.next() {
+            let mut mb = mailboxes[dst].lock().unwrap();
+            mb.push(m);
+            while iter.peek().is_some_and(|(d, _)| *d == dst) {
+                mb.push(iter.next().unwrap().1);
+            }
         }
     }
+    sh.flush_scratch = tagged;
 }
 
 /// Advance one shard from its current cycle to exactly `end`, applying
@@ -1413,33 +1697,42 @@ fn post_step(shard: &mut Shard) {
     shard.was_idle = idle;
 }
 
+/// Reusable scratch of the barrier exchange: the gather and per-shard
+/// scatter `Vec`s were re-allocated every window on the hot path; the
+/// barrier coordinator now owns one set for the whole run, drained (not
+/// dropped) each window.
+#[derive(Default)]
+struct ExchangeBufs {
+    moved: Vec<BoundaryMsg>,
+    per: Vec<Vec<BoundaryMsg>>,
+}
+
 /// Barrier exchange: move every outgoing message to its destination
 /// shard's inbox (flits travel to the link's receiving chip, credits
 /// back to its sending chip). Arrival order is irrelevant — the inbox
 /// heap applies messages in `(cycle, link, seq)` order regardless.
-fn exchange(shards: &[Mutex<Shard>], links: &[ShardLink]) {
-    let mut moved: Vec<BoundaryMsg> = Vec::new();
+fn exchange(shards: &[Mutex<Shard>], links: &[ShardLink], bufs: &mut ExchangeBufs) {
+    bufs.per.resize_with(shards.len(), Vec::new);
     for m in shards {
-        moved.append(&mut m.lock().unwrap().outgoing);
+        bufs.moved.append(&mut m.lock().unwrap().outgoing);
     }
-    if moved.is_empty() {
+    if bufs.moved.is_empty() {
         return;
     }
-    let mut per: Vec<Vec<BoundaryMsg>> = (0..shards.len()).map(|_| Vec::new()).collect();
-    for m in moved {
+    for m in bufs.moved.drain(..) {
         let l = &links[m.link as usize];
         let dst = match m.kind {
             MsgKind::Flit(..) => l.to_chip,
             MsgKind::Credit => l.from_chip,
         };
-        per[dst].push(m);
+        bufs.per[dst].push(m);
     }
-    for (m, batch) in shards.iter().zip(per) {
+    for (m, batch) in shards.iter().zip(&mut bufs.per) {
         if batch.is_empty() {
             continue;
         }
         let mut sh = m.lock().unwrap();
-        for msg in batch {
+        for msg in batch.drain(..) {
             inbox_push(&mut sh, msg);
         }
     }
@@ -1529,8 +1822,20 @@ mod tests {
     }
 
     #[test]
-    fn cross_chip_put_delivers_in_both_modes() {
-        for mode in [ParallelMode::Barrier, ParallelMode::LinkClock] {
+    fn parallel_mode_parses_cli_names() {
+        assert_eq!("barrier".parse(), Ok(ParallelMode::Barrier));
+        assert_eq!("LinkClock".parse(), Ok(ParallelMode::LinkClock));
+        assert_eq!("linkclk".parse(), Ok(ParallelMode::LinkClock));
+        assert_eq!("worksteal".parse(), Ok(ParallelMode::WorkSteal));
+        assert_eq!("steal".parse(), Ok(ParallelMode::WorkSteal));
+        let err = "lockstep".parse::<ParallelMode>().unwrap_err();
+        assert!(err.contains("lockstep"), "error names the bad input: {err}");
+        assert!(err.contains("worksteal"), "error lists the choices: {err}");
+    }
+
+    #[test]
+    fn cross_chip_put_delivers_in_all_modes() {
+        for mode in [ParallelMode::Barrier, ParallelMode::LinkClock, ParallelMode::WorkSteal] {
             let cfg = DnpConfig::hybrid();
             let mut snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, 1 << 16, 2).unwrap();
             snet.set_parallel_mode(mode);
@@ -1564,11 +1869,11 @@ mod tests {
     }
 
     #[test]
-    fn second_run_reuses_the_net_in_both_modes() {
+    fn second_run_reuses_the_net_in_all_modes() {
         // Pending credit wakes and clock offsets between runs must not
         // corrupt a follow-up plan (mirrors the sequential scheduler's
         // multi-run usage in the benches).
-        for mode in [ParallelMode::Barrier, ParallelMode::LinkClock] {
+        for mode in [ParallelMode::Barrier, ParallelMode::LinkClock, ParallelMode::WorkSteal] {
             let cfg = DnpConfig::hybrid();
             let mut snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, 1 << 16, 2).unwrap();
             snet.set_parallel_mode(mode);

@@ -212,6 +212,24 @@ pub fn run_plan_sharded(snet: &mut ShardedNet, plan: Vec<Planned>, max_cycles: u
     snet.run_plan(plan, max_cycles)
 }
 
+/// [`run_plan_sharded`] under an explicit
+/// [`ParallelMode`](crate::sim::ParallelMode) — lockstep barrier,
+/// per-link conservative clocks, or the work-stealing shard pool. The
+/// mode selects the *runtime schedule only*: results are bit-exact
+/// across all three (and with the sequential [`run_plan`]); the mode
+/// sticks on the net for subsequent runs, exactly as
+/// [`set_parallel_mode`](crate::sim::ShardedNet::set_parallel_mode)
+/// would leave it.
+pub fn run_plan_sharded_in(
+    snet: &mut ShardedNet,
+    mode: crate::sim::ParallelMode,
+    plan: Vec<Planned>,
+    max_cycles: u64,
+) -> Option<u64> {
+    snet.set_parallel_mode(mode);
+    snet.run_plan(plan, max_cycles)
+}
+
 /// [`setup_buffers`] for a sharded hybrid net: every tile registers one
 /// RX window per potential source and fills its TX window with the same
 /// recognizable pattern (slot = global node index, exactly as

@@ -15,7 +15,7 @@ use dnp::config::DnpConfig;
 use dnp::fault::{self, HierLinkFault};
 use dnp::metrics::{
     adaptive_decision_report, net_totals, scheduler_totals, sharded_adaptive_decision_report,
-    sharded_totals, NetTotals,
+    sharded_totals, steal_report, NetTotals,
 };
 use dnp::packet::AddrFormat;
 use dnp::rdma::Command;
@@ -23,7 +23,8 @@ use dnp::route::hier::GatewayMap;
 use dnp::sim::{ParallelMode, ShardedNet};
 use dnp::{topology, traffic, Net};
 
-const MODES: [ParallelMode; 2] = [ParallelMode::Barrier, ParallelMode::LinkClock];
+const MODES: [ParallelMode; 3] =
+    [ParallelMode::Barrier, ParallelMode::LinkClock, ParallelMode::WorkSteal];
 
 const CHIPS: [u32; 3] = [2, 2, 1];
 const TILES: [u32; 2] = [2, 2];
@@ -119,8 +120,9 @@ fn snapshot_sharded(snet: &mut ShardedNet, elapsed: Option<u64>) -> Snapshot {
 }
 
 /// Run `plan` sequentially (event scheduler) once, then sharded with
-/// `workers` threads under BOTH parallel runners (windowed barrier and
-/// per-link conservative clocks) on a `chips` system under `gmap`,
+/// `workers` threads under EVERY parallel runner (windowed barrier,
+/// per-link conservative clocks, and the work-stealing shard pool —
+/// whose steal order varies run to run) on a `chips` system under `gmap`,
 /// optionally after installing recovery tables for `faults`, and assert
 /// snapshot equality for each mode. The runtime schedule differs wildly
 /// between the modes; the modeled machine must not.
@@ -203,7 +205,7 @@ fn assert_sharded_equivalent(
 #[test]
 fn hybrid_uniform_matches_event_1_2_4_8_workers() {
     // Workers beyond the chip count (8 > 4) exercise the clamped /
-    // multi-chip-per-worker placement paths of both runners.
+    // multi-chip-per-worker placement paths of every runner.
     let cfg = DnpConfig::hybrid();
     for workers in [1usize, 2, 4, 8] {
         let plan = traffic::hybrid_uniform_random(CHIPS, TILES, 8, 32, 10, 0xFEED_1001);
@@ -223,7 +225,7 @@ fn hybrid_halo_matches_event_1_2_4_workers() {
 #[test]
 fn faulted_dead_cable_matches_event_and_keeps_wire_silent() {
     // A dead SerDes cable: recovered tables detour its traffic, the dead
-    // wires carry exactly 0 words — in both modes, for 1/2/4 workers.
+    // wires carry exactly 0 words — in every mode, for 1/2/4 workers.
     let cfg = DnpConfig::hybrid();
     let dead = HierLinkFault::Serdes { chip: [0, 0, 0], dim: 0, plus: true };
     for workers in [1usize, 2, 4] {
@@ -346,8 +348,8 @@ fn adaptive_2x2x2_three_way_equivalence() {
     // off-chip tx halves — shard-local state the boundary credit
     // protocol updates at exact sequential cycles — so the lane
     // decision, the CRC-covered header stamp and every downstream route
-    // must be bit-exact across the event scheduler and both sharded
-    // runners for 1/2/4 workers, on uniform traffic AND under the
+    // must be bit-exact across the event scheduler and every sharded
+    // runner for 1/2/4 workers, on uniform traffic AND under the
     // asymmetric hotspot where alternate-lane picks actually fire.
     let cfg = DnpConfig::hybrid();
     let chips = [2u32, 2, 2];
@@ -406,7 +408,7 @@ fn adaptive_2x2x2_three_way_equivalence() {
     );
 
     // Decision-report determinism across the shard boundary: the merged
-    // per-shard histogram must equal the sequential one, both runners.
+    // per-shard histogram must equal the sequential one, every runner.
     for mode in MODES {
         let mut snet = ShardedNet::hybrid_with(chips, &gmap, &cfg, MEM, 4)
             .expect("uniform SHAPES links shard cleanly");
@@ -483,7 +485,7 @@ fn midrun_reconfig_in_flight_three_way_equivalence() {
     assert_eq!(seq_b, dense_b, "dense vs event phase-B drain cycle");
     assert_eq!(seq, dense, "mid-run reconfig: dense vs event diverged");
 
-    // Sharded legs, both parallel runners. A timed-out phase A parks
+    // Sharded legs, every parallel runner. A timed-out phase A parks
     // every mode's clock at exactly `cut`, so phase B resumes from an
     // identical machine state regardless of runner.
     for workers in [1usize, 2, 4] {
@@ -507,7 +509,7 @@ fn midrun_reconfig_in_flight_three_way_equivalence() {
 #[test]
 fn sharded_budget_edge_matches_event() {
     // The module-level budget contract (traffic docs): with the budget at
-    // the exact drain time D both modes report Some(D); at D-1 both
+    // the exact drain time D every mode reports Some(D); at D-1 all
     // report None with the clock burned to the edge.
     let cfg = DnpConfig::hybrid();
     let plan = traffic::hybrid_halo_exchange(CHIPS, TILES, 16);
@@ -580,7 +582,7 @@ fn quiet_chip_plan(count: usize, len: u32, gap: u64) -> Vec<traffic::Planned> {
 }
 
 #[test]
-fn quiet_chip_hotspot_matches_event_both_modes() {
+fn quiet_chip_hotspot_matches_event_all_modes() {
     let cfg = DnpConfig::hybrid();
     for workers in [1usize, 2, 4, 8] {
         let plan = quiet_chip_plan(6, 24, 617);
@@ -667,7 +669,7 @@ fn wide_horizon_midrun_reconfig_matches_event() {
         (b, snap)
     };
 
-    // Sharded legs, both runners.
+    // Sharded legs, every runner.
     for workers in [1usize, 2, 4] {
         for mode in MODES {
             let mut snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, MEM, workers).unwrap();
@@ -686,4 +688,65 @@ fn wide_horizon_midrun_reconfig_matches_event() {
             assert_eq!(seq, shd, "wide-horizon reconfig (w{workers}, {mode:?}): diverged");
         }
     }
+}
+
+#[test]
+fn worksteal_repeated_runs_are_deterministic() {
+    // The steal schedule is timing-dependent: which worker advances which
+    // shard, and in what order tokens migrate between deques, varies run
+    // to run and with the worker count. The simulated machine must not.
+    // Same seed, three repeats at each of three worker counts — the mix
+    // deliberately perturbs thread timing and initial placement (w3 on 4
+    // chips even seeds one worker with an *empty* deque, a pure thief) —
+    // and every snapshot (drain cycle, totals, per-node counters, tile
+    // memories, per-wire words) must be identical.
+    let cfg = DnpConfig::hybrid();
+    let run_once = |workers: usize| -> Snapshot {
+        let mut snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, MEM, workers).unwrap();
+        snet.set_parallel_mode(ParallelMode::WorkSteal);
+        traffic::setup_buffers_sharded(&mut snet);
+        let elapsed =
+            traffic::run_plan_sharded(&mut snet, quiet_chip_plan(6, 24, 617), 2_000_000);
+        assert!(elapsed.is_some(), "w{workers}: the quiet-chip plan must drain");
+        snapshot_sharded(&mut snet, elapsed)
+    };
+    let reference = run_once(1);
+    for workers in [2usize, 3, 4] {
+        for round in 0..3 {
+            let snap = run_once(workers);
+            assert_eq!(
+                reference, snap,
+                "WorkSteal w{workers} round {round}: snapshot diverged from w1"
+            );
+        }
+    }
+}
+
+#[test]
+fn steal_report_is_zero_under_static_runners_and_live_under_worksteal() {
+    // steal_report doubles as a "did anybody steal" probe: the static
+    // runners never touch the steal counters, while a multi-worker
+    // WorkSteal run on imbalanced load must at least *attempt* steals
+    // (a worker whose own deque makes no progress scans every victim
+    // before parking, so attempts accrue even when nothing is runnable).
+    let cfg = DnpConfig::hybrid();
+    for mode in [ParallelMode::Barrier, ParallelMode::LinkClock] {
+        let mut snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, MEM, 4).unwrap();
+        snet.set_parallel_mode(mode);
+        traffic::setup_buffers_sharded(&mut snet);
+        traffic::run_plan_sharded(&mut snet, quiet_chip_plan(4, 24, 617), 2_000_000)
+            .expect("static-mode run drains");
+        let r = steal_report(&snet);
+        assert_eq!(r.attempts(), 0, "{mode:?} must never steal: {r:?}");
+        assert_eq!(r.max_queue, 0, "{mode:?} has no deques: {r:?}");
+    }
+    let mut snet = ShardedNet::hybrid(CHIPS, TILES, &cfg, MEM, 4).unwrap();
+    snet.set_parallel_mode(ParallelMode::WorkSteal);
+    traffic::setup_buffers_sharded(&mut snet);
+    traffic::run_plan_sharded(&mut snet, quiet_chip_plan(4, 24, 617), 2_000_000)
+        .expect("WorkSteal run drains");
+    let r = steal_report(&snet);
+    assert!(r.attempts() > 0, "w4 imbalanced load must attempt steals: {r:?}");
+    assert!(r.max_queue > 0, "somebody held a token: {r:?}");
+    assert_eq!(r.per_worker.len(), 4, "one entry per worker: {r:?}");
 }

@@ -1,30 +1,52 @@
 #!/usr/bin/env bash
 # Shard-scale scalability sweep: run the 512-chip asymmetric-load smoke
-# (examples/shard_scale.rs) across worker counts in both parallel modes
-# and collect the `[shard-scale]` rows. CI greps these rows into the
-# experiments-summary artifact; EXPERIMENTS.md §Shard-scale records a
-# reference sweep with the exact harvest line.
+# (examples/shard_scale.rs) across worker counts and parallel modes and
+# collect the `[shard-scale]` / `[shard-steal]` rows. CI greps these
+# rows into the experiments-summary artifact; EXPERIMENTS.md
+# §Shard-scale and §Shard-steal record reference sweeps with the exact
+# harvest lines.
 #
-# Usage: scripts/scalability.sh [max_workers] [out_file]
+# Usage: scripts/scalability.sh [max_workers] [mode] [scenario] [out_file]
 #   max_workers  highest worker count to sweep (default: nproc, capped 16)
+#   mode         barrier|linkclock|worksteal|all (default: all)
+#   scenario     row|hotspot|all (default: all — row then hotspot)
 #   out_file     where to append the rows (default: stdout only)
+#
+# Every emitted row carries its mode= field, so a multi-mode sweep stays
+# self-describing when appended to a shared results file.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
 
 cores=$(nproc 2>/dev/null || echo 4)
 max=${1:-$((cores < 16 ? cores : 16))}
-out=${2:-}
+mode=${2:-all}
+scenario=${3:-all}
+out=${4:-}
+
+case "${scenario}" in
+row | hotspot) scenarios=("${scenario}") ;;
+all) scenarios=(row hotspot) ;;
+*)
+    echo "unknown scenario '${scenario}' (expected row|hotspot|all)" >&2
+    exit 2
+    ;;
+esac
 
 cargo build --release --example shard_scale
 
-echo "shard-scale sweep: up to ${max} workers on ${cores} cores"
-rows=$(cargo run --release --quiet --example shard_scale -- "${max}" | tee /dev/stderr | grep '^\[shard-scale\]')
+echo "shard-scale sweep: up to ${max} workers on ${cores} cores, mode=${mode}"
+rows=""
+for sc in "${scenarios[@]}"; do
+    r=$(cargo run --release --quiet --example shard_scale -- "${max}" "${mode}" "${sc}" |
+        tee /dev/stderr | grep -E '^\[shard-(scale|steal)\]')
+    rows+="${r}"$'\n'
+done
 
 if [ -n "${out}" ]; then
     {
-        echo "# scalability sweep, $(uname -sm), ${cores} cores"
-        echo "${rows}"
+        echo "# scalability sweep, $(uname -sm), ${cores} cores, mode=${mode}"
+        printf '%s' "${rows}"
     } >>"${out}"
     echo "rows appended to ${out}"
 fi
